@@ -1,0 +1,84 @@
+//! Tiling-AllReduce (§4.2) live demo: a *real* multi-worker ring
+//! AllReduce over in-process workers, serial vs per-block-overlapped,
+//! verifying numerics and showing the overlap win, then the calibrated
+//! 8×910B model numbers (Figs 16/17).
+//!
+//!   cargo run --release --example multi_npu
+
+use std::time::{Duration, Instant};
+
+use fastattn::benchkit::{fmt_time, ms, x, Table};
+use fastattn::coordinator::allreduce::{
+    ring_all_reduce, serial_all_reduce, tiled_all_reduce, BlockCompute,
+};
+use fastattn::sim::collective::{
+    best_block_count, make_blocks, serial_schedule, RingSpec,
+};
+
+fn main() -> anyhow::Result<()> {
+    println!("== tiling-AllReduce: real in-process ring ==\n");
+
+    // 1) correctness: ring AllReduce == elementwise sum
+    let n_workers = 4;
+    let shards: Vec<Vec<f32>> = (0..n_workers)
+        .map(|r| (0..1024).map(|i| (r * 1000 + i) as f32).collect())
+        .collect();
+    let want: Vec<f32> = (0..1024)
+        .map(|i| (0..n_workers).map(|r| (r * 1000 + i) as f32).sum())
+        .collect();
+    let reduced = ring_all_reduce(shards);
+    assert!(reduced.iter().all(|r| r == &want));
+    println!("ring_all_reduce({n_workers} workers, 1K f32): numerics OK");
+
+    // 2) serial vs tiled with real per-block compute
+    let compute: Box<BlockCompute> = Box::new(|b, buf| {
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = ((b * 97 + i) % 13) as f32 * 0.5;
+        }
+    });
+    let block_elems = 128 * 1024;
+    let n_blocks = 8;
+    let delay = Duration::from_millis(4); // stands in for fused attn+Linear
+
+    let t0 = Instant::now();
+    let a = serial_all_reduce(n_workers, block_elems, n_blocks, &compute, delay)?;
+    let serial_t = t0.elapsed();
+    let t1 = Instant::now();
+    let b = tiled_all_reduce(n_workers, block_elems, n_blocks, &compute, delay)?;
+    let tiled_t = t1.elapsed();
+    assert_eq!(a.len(), b.len());
+    let max_err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "tiled != serial: {max_err}");
+
+    println!(
+        "serial (compute-then-AllReduce) : {}\ntiled  (B-allreduce overlapped) : {}  ({:.2}× on this host)",
+        fmt_time(serial_t.as_secs_f64()),
+        fmt_time(tiled_t.as_secs_f64()),
+        serial_t.as_secs_f64() / tiled_t.as_secs_f64()
+    );
+
+    // 3) the calibrated 8×910B projection (Fig 16 shape)
+    println!("\n== 8× Ascend 910B model (PanGu-38B layer, Fig 16) ==");
+    let ring = RingSpec::default();
+    let mut t = Table::new(
+        "serial vs tiling-AllReduce (modeled)",
+        &["seq", "serial", "tiled", "blocks", "speedup"],
+    );
+    for s in [2048u64, 8192, 32768] {
+        let (compute_s, bytes) =
+            fastattn::reports::allreduce::pangu38_layer_compute_and_bytes(1, s);
+        let serial = serial_schedule(&ring, &make_blocks(bytes, compute_s, 1, 1.0));
+        let (nb, over) = best_block_count(&ring, bytes, compute_s);
+        t.row(&[
+            format!("{}K", s / 1024),
+            ms(serial),
+            ms(over),
+            format!("{nb}"),
+            x(serial / over),
+        ]);
+    }
+    t.print();
+    println!("(paper: up to 1.53× — Appendix D.3)");
+    println!("multi_npu OK");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load the AOT FastAttention Pallas kernel, run it on the
+//! PJRT CPU client, and check it against the standard-attention oracle —
+//! the smallest end-to-end round trip through all three layers.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use fastattn::benchkit::{bench, fmt_time};
+use fastattn::runtime::{HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("loading kernels from {dir}/ …");
+    let rt = Runtime::load_filtered(&dir, |n| n.starts_with("kernel_"))?;
+    println!("platform = {}", rt.platform());
+    for (name, secs) in &rt.compile_times {
+        println!("  compiled {name} in {}", fmt_time(*secs));
+    }
+
+    // (batch=1, heads=4, seq=128, head_dim=64) — the lowered kernel shape.
+    let n = 4 * 128 * 64;
+    let mk = |salt: f32| {
+        HostTensor::f32(
+            vec![1, 4, 128, 64],
+            (0..n).map(|i| ((i as f32 * 0.137 + salt).sin()) * 0.5).collect(),
+        )
+    };
+    let (q, k, v) = (mk(0.0), mk(1.0), mk(2.0));
+
+    let fast = rt.run_host("kernel_fastattn_causal", &[q.clone(), k.clone(), v.clone()])?;
+    let oracle = rt.run_host("kernel_standard_causal", &[q.clone(), k.clone(), v.clone()])?;
+
+    let a = fast[0].as_f32()?;
+    let b = oracle[0].as_f32()?;
+    let max_err = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    println!("\nFastAttention (Pallas, two-level tiling + tiling-mask) vs standard attention:");
+    println!("  max |err| = {max_err:.2e}  (tolerance 2e-5)");
+    assert!(max_err < 2e-5);
+
+    let s_fast = bench(2, 10, || {
+        let _ = rt.run("kernel_fastattn_causal", &[q.clone(), k.clone(), v.clone()]).unwrap();
+    });
+    let s_std = bench(2, 10, || {
+        let _ = rt.run("kernel_standard_causal", &[q.clone(), k.clone(), v.clone()]).unwrap();
+    });
+    println!("  fastattn kernel : {}", fmt_time(s_fast.p50_s));
+    println!("  standard kernel : {}", fmt_time(s_std.p50_s));
+    println!(
+        "\n(CPU-interpret timings are not TPU estimates — see DESIGN.md §6 for \
+         the VMEM/MXU model; `repro table fig7` for the Ascend numbers.)"
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end serving driver (the repo's E2E validation run).
+//!
+//! Loads the AOT transformer bundle (tiny-3m: 4 layers, d_model 256,
+//! 3.45M params, real weights from `artifacts/weights/`), starts the
+//! threaded serving coordinator, and pushes a batched workload through
+//! the full stack — router → continuous batcher → prefill/decode
+//! scheduler → KV-cache manager → PJRT-executed JAX/Pallas model —
+//! reporting per-request latency and engine throughput.
+//!
+//!   make artifacts && cargo run --release --example serve_llm
+//!
+//! The resulting numbers are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use fastattn::benchkit::ms;
+use fastattn::coordinator::{EngineConfig, GenParams, Server};
+use fastattn::metrics::LatencyHistogram;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(24);
+    let gen_tokens = 12usize;
+
+    println!("starting engine over {dir}/ …");
+    let t_load = Instant::now();
+    let server = Server::start(dir, EngineConfig::default())?;
+    println!("engine ready in {:.2}s", t_load.elapsed().as_secs_f64());
+
+    // Deterministic synthetic workload: mixed prompt lengths across the
+    // prefill buckets (32/64/128), generating 12 tokens each.
+    println!("submitting {n_requests} requests (gen {gen_tokens} tokens each) …");
+    let t0 = Instant::now();
+    let waits: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let len = match i % 4 {
+                0 => 5 + i % 20,
+                1 => 30 + i % 30,
+                2 => 70 + i % 50,
+                _ => 12,
+            };
+            let prompt: Vec<i32> =
+                (0..len).map(|j| ((i * 131 + j * 17) % 500 + 1) as i32).collect();
+            server.submit(prompt, GenParams { max_new_tokens: gen_tokens, eos_token: None })
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut ttft = LatencyHistogram::default();
+    let mut total = LatencyHistogram::default();
+    let mut generated = 0usize;
+    for (id, rx) in waits {
+        let r = rx.recv()?;
+        assert_eq!(r.id, id);
+        assert_eq!(r.tokens.len(), gen_tokens, "req {id} under-generated");
+        ttft.record(r.ttft_s);
+        total.record(r.total_s);
+        generated += r.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics()?;
+
+    println!("\n== E2E serving run ==");
+    println!("requests           : {n_requests} (all completed)");
+    println!("generated tokens   : {generated}");
+    println!("wall time          : {wall:.2} s");
+    println!("throughput         : {:.1} tok/s end-to-end", generated as f64 / wall);
+    println!(
+        "ttft               : mean {} | p50 {} | p99 {}",
+        ms(ttft.mean_s()),
+        ms(ttft.quantile_s(0.5)),
+        ms(ttft.quantile_s(0.99))
+    );
+    println!(
+        "request latency    : mean {} | p99 {}",
+        ms(total.mean_s()),
+        ms(total.quantile_s(0.99))
+    );
+    println!(
+        "engine             : {} prefill steps ({:.0} tok/s) | {} decode steps ({:.1} tok/s, mean batch {:.2})",
+        m.prefill_steps,
+        m.prefill_tps(),
+        m.decode_steps,
+        m.decode_tps(),
+        m.mean_decode_batch()
+    );
+    println!("serve_llm OK");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT compile path: lower L2/L1 to HLO text + dump weights.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+  artifacts/<name>.hlo.txt      — HLO text per entrypoint (the interchange
+                                  format: xla_extension 0.5.1 rejects jax
+                                  >=0.5 serialized protos with 64-bit ids;
+                                  the text parser reassigns ids).
+  artifacts/weights/<i>_<name>.bin — little-endian f32 dumps, one per param,
+                                  in ``param_specs`` order.
+  artifacts/manifest.json       — model config, artifact inputs/outputs
+                                  (names, shapes, dtypes), weight index.
+
+The rust runtime (rust/src/runtime/artifacts.rs) consumes the manifest and
+never touches Python again.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.fast_attention import fast_attention
+from compile.kernels.ref import standard_attention
+
+PREFILL_BATCHES = (1, 4)
+PREFILL_SEQS = (32, 64, 128)
+DECODE_BATCHES = (1, 4)
+
+# Standalone kernel artifact shape (quickstart + kernel-vs-baseline demo).
+KERNEL_SHAPE = dict(batch=1, heads=4, seq=128, head_dim=64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_entry(fn: Callable, arg_specs, out_path: str) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text
+
+
+def build(out_dir: str, cfg: M.ModelConfig, seed: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    specs = M.param_specs(cfg)
+    params = M.init_params(cfg, seed=seed)
+
+    weights_index = []
+    for i, ((name, shape, dtype), arr) in enumerate(zip(specs, params)):
+        fname = f"{i:03d}_{name.replace('.', '_')}.bin"
+        np.asarray(arr, dtype=np.float32).tofile(os.path.join(wdir, fname))
+        weights_index.append(
+            {"name": name, "file": f"weights/{fname}", "shape": list(shape),
+             "dtype": dtype}
+        )
+
+    param_arg_specs = [_spec(s, jnp.float32) for _, s, _ in specs]
+    param_inputs = [_shape_entry(n, s, d) for n, s, d in specs]
+
+    artifacts = []
+
+    def add(name, fn, arg_specs, inputs, outputs):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        lower_entry(fn, arg_specs, path)
+        artifacts.append(
+            {"name": name, "file": f"{name}.hlo.txt", "inputs": inputs,
+             "outputs": outputs}
+        )
+        print(f"  lowered {name}")
+
+    L, Nkv, Smax, D = cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim
+    V = cfg.vocab
+
+    # --- model prefill entrypoints -------------------------------------
+    for b in PREFILL_BATCHES:
+        for s in PREFILL_SEQS:
+            name = f"prefill_b{b}_s{s}"
+
+            def fn(tokens, lengths, *flat, _b=b, _s=s):
+                return M.prefill(cfg, list(flat), tokens, lengths)
+
+            add(
+                name,
+                fn,
+                [_spec((b, s), jnp.int32), _spec((b,), jnp.int32)]
+                + param_arg_specs,
+                [
+                    _shape_entry("tokens", (b, s), "i32"),
+                    _shape_entry("lengths", (b,), "i32"),
+                ]
+                + param_inputs,
+                [
+                    _shape_entry("logits", (b, V), "f32"),
+                    _shape_entry("k_caches", (L, b, Nkv, Smax, D), "f32"),
+                    _shape_entry("v_caches", (L, b, Nkv, Smax, D), "f32"),
+                ],
+            )
+
+    # --- model decode entrypoints ---------------------------------------
+    for b in DECODE_BATCHES:
+        name = f"decode_b{b}"
+
+        def fn(token, k_caches, v_caches, pos, *flat, _b=b):
+            return M.decode(cfg, list(flat), token, k_caches, v_caches, pos)
+
+        add(
+            name,
+            fn,
+            [
+                _spec((b, 1), jnp.int32),
+                _spec((L, b, Nkv, Smax, D), jnp.float32),
+                _spec((L, b, Nkv, Smax, D), jnp.float32),
+                _spec((b,), jnp.int32),
+            ]
+            + param_arg_specs,
+            [
+                _shape_entry("token", (b, 1), "i32"),
+                _shape_entry("k_caches", (L, b, Nkv, Smax, D), "f32"),
+                _shape_entry("v_caches", (L, b, Nkv, Smax, D), "f32"),
+                _shape_entry("pos", (b,), "i32"),
+            ]
+            + param_inputs,
+            [
+                _shape_entry("logits", (b, V), "f32"),
+                _shape_entry("k_caches", (L, b, Nkv, Smax, D), "f32"),
+                _shape_entry("v_caches", (L, b, Nkv, Smax, D), "f32"),
+            ],
+        )
+
+    # --- standalone attention kernels (quickstart / baseline) -----------
+    ks = KERNEL_SHAPE
+    qkv = _spec((ks["batch"], ks["heads"], ks["seq"], ks["head_dim"]))
+    qkv_in = [
+        _shape_entry(n, (ks["batch"], ks["heads"], ks["seq"], ks["head_dim"]),
+                     "f32")
+        for n in ("q", "k", "v")
+    ]
+    out_e = [_shape_entry(
+        "o", (ks["batch"], ks["heads"], ks["seq"], ks["head_dim"]), "f32")]
+
+    add(
+        "kernel_fastattn_causal",
+        lambda q, k, v: (fast_attention(q, k, v, causal=True),),
+        [qkv, qkv, qkv],
+        qkv_in,
+        out_e,
+    )
+    add(
+        "kernel_standard_causal",
+        lambda q, k, v: (standard_attention(q, k, v, causal=True),),
+        [qkv, qkv, qkv],
+        qkv_in,
+        out_e,
+    )
+
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "vocab": V,
+            "n_layers": L,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": Nkv,
+            "head_dim": D,
+            "d_ff": cfg.d_ff,
+            "max_seq": Smax,
+            "n_params": cfg.n_params,
+            "seed": seed,
+        },
+        "prefill_batches": list(PREFILL_BATCHES),
+        "prefill_seqs": list(PREFILL_SEQS),
+        "decode_batches": list(DECODE_BATCHES),
+        "kernel_shape": KERNEL_SHAPE,
+        "weights": weights_index,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.TINY
+    print(f"AOT-lowering model '{cfg.name}' ({cfg.n_params} params) "
+          f"-> {args.out_dir}")
+    manifest = build(args.out_dir, cfg, args.seed)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + {len(manifest['weights'])} weight files")
+
+
+if __name__ == "__main__":
+    main()

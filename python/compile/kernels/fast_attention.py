@@ -1,0 +1,319 @@
+"""FastAttention Pallas kernel — Layer 1 of the three-layer stack.
+
+This is the paper's single-device contribution (§4.1) re-expressed for the
+TPU/Pallas programming model (see DESIGN.md §Hardware-Adaptation):
+
+* **Two-level tiling** — the kernel body iterates over *first-level*
+  (L1-buffer / VMEM sized) K/V slabs with an outer ``fori_loop`` and over
+  *second-level* (L0-buffer / MXU-tile sized) sub-tiles of each slab with an
+  inner ``fori_loop``.  On Ascend the first level amortizes Cube<->Vector
+  synchronizations and keeps GM loads large and contiguous; the second level
+  fits the Cube's L0.  On TPU the same structure is the HBM->VMEM schedule
+  (BlockSpec granularity) plus the in-VMEM MXU tile loop.
+
+* **Tiling-mask** — the causal ``attention_mask`` is never materialized at
+  S×S.  Each *B-mask* is generated in-kernel from the block's global row /
+  column offsets (a shifted view of the paper's (2M)x(2M) *M-mask*; the
+  equivalence is property-tested against the explicit shift generator in
+  ``maskgen.py``).  Blocks are classified:
+    - fully-masked  -> skipped entirely (the paper's ~50% Cube saving,
+      realized here by bounding the reduction loop trip count),
+    - fully-visible -> the ``QK^T + mask`` add is skipped (Vector saving),
+    - partial       -> B-mask applied.
+
+* **Variable KV length** — decode-time masking by a runtime ``kv_len``
+  (scalar, or a per-batch-row vector for continuous batching), again
+  without materializing a mask, and with the reduction loop bounded by
+  ``ceil(kv_len / block_k1)`` so padded cache tail blocks are skipped.
+
+The kernel runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against the pure-jnp oracle in
+``ref.py``.  Real-TPU perf is estimated from the VMEM footprint / MXU
+utilization model in DESIGN.md §6 and EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K1 = 64  # first-level (L1/VMEM) block, multiple of BLOCK_K2
+DEFAULT_BLOCK_K2 = 16  # second-level (L0/MXU) sub-block
+
+NEG_INF = -1e30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def vmem_footprint_bytes(
+    block_q: int,
+    block_k1: int,
+    head_dim: int,
+    dtype_bytes: int = 4,
+) -> int:
+    """Estimated VMEM residency of one kernel program (DESIGN.md §Perf).
+
+    q block + first-level K and V slabs + f32 accumulator + softmax stats.
+    """
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * block_k1 * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4
+    stats = 2 * block_q * 4
+    return q + kv + acc + stats
+
+
+def _attn_kernel(
+    kv_len_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k1: int,
+    block_k2: int,
+    seq_kv: int,
+):
+    """One (batch*head, q-block) program of the FastAttention forward.
+
+    Refs: kv_len_ref (1,) i32; q_ref (block_q, d); k_ref/v_ref (seq_kv, d);
+    o_ref (block_q, d).  The outer loop carves first-level slabs out of
+    k_ref/v_ref, the inner loop second-level sub-tiles.
+    """
+    qi = pl.program_id(1)
+    q0 = qi * block_q  # global row offset of this q block
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    d = q.shape[-1]
+
+    kv_len = kv_len_ref[0]  # runtime valid KV length (== seq_kv in prefill)
+
+    m_init = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_init = jnp.zeros((block_q,), jnp.float32)
+    acc_init = jnp.zeros((block_q, d), jnp.float32)
+
+    n_inner = block_k1 // block_k2
+
+    def inner_body(i2, carry, *, k1_base):
+        m_prev, l_prev, acc_prev = carry
+        k0 = k1_base + i2 * block_k2  # global col offset of this sub-block
+
+        # --- Cube/MXU stage: QK^T on one second-level sub-tile -----------
+        k_blk = k_ref[pl.dslice(k0, block_k2), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (block_q, block_k2)
+
+        # --- tiling-mask: generate the B-mask from block offsets ---------
+        col = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k2), 1)
+        if causal:
+            row = q0 + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k2), 0
+            )
+            # Fully-visible classification: the sub-block's last column is
+            # <= the q block's first row -> every entry is unmasked.
+            fully_visible = (k0 + block_k2 - 1) <= q0
+
+            def masked(s):
+                keep = (col <= row) & (col < kv_len)
+                return jnp.where(keep, s, NEG_INF)
+
+            def unmasked(s):
+                # Paper: all-ones B-mask -> skip the QK^T + mask add
+                # (Vector-unit saving).  kv_len can still clip in decode.
+                return jnp.where(col < kv_len, s, NEG_INF)
+
+            s = jax.lax.cond(fully_visible, unmasked, masked, s)
+        else:
+            s = jnp.where(col < kv_len, s, NEG_INF)
+
+        # --- Vector/VPU stage: online softmax update ----------------------
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0).
+        row_dead = m_new <= NEG_INF / 2
+        alpha = jnp.where(row_dead, 1.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(row_dead[:, None], 0.0, jnp.exp(s - m_new[:, None]))
+
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+
+        # --- Cube/MXU stage: PV on the same sub-tile ----------------------
+        # p stays resident between the two dots — the TPU analogue of the
+        # paper's Volta FP16-accumulator layout trick (no inter-thread
+        # exchange between back-to-back GEMMs).
+        v_blk = v_ref[pl.dslice(k0, block_k2), :].astype(jnp.float32)
+        acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    def outer_body(i1, carry):
+        # One first-level slab: [i1*block_k1, i1*block_k1 + block_k1).
+        k1_base = i1 * block_k1
+        return jax.lax.fori_loop(
+            0, n_inner, functools.partial(inner_body, k1_base=k1_base), carry
+        )
+
+    # Block skipping (the all-zero B-mask case): bound the loop trip count.
+    # Causal: only slabs intersecting [0, q0 + block_q) contribute.
+    # Decode: only slabs intersecting [0, kv_len) contribute.
+    limit = kv_len
+    if causal:
+        limit = jnp.minimum(limit, q0 + block_q)
+    n_outer = jnp.minimum(
+        (limit + block_k1 - 1) // block_k1, _ceil_div(seq_kv, block_k1)
+    ).astype(jnp.int32)
+
+    m, l, acc = jax.lax.fori_loop(
+        0, n_outer, outer_body, (m_init, l_init, acc_init)
+    )
+
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.where((l == 0.0)[:, None], 0.0, acc / safe_l[:, None])
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def fast_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    kv_len: Optional[jax.Array] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k1: int = DEFAULT_BLOCK_K1,
+    block_k2: int = DEFAULT_BLOCK_K2,
+) -> jax.Array:
+    """FastAttention forward pass.
+
+    Args:
+      q: (batch, num_heads, seq_q, head_dim).
+      k, v: (batch, num_kv_heads, seq_kv, head_dim).  ``num_kv_heads`` must
+        divide ``num_heads`` (GQA/MQA sharing via index mapping, no copies).
+      causal: apply the causal tiling-mask (requires seq_q == seq_kv; the
+        serving decode path uses ``causal=False`` + ``kv_len`` instead).
+      kv_len: optional int32 — runtime valid KV length for decode over a
+        padded cache.  Scalar (shared) or shape ``(batch,)`` (per row,
+        for continuous batching).  Defaults to ``seq_kv``.
+      sm_scale: softmax scale, default ``1/sqrt(head_dim)``.
+      block_q / block_k1 / block_k2: two-level tile sizes; ``block_k2``
+        must divide ``block_k1``.
+
+    Returns:
+      (batch, num_heads, seq_q, head_dim) in the dtype of ``q``.
+    """
+    batch, num_heads, seq_q, head_dim = q.shape
+    kb, num_kv_heads, seq_kv, kd = k.shape
+    if kb != batch or kd != head_dim or v.shape != k.shape:
+        raise ValueError(f"shape mismatch: q={q.shape} k={k.shape} v={v.shape}")
+    if num_heads % num_kv_heads != 0:
+        raise ValueError(f"{num_heads=} not a multiple of {num_kv_heads=}")
+    if causal and seq_q != seq_kv:
+        raise NotImplementedError(
+            "causal requires seq_q == seq_kv; decode uses kv_len masking"
+        )
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    # Shrink blocks to the problem, keeping the block_k2 | block_k1 invariant.
+    block_q = max(1, min(block_q, seq_q))
+    block_k1 = max(1, min(block_k1, seq_kv))
+    block_k2 = max(1, min(block_k2, block_k1))
+    if block_k1 % block_k2 != 0:
+        block_k2 = math.gcd(block_k1, block_k2)
+
+    # Pad sequences to block multiples.  Padded K columns are masked via
+    # kv_len; padded Q rows are sliced off the output.
+    pq = _ceil_div(seq_q, block_q) * block_q
+    pk = _ceil_div(seq_kv, block_k1) * block_k1
+    if kv_len is None:
+        kv_len_arr = jnp.full((batch,), seq_kv, jnp.int32)
+    else:
+        kv_len_arr = jnp.asarray(kv_len, jnp.int32)
+        if kv_len_arr.ndim == 0:
+            kv_len_arr = jnp.broadcast_to(kv_len_arr, (batch,))
+        elif kv_len_arr.shape != (batch,):
+            raise ValueError(
+                f"kv_len shape {kv_len_arr.shape} != () or ({batch},)"
+            )
+        kv_len_arr = jnp.minimum(kv_len_arr, seq_kv)
+    if pq != seq_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq - seq_q), (0, 0)))
+    if pk != seq_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk - seq_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk - seq_kv), (0, 0)))
+
+    out = _fast_attention_impl(
+        q,
+        k,
+        v,
+        kv_len_arr,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k1=block_k1,
+        block_k2=block_k2,
+    )
+    return out[:, :, :seq_q, :]
+
+
+def _fast_attention_impl(
+    q, k, v, kv_len_arr, *, causal, sm_scale, block_q, block_k1, block_k2
+):
+    batch, num_heads, pq, head_dim = q.shape
+    _, num_kv_heads, pk, _ = k.shape
+    group = num_heads // num_kv_heads
+    bh = batch * num_heads
+    qr = q.reshape(bh, pq, head_dim)
+    kr = k.reshape(batch * num_kv_heads, pk, head_dim)
+    vr = v.reshape(batch * num_kv_heads, pk, head_dim)
+    grid = (bh, pq // block_q)
+
+    def kv_len_index(b, i):
+        # one valid-length entry per batch row
+        return (b // num_heads,)
+
+    def q_index(b, i):
+        return (b, i, 0)
+
+    def kv_index(b, i):
+        bb = b // num_heads
+        h = b % num_heads
+        return (bb * num_kv_heads + h // group, 0, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=block_q,
+        block_k1=block_k1,
+        block_k2=block_k2,
+        seq_kv=pk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), kv_len_index),
+            pl.BlockSpec((None, block_q, head_dim), q_index),
+            pl.BlockSpec((None, pk, head_dim), kv_index),
+            pl.BlockSpec((None, pk, head_dim), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), q_index),
+        out_shape=jax.ShapeDtypeStruct((bh, pq, head_dim), q.dtype),
+        interpret=True,
+    )(kv_len_arr, qr, kr, vr)
+    return out.reshape(batch, num_heads, pq, head_dim)

@@ -1,0 +1,84 @@
+"""The tiling-mask generator (paper §4.1, Figure 3) — explicit form.
+
+The paper replaces the S×S causal ``attention_mask`` with a single
+(2M)×(2M) *M-mask* (M = maximal block size).  Any b×b *B-mask* required by
+an attention_score block at global offset (row0, col0), b <= M, is a shifted
+contiguous view of the M-mask.  This module implements that generator
+literally (it is what the rust ``attention::mask`` module mirrors); the
+Pallas kernel generates the same masks from iota arithmetic, and
+``python/tests/test_maskgen.py`` proves the two agree.
+
+Mask convention: ``1`` = visible (keep score), ``0`` = masked.
+For the causal mask, entry (i, j) is visible iff ``j <= i``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def m_mask(m: int) -> np.ndarray:
+    """The (2M)×(2M) master mask: lower-triangular ones.
+
+    Memory: (2M)^2 entries regardless of sequence length — e.g. M=512 is
+    256 KiB in fp16 vs 8 GiB for an S=64K full mask (paper §4.1).
+    """
+    n = 2 * m
+    return np.tril(np.ones((n, n), dtype=np.int8))
+
+
+def b_mask_from_m(mm: np.ndarray, row0: int, col0: int, b: int) -> np.ndarray:
+    """Extract the B-mask for the block at global offset (row0, col0).
+
+    The causal B-mask depends only on ``diag = row0 - col0`` (how far the
+    block sits from the diagonal).  Within the M-mask, the view starting at
+    (r, c) has the same diagonal offset whenever ``r - c == diag``; the
+    generator picks the in-bounds shift:
+
+      * diag >= 0 (block on/below the diagonal, partially or fully visible):
+        view at (diag, 0);
+      * diag <  0 (block above the diagonal): clamp — every entry with
+        ``col > row`` is masked; view at (0, min(-diag, 2M - b)).
+
+    Requires ``b <= M`` (paper: "the block size b of the B-mask should be
+    less than [or equal to] M") so the shifted view stays in bounds.
+    """
+    m = mm.shape[0] // 2
+    if b > m:
+        raise ValueError(f"B-mask size {b} exceeds M={m}")
+    diag = row0 - col0
+    if diag >= 0:
+        r = min(diag, 2 * m - b)
+        c = 0
+        if diag > 2 * m - b:
+            # Far below the diagonal: fully visible, and the clamped view
+            # at (2M - b, 0) is all-ones precisely because 2M - b >= M >= b.
+            r = 2 * m - b
+    else:
+        r = 0
+        c = min(-diag, 2 * m - b)
+        if -diag > 2 * m - b:
+            c = 2 * m - b
+    return mm[r : r + b, c : c + b]
+
+
+def b_mask_direct(row0: int, col0: int, b: int) -> np.ndarray:
+    """Direct (non-generator) computation of the same B-mask, for tests."""
+    rows = row0 + np.arange(b)[:, None]
+    cols = col0 + np.arange(b)[None, :]
+    return (cols <= rows).astype(np.int8)
+
+
+def classify_block(row0: int, col0: int, b: int) -> str:
+    """Tiling-mask block classification (paper §4.1).
+
+    Returns:
+      'zero'    — all-masked: skip the block entirely (~50% Cube saving),
+      'full'    — all-visible: skip the QK^T + mask add (Vector saving),
+      'partial' — apply the B-mask.
+    """
+    if col0 > row0 + b - 1:
+        return "zero"
+    if col0 + b - 1 <= row0:
+        return "full"
+    return "partial"

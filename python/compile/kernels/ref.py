@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracle for the FastAttention kernel.
+
+Implements the paper's "standard attention" definition (§5.1): the naive
+``softmax(Q K^T / sqrt(d)) V`` without operator fusion or online softmax.
+Every kernel result is compared against this oracle in pytest / hypothesis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def standard_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    kv_len: Optional[jax.Array] = None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Naive attention oracle.
+
+    q: (B, N, Sq, D); k, v: (B, Nkv, Skv, D) with Nkv | N (GQA).
+    Materializes the full (Sq, Skv) score matrix and, when ``causal``,
+    the full attention mask — exactly the memory behaviour FastAttention's
+    tiling-mask eliminates.
+    """
+    batch, num_heads, seq_q, head_dim = q.shape
+    _, num_kv_heads, seq_kv, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+    if num_kv_heads != num_heads:
+        rep = num_heads // num_kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s = jnp.einsum("bnqd,bnkd->bnqk", qf, kf) * sm_scale
+
+    col = jnp.arange(seq_kv)[None, :]
+    row = jnp.arange(seq_q)[:, None]
+    keep = jnp.ones((seq_q, seq_kv), bool)
+    if causal:
+        keep = keep & (col <= row + (seq_kv - seq_q))
+    keep = jnp.broadcast_to(keep[None, None], (batch, num_heads, seq_q, seq_kv))
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len, jnp.int32)
+        if kl.ndim == 0:
+            kl = jnp.broadcast_to(kl, (batch,))
+        keep = keep & (col[None, None] < kl[:, None, None, None])
+    s = jnp.where(keep, s, NEG_INF)
+
+    # Softmax with dead-row guard (rows where everything is masked).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    dead = m <= NEG_INF / 2
+    p = jnp.where(dead, 0.0, jnp.exp(s - jnp.where(dead, 0.0, m)))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(l == 0.0, 0.0, p / jnp.where(l == 0.0, 1.0, l))
+
+    out = jnp.einsum("bnqk,bnkd->bnqd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,280 @@
+"""Layer 2 — JAX transformer model calling the FastAttention kernel.
+
+A decoder-only LM (pre-LN, GELU MLP, learned positions) whose attention is
+the Pallas FastAttention kernel from ``kernels/fast_attention.py``.  The
+model exists in two AOT entrypoints consumed by the rust coordinator:
+
+  * ``prefill``  — tokens (B, S) -> last-token logits + per-layer KV cache
+                   (causal FastAttention, seq_q == seq_kv);
+  * ``decode``   — one token + padded KV caches + position -> next logits +
+                   updated caches (FastAttention with runtime ``kv_len``).
+
+Parameters are an *ordered flat list* (see ``param_specs``) so the rust side
+can feed them positionally from the binary dumps ``aot.py`` writes.
+Python never runs at serving time; these functions are lowered once to HLO
+text by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fast_attention import fast_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration (Table 1 analogue)."""
+
+    name: str = "tiny-3m"
+    vocab: int = 512
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    max_seq: int = 160
+    block_q: int = 64
+    block_k1: int = 64
+    block_k2: int = 32
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s, _ in param_specs(self))
+
+
+# The tiny end-to-end serving model (examples/serve_llm.rs).
+TINY = ModelConfig()
+# A ~100M-class config used for memory-model tests (never lowered).
+SMALL_100M = ModelConfig(
+    name="small-124m",
+    vocab=32000,
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    max_seq=2048,
+)
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Ordered (name, shape, dtype) for every parameter.
+
+    This order is the wire format between ``aot.py`` (binary dumps +
+    manifest) and the rust artifact loader — do not reorder.
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs: List[Tuple[str, Tuple[int, ...], str]] = [
+        ("tok_embed", (v, d), "f32"),
+        ("pos_embed", (cfg.max_seq, d), "f32"),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"layer{i}.ln1_scale", (d,), "f32"),
+            (f"layer{i}.wq", (d, nh * hd), "f32"),
+            (f"layer{i}.wk", (d, nkv * hd), "f32"),
+            (f"layer{i}.wv", (d, nkv * hd), "f32"),
+            (f"layer{i}.wo", (nh * hd, d), "f32"),
+            (f"layer{i}.ln2_scale", (d,), "f32"),
+            (f"layer{i}.w1", (d, f), "f32"),
+            (f"layer{i}.w2", (f, d), "f32"),
+        ]
+    specs += [
+        ("ln_f_scale", (d,), "f32"),
+        ("lm_head", (d, v), "f32"),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic small-scale init; the E2E run uses synthetic weights."""
+    params: List[jax.Array] = []
+    key = jax.random.PRNGKey(seed)
+    for name, shape, _ in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * std
+            )
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat: List[jax.Array]):
+    """flat list -> (embeds, per-layer dicts, final)."""
+    specs = param_specs(cfg)
+    if len(flat) != len(specs):
+        raise ValueError(f"expected {len(specs)} params, got {len(flat)}")
+    by_name = {name: arr for (name, _, _), arr in zip(specs, flat)}
+    layers = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        layers.append({k[len(p):]: v for k, v in by_name.items() if k.startswith(p)})
+    return by_name, layers
+
+
+def _rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)  # (B, N, S, D)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, n, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * d)
+
+
+def _layer_prefill(cfg: ModelConfig, lp, x: jax.Array):
+    """One decoder layer, prefill: returns (x_out, k, v) with full-seq KV."""
+    h = _rms_norm(x, lp["ln1_scale"])
+    q = _split_heads(h @ lp["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(h @ lp["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(h @ lp["wv"], cfg.n_kv_heads, cfg.head_dim)
+    attn = fast_attention(
+        q, k, v,
+        causal=True,
+        block_q=cfg.block_q,
+        block_k1=cfg.block_k1,
+        block_k2=cfg.block_k2,
+    )
+    x = x + _merge_heads(attn) @ lp["wo"]
+    h = _rms_norm(x, lp["ln2_scale"])
+    x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+    return x, k, v
+
+
+def _layer_decode(cfg: ModelConfig, lp, x, k_cache, v_cache, pos):
+    """One decoder layer, decode step.
+
+    x: (B, 1, d).  k_cache/v_cache: (B, Nkv, max_seq, D) padded.  pos:
+    (B,) i32 — per-row index of the current token (continuous batching:
+    rows may sit at different positions); per-row kv_len = pos + 1 after
+    insertion.
+    """
+    h = _rms_norm(x, lp["ln1_scale"])
+    q = _split_heads(h @ lp["wq"], cfg.n_heads, cfg.head_dim)
+    k_new = _split_heads(h @ lp["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(h @ lp["wv"], cfg.n_kv_heads, cfg.head_dim)
+    # Per-row scatter at pos[b]: one-hot over the sequence dimension.
+    onehot = (
+        jnp.arange(cfg.max_seq)[None, :] == pos[:, None]
+    )[:, None, :, None]  # (B, 1, max_seq, 1)
+    k_cache = jnp.where(onehot, k_new, k_cache)
+    v_cache = jnp.where(onehot, v_new, v_cache)
+    attn = fast_attention(
+        q, k_cache, v_cache,
+        causal=False,
+        kv_len=pos + 1,
+        block_q=cfg.block_q,
+        block_k1=cfg.block_k1,
+        block_k2=cfg.block_k2,
+    )
+    x = x + _merge_heads(attn) @ lp["wo"]
+    h = _rms_norm(x, lp["ln2_scale"])
+    x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+    return x, k_cache, v_cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    flat_params: List[jax.Array],
+    tokens: jax.Array,
+    lengths: jax.Array = None,
+):
+    """Prefill entrypoint.
+
+    tokens: (B, S) int32, right-padded per row to the bucket length S.
+    lengths: (B,) int32 — true prompt length per row (defaults to S for
+    every row).  Returns (logits (B, vocab) at each row's LAST REAL
+    position, k_caches (L, B, Nkv, max_seq, D), v_caches (...)) — caches
+    are padded to ``max_seq`` so decode can consume them without
+    reshaping.  Rows' cache entries beyond their length are junk; decode
+    masks them via per-row kv_len and overwrites them as it generates.
+    """
+    by_name, layers = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    x = by_name["tok_embed"][tokens] + by_name["pos_embed"][None, :s, :]
+    pad = cfg.max_seq - s
+    ks, vs = [], []
+    for lp in layers:
+        x, k, v = _layer_prefill(cfg, lp, x)
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    x = _rms_norm(x, by_name["ln_f_scale"])
+    # Per-row gather at lengths - 1 (causality: that position never saw
+    # the right-padding).
+    idx = (lengths - 1).astype(jnp.int32)[:, None, None]  # (B, 1, 1)
+    last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, cfg.d_model)), axis=1)
+    logits = last[:, 0, :] @ by_name["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode(
+    cfg: ModelConfig,
+    flat_params: List[jax.Array],
+    token: jax.Array,
+    k_caches: jax.Array,
+    v_caches: jax.Array,
+    pos: jax.Array,
+):
+    """Decode-one-token entrypoint.
+
+    token: (B, 1) i32; k_caches/v_caches: (L, B, Nkv, max_seq, D); pos:
+    (B,) i32 — the position each row's token occupies (rows advance
+    independently under continuous batching).  Returns (logits (B, vocab),
+    new_k_caches, new_v_caches).
+    """
+    by_name, layers = _unflatten(cfg, flat_params)
+    b = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    x = by_name["tok_embed"][token] + by_name["pos_embed"][pos][:, None, :]
+    new_ks, new_vs = [], []
+    for i, lp in enumerate(layers):
+        x, kc, vc = _layer_decode(
+            cfg, lp, x, k_caches[i], v_caches[i], pos
+        )
+        new_ks.append(kc)
+        new_vs.append(vc)
+    x = _rms_norm(x, by_name["ln_f_scale"])
+    logits = x[:, -1, :] @ by_name["lm_head"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def prefill_reference(cfg: ModelConfig, flat_params, tokens):
+    """Prefill with the naive oracle attention — model-level numeric check."""
+    from compile.kernels.ref import standard_attention
+
+    by_name, layers = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    x = by_name["tok_embed"][tokens] + by_name["pos_embed"][None, :s, :]
+    for lp in layers:
+        h = _rms_norm(x, lp["ln1_scale"])
+        q = _split_heads(h @ lp["wq"], cfg.n_heads, cfg.head_dim)
+        k = _split_heads(h @ lp["wk"], cfg.n_kv_heads, cfg.head_dim)
+        v = _split_heads(h @ lp["wv"], cfg.n_kv_heads, cfg.head_dim)
+        attn = standard_attention(q, k, v, causal=True)
+        x = x + _merge_heads(attn) @ lp["wo"]
+        h = _rms_norm(x, lp["ln2_scale"])
+        x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+    x = _rms_norm(x, by_name["ln_f_scale"])
+    return x[:, -1, :] @ by_name["lm_head"]

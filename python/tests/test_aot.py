@@ -1,0 +1,128 @@
+"""AOT path checks: HLO text emission, manifest integrity, weight dumps."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+SMALL = M.ModelConfig(
+    name="aot-test",
+    vocab=32,
+    n_layers=1,
+    d_model=16,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=32,
+    max_seq=16,
+    block_q=8,
+    block_k1=8,
+    block_k2=4,
+)
+
+
+def test_to_hlo_text_roundtrippable():
+    lowered = jax.jit(lambda x, y: (jnp.matmul(x, y) + 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # text parser requirement: no 64-bit-id serialized protos involved
+    assert "f32[2,2]" in text
+
+
+def test_pallas_kernel_lowers_to_plain_hlo():
+    from compile.kernels.fast_attention import fast_attention
+
+    spec = jax.ShapeDtypeStruct((1, 1, 16, 8), jnp.float32)
+    lowered = jax.jit(
+        lambda q, k, v: (fast_attention(q, k, v, causal=True,
+                                        block_q=8, block_k1=8, block_k2=4),)
+    ).lower(spec, spec, spec)
+    text = aot.to_hlo_text(lowered)
+    # interpret=True means no mosaic custom-calls -> CPU-executable
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+    assert "while" in text  # the two-level reduction loops survive lowering
+
+
+class TestBuild:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("artifacts"))
+        old = (aot.PREFILL_BATCHES, aot.PREFILL_SEQS, aot.DECODE_BATCHES,
+               dict(aot.KERNEL_SHAPE))
+        aot.PREFILL_BATCHES = (1,)
+        aot.PREFILL_SEQS = (8,)
+        aot.DECODE_BATCHES = (1,)
+        aot.KERNEL_SHAPE = dict(batch=1, heads=2, seq=16, head_dim=8)
+        try:
+            manifest = aot.build(out, SMALL, seed=0)
+        finally:
+            (aot.PREFILL_BATCHES, aot.PREFILL_SEQS, aot.DECODE_BATCHES,
+             ks) = old
+            aot.KERNEL_SHAPE.update(ks)
+        return out, manifest
+
+    def test_manifest_written(self, built):
+        out, manifest = built
+        with open(os.path.join(out, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk["model"]["name"] == "aot-test"
+        assert on_disk["model"]["n_params"] == SMALL.n_params
+        assert len(on_disk["artifacts"]) == len(manifest["artifacts"]) == 4
+
+    def test_artifact_files_exist_and_parse(self, built):
+        out, manifest = built
+        for a in manifest["artifacts"]:
+            path = os.path.join(out, a["file"])
+            assert os.path.exists(path), a["name"]
+            text = open(path).read()
+            assert text.startswith("HloModule"), a["name"]
+
+    def test_weight_dumps_roundtrip(self, built):
+        out, manifest = built
+        params = M.init_params(SMALL, seed=0)
+        specs = M.param_specs(SMALL)
+        assert len(manifest["weights"]) == len(specs)
+        for w, (name, shape, _), arr in zip(manifest["weights"], specs, params):
+            assert w["name"] == name
+            data = np.fromfile(os.path.join(out, w["file"]), dtype=np.float32)
+            assert data.size == int(np.prod(shape))
+            np.testing.assert_array_equal(
+                data.reshape(shape), np.asarray(arr)
+            )
+
+    def test_io_shapes_recorded(self, built):
+        _, manifest = built
+        pre = next(a for a in manifest["artifacts"]
+                   if a["name"] == "prefill_b1_s8")
+        assert pre["inputs"][0] == {
+            "name": "tokens", "shape": [1, 8], "dtype": "i32"}
+        assert pre["outputs"][0]["shape"] == [1, SMALL.vocab]
+        dec = next(a for a in manifest["artifacts"] if a["name"] == "decode_b1")
+        # decode outputs caches with the same shape it consumed
+        assert dec["inputs"][1]["shape"] == dec["outputs"][1]["shape"]
+
+
+def test_repo_artifacts_manifest_consistent():
+    """If `make artifacts` has run, sanity-check the real manifest."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    assert manifest["model"]["name"] == M.TINY.name
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "kernel_fastattn_causal" in names
+    assert "kernel_standard_causal" in names
+    for b in manifest["prefill_batches"]:
+        for s in manifest["prefill_seqs"]:
+            assert f"prefill_b{b}_s{s}" in names

@@ -1,0 +1,290 @@
+"""L1 correctness: FastAttention Pallas kernel vs the pure-jnp oracle.
+
+The CORE correctness signal of the build path — `make artifacts` refuses to
+ship artifacts unless this suite is green (see Makefile `test` target, run in
+CI order before cargo test).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fast_attention import (
+    DEFAULT_BLOCK_K1,
+    DEFAULT_BLOCK_K2,
+    fast_attention,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import standard_attention
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def _max_err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+def _run(b, n, nkv, sq, skv, d, *, causal=False, kv_len=None, dtype=jnp.float32,
+         tol=2e-5, **kw):
+    q = _rand((b, n, sq, d), dtype)
+    k = _rand((b, nkv, skv, d), dtype)
+    v = _rand((b, nkv, skv, d), dtype)
+    kl = None if kv_len is None else jnp.int32(kv_len)
+    out = fast_attention(q, k, v, causal=causal, kv_len=kl, **kw)
+    ref = standard_attention(q, k, v, causal=causal, kv_len=kl)
+    assert out.shape == ref.shape
+    assert out.dtype == q.dtype
+    assert _max_err(out, ref) < tol, f"max err {_max_err(out, ref)}"
+
+
+# ---------------------------------------------------------------- basic --
+
+class TestBasic:
+    def test_noncausal_square(self):
+        _run(1, 2, 2, 64, 64, 32)
+
+    def test_causal_square(self):
+        _run(1, 2, 2, 64, 64, 32, causal=True)
+
+    def test_batched(self):
+        _run(3, 4, 4, 32, 32, 16, causal=True)
+
+    def test_cross_attention_rect(self):
+        _run(1, 2, 2, 32, 96, 16)
+
+    def test_single_query_decode(self):
+        _run(2, 4, 4, 1, 128, 64, kv_len=77)
+
+    def test_head_dim_128(self):
+        _run(1, 2, 2, 32, 32, 128, causal=True)
+
+    def test_seq_one_kv_one(self):
+        _run(1, 1, 1, 1, 1, 8)
+
+
+# ------------------------------------------------------------------ GQA --
+
+class TestGQA:
+    def test_gqa_2x(self):
+        _run(1, 4, 2, 32, 32, 16, causal=True)
+
+    def test_mqa(self):
+        _run(2, 8, 1, 32, 32, 16, causal=True)
+
+    def test_gqa_decode(self):
+        _run(1, 8, 2, 1, 64, 32, kv_len=40)
+
+    def test_bad_group_raises(self):
+        q = _rand((1, 3, 8, 8))
+        k = _rand((1, 2, 8, 8))
+        with pytest.raises(ValueError):
+            fast_attention(q, k, k)
+
+
+# --------------------------------------------------------- tiling shapes --
+
+class TestTiling:
+    """Two-level tiling: every (block_q, block_k1, block_k2) agrees."""
+
+    @pytest.mark.parametrize("bq,bk1,bk2", [
+        (8, 8, 8),     # degenerate: one level
+        (16, 32, 8),   # 4 sub-blocks per slab
+        (32, 64, 16),
+        (64, 16, 16),  # slab == sub-block
+        (8, 64, 4),
+    ])
+    def test_block_shapes_causal(self, bq, bk1, bk2):
+        _run(1, 2, 2, 64, 64, 16, causal=True,
+             block_q=bq, block_k1=bk1, block_k2=bk2)
+
+    @pytest.mark.parametrize("bq,bk1,bk2", [(16, 32, 8), (32, 64, 16)])
+    def test_block_shapes_noncausal(self, bq, bk1, bk2):
+        _run(1, 2, 2, 64, 64, 16, block_q=bq, block_k1=bk1, block_k2=bk2)
+
+    def test_non_divisible_seq(self):
+        # seq not a multiple of any block size — padding + masking path.
+        _run(1, 2, 2, 50, 50, 16, causal=True,
+             block_q=16, block_k1=16, block_k2=8)
+
+    def test_blocks_larger_than_seq(self):
+        _run(1, 1, 1, 5, 7, 8, block_q=64, block_k1=64, block_k2=16)
+
+    def test_bad_block_divisibility_fixed_by_gcd(self):
+        # block_k2=12 does not divide block_k1=32; impl falls back to gcd.
+        _run(1, 1, 1, 32, 32, 8, causal=True,
+             block_q=16, block_k1=32, block_k2=12)
+
+
+# ---------------------------------------------------------- tiling mask --
+
+class TestTilingMask:
+    """Mask semantics without materializing S×S."""
+
+    def test_kv_len_zero_rows_are_zero(self):
+        q = _rand((1, 1, 4, 8))
+        k = _rand((1, 1, 16, 8))
+        v = _rand((1, 1, 16, 8))
+        out = fast_attention(q, k, v, kv_len=jnp.int32(0))
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+    def test_kv_len_one(self):
+        _run(1, 2, 2, 4, 32, 8, kv_len=1)
+
+    def test_kv_len_per_row(self):
+        # continuous batching: every row has its own valid KV length
+        q = _rand((3, 2, 1, 16))
+        k = _rand((3, 2, 40, 16))
+        v = _rand((3, 2, 40, 16))
+        kl = jnp.array([5, 17, 40], jnp.int32)
+        out = fast_attention(q, k, v, kv_len=kl)
+        ref = standard_attention(q, k, v, kv_len=kl)
+        assert _max_err(out, ref) < 2e-5
+
+    def test_kv_len_bad_shape_raises(self):
+        q = _rand((2, 1, 4, 8))
+        k = _rand((2, 1, 8, 8))
+        with pytest.raises(ValueError):
+            fast_attention(q, k, k, kv_len=jnp.array([1, 2, 3], jnp.int32))
+
+    def test_kv_len_exact_block_boundary(self):
+        _run(1, 2, 2, 4, 64, 8, kv_len=16,
+             block_k1=16, block_k2=16)
+
+    def test_kv_len_mid_block(self):
+        _run(1, 2, 2, 4, 64, 8, kv_len=19, block_k1=16, block_k2=8)
+
+    def test_causal_first_row_attends_self_only(self):
+        q = _rand((1, 1, 8, 4))
+        k = _rand((1, 1, 8, 4))
+        v = _rand((1, 1, 8, 4))
+        out = fast_attention(q, k, v, causal=True)
+        # row 0 sees only position 0 -> output equals v[0].
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0, 0]), np.asarray(v[0, 0, 0]), rtol=1e-5
+        )
+
+    def test_masked_tail_is_ignored(self):
+        # Garbage in the masked KV tail must not change the result.
+        q = _rand((1, 2, 4, 8))
+        k = _rand((1, 2, 32, 8))
+        v = _rand((1, 2, 32, 8))
+        k_dirty = k.at[:, :, 20:, :].set(1e9)
+        v_dirty = v.at[:, :, 20:, :].set(-1e9)
+        a = fast_attention(q, k, v, kv_len=jnp.int32(20))
+        b = fast_attention(q, k_dirty, v_dirty, kv_len=jnp.int32(20))
+        assert _max_err(a, b) < 1e-5
+
+
+# ------------------------------------------------------------- numerics --
+
+class TestNumerics:
+    def test_large_scores_stable(self):
+        # online softmax must not overflow with large logits
+        q = _rand((1, 1, 32, 16), scale=30.0)
+        k = _rand((1, 1, 32, 16), scale=30.0)
+        v = _rand((1, 1, 32, 16))
+        out = fast_attention(q, k, v, causal=True)
+        ref = standard_attention(q, k, v, causal=True)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert _max_err(out, ref) < 1e-4
+
+    def test_uniform_scores(self):
+        # all-equal scores -> output is the running mean of V.
+        q = jnp.zeros((1, 1, 8, 4))
+        k = _rand((1, 1, 8, 4))
+        v = _rand((1, 1, 8, 4))
+        out = fast_attention(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0, 0]),
+            np.asarray(jnp.mean(v[0, 0], axis=0)),
+            rtol=1e-5,
+        )
+
+    def test_bf16_inputs(self):
+        _run(1, 2, 2, 32, 32, 16, causal=True, dtype=jnp.bfloat16, tol=3e-2)
+
+    def test_custom_scale(self):
+        q = _rand((1, 1, 16, 8))
+        k = _rand((1, 1, 16, 8))
+        v = _rand((1, 1, 16, 8))
+        out = fast_attention(q, k, v, sm_scale=0.25)
+        ref = standard_attention(q, k, v, sm_scale=0.25)
+        assert _max_err(out, ref) < 2e-5
+
+    def test_permutation_invariance_noncausal(self):
+        # non-causal attention is invariant to a KV permutation.
+        q = _rand((1, 1, 8, 8))
+        k = _rand((1, 1, 16, 8))
+        v = _rand((1, 1, 16, 8))
+        perm = np.asarray(RNG.permutation(16))
+        a = fast_attention(q, k, v)
+        b = fast_attention(q, k[:, :, perm], v[:, :, perm])
+        assert _max_err(a, b) < 2e-5
+
+
+# ---------------------------------------------------- hypothesis sweeps --
+
+@st.composite
+def attn_shapes(draw):
+    b = draw(st.integers(1, 2))
+    nkv = draw(st.sampled_from([1, 2]))
+    n = nkv * draw(st.sampled_from([1, 2, 4]))
+    skv = draw(st.integers(1, 80))
+    causal = draw(st.booleans())
+    sq = skv if causal else draw(st.integers(1, 48))
+    d = draw(st.sampled_from([4, 8, 16, 32]))
+    kv_len = draw(st.one_of(st.none(), st.integers(0, skv)))
+    bq = draw(st.sampled_from([8, 16, 32]))
+    bk2 = draw(st.sampled_from([4, 8, 16]))
+    bk1 = bk2 * draw(st.sampled_from([1, 2, 4]))
+    return b, n, nkv, sq, skv, d, causal, kv_len, bq, bk1, bk2
+
+
+@settings(max_examples=40, deadline=None)
+@given(attn_shapes())
+def test_hypothesis_matches_oracle(shape):
+    b, n, nkv, sq, skv, d, causal, kv_len, bq, bk1, bk2 = shape
+    _run(b, n, nkv, sq, skv, d, causal=causal, kv_len=kv_len,
+         block_q=bq, block_k1=bk1, block_k2=bk2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([jnp.float32, jnp.bfloat16]),
+    st.integers(1, 64),
+    st.sampled_from([8, 16, 32, 64]),
+)
+def test_hypothesis_dtypes(dtype, skv, d):
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    _run(1, 2, 2, skv, skv, d, causal=True, dtype=dtype, tol=tol)
+
+
+# ----------------------------------------------------------- misc/meta --
+
+def test_vmem_footprint_monotone():
+    a = vmem_footprint_bytes(64, 64, 64)
+    b = vmem_footprint_bytes(64, 128, 64)
+    c = vmem_footprint_bytes(128, 128, 64)
+    assert a < b < c
+
+
+def test_shape_mismatch_raises():
+    q = _rand((1, 2, 8, 8))
+    k = _rand((1, 2, 8, 4))
+    with pytest.raises(ValueError):
+        fast_attention(q, k, k)
+
+
+def test_causal_rect_not_implemented():
+    q = _rand((1, 1, 4, 8))
+    k = _rand((1, 1, 8, 8))
+    with pytest.raises(NotImplementedError):
+        fast_attention(q, k, k, causal=True)

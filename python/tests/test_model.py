@@ -1,0 +1,198 @@
+"""L2 model checks: shapes, prefill/decode consistency, oracle agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(
+    name="test-tiny",
+    vocab=64,
+    n_layers=2,
+    d_model=32,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    max_seq=24,
+    block_q=8,
+    block_k1=8,
+    block_k2=4,
+)
+
+GQA_CFG = M.ModelConfig(
+    name="test-gqa",
+    vocab=64,
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    max_seq=24,
+    block_q=8,
+    block_k1=8,
+    block_k2=4,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def _tokens(b, s, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, CFG.vocab, (b, s)), jnp.int32
+    )
+
+
+class TestParamSpecs:
+    def test_count_matches_init(self, params):
+        assert len(params) == len(M.param_specs(CFG))
+
+    def test_shapes_match(self, params):
+        for (name, shape, _), arr in zip(M.param_specs(CFG), params):
+            assert arr.shape == tuple(shape), name
+
+    def test_n_params(self):
+        total = sum(int(np.prod(s)) for _, s, _ in M.param_specs(CFG))
+        assert CFG.n_params == total
+
+    def test_order_is_stable(self):
+        a = [n for n, _, _ in M.param_specs(CFG)]
+        b = [n for n, _, _ in M.param_specs(CFG)]
+        assert a == b
+        assert a[0] == "tok_embed" and a[-1] == "lm_head"
+
+
+class TestPrefill:
+    def test_output_shapes(self, params):
+        logits, kc, vc = M.prefill(CFG, params, _tokens(2, 8))
+        assert logits.shape == (2, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, 2, CFG.n_kv_heads, CFG.max_seq,
+                            CFG.head_dim)
+        assert vc.shape == kc.shape
+
+    def test_matches_reference_attention(self, params):
+        tokens = _tokens(2, 8)
+        logits, _, _ = M.prefill(CFG, params, tokens)
+        ref = M.prefill_reference(CFG, params, tokens)
+        assert float(jnp.max(jnp.abs(logits - ref))) < 5e-5
+
+    def test_cache_tail_is_padding(self, params):
+        _, kc, vc = M.prefill(CFG, params, _tokens(1, 8))
+        assert float(jnp.max(jnp.abs(kc[:, :, :, 8:, :]))) == 0.0
+        assert float(jnp.max(jnp.abs(vc[:, :, :, 8:, :]))) == 0.0
+
+    def test_batch_rows_independent(self, params):
+        t2 = _tokens(2, 8)
+        logits2, _, _ = M.prefill(CFG, params, t2)
+        logits1, _, _ = M.prefill(CFG, params, t2[:1])
+        assert float(jnp.max(jnp.abs(logits2[0] - logits1[0]))) < 1e-4
+
+
+class TestDecode:
+    def test_matches_prefill(self, params):
+        tokens = _tokens(2, 8)
+        _, kc, vc = M.prefill(CFG, params, tokens)
+        nxt = _tokens(2, 1, seed=7)
+        d_logits, kc2, vc2 = M.decode(CFG, params, nxt, kc, vc, jnp.int32(8))
+        p_logits, _, _ = M.prefill(
+            CFG, params, jnp.concatenate([tokens, nxt], axis=1)
+        )
+        assert float(jnp.max(jnp.abs(d_logits - p_logits))) < 1e-3
+
+    def test_multi_step_chain(self, params):
+        tokens = _tokens(1, 4)
+        _, kc, vc = M.prefill(CFG, params, tokens)
+        seq = tokens
+        for step in range(3):
+            nxt = _tokens(1, 1, seed=100 + step)
+            d_logits, kc, vc = M.decode(
+                CFG, params, nxt, kc, vc, jnp.int32(4 + step)
+            )
+            seq = jnp.concatenate([seq, nxt], axis=1)
+        p_logits, _, _ = M.prefill(CFG, params, seq)
+        assert float(jnp.max(jnp.abs(d_logits - p_logits))) < 1e-3
+
+    def test_cache_updated_in_place(self, params):
+        tokens = _tokens(1, 4)
+        _, kc, vc = M.prefill(CFG, params, tokens)
+        nxt = _tokens(1, 1, seed=5)
+        _, kc2, _ = M.decode(CFG, params, nxt, kc, vc, jnp.int32(4))
+        # prefix preserved, slot 4 written
+        assert float(jnp.max(jnp.abs(kc2[:, :, :, :4] - kc[:, :, :, :4]))) == 0
+        assert float(jnp.max(jnp.abs(kc2[:, :, :, 4]))) > 0
+
+
+class TestContinuousBatching:
+    """Per-row lengths/positions — the coordinator's ragged batches."""
+
+    def test_ragged_prefill_matches_single(self, params):
+        toks = _tokens(2, 8, seed=21)
+        lengths = jnp.array([5, 8], jnp.int32)
+        logits, _, _ = M.prefill(CFG, params, toks, lengths)
+        solo, _, _ = M.prefill(CFG, params, toks[:1, :5])
+        assert float(jnp.max(jnp.abs(logits[0] - solo[0]))) < 1e-4
+
+    def test_ragged_decode_rows_independent(self, params):
+        toks = _tokens(2, 8, seed=22)
+        lengths = jnp.array([5, 8], jnp.int32)
+        _, kc, vc = M.prefill(CFG, params, toks, lengths)
+        nxt = _tokens(2, 1, seed=23)
+        d_logits, _, _ = M.decode(
+            CFG, params, nxt, kc, vc, jnp.array([5, 8], jnp.int32)
+        )
+        # row 0: equivalent to prefill over its true 6-token sequence
+        p0, _, _ = M.prefill(
+            CFG, params, jnp.concatenate([toks[:1, :5], nxt[:1]], axis=1)
+        )
+        p1, _, _ = M.prefill(
+            CFG, params, jnp.concatenate([toks[1:], nxt[1:]], axis=1)
+        )
+        assert float(jnp.max(jnp.abs(d_logits[0] - p0[0]))) < 1e-3
+        assert float(jnp.max(jnp.abs(d_logits[1] - p1[0]))) < 1e-3
+
+    def test_padded_slot_is_harmless(self, params):
+        # a dummy slot (zero cache, pos 0) must not disturb the real row
+        toks = _tokens(2, 8, seed=24)
+        _, kc, vc = M.prefill(CFG, params, toks)
+        nxt = _tokens(2, 1, seed=25)
+        # slot 1 is "dummy": zeroed cache, pos 0
+        kc_d = kc.at[:, 1:].set(0.0)
+        vc_d = vc.at[:, 1:].set(0.0)
+        a, _, _ = M.decode(CFG, params, nxt, kc_d, vc_d,
+                           jnp.array([8, 0], jnp.int32))
+        b, _, _ = M.decode(CFG, params, nxt, kc, vc,
+                           jnp.array([8, 8], jnp.int32))
+        assert float(jnp.max(jnp.abs(a[0] - b[0]))) < 1e-4
+
+
+class TestGQAModel:
+    def test_prefill_decode_consistency(self):
+        params = M.init_params(GQA_CFG, 3)
+        tokens = _tokens(1, 8, seed=9)
+        _, kc, vc = M.prefill(GQA_CFG, params, tokens)
+        assert kc.shape[2] == GQA_CFG.n_kv_heads
+        nxt = _tokens(1, 1, seed=11)
+        d_logits, _, _ = M.decode(GQA_CFG, params, nxt, kc, vc, jnp.int32(8))
+        p_logits, _, _ = M.prefill(
+            GQA_CFG, params, jnp.concatenate([tokens, nxt], axis=1)
+        )
+        assert float(jnp.max(jnp.abs(d_logits - p_logits))) < 1e-3
+
+
+class TestConfigs:
+    def test_tiny_config_param_count(self):
+        assert 3_000_000 < M.TINY.n_params < 4_000_000
+
+    def test_small_100m_class(self):
+        # ~124M params, GPT-2-small-shaped — used by the memory model tests.
+        assert 100_000_000 < M.SMALL_100M.n_params < 200_000_000
+
+    def test_wrong_param_count_raises(self, params):
+        with pytest.raises(ValueError):
+            M.prefill(CFG, params[:-1], _tokens(1, 8))

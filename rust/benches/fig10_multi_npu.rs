@@ -1,0 +1,5 @@
+//! Regenerates the paper experiment — see fastattn::reports for the
+//! workload, parameters, and paper-vs-measured comparison logic.
+fn main() {
+    fastattn::reports::npu::fig10_multi_npu().print();
+}

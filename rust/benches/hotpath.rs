@@ -1,0 +1,154 @@
+//! Hot-path microbenchmarks — the perf-pass instrument (EXPERIMENTS.md
+//! §Perf).  Measures the real execution-layer costs:
+//!
+//!   * PJRT artifact execution (standalone kernel, prefill, decode)
+//!   * engine decode step end-to-end (pack → execute → unpack → sample)
+//!   * KV-cache batch pack/unpack memcpy
+//!   * the rust CPU FlashAttention2 kernel (offload host path)
+//!   * the threaded ring AllReduce
+//!
+//! Run with `cargo bench --bench hotpath` (release profile).
+
+use fastattn::attention::flash::{flash_attention, FlashParams};
+use fastattn::benchkit::{bench, fmt_time, Table};
+use fastattn::coordinator::allreduce::ring_all_reduce;
+use fastattn::coordinator::kv_cache::{pack_batch, CacheShape};
+use fastattn::coordinator::{Engine, EngineConfig, GenParams};
+use fastattn::runtime::{HostTensor, Runtime};
+
+fn main() {
+    let mut t = Table::new(
+        "hotpath microbenchmarks (release)",
+        &["path", "mean", "p50", "min"],
+    );
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let have_artifacts = std::path::Path::new(dir).join("manifest.json").exists();
+
+    // --- CPU flash attention (offload host path) ----------------------
+    for (heads, kv, d) in [(5usize, 4096usize, 128usize), (5, 16384, 128)] {
+        let q = vec![0.01f32; heads * d];
+        let k = vec![0.02f32; heads * kv * d];
+        let v = vec![0.03f32; heads * kv * d];
+        let mut out = vec![0.0f32; heads * d];
+        let p = FlashParams::decode(heads, kv, d);
+        let s = bench(3, 20, || flash_attention(&q, &k, &v, &mut out, &p));
+        t.row(&[
+            format!("flash_cpu decode kv={kv} heads={heads}"),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+    }
+
+    // --- KV pack (continuous-batching memcpy boundary) ----------------
+    {
+        let shape = CacheShape { layers: 4, kv_heads: 4, max_seq: 160, head_dim: 64 };
+        let seq: Vec<f32> = vec![1.0; shape.seq_elems()];
+        let seqs: Vec<(usize, &[f32])> =
+            (0..4).map(|i| (i, seq.as_slice())).collect();
+        let s = bench(3, 50, || {
+            let _ = pack_batch(shape, 4, &seqs).unwrap();
+        });
+        t.row(&[
+            "kv pack_batch b=4 (tiny model)".into(),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+    }
+
+    // --- threaded ring AllReduce --------------------------------------
+    for elems in [64 * 1024usize, 1024 * 1024] {
+        let s = bench(1, 10, || {
+            let shards: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; elems]).collect();
+            let _ = ring_all_reduce(shards);
+        });
+        t.row(&[
+            format!("ring_all_reduce n=4 {}K f32", elems / 1024),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+    }
+
+    // --- PJRT execution paths ------------------------------------------
+    if have_artifacts {
+        let rt = Runtime::load(dir).expect("runtime");
+        let mk = |salt: f32| {
+            let n = 4 * 128 * 64;
+            HostTensor::f32(
+                vec![1, 4, 128, 64],
+                (0..n).map(|i| ((i as f32 * 0.11 + salt).sin()) * 0.3).collect(),
+            )
+        };
+        let (q, k, v) = (mk(0.0), mk(1.0), mk(2.0));
+        let s = bench(2, 15, || {
+            let _ = rt
+                .run("kernel_fastattn_causal", &[q.clone(), k.clone(), v.clone()])
+                .unwrap();
+        });
+        t.row(&[
+            "pjrt kernel_fastattn_causal (1,4,128,64)".into(),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+        let s = bench(2, 15, || {
+            let _ = rt
+                .run("kernel_standard_causal", &[q.clone(), k.clone(), v.clone()])
+                .unwrap();
+        });
+        t.row(&[
+            "pjrt kernel_standard_causal (1,4,128,64)".into(),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+
+        // --- engine end-to-end: prefill + decode steps -----------------
+        let rt2 = Runtime::load(dir).expect("runtime");
+        let mut engine = Engine::new(rt2, EngineConfig::default());
+        let mut n = 0u64;
+        let s = bench(1, 5, || {
+            n += 1;
+            for i in 0..4 {
+                engine
+                    .submit(
+                        vec![((n * 7 + i) % 500) as i32 + 1; 16],
+                        GenParams { max_new_tokens: 8, eos_token: None },
+                    )
+                    .unwrap();
+            }
+            let out = engine.run_until_idle().unwrap();
+            assert_eq!(out.len(), 4);
+        });
+        t.row(&[
+            "engine 4 reqs × (prefill16 + 8 decode)".into(),
+            fmt_time(s.mean_s),
+            fmt_time(s.p50_s),
+            fmt_time(s.min_s),
+        ]);
+        let m = &engine.metrics;
+        t.row(&[
+            "engine decode step (amortized)".into(),
+            fmt_time(m.decode_s / m.decode_steps.max(1) as f64),
+            String::from("—"),
+            String::from("—"),
+        ]);
+        t.row(&[
+            "engine prefill step (amortized)".into(),
+            fmt_time(m.prefill_s / m.prefill_steps.max(1) as f64),
+            String::from("—"),
+            String::from("—"),
+        ]);
+    } else {
+        t.row(&[
+            "pjrt/engine paths skipped (run `make artifacts`)".into(),
+            "—".into(),
+            "—".into(),
+            "—".into(),
+        ]);
+    }
+
+    t.print();
+}

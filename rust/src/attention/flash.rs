@@ -1,0 +1,318 @@
+//! FlashAttention2 on the host CPU — real, not simulated.
+//!
+//! Online-softmax tiled attention with the FlashAttention2 loop order
+//! (outer over Q blocks, inner over KV blocks, per-row running max/sum,
+//! single rescale per block).  This kernel executes the cooperative
+//! strategy's host-side decode attention (§4.4): when a layer's KV cache
+//! is CPU-resident, the coordinator ships the one-token Q down here
+//! instead of uploading tens of MB of KV over PCIe.
+//!
+//! Layout matches [`standard`](super::standard): flat
+//! `[heads][seq][head_dim]` row-major f32.
+
+/// Tiling + shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashParams {
+    pub heads: usize,
+    pub seq_q: usize,
+    pub seq_kv: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+    /// Q rows per block.
+    pub block_q: usize,
+    /// KV rows per block.
+    pub block_kv: usize,
+    pub scale: f32,
+}
+
+impl FlashParams {
+    /// Decode-step shape: one query row over `kv` cached tokens.
+    pub fn decode(heads: usize, kv: usize, head_dim: usize) -> Self {
+        Self {
+            heads,
+            seq_q: 1,
+            seq_kv: kv,
+            head_dim,
+            causal: false,
+            block_q: 1,
+            block_kv: 128,
+            scale: 1.0 / (head_dim as f32).sqrt(),
+        }
+    }
+}
+
+/// Four-accumulator dot product: breaks the serial FP dependency chain so
+/// the compiler can keep 4 FMA pipes busy (≈3× on the decode path — §Perf).
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0f32;
+    for i in chunks * 4..n {
+        rest += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + rest
+}
+
+/// FlashAttention2 forward: `out = softmax(q kᵀ·scale [+causal]) v`.
+pub fn flash_attention(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], p: &FlashParams) {
+    let (h, sq, skv, d) = (p.heads, p.seq_q, p.seq_kv, p.head_dim);
+    assert_eq!(q.len(), h * sq * d, "q shape");
+    assert_eq!(k.len(), h * skv * d, "k shape");
+    assert_eq!(v.len(), h * skv * d, "v shape");
+    assert_eq!(out.len(), h * sq * d, "out shape");
+    let bq = p.block_q.max(1).min(sq.max(1));
+    let bkv = p.block_kv.max(1).min(skv.max(1));
+
+    // Per-thread scratch: scores for one (bq × bkv) tile + running stats.
+    let mut scores = vec![0.0f32; bq * bkv];
+    let mut m = vec![0.0f32; bq];
+    let mut l = vec![0.0f32; bq];
+    let mut acc = vec![0.0f32; bq * d];
+
+    for head in 0..h {
+        let qh = &q[head * sq * d..][..sq * d];
+        let kh = &k[head * skv * d..][..skv * d];
+        let vh = &v[head * skv * d..][..skv * d];
+        let oh = &mut out[head * sq * d..][..sq * d];
+
+        let mut q0 = 0;
+        while q0 < sq {
+            let nq = bq.min(sq - q0);
+            m[..nq].fill(f32::NEG_INFINITY);
+            l[..nq].fill(0.0);
+            acc[..nq * d].fill(0.0);
+
+            // causal suffix alignment: row i sees cols <= i + (skv - sq)
+            let row_limit = |i: usize| -> usize {
+                if p.causal { q0 + i + 1 + skv - sq } else { skv }
+            };
+            let block_cols = if p.causal { row_limit(nq - 1).min(skv) } else { skv };
+
+            let mut k0 = 0;
+            while k0 < block_cols {
+                let nk = bkv.min(block_cols - k0);
+
+                // --- scores tile: q_blk @ k_blkᵀ -----------------------
+                for i in 0..nq {
+                    let qi = &qh[(q0 + i) * d..][..d];
+                    let srow = &mut scores[i * bkv..][..nk];
+                    for (j, s) in srow.iter_mut().enumerate() {
+                        let kj = &kh[(k0 + j) * d..][..d];
+                        *s = dot4(qi, kj) * p.scale;
+                    }
+                }
+
+                // --- online softmax update per row ---------------------
+                for i in 0..nq {
+                    let limit = row_limit(i);
+                    // columns of this tile visible to row i
+                    let vis = limit.saturating_sub(k0).min(nk);
+                    if vis == 0 {
+                        continue;
+                    }
+                    let srow = &mut scores[i * bkv..][..nk];
+                    let mut blk_max = f32::NEG_INFINITY;
+                    for &s in &srow[..vis] {
+                        if s > blk_max {
+                            blk_max = s;
+                        }
+                    }
+                    let m_new = m[i].max(blk_max);
+                    let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
+                    let arow = &mut acc[i * d..][..d];
+                    if alpha != 1.0 {
+                        for a in arow.iter_mut() {
+                            *a *= alpha;
+                        }
+                    }
+                    let mut psum = 0.0f32;
+                    for j in 0..vis {
+                        let pij = (srow[j] - m_new).exp();
+                        psum += pij;
+                        let vj = &vh[(k0 + j) * d..][..d];
+                        for t in 0..d {
+                            arow[t] += pij * vj[t];
+                        }
+                    }
+                    l[i] = l[i] * alpha + psum;
+                    m[i] = m_new;
+                }
+                k0 += nk;
+            }
+
+            // --- final normalize ---------------------------------------
+            for i in 0..nq {
+                let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
+                let orow = &mut oh[(q0 + i) * d..][..d];
+                let arow = &acc[i * d..][..d];
+                for t in 0..d {
+                    orow[t] = arow[t] * inv;
+                }
+            }
+            q0 += nq;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::standard::{standard_attention, StdParams};
+    use super::*;
+    use crate::prop_ensure;
+    use crate::proptest::check;
+
+    fn run_both(
+        h: usize,
+        sq: usize,
+        skv: usize,
+        d: usize,
+        causal: bool,
+        bq: usize,
+        bkv: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        // simple deterministic pseudo-random fill
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state as f64 / u64::MAX as f64) as f32 - 0.5) * 2.0
+        };
+        let q: Vec<f32> = (0..h * sq * d).map(|_| next()).collect();
+        let k: Vec<f32> = (0..h * skv * d).map(|_| next()).collect();
+        let v: Vec<f32> = (0..h * skv * d).map(|_| next()).collect();
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let mut flash = vec![0.0; h * sq * d];
+        flash_attention(
+            &q,
+            &k,
+            &v,
+            &mut flash,
+            &FlashParams {
+                heads: h,
+                seq_q: sq,
+                seq_kv: skv,
+                head_dim: d,
+                causal,
+                block_q: bq,
+                block_kv: bkv,
+                scale,
+            },
+        );
+        let mut std = vec![0.0; h * sq * d];
+        standard_attention(
+            &q,
+            &k,
+            &v,
+            &mut std,
+            &StdParams { heads: h, seq_q: sq, seq_kv: skv, head_dim: d, causal, scale },
+        );
+        (flash, std)
+    }
+
+    fn max_err(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn matches_standard_noncausal() {
+        let (f, s) = run_both(2, 16, 24, 8, false, 4, 8, 1);
+        assert!(max_err(&f, &s) < 1e-5);
+    }
+
+    #[test]
+    fn matches_standard_causal() {
+        let (f, s) = run_both(2, 16, 16, 8, true, 4, 8, 2);
+        assert!(max_err(&f, &s) < 1e-5);
+    }
+
+    #[test]
+    fn matches_standard_causal_rect() {
+        // decode chunk: 4 new rows over 20 cached
+        let (f, s) = run_both(1, 4, 20, 8, true, 2, 8, 3);
+        assert!(max_err(&f, &s) < 1e-5);
+    }
+
+    #[test]
+    fn decode_shape() {
+        let (f, s) = run_both(4, 1, 77, 16, false, 1, 16, 4);
+        assert!(max_err(&f, &s) < 1e-5);
+    }
+
+    #[test]
+    fn block_sizes_irrelevant() {
+        let (a, _) = run_both(1, 13, 29, 4, false, 3, 5, 9);
+        let (b, _) = run_both(1, 13, 29, 4, false, 13, 29, 9);
+        assert!(max_err(&a, &b) < 1e-5);
+    }
+
+    /// Property: flash == standard for arbitrary shapes/tilings.
+    #[test]
+    fn prop_flash_equals_standard() {
+        check(48, |rng| {
+            let h = rng.range(1, 3);
+            let sq = rng.range(1, 24);
+            let skv = sq + rng.range(0, 24);
+            let d = *rng.pick(&[1usize, 4, 8, 16]);
+            let causal = rng.bool();
+            let bq = rng.range(1, 12);
+            let bkv = rng.range(1, 16);
+            let seed = rng.next_u64();
+            let (f, s) = run_both(h, sq, skv, d, causal, bq, bkv, seed);
+            let err = max_err(&f, &s);
+            prop_ensure!(
+                err < 2e-5,
+                "h={h} sq={sq} skv={skv} d={d} causal={causal} \
+                 bq={bq} bkv={bkv}: err {err}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Property: output rows are convex combinations of V rows — within
+    /// [min, max] of the visible V per dimension.
+    #[test]
+    fn prop_output_in_v_hull() {
+        check(64, |rng| {
+            let skv = rng.range(1, 32);
+            let d = *rng.pick(&[2usize, 4, 8]);
+            let seed = rng.next_u64();
+            let (f, _) = run_both(1, 1, skv, d, false, 1, 8, seed);
+            // regenerate v with the same seed stream to find bounds
+            let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+            let mut next = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                ((state as f64 / u64::MAX as f64) as f32 - 0.5) * 2.0
+            };
+            let _q: Vec<f32> = (0..d).map(|_| next()).collect();
+            let _k: Vec<f32> = (0..skv * d).map(|_| next()).collect();
+            let v: Vec<f32> = (0..skv * d).map(|_| next()).collect();
+            for t in 0..d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for j in 0..skv {
+                    lo = lo.min(v[j * d + t]);
+                    hi = hi.max(v[j * d + t]);
+                }
+                prop_ensure!(
+                    f[t] >= lo - 1e-4 && f[t] <= hi + 1e-4,
+                    "dim {t}: {} not in [{lo}, {hi}]",
+                    f[t]
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Real attention implementations + the paper's planning components.
+//!
+//! * [`standard`] — naive `softmax(QKᵀ/√d)V`, the numeric oracle for
+//!   property tests and the paper's baseline definition (§5.1);
+//! * [`flash`]    — a real FlashAttention2 (online-softmax, tiled) CPU
+//!   kernel in rust; it executes the cooperative strategy's host-side
+//!   decode attention (§4.4) and is what `sim::cpu` measures;
+//! * [`tiling`]   — the two-level tile-size planner under L0/L1 capacity
+//!   constraints (§4.1);
+//! * [`mask`]     — the tiling-mask generator: M-mask, B-mask extraction
+//!   by shifting, block classification (§4.1, Figure 3);
+//! * [`volta_layout`] — the Appendix B m8n8k4 thread-layout model: why
+//!   FP16 accumulators feed back-to-back GEMMs without a register
+//!   exchange while FP32 cannot.
+
+pub mod flash;
+pub mod mask;
+pub mod standard;
+pub mod tiling;
+pub mod volta_layout;

@@ -1,0 +1,130 @@
+//! Naive attention — the paper's "standard attention" baseline (§5.1)
+//! and the numeric oracle for the rust-side property tests.
+//!
+//! Layout: row-major `[heads][seq][head_dim]` flat slices, batch handled
+//! by the caller (the serving path operates per-sequence).
+
+/// Shape/config for one standard-attention invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct StdParams {
+    pub heads: usize,
+    pub seq_q: usize,
+    pub seq_kv: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+    /// Softmax scale; use `1/sqrt(head_dim)` for the paper's formula.
+    pub scale: f32,
+}
+
+/// Compute `out = softmax(q kᵀ · scale + mask) v`, materializing the full
+/// score matrix per head (exactly what FastAttention avoids).
+///
+/// `q`: `[heads, seq_q, head_dim]`, `k`/`v`: `[heads, seq_kv, head_dim]`,
+/// `out`: `[heads, seq_q, head_dim]`.
+pub fn standard_attention(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], p: &StdParams) {
+    let (h, sq, skv, d) = (p.heads, p.seq_q, p.seq_kv, p.head_dim);
+    assert_eq!(q.len(), h * sq * d, "q shape");
+    assert_eq!(k.len(), h * skv * d, "k shape");
+    assert_eq!(v.len(), h * skv * d, "v shape");
+    assert_eq!(out.len(), h * sq * d, "out shape");
+
+    let mut scores = vec![0.0f32; skv];
+    for head in 0..h {
+        let qh = &q[head * sq * d..][..sq * d];
+        let kh = &k[head * skv * d..][..skv * d];
+        let vh = &v[head * skv * d..][..skv * d];
+        let oh = &mut out[head * sq * d..][..sq * d];
+        for i in 0..sq {
+            let qi = &qh[i * d..][..d];
+            // causal with suffix alignment: row i sees j <= i + (skv - sq)
+            let limit = if p.causal { i + 1 + skv - sq } else { skv };
+            let mut max = f32::NEG_INFINITY;
+            for j in 0..limit {
+                let kj = &kh[j * d..][..d];
+                let s: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                let s = s * p.scale;
+                scores[j] = s;
+                if s > max {
+                    max = s;
+                }
+            }
+            let mut sum = 0.0f32;
+            for j in 0..limit {
+                scores[j] = (scores[j] - max).exp();
+                sum += scores[j];
+            }
+            let inv = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+            let oi = &mut oh[i * d..][..d];
+            oi.fill(0.0);
+            for j in 0..limit {
+                let w = scores[j] * inv;
+                let vj = &vh[j * d..][..d];
+                for (o, x) in oi.iter_mut().zip(vj) {
+                    *o += w * x;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(h: usize, sq: usize, skv: usize, d: usize, causal: bool) -> StdParams {
+        StdParams {
+            heads: h,
+            seq_q: sq,
+            seq_kv: skv,
+            head_dim: d,
+            causal,
+            scale: 1.0 / (d as f32).sqrt(),
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_v() {
+        // q = 0 → uniform weights → out = mean(v).
+        let p = params(1, 1, 4, 2, false);
+        let q = vec![0.0; 2];
+        let k = vec![1.0; 8];
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = vec![0.0; 2];
+        standard_attention(&q, &k, &v, &mut out, &p);
+        assert!((out[0] - 4.0).abs() < 1e-6);
+        assert!((out[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let p = params(1, 3, 3, 2, true);
+        let q: Vec<f32> = (0..6).map(|x| x as f32 * 0.1).collect();
+        let k: Vec<f32> = (0..6).map(|x| (x as f32) * 0.2 - 0.5).collect();
+        let v: Vec<f32> = vec![9.0, -3.0, 1.0, 1.0, 2.0, 2.0];
+        let mut out = vec![0.0; 6];
+        standard_attention(&q, &k, &v, &mut out, &p);
+        assert!((out[0] - 9.0).abs() < 1e-6);
+        assert!((out[1] + 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_hot_scores_select_row() {
+        // strongly peaked q·k picks one v row
+        let p = StdParams { scale: 100.0, ..params(1, 1, 3, 2, false) };
+        let q = vec![1.0, 0.0];
+        let k = vec![0.0, 1.0, 1.0, 0.0, 0.0, -1.0]; // row 1 aligned with q
+        let v = vec![1.0, 1.0, 7.0, 8.0, 2.0, 2.0];
+        let mut out = vec![0.0; 2];
+        standard_attention(&q, &k, &v, &mut out, &p);
+        assert!((out[0] - 7.0).abs() < 1e-3);
+        assert!((out[1] - 8.0).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "q shape")]
+    fn bad_shape_panics() {
+        let p = params(1, 2, 2, 2, false);
+        let mut out = vec![0.0; 4];
+        standard_attention(&[0.0; 3], &[0.0; 4], &[0.0; 4], &mut out, &p);
+    }
+}

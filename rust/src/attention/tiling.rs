@@ -1,0 +1,139 @@
+//! Two-level tile-size planner (§4.1).
+//!
+//! Chooses the first-level (L1-buffer) and second-level (L0-buffer) block
+//! sizes under the Ascend capacity constraints, then scores candidate
+//! plans with the pipeline model to pick the latency-optimal one — the
+//! planner behind Figure 9's block-size sweep.
+
+use crate::sim::ascend::{AscendSpec, FastAttnOptions, Tiling};
+use crate::sim::AttnWorkload;
+
+/// A concrete two-level plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TilePlan {
+    /// First-level KV block rows (L1-resident slab).
+    pub block1: u64,
+    /// Second-level KV block rows (L0-resident sub-tile).
+    pub block2: u64,
+    /// Q rows per block.
+    pub block_q: u64,
+    /// Predicted kernel latency under the Ascend model, seconds.
+    pub predicted_s: f64,
+    /// Bytes of L1 occupied by one slab (K+V).
+    pub l1_bytes: u64,
+    /// Bytes of L0 occupied by one sub-tile operand pair.
+    pub l0_bytes: u64,
+}
+
+/// Does a (block1 × head_dim) K slab + V slab (double-buffered) fit L1?
+pub fn fits_l1(spec: &AscendSpec, block1: u64, head_dim: u64, elem: u64) -> bool {
+    // 2 slabs (K, V) × 2 buffers (double buffering).
+    4 * block1 * head_dim * elem <= spec.l1_bytes
+}
+
+/// Does a (block_q × block2) sub-tile's operand pair fit L0?
+pub fn fits_l0(spec: &AscendSpec, block_q: u64, block2: u64, head_dim: u64, elem: u64) -> bool {
+    // A tile (block_q × D) + B tile (block2 × D) in L0A/L0B.
+    (block_q + block2) * head_dim * elem <= spec.l0_bytes
+}
+
+/// Enumerate feasible plans and return the predicted-latency-optimal one.
+pub fn plan(spec: &AscendSpec, w: &AttnWorkload, elem: u64) -> TilePlan {
+    let candidates_b1 = [128u64, 256, 512, 1024, 2048];
+    let candidates_b2 = [64u64, 128, 256];
+    let block_q = 128u64.min(w.seq_q.max(1));
+
+    let mut best: Option<TilePlan> = None;
+    for &b1 in &candidates_b1 {
+        if !fits_l1(spec, b1, w.head_dim, elem) {
+            continue;
+        }
+        for &b2 in &candidates_b2 {
+            if b2 > b1 || b1 % b2 != 0 {
+                continue;
+            }
+            if !fits_l0(spec, block_q, b2, w.head_dim, elem) {
+                continue;
+            }
+            let opts = FastAttnOptions {
+                tiling: Tiling::TwoLevel { block1: b1, block2: b2 },
+                tiling_mask: true,
+                elem_bytes: elem,
+            };
+            let predicted = spec.fastattn_latency(w, &opts).latency_s;
+            let plan = TilePlan {
+                block1: b1,
+                block2: b2,
+                block_q,
+                predicted_s: predicted,
+                l1_bytes: 4 * b1 * w.head_dim * elem,
+                l0_bytes: (block_q + b2) * w.head_dim * elem,
+            };
+            if best.map_or(true, |b| predicted < b.predicted_s) {
+                best = Some(plan);
+            }
+        }
+    }
+    best.expect("no feasible tile plan — L0/L1 too small for head_dim")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(s: u64) -> AttnWorkload {
+        AttnWorkload::prefill(1, 5, s, 128, true)
+    }
+
+    #[test]
+    fn plan_is_feasible() {
+        let spec = AscendSpec::default();
+        let p = plan(&spec, &w(8192), 2);
+        assert!(fits_l1(&spec, p.block1, 128, 2));
+        assert!(fits_l0(&spec, p.block_q, p.block2, 128, 2));
+        assert_eq!(p.block1 % p.block2, 0);
+    }
+
+    #[test]
+    fn long_seq_prefers_large_first_level() {
+        // Fig 9: at S >= 4K, larger first-level blocks win.
+        let spec = AscendSpec::default();
+        let p = plan(&spec, &w(16384), 2);
+        assert!(p.block1 >= 512, "block1 = {}", p.block1);
+        assert!(p.block2 < p.block1);
+    }
+
+    #[test]
+    fn plan_beats_bs128_baseline() {
+        // The planner should beat the BS=128 unified-ish baseline.
+        let spec = AscendSpec::default();
+        let workload = w(8192);
+        let p = plan(&spec, &workload, 2);
+        let baseline = spec
+            .fastattn_latency(
+                &workload,
+                &FastAttnOptions {
+                    tiling: Tiling::TwoLevel { block1: 128, block2: 128 },
+                    tiling_mask: true,
+                    elem_bytes: 2,
+                },
+            )
+            .latency_s;
+        assert!(p.predicted_s <= baseline);
+    }
+
+    #[test]
+    fn l1_capacity_respected() {
+        let spec = AscendSpec::default();
+        // 1 MiB L1, D=128, fp16: 4·b1·128·2 <= 1 MiB → b1 <= 1024.
+        assert!(fits_l1(&spec, 1024, 128, 2));
+        assert!(!fits_l1(&spec, 2048, 128, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "no feasible tile plan")]
+    fn impossible_head_dim_panics() {
+        let spec = AscendSpec { l0_bytes: 64, l1_bytes: 128, ..Default::default() };
+        plan(&spec, &w(1024), 2);
+    }
+}

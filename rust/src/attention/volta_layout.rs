@@ -1,0 +1,169 @@
+//! Executable model of Appendix B: Volta m8n8k4 thread-data layouts and
+//! the back-to-back-GEMM exchange argument.
+//!
+//! Volta's MMA executes per *quadpair* (QP, 8 threads): one `m8n8k4`
+//! multiplies A(8×4)·B(4×8) += C(8×8).  Attention chains two GEMMs
+//! (S = QKᵀ, O = P·V) and the layout of GEMM1's accumulator C decides
+//! whether its elements already sit in the registers of the thread that
+//! needs them as GEMM2's A operand:
+//!
+//! * **FP32 accumulators** (Fig 14): each thread's 8 C elements interleave
+//!   across *two* row pairs — half of them belong to other threads' A rows
+//!   for the next multiply, so the threads must exchange registers (shared
+//!   memory round trip + syncwarp) between the GEMMs;
+//! * **FP16 accumulators** (Fig 15): each thread's C elements lie on a
+//!   single row — exactly the row it owns as the next A operand, so GEMM1
+//!   feeds GEMM2 with **zero** exchange.  This is FastAttention's choice,
+//!   and the TPU/Pallas analogue is keeping `p` VMEM-resident between the
+//!   two dots (see `python/compile/kernels/fast_attention.py`).
+//!
+//! The maps below follow the paper's figures structurally (8 QP threads
+//! indexed 0..8; exact PTX lane ids differ but the ownership *pattern*,
+//! and therefore the exchange count, is what matters).  Tests verify the
+//! partition properties and the paper's claim computationally.
+
+/// Accumulator precision of the first GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accumulator {
+    F32,
+    F16,
+}
+
+/// Tile constants for one quadpair MMA.
+pub const M: usize = 8;
+pub const N: usize = 8;
+pub const K: usize = 4;
+/// Threads per quadpair.
+pub const QP_THREADS: usize = 8;
+
+/// Which QP thread owns A(row, k) for the next `m8n8k4`?
+/// A is 8×4 fp16: one row per thread, 4 consecutive elements.
+pub fn a_owner(row: usize, _k: usize) -> usize {
+    assert!(row < M);
+    row
+}
+
+/// Which QP thread owns C(row, col) after an m8n8k4 with the given
+/// accumulator precision?
+///
+/// * F16: row-major per thread — thread t owns the whole row t
+///   (8 half-precision values, Fig 15);
+/// * F32: each thread owns a 2×4 footprint that spans two rows —
+///   thread t owns rows {2·(t%4), 2·(t%4)+1} restricted to the column
+///   half selected by t/4 (Fig 14's spread pattern).
+pub fn c_owner(acc: Accumulator, row: usize, col: usize) -> usize {
+    assert!(row < M && col < N);
+    match acc {
+        Accumulator::F16 => row,
+        Accumulator::F32 => (row / 2) + 4 * (col / 4),
+    }
+}
+
+/// Count of C elements per thread (both layouts hold 8).
+pub fn elements_per_thread(acc: Accumulator) -> usize {
+    let mut counts = [0usize; QP_THREADS];
+    for r in 0..M {
+        for c in 0..N {
+            counts[c_owner(acc, r, c)] += 1;
+        }
+    }
+    assert!(counts.iter().all(|&x| x == counts[0]));
+    counts[0]
+}
+
+/// Fraction of GEMM1's C elements that must move to a *different* thread
+/// before they can serve as GEMM2's A operand (the exchange the paper
+/// eliminates).  GEMM2 consumes C(8×8) as two A tiles of 8×4.
+pub fn exchange_fraction(acc: Accumulator) -> f64 {
+    let mut moved = 0usize;
+    let mut total = 0usize;
+    for r in 0..M {
+        for c in 0..N {
+            let have = c_owner(acc, r, c);
+            let need = a_owner(r, c % K);
+            total += 1;
+            if have != need {
+                moved += 1;
+            }
+        }
+    }
+    moved as f64 / total as f64
+}
+
+/// Estimated inter-GEMM cost in "register-move equivalents" per tile —
+/// the quantity the Volta model's kernel-efficiency gap (Fig 8) stands
+/// on: FP32 forces a shared-memory exchange + syncwarp, FP16 none.
+pub fn inter_gemm_moves(acc: Accumulator) -> usize {
+    ((exchange_fraction(acc) * (M * N) as f64).round()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_layouts_partition_c_evenly() {
+        assert_eq!(elements_per_thread(Accumulator::F16), 8);
+        assert_eq!(elements_per_thread(Accumulator::F32), 8);
+    }
+
+    #[test]
+    fn every_element_has_exactly_one_owner() {
+        for acc in [Accumulator::F16, Accumulator::F32] {
+            let mut seen = [[false; N]; M];
+            for r in 0..M {
+                for c in 0..N {
+                    let t = c_owner(acc, r, c);
+                    assert!(t < QP_THREADS);
+                    assert!(!seen[r][c]);
+                    seen[r][c] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_needs_no_exchange() {
+        // The paper's Fig 15 claim: C of GEMM1 divides into two A tiles
+        // of GEMM2 "without the need for the exchange between threads".
+        assert_eq!(exchange_fraction(Accumulator::F16), 0.0);
+        assert_eq!(inter_gemm_moves(Accumulator::F16), 0);
+    }
+
+    #[test]
+    fn fp32_requires_exchange() {
+        // Fig 14: "half of the elements ... are not the needed elements".
+        let f = exchange_fraction(Accumulator::F32);
+        assert!(f >= 0.5, "exchange fraction {f}");
+        assert!(inter_gemm_moves(Accumulator::F32) >= 32);
+    }
+
+    #[test]
+    fn fp16_c_rows_match_a_rows() {
+        for r in 0..M {
+            for c in 0..N {
+                assert_eq!(
+                    c_owner(Accumulator::F16, r, c),
+                    a_owner(r, c % K),
+                    "({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_threads_span_two_rows() {
+        // the structural reason the exchange exists
+        for t in 0..QP_THREADS {
+            let mut rows = std::collections::BTreeSet::new();
+            for r in 0..M {
+                for c in 0..N {
+                    if c_owner(Accumulator::F32, r, c) == t {
+                        rows.insert(r);
+                    }
+                }
+            }
+            assert_eq!(rows.len(), 2, "thread {t} rows {rows:?}");
+        }
+    }
+}

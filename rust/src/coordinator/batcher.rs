@@ -1,0 +1,217 @@
+//! Continuous batcher: groups waiting requests into prefill batches and
+//! active sequences into decode batches, under the artifact bucket grid.
+//!
+//! vLLM-router-style policy, adapted to AOT bucketed shapes: prefill
+//! batches group prompts that share the smallest covering (batch, seq)
+//! bucket; decode batches take up to `max(decode_batches)` active
+//! sequences regardless of their positions (per-row `pos`/`lengths` make
+//! ragged batches exact — see `python/compile/model.py`).
+
+use std::collections::VecDeque;
+
+use super::request::{Request, RequestId};
+
+/// A planned prefill execution.
+#[derive(Debug, Clone)]
+pub struct PrefillBatch {
+    /// Bucketed batch size (artifact B).
+    pub batch_bucket: usize,
+    /// Bucketed sequence length (artifact S).
+    pub seq_bucket: usize,
+    /// The requests filling slots 0..n (n ≤ batch_bucket).
+    pub requests: Vec<Request>,
+}
+
+/// A planned decode execution.
+#[derive(Debug, Clone)]
+pub struct DecodeBatch {
+    /// Bucketed batch size (artifact B).
+    pub batch_bucket: usize,
+    /// Sequence ids in slots 0..n.
+    pub seq_ids: Vec<RequestId>,
+}
+
+/// Batching policy configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub prefill_batches: Vec<usize>,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    /// Max sequences decoding concurrently (KV budget).
+    pub max_active: usize,
+}
+
+/// The waiting queue + batch formation logic.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    waiting: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, waiting: VecDeque::new() }
+    }
+
+    /// Enqueue a request; rejects prompts that fit no bucket.
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
+        let max_seq = self.cfg.prefill_seqs.iter().copied().max().unwrap_or(0);
+        if req.prompt.is_empty() || req.prompt.len() > max_seq {
+            return Err(req);
+        }
+        self.waiting.push_back(req);
+        Ok(())
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Smallest bucket ≥ want, if any.
+    fn bucket(buckets: &[usize], want: usize) -> Option<usize> {
+        buckets.iter().copied().filter(|&b| b >= want).min()
+    }
+
+    /// Form the next prefill batch: take the head-of-line request, find
+    /// its seq bucket, then greedily add more waiting requests that fit
+    /// the same bucket (FCFS within the bucket) up to the largest batch
+    /// bucket and the active-capacity budget.
+    pub fn next_prefill(&mut self, active_now: usize) -> Option<PrefillBatch> {
+        let head = self.waiting.front()?;
+        let room = self.cfg.max_active.saturating_sub(active_now);
+        if room == 0 {
+            return None;
+        }
+        let seq_bucket = Self::bucket(&self.cfg.prefill_seqs, head.prompt.len())?;
+        let max_batch = self.cfg.prefill_batches.iter().copied().max()?;
+        let take_max = room.min(max_batch);
+
+        // Collect indices of queue entries that fit this seq bucket.
+        let mut picked = Vec::new();
+        for (i, r) in self.waiting.iter().enumerate() {
+            if r.prompt.len() <= seq_bucket {
+                picked.push(i);
+                if picked.len() == take_max {
+                    break;
+                }
+            }
+        }
+        let batch_bucket = Self::bucket(&self.cfg.prefill_batches, picked.len())?;
+
+        // Drain picked (back to front to keep indices valid).
+        let mut requests = Vec::with_capacity(picked.len());
+        for &i in picked.iter().rev() {
+            requests.push(self.waiting.remove(i).unwrap());
+        }
+        requests.reverse();
+        Some(PrefillBatch { batch_bucket, seq_bucket, requests })
+    }
+
+    /// Form the next decode batch from `active` sequence ids (FCFS order):
+    /// up to the largest decode bucket.
+    pub fn next_decode(&self, active: &[RequestId]) -> Option<DecodeBatch> {
+        if active.is_empty() {
+            return None;
+        }
+        let max_batch = self.cfg.decode_batches.iter().copied().max()?;
+        let take = active.len().min(max_batch);
+        let batch_bucket = Self::bucket(&self.cfg.decode_batches, take)?;
+        Some(DecodeBatch {
+            batch_bucket,
+            seq_ids: active[..take].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            prefill_batches: vec![1, 4],
+            prefill_seqs: vec![32, 64, 128],
+            decode_batches: vec![1, 4],
+            max_active: 8,
+        }
+    }
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len], GenParams::default())
+    }
+
+    #[test]
+    fn groups_same_bucket() {
+        let mut b = Batcher::new(cfg());
+        for (id, len) in [(1, 10), (2, 20), (3, 30), (4, 31)] {
+            b.push(req(id, len)).unwrap();
+        }
+        let batch = b.next_prefill(0).unwrap();
+        assert_eq!(batch.seq_bucket, 32);
+        assert_eq!(batch.batch_bucket, 4);
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn mixed_buckets_split() {
+        let mut b = Batcher::new(cfg());
+        b.push(req(1, 10)).unwrap();
+        b.push(req(2, 100)).unwrap(); // needs 128 bucket
+        b.push(req(3, 12)).unwrap();
+        let first = b.next_prefill(0).unwrap();
+        // head req (len 10) → bucket 32; req 3 joins, req 2 does not.
+        assert_eq!(first.seq_bucket, 32);
+        assert_eq!(first.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let second = b.next_prefill(0).unwrap();
+        assert_eq!(second.seq_bucket, 128);
+        assert_eq!(second.requests.len(), 1);
+    }
+
+    #[test]
+    fn single_request_uses_small_batch_bucket() {
+        let mut b = Batcher::new(cfg());
+        b.push(req(1, 10)).unwrap();
+        let batch = b.next_prefill(0).unwrap();
+        assert_eq!(batch.batch_bucket, 1);
+    }
+
+    #[test]
+    fn capacity_limits_prefill() {
+        let mut b = Batcher::new(cfg());
+        for id in 0..6 {
+            b.push(req(id, 8)).unwrap();
+        }
+        // 7 active of max 8 → room for only 1
+        let batch = b.next_prefill(7).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        // full → no prefill
+        assert!(b.next_prefill(8).is_none());
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty() {
+        let mut b = Batcher::new(cfg());
+        assert!(b.push(req(1, 500)).is_err());
+        assert!(b.push(req(2, 0)).is_err());
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn decode_batches_cap_at_bucket() {
+        let b = Batcher::new(cfg());
+        let active: Vec<u64> = (0..6).collect();
+        let d = b.next_decode(&active).unwrap();
+        assert_eq!(d.batch_bucket, 4);
+        assert_eq!(d.seq_ids, vec![0, 1, 2, 3]);
+        assert!(b.next_decode(&[]).is_none());
+    }
+
+    #[test]
+    fn decode_single_uses_b1() {
+        let b = Batcher::new(cfg());
+        let d = b.next_decode(&[42]).unwrap();
+        assert_eq!(d.batch_bucket, 1);
+    }
+}

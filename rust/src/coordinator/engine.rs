@@ -1,0 +1,441 @@
+//! The serving engine: owns the PJRT runtime and all sequence state,
+//! executes prefill/decode batches chosen by the scheduler.
+//!
+//! Single-threaded by design — PJRT handles are kept on one engine thread
+//! (see [`super::server`] for the threaded front-end); the engine API is
+//! synchronous and fully deterministic, which is what the integration
+//! tests and benches drive.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
+use super::kv_cache::{pack_batch, unpack_batch, CachePool, CacheShape, SeqCache, Tier};
+use super::request::{GenParams, Phase, Request, RequestId, Response};
+use super::scheduler::{Policy, Scheduler, Step};
+use crate::metrics::EngineMetrics;
+use crate::runtime::{HostTensor, Runtime};
+
+/// A live sequence.
+struct SeqState {
+    id: RequestId,
+    prompt_len: usize,
+    /// Generated tokens (first comes from prefill logits).
+    tokens: Vec<i32>,
+    cache: SeqCache,
+    tier: Tier,
+    params: GenParams,
+    phase: Phase,
+    submitted_at: Instant,
+    first_token_at: Option<Instant>,
+}
+
+impl SeqState {
+    /// Cache position of the *latest* generated token (where the next
+    /// decode step writes it).
+    fn pos(&self) -> usize {
+        self.prompt_len + self.tokens.len() - 1
+    }
+
+    fn last_token(&self) -> i32 {
+        *self.tokens.last().expect("sequence has a token after prefill")
+    }
+}
+
+/// Engine configuration knobs.
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// Device KV budget in bytes (drives CachePool tiering).
+    pub device_kv_budget: usize,
+    /// Cap on concurrently decoding sequences.
+    pub max_active: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Fair { quantum: 4 },
+            device_kv_budget: 64 << 20,
+            max_active: 16,
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    rt: Runtime,
+    shape: CacheShape,
+    batcher: Batcher,
+    scheduler: Scheduler,
+    pool: CachePool,
+    active: Vec<RequestId>,
+    seqs: HashMap<RequestId, SeqState>,
+    finished: Vec<Response>,
+    next_id: RequestId,
+    pub metrics: EngineMetrics,
+}
+
+impl Engine {
+    /// Build an engine over a loaded runtime.
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Self {
+        let m = &rt.manifest.model;
+        let shape = CacheShape {
+            layers: m.n_layers,
+            kv_heads: m.n_kv_heads,
+            max_seq: m.max_seq,
+            head_dim: m.head_dim,
+        };
+        let batcher = Batcher::new(BatcherConfig {
+            prefill_batches: rt.manifest.prefill_batches.clone(),
+            prefill_seqs: rt.manifest.prefill_seqs.clone(),
+            decode_batches: rt.manifest.decode_batches.clone(),
+            max_active: cfg.max_active,
+        });
+        Self {
+            shape,
+            batcher,
+            scheduler: Scheduler::new(cfg.policy),
+            pool: CachePool::new(shape, cfg.device_kv_budget),
+            active: Vec::new(),
+            seqs: HashMap::new(),
+            finished: Vec::new(),
+            next_id: 1,
+            metrics: EngineMetrics::default(),
+            rt,
+        }
+    }
+
+    /// Submit a prompt; returns its request id.
+    pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams) -> Result<RequestId> {
+        let max_seq = self.shape.max_seq;
+        if prompt.len() + params.max_new_tokens > max_seq {
+            bail!(
+                "prompt {} + max_new_tokens {} exceeds cache capacity {max_seq}",
+                prompt.len(),
+                params.max_new_tokens
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, prompt, params);
+        self.batcher
+            .push(req)
+            .map_err(|r| anyhow::anyhow!("prompt of {} tokens fits no bucket", r.prompt.len()))?;
+        Ok(id)
+    }
+
+    /// Sequences currently decoding.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Run one scheduling step.  Returns false when idle.
+    pub fn step(&mut self) -> Result<bool> {
+        match self.scheduler.next_step(&self.batcher, self.active.len()) {
+            Step::Idle => Ok(false),
+            Step::Prefill => {
+                if let Some(batch) = self.batcher.next_prefill(self.active.len()) {
+                    self.run_prefill(batch)?;
+                } else if !self.active.is_empty() {
+                    // capacity-blocked: fall back to decode
+                    if let Some(batch) = self.batcher.next_decode(&self.active) {
+                        self.run_decode(batch)?;
+                    }
+                }
+                Ok(true)
+            }
+            Step::Decode => {
+                if let Some(batch) = self.batcher.next_decode(&self.active) {
+                    self.run_decode(batch)?;
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Drive until every submitted request completes; drain responses.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        while self.step()? {}
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// Drain any already-finished responses without stepping.
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn run_prefill(&mut self, batch: PrefillBatch) -> Result<()> {
+        let t0 = Instant::now();
+        let b = batch.batch_bucket;
+        let s = batch.seq_bucket;
+        let name = format!("prefill_b{b}_s{s}");
+
+        // tokens [B, S] (right-padded), lengths [B] (dummy rows: 1).
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![1i32; b];
+        for (i, req) in batch.requests.iter().enumerate() {
+            tokens[i * s..][..req.prompt.len()].copy_from_slice(&req.prompt);
+            lengths[i] = req.prompt.len() as i32;
+        }
+        let outs = self
+            .rt
+            .run_host(
+                &name,
+                &[
+                    HostTensor::i32(vec![b, s], tokens),
+                    HostTensor::i32(vec![b], lengths),
+                ],
+            )
+            .with_context(|| format!("prefill artifact {name}"))?;
+        let logits = outs[0].as_f32()?;
+        let kc = outs[1].as_f32()?;
+        let vc = outs[2].as_f32()?;
+        let vocab = self.rt.manifest.model.vocab;
+
+        for (i, req) in batch.requests.into_iter().enumerate() {
+            let row = &logits[i * vocab..][..vocab];
+            let first = argmax(row) as i32;
+            let (mut cache, tier) = self.pool.allocate();
+            unpack_batch(self.shape, b, kc, &mut [(i, &mut cache.k)])?;
+            unpack_batch(self.shape, b, vc, &mut [(i, &mut cache.v)])?;
+            let state = SeqState {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: vec![first],
+                cache,
+                tier,
+                params: req.params,
+                phase: Phase::Decoding,
+                submitted_at: req.submitted_at,
+                first_token_at: Some(Instant::now()),
+            };
+            self.metrics.prefilled_tokens += req.prompt.len() as u64;
+            // done already? (max_new_tokens == 1 or instant EOS)
+            if state.tokens.len() >= state.params.max_new_tokens
+                || state.params.eos_token == Some(first)
+            {
+                self.finish(state);
+            } else {
+                self.active.push(req.id);
+                self.seqs.insert(req.id, state);
+            }
+        }
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {
+        let t0 = Instant::now();
+        let b = batch.batch_bucket;
+        let name = format!("decode_b{b}");
+
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut packs: Vec<(usize, &[f32])> = Vec::with_capacity(batch.seq_ids.len());
+        let mut packs_v: Vec<(usize, &[f32])> = Vec::with_capacity(batch.seq_ids.len());
+        for (slot, id) in batch.seq_ids.iter().enumerate() {
+            let s = self.seqs.get(id).context("active seq missing")?;
+            token[slot] = s.last_token();
+            pos[slot] = s.pos() as i32;
+            packs.push((slot, &s.cache.k));
+            packs_v.push((slot, &s.cache.v));
+        }
+        let k_plane = pack_batch(self.shape, b, &packs)?;
+        let v_plane = pack_batch(self.shape, b, &packs_v)?;
+        drop(packs);
+        drop(packs_v);
+
+        let cache_dims = vec![
+            self.shape.layers,
+            b,
+            self.shape.kv_heads,
+            self.shape.max_seq,
+            self.shape.head_dim,
+        ];
+        let outs = self
+            .rt
+            .run_host(
+                &name,
+                &[
+                    HostTensor::i32(vec![b, 1], token),
+                    HostTensor::f32(cache_dims.clone(), k_plane),
+                    HostTensor::f32(cache_dims, v_plane),
+                    HostTensor::i32(vec![b], pos),
+                ],
+            )
+            .with_context(|| format!("decode artifact {name}"))?;
+        let logits = outs[0].as_f32()?;
+        let kc = outs[1].as_f32()?;
+        let vc = outs[2].as_f32()?;
+        let vocab = self.rt.manifest.model.vocab;
+
+        let mut done: Vec<RequestId> = Vec::new();
+        for (slot, id) in batch.seq_ids.iter().enumerate() {
+            let s = self.seqs.get_mut(id).unwrap();
+            unpack_batch(self.shape, b, kc, &mut [(slot, &mut s.cache.k)])?;
+            unpack_batch(self.shape, b, vc, &mut [(slot, &mut s.cache.v)])?;
+            let next = argmax(&logits[slot * vocab..][..vocab]) as i32;
+            s.tokens.push(next);
+            self.metrics.decoded_tokens += 1;
+            let finished = s.tokens.len() >= s.params.max_new_tokens
+                || s.params.eos_token == Some(next)
+                || s.pos() + 1 >= self.shape.max_seq;
+            if finished {
+                done.push(*id);
+            }
+        }
+        for id in done {
+            let state = self.seqs.remove(&id).unwrap();
+            self.active.retain(|&a| a != id);
+            self.finish(state);
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn finish(&mut self, mut state: SeqState) {
+        state.phase = Phase::Finished;
+        self.pool.release(state.tier);
+        let now = Instant::now();
+        let ttft = state
+            .first_token_at
+            .map(|t| (t - state.submitted_at).as_secs_f64())
+            .unwrap_or(0.0);
+        self.metrics.completed += 1;
+        self.finished.push(Response {
+            id: state.id,
+            prompt_len: state.prompt_len,
+            tokens: state.tokens,
+            ttft_s: ttft,
+            total_s: (now - state.submitted_at).as_secs_f64(),
+        });
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return None;
+        }
+        let rt = Runtime::load(dir).expect("runtime loads");
+        Some(Engine::new(rt, EngineConfig::default()))
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let Some(mut e) = engine() else { return };
+        let id = e
+            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, eos_token: None })
+            .unwrap();
+        let out = e.run_until_idle().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert!(out[0].ttft_s > 0.0);
+        assert!(out[0].total_s >= out[0].ttft_s);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let Some(mut e1) = engine() else { return };
+        let Some(mut e2) = engine() else { return };
+        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        e1.submit(vec![7, 8, 9], p).unwrap();
+        e2.submit(vec![7, 8, 9], p).unwrap();
+        let a = e1.run_until_idle().unwrap();
+        let b = e2.run_until_idle().unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens);
+    }
+
+    #[test]
+    fn batched_equals_solo() {
+        // The continuous batcher must not change any request's output.
+        let Some(mut batched) = engine() else { return };
+        let p = GenParams { max_new_tokens: 5, eos_token: None };
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![1, 2, 3],
+            vec![10, 20, 30, 40, 50, 60],
+            vec![100, 200],
+            vec![5; 20],
+        ];
+        let mut ids = Vec::new();
+        for pr in &prompts {
+            ids.push(batched.submit(pr.clone(), p).unwrap());
+        }
+        let mut out = batched.run_until_idle().unwrap();
+        out.sort_by_key(|r| r.id);
+
+        for (pr, want) in prompts.iter().zip(&out) {
+            let Some(mut solo) = engine() else { return };
+            solo.submit(pr.clone(), p).unwrap();
+            let got = solo.run_until_idle().unwrap();
+            assert_eq!(got[0].tokens, want.tokens, "prompt {pr:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let Some(mut e) = engine() else { return };
+        let max_seq = 160;
+        assert!(e
+            .submit(vec![1; 120], GenParams { max_new_tokens: 100, eos_token: None })
+            .is_err());
+        assert!(e
+            .submit(vec![1; max_seq + 1], GenParams { max_new_tokens: 1, eos_token: None })
+            .is_err());
+    }
+
+    #[test]
+    fn eos_stops_generation() {
+        let Some(mut e) = engine() else { return };
+        // run once to learn the greedy continuation, then set eos to the
+        // second generated token and expect early stop.
+        e.submit(vec![3, 1, 4, 1, 5], GenParams { max_new_tokens: 6, eos_token: None })
+            .unwrap();
+        let full = e.run_until_idle().unwrap();
+        let second = full[0].tokens[1];
+
+        let Some(mut e2) = engine() else { return };
+        e2.submit(
+            vec![3, 1, 4, 1, 5],
+            GenParams { max_new_tokens: 6, eos_token: Some(second) },
+        )
+        .unwrap();
+        let stopped = e2.run_until_idle().unwrap();
+        assert_eq!(stopped[0].tokens.len(), 2);
+        assert_eq!(*stopped[0].tokens.last().unwrap(), second);
+    }
+
+    #[test]
+    fn many_requests_all_complete() {
+        let Some(mut e) = engine() else { return };
+        let p = GenParams { max_new_tokens: 3, eos_token: None };
+        for i in 0..10 {
+            e.submit(vec![i as i32 + 1; (i % 7) + 1], p).unwrap();
+        }
+        let out = e.run_until_idle().unwrap();
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|r| r.tokens.len() == 3));
+        assert_eq!(e.metrics.completed, 10);
+        assert!(e.metrics.decode_steps > 0);
+        assert!(e.metrics.prefill_steps > 0);
+    }
+}

@@ -1,0 +1,251 @@
+//! KV-cache manager: per-sequence caches, batch packing, and the
+//! host/device tier accounting the CPU–GPU cooperative strategy uses.
+//!
+//! The AOT decode artifact consumes caches of shape
+//! `[L, B, Nkv, max_seq, D]` for a fixed batch bucket `B`.  Sequences own
+//! caches of shape `[L, 1, Nkv, max_seq, D]`; this module packs any
+//! (≤ B)-subset of sequences into the batch tensor and scatters the
+//! updated batch back — the memcpy boundary of continuous batching.
+
+use anyhow::{bail, Result};
+
+/// Cache geometry (from the artifact manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheShape {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+impl CacheShape {
+    /// f32 elements of one sequence's K (or V) cache.
+    pub fn seq_elems(&self) -> usize {
+        self.layers * self.kv_heads * self.max_seq * self.head_dim
+    }
+
+    /// Elements of one layer-row within a single-sequence cache.
+    fn layer_elems(&self) -> usize {
+        self.kv_heads * self.max_seq * self.head_dim
+    }
+
+    /// Bytes of one sequence's full KV (K + V) cache.
+    pub fn seq_bytes(&self) -> usize {
+        2 * 4 * self.seq_elems()
+    }
+}
+
+/// One sequence's KV cache (K and V planes, flat f32, `[L,1,Nkv,S,D]`).
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub shape: CacheShape,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl SeqCache {
+    /// Zero-initialized cache (a fresh slot).
+    pub fn zeros(shape: CacheShape) -> Self {
+        let n = shape.seq_elems();
+        Self { shape, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+}
+
+/// Pack `seqs` (each `[L,1,Nkv,S,D]`) into a `[L,B,Nkv,S,D]` batch plane.
+/// Unused slots stay zero.  Returns the flat batch tensor.
+pub fn pack_batch(
+    shape: CacheShape,
+    batch: usize,
+    seqs: &[(usize, &[f32])],
+) -> Result<Vec<f32>> {
+    let le = shape.layer_elems();
+    let mut out = vec![0.0f32; shape.layers * batch * le];
+    for &(slot, data) in seqs {
+        if slot >= batch {
+            bail!("slot {slot} out of batch {batch}");
+        }
+        if data.len() != shape.seq_elems() {
+            bail!("sequence cache has {} elems, expected {}", data.len(), shape.seq_elems());
+        }
+        for layer in 0..shape.layers {
+            let src = &data[layer * le..][..le];
+            let dst = &mut out[(layer * batch + slot) * le..][..le];
+            dst.copy_from_slice(src);
+        }
+    }
+    Ok(out)
+}
+
+/// Scatter a `[L,B,Nkv,S,D]` batch plane back into per-sequence caches.
+pub fn unpack_batch(
+    shape: CacheShape,
+    batch: usize,
+    plane: &[f32],
+    seqs: &mut [(usize, &mut [f32])],
+) -> Result<()> {
+    let le = shape.layer_elems();
+    if plane.len() != shape.layers * batch * le {
+        bail!("batch plane has {} elems, expected {}", plane.len(), shape.layers * batch * le);
+    }
+    for (slot, data) in seqs.iter_mut() {
+        if *slot >= batch {
+            bail!("slot {slot} out of batch {batch}");
+        }
+        if data.len() != shape.seq_elems() {
+            bail!("sequence cache has {} elems, expected {}", data.len(), shape.seq_elems());
+        }
+        for layer in 0..shape.layers {
+            let src = &plane[(layer * batch + *slot) * le..][..le];
+            data[layer * le..][..le].copy_from_slice(src);
+        }
+    }
+    Ok(())
+}
+
+/// Placement tier for a layer's KV cache (§4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Device (GPU/NPU) resident.
+    Device,
+    /// Host (CPU) resident — the cooperative strategy's pre-L_CPU layers.
+    Host,
+}
+
+/// Capacity-tracking cache pool with per-tier accounting.
+#[derive(Debug)]
+pub struct CachePool {
+    pub shape: CacheShape,
+    device_budget_bytes: usize,
+    device_used_bytes: usize,
+    host_used_bytes: usize,
+    active: usize,
+}
+
+impl CachePool {
+    pub fn new(shape: CacheShape, device_budget_bytes: usize) -> Self {
+        Self {
+            shape,
+            device_budget_bytes,
+            device_used_bytes: 0,
+            host_used_bytes: 0,
+            active: 0,
+        }
+    }
+
+    /// Can another sequence's cache be placed on-device?
+    pub fn has_device_room(&self) -> bool {
+        self.device_used_bytes + self.shape.seq_bytes() <= self.device_budget_bytes
+    }
+
+    /// Allocate a cache; spills to Host when the device is full (the
+    /// engine treats Host-tier caches via the cooperative path).
+    pub fn allocate(&mut self) -> (SeqCache, Tier) {
+        let tier = if self.has_device_room() { Tier::Device } else { Tier::Host };
+        match tier {
+            Tier::Device => self.device_used_bytes += self.shape.seq_bytes(),
+            Tier::Host => self.host_used_bytes += self.shape.seq_bytes(),
+        }
+        self.active += 1;
+        (SeqCache::zeros(self.shape), tier)
+    }
+
+    /// Release a cache allocated at `tier`.
+    pub fn release(&mut self, tier: Tier) {
+        match tier {
+            Tier::Device => {
+                self.device_used_bytes =
+                    self.device_used_bytes.saturating_sub(self.shape.seq_bytes());
+            }
+            Tier::Host => {
+                self.host_used_bytes =
+                    self.host_used_bytes.saturating_sub(self.shape.seq_bytes());
+            }
+        }
+        self.active = self.active.saturating_sub(1);
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn device_used_bytes(&self) -> usize {
+        self.device_used_bytes
+    }
+
+    pub fn host_used_bytes(&self) -> usize {
+        self.host_used_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> CacheShape {
+        CacheShape { layers: 2, kv_heads: 3, max_seq: 4, head_dim: 2 }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let sh = shape();
+        let n = sh.seq_elems();
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let plane = pack_batch(sh, 4, &[(0, &a), (2, &b)]).unwrap();
+        assert_eq!(plane.len(), sh.layers * 4 * sh.seq_elems() / sh.layers);
+
+        let mut a2 = vec![0.0; n];
+        let mut b2 = vec![0.0; n];
+        unpack_batch(sh, 4, &plane, &mut [(0, &mut a2), (2, &mut b2)]).unwrap();
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn unused_slots_zero() {
+        let sh = shape();
+        let n = sh.seq_elems();
+        let a = vec![1.0f32; n];
+        let plane = pack_batch(sh, 3, &[(1, &a)]).unwrap();
+        // slot 0 of layer 0 must be all zeros
+        let le = sh.kv_heads * sh.max_seq * sh.head_dim;
+        assert!(plane[..le].iter().all(|&x| x == 0.0));
+        assert!(plane[le..2 * le].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn layer_interleaving_correct() {
+        // value at [layer, slot] must land at plane[(layer*B + slot)*le]
+        let sh = shape();
+        let n = sh.seq_elems();
+        let le = sh.kv_heads * sh.max_seq * sh.head_dim;
+        let mut a = vec![0.0f32; n];
+        a[0] = 7.0; // layer 0 first elem
+        a[le] = 9.0; // layer 1 first elem
+        let plane = pack_batch(sh, 2, &[(1, &a)]).unwrap();
+        assert_eq!(plane[(0 * 2 + 1) * le], 7.0);
+        assert_eq!(plane[(1 * 2 + 1) * le], 9.0);
+    }
+
+    #[test]
+    fn bad_slot_rejected() {
+        let sh = shape();
+        let a = vec![0.0f32; sh.seq_elems()];
+        assert!(pack_batch(sh, 2, &[(2, &a)]).is_err());
+    }
+
+    #[test]
+    fn pool_spills_to_host() {
+        let sh = shape();
+        let mut pool = CachePool::new(sh, sh.seq_bytes() * 2);
+        let (_, t1) = pool.allocate();
+        let (_, t2) = pool.allocate();
+        let (_, t3) = pool.allocate();
+        assert_eq!(t1, Tier::Device);
+        assert_eq!(t2, Tier::Device);
+        assert_eq!(t3, Tier::Host);
+        assert_eq!(pool.active(), 3);
+        pool.release(t1);
+        assert!(pool.has_device_room());
+    }
+}

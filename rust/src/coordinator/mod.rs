@@ -1,0 +1,33 @@
+//! Layer 3 — the serving coordinator (the paper's system integration).
+//!
+//! A vLLM-router-style engine over the AOT artifacts:
+//!
+//! * [`request`]   — request/response types;
+//! * [`batcher`]   — continuous batcher over the artifact bucket grid;
+//! * [`scheduler`] — prefill/decode policy (decode-priority + fairness
+//!   quantum);
+//! * [`kv_cache`]  — per-sequence KV caches, ragged batch packing, tiered
+//!   (device/host) capacity pool;
+//! * [`engine`]    — the synchronous execution core over the PJRT
+//!   runtime: ragged prefill (per-row lengths), ragged decode (per-row
+//!   positions), greedy sampling;
+//! * [`server`]    — threaded front-end (PJRT handles stay on one
+//!   thread; clients use channels);
+//! * [`allreduce`] — the paper's tiling-AllReduce (§4.2) as a real
+//!   multi-worker ring with per-block overlap;
+//! * [`offload`]   — the CPU–GPU cooperative strategy (§4.4): eq. 15–20
+//!   planner + classical-vs-cooperative executor with a *measured* host
+//!   FlashAttention2 path.
+
+pub mod allreduce;
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod offload;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{GenParams, Request, RequestId, Response};
+pub use server::Server;

@@ -1,0 +1,238 @@
+//! The CPU–GPU cooperative strategy (§4.4): planner + executor.
+//!
+//! Planner: eq. 15–20 (via `sim::memory`) decide the L_CPU/L_GPU layer
+//! split.  Executor: for each decode step,
+//!
+//! * **classical offloading** uploads the layer's KV cache over PCIe and
+//!   computes attention on the GPU;
+//! * **cooperative** keeps pre-L_CPU layers' KV host-resident, ships the
+//!   one-token QKV down, runs attention *on the host CPU* (the real
+//!   FlashAttention2 kernel in `attention::flash`), and uploads only the
+//!   fixed-size result.
+//!
+//! Device-side timings come from the Volta model (no V100 here — repro
+//! band 0); the host attention is executed for real and *measured*, so
+//! Table 3's CPU_Calc column has a live counterpart.
+
+use std::time::Instant;
+
+use crate::attention::flash::{flash_attention, FlashParams};
+use crate::models::ModelShape;
+use crate::sim::memory::Deployment;
+use crate::sim::volta::VoltaSpec;
+
+/// Where a layer's KV lives and what executes its decode attention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerPlacement {
+    /// KV on host; attention on host CPU; result uploaded (cooperative).
+    HostCompute,
+    /// KV on device; attention on device.
+    DeviceCompute,
+}
+
+/// The per-layer plan for a deployment.
+#[derive(Debug, Clone)]
+pub struct OffloadPlan {
+    pub l_cpu: u32,
+    pub l_gpu: u32,
+    pub placements: Vec<LayerPlacement>,
+    /// Whether any offload is needed at all (Table 3's '-' rows).
+    pub offload_needed: bool,
+}
+
+/// Build the plan for a deployment (§4.4 steps 1–2).
+pub fn plan(dep: &Deployment) -> OffloadPlan {
+    let breakdown = dep.plan();
+    let l = dep.model.layers;
+    if breakdown.fits_without_offload {
+        return OffloadPlan {
+            l_cpu: 0,
+            l_gpu: l,
+            placements: vec![LayerPlacement::DeviceCompute; l as usize],
+            offload_needed: false,
+        };
+    }
+    let mut placements = Vec::with_capacity(l as usize);
+    for i in 0..l {
+        if i < breakdown.l_cpu {
+            placements.push(LayerPlacement::HostCompute);
+        } else {
+            placements.push(LayerPlacement::DeviceCompute);
+        }
+    }
+    OffloadPlan {
+        l_cpu: breakdown.l_cpu,
+        l_gpu: breakdown.l_gpu,
+        placements,
+        offload_needed: true,
+    }
+}
+
+/// Latency breakdown of one layer's decode attention (Table 3 columns).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerLatency {
+    /// Classical: KV upload over PCIe, seconds.
+    pub upload_s: f64,
+    /// GPU attention compute, seconds.
+    pub gpu_calc_s: f64,
+    /// Cooperative: host attention compute, seconds.
+    pub cpu_calc_s: f64,
+    /// Cooperative: QKV down + result up, seconds.
+    pub off_upload_s: f64,
+}
+
+impl LayerLatency {
+    /// Total under classical offloading.
+    pub fn classical_total(&self) -> f64 {
+        self.upload_s + self.gpu_calc_s
+    }
+
+    /// Total under the cooperative strategy (host-compute layer).
+    pub fn coop_total(&self) -> f64 {
+        self.cpu_calc_s + self.off_upload_s
+    }
+}
+
+/// Model-driven layer latencies for a host-resident layer at `seq` KV
+/// length (PanGu-38B Table 3 geometry: per-GPU shard of heads).
+pub fn layer_latency_model(
+    spec: &VoltaSpec,
+    model: &ModelShape,
+    n_gpus: u32,
+    batch: u64,
+    seq: u64,
+) -> LayerLatency {
+    let kv_bytes = model.kv_bytes_per_layer_fp16(batch, seq, n_gpus);
+    let h1_shard = model.hidden() / n_gpus as u64;
+    let qkv_bytes = 3 * 2 * batch * h1_shard; // one token, fp16
+    let out_bytes = 2 * batch * h1_shard;
+    LayerLatency {
+        upload_s: spec.pcie_transfer(kv_bytes),
+        gpu_calc_s: spec.decode_attention_gpu(kv_bytes),
+        cpu_calc_s: spec.decode_attention_cpu(kv_bytes),
+        off_upload_s: spec.offload_roundtrip(qkv_bytes, out_bytes),
+    }
+}
+
+/// Measured host attention for one decode step over `seq` cached tokens
+/// (live CPU_Calc).  heads/head_dim are the per-GPU shard.
+pub fn measured_cpu_attention(heads: usize, seq: usize, head_dim: usize) -> f64 {
+    let q = vec![0.01f32; heads * head_dim];
+    let k = vec![0.02f32; heads * seq * head_dim];
+    let v = vec![0.03f32; heads * seq * head_dim];
+    let mut out = vec![0.0f32; heads * head_dim];
+    let t0 = Instant::now();
+    flash_attention(&q, &k, &v, &mut out, &FlashParams::decode(heads, seq, head_dim));
+    t0.elapsed().as_secs_f64()
+}
+
+/// Full-model decode-step attention latency under each strategy, with
+/// per-layer placements applied (the Fig 11 / Table 3 aggregate).
+#[derive(Debug, Clone, Copy)]
+pub struct StepLatency {
+    pub classical_s: f64,
+    pub cooperative_s: f64,
+}
+
+pub fn step_latency(
+    spec: &VoltaSpec,
+    dep: &Deployment,
+    plan: &OffloadPlan,
+) -> StepLatency {
+    let per = layer_latency_model(spec, &dep.model, dep.n_gpus, dep.batch, dep.seq);
+    let mut classical = 0.0;
+    let mut coop = 0.0;
+    for p in &plan.placements {
+        match p {
+            LayerPlacement::HostCompute => {
+                // classical must upload this layer's KV every step
+                classical += per.classical_total();
+                coop += per.coop_total();
+            }
+            LayerPlacement::DeviceCompute => {
+                classical += per.gpu_calc_s;
+                coop += per.gpu_calc_s;
+            }
+        }
+    }
+    StepLatency { classical_s: classical, cooperative_s: coop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::PANGU_38B;
+
+    fn dep(seq: u64) -> Deployment {
+        Deployment::v100_node(PANGU_38B, seq, 50)
+    }
+
+    #[test]
+    fn no_offload_for_short_seqs() {
+        for s in [1024, 4096, 8192] {
+            let p = plan(&dep(s));
+            assert!(!p.offload_needed, "S={s}");
+            assert_eq!(p.l_cpu, 0);
+        }
+    }
+
+    #[test]
+    fn offload_plan_prefix_layers_on_host() {
+        let p = plan(&dep(256 * 1024));
+        assert!(p.offload_needed);
+        assert!(p.l_cpu > 0);
+        assert_eq!(p.placements.len(), PANGU_38B.layers as usize);
+        // host layers form a prefix (the paper's "pre-L_CPU layers")
+        let first_dev = p
+            .placements
+            .iter()
+            .position(|&x| x == LayerPlacement::DeviceCompute)
+            .unwrap_or(p.placements.len());
+        assert!(p.placements[..first_dev]
+            .iter()
+            .all(|&x| x == LayerPlacement::HostCompute));
+        assert!(p.placements[first_dev..]
+            .iter()
+            .all(|&x| x == LayerPlacement::DeviceCompute));
+    }
+
+    #[test]
+    fn cooperative_beats_classical_on_host_layers() {
+        // Table 3: 1.27–1.48× per host-resident layer at 16K–256K.
+        let spec = VoltaSpec::default();
+        for s in [16 * 1024u64, 64 * 1024, 256 * 1024] {
+            let per = layer_latency_model(&spec, &PANGU_38B, 8, 1, s);
+            let speedup = per.classical_total() / per.coop_total();
+            assert!(
+                speedup > 1.2 && speedup < 1.7,
+                "S={s}: speedup {speedup:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn off_upload_roughly_constant() {
+        let spec = VoltaSpec::default();
+        let a = layer_latency_model(&spec, &PANGU_38B, 8, 1, 16 * 1024).off_upload_s;
+        let b = layer_latency_model(&spec, &PANGU_38B, 8, 1, 256 * 1024).off_upload_s;
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+
+    #[test]
+    fn step_latency_aggregates() {
+        let spec = VoltaSpec::default();
+        let d = dep(128 * 1024);
+        let p = plan(&d);
+        let st = step_latency(&spec, &d, &p);
+        assert!(st.cooperative_s < st.classical_s);
+        assert!(st.cooperative_s > 0.0);
+    }
+
+    #[test]
+    fn measured_cpu_attention_positive_and_scales() {
+        let t1 = measured_cpu_attention(5, 2048, 128);
+        let t2 = measured_cpu_attention(5, 8192, 128);
+        assert!(t1 > 0.0);
+        assert!(t2 > t1, "{t2} !> {t1}");
+    }
+}

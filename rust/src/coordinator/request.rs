@@ -1,0 +1,101 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// Generation parameters (greedy sampling; the tiny model's decode path).
+#[derive(Debug, Clone, Copy)]
+pub struct GenParams {
+    /// Number of tokens to generate.
+    pub max_new_tokens: usize,
+    /// Stop early on this token id, if any.
+    pub eos_token: Option<i32>,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        Self { max_new_tokens: 16, eos_token: None }
+    }
+}
+
+/// An inference request as submitted to the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt token ids (tokenization is out of scope — the tiny model
+    /// has a synthetic vocabulary).
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+    /// Submission timestamp (for queueing-latency metrics).
+    pub submitted_at: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, params: GenParams) -> Self {
+        Self { id, prompt, params, submitted_at: Instant::now() }
+    }
+}
+
+/// Lifecycle phase of a sequence inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Queued, not yet prefilled.
+    Waiting,
+    /// Prefilled; generating tokens.
+    Decoding,
+    /// Done (budget exhausted or EOS).
+    Finished,
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Seconds from submission to first generated token.
+    pub ttft_s: f64,
+    /// Seconds from submission to completion.
+    pub total_s: f64,
+}
+
+impl Response {
+    /// Decode throughput over the generation phase, tokens/second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.tokens.len() <= 1 || self.total_s <= self.ttft_s {
+            return 0.0;
+        }
+        (self.tokens.len() - 1) as f64 / (self.total_s - self.ttft_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_tps_accounts_post_first_token() {
+        let r = Response {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![1, 2, 3, 4, 5],
+            ttft_s: 0.5,
+            total_s: 1.5,
+        };
+        assert!((r.decode_tps() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_tps_degenerate_cases() {
+        let r = Response {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![1],
+            ttft_s: 0.5,
+            total_s: 0.5,
+        };
+        assert_eq!(r.decode_tps(), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Prefill/decode scheduling policy.
+//!
+//! The engine alternates two step kinds; the policy decides which runs
+//! next.  Default is decode-priority with an anti-starvation prefill
+//! quantum (classic continuous-batching trade-off: prefill grows the
+//! running batch — throughput; decode drains it — latency).
+
+use super::batcher::Batcher;
+
+/// What the engine should do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    Prefill,
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Scheduling policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Always admit waiting work first (maximizes batch occupancy).
+    PrefillFirst,
+    /// Drain running sequences first; admit only when idle.
+    DecodeFirst,
+    /// DecodeFirst, but force a prefill every `quantum` decode steps so
+    /// waiting requests cannot starve.
+    Fair { quantum: u32 },
+}
+
+/// Stateful scheduler.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    decodes_since_prefill: u32,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Self {
+        Self { policy, decodes_since_prefill: 0 }
+    }
+
+    /// Pick the next step given queue state.
+    pub fn next_step(&mut self, batcher: &Batcher, active: usize) -> Step {
+        let has_waiting = batcher.waiting() > 0;
+        let has_active = active > 0;
+        let step = match (has_waiting, has_active, self.policy) {
+            (false, false, _) => Step::Idle,
+            (true, false, _) => Step::Prefill,
+            (false, true, _) => Step::Decode,
+            (true, true, Policy::PrefillFirst) => Step::Prefill,
+            (true, true, Policy::DecodeFirst) => Step::Decode,
+            (true, true, Policy::Fair { quantum }) => {
+                if self.decodes_since_prefill >= quantum {
+                    Step::Prefill
+                } else {
+                    Step::Decode
+                }
+            }
+        };
+        match step {
+            Step::Decode => self.decodes_since_prefill += 1,
+            Step::Prefill => self.decodes_since_prefill = 0,
+            Step::Idle => {}
+        }
+        step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::request::{GenParams, Request};
+
+    fn batcher(waiting: usize) -> Batcher {
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_batches: vec![1, 4],
+            prefill_seqs: vec![32],
+            decode_batches: vec![1, 4],
+            max_active: 8,
+        });
+        for id in 0..waiting as u64 {
+            b.push(Request::new(id, vec![1; 4], GenParams::default())).unwrap();
+        }
+        b
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut s = Scheduler::new(Policy::Fair { quantum: 4 });
+        assert_eq!(s.next_step(&batcher(0), 0), Step::Idle);
+    }
+
+    #[test]
+    fn prefill_when_only_waiting() {
+        let mut s = Scheduler::new(Policy::DecodeFirst);
+        assert_eq!(s.next_step(&batcher(1), 0), Step::Prefill);
+    }
+
+    #[test]
+    fn decode_first_prefers_decode() {
+        let mut s = Scheduler::new(Policy::DecodeFirst);
+        assert_eq!(s.next_step(&batcher(1), 2), Step::Decode);
+    }
+
+    #[test]
+    fn prefill_first_prefers_prefill() {
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step(&batcher(1), 2), Step::Prefill);
+    }
+
+    #[test]
+    fn fair_quantum_prevents_starvation() {
+        let mut s = Scheduler::new(Policy::Fair { quantum: 3 });
+        let b = batcher(1);
+        // three decodes pass, the fourth call must be a prefill
+        assert_eq!(s.next_step(&b, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1), Step::Prefill);
+        // counter reset after the prefill
+        assert_eq!(s.next_step(&b, 1), Step::Decode);
+    }
+}

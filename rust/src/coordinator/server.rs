@@ -1,0 +1,192 @@
+//! Threaded serving front-end.
+//!
+//! PJRT handles live on a single engine thread (they are not `Send`);
+//! clients talk to it over channels.  `Server::submit` is non-blocking
+//! and returns a receiver that yields the finished [`Response`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::{self, JoinHandle};
+
+use anyhow::{Context, Result};
+
+use super::engine::{Engine, EngineConfig};
+use super::request::{GenParams, RequestId, Response};
+use crate::metrics::EngineMetrics;
+use crate::runtime::Runtime;
+
+enum Cmd {
+    Submit {
+        prompt: Vec<i32>,
+        params: GenParams,
+        reply: Sender<Result<RequestId, String>>,
+        done: Sender<Response>,
+    },
+    Metrics {
+        reply: Sender<EngineMetrics>,
+    },
+    Shutdown,
+}
+
+/// Handle to the engine thread.
+pub struct Server {
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the engine thread over the artifact directory.
+    pub fn start(artifact_dir: String, cfg: EngineConfig) -> Result<Self> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = thread::spawn(move || {
+            let rt = match Runtime::load(&artifact_dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            let mut engine = Engine::new(rt, cfg);
+            let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+            loop {
+                // Drain commands; block only when fully idle.
+                let cmd = if engine.active_count() == 0 && waiters.is_empty() {
+                    match rx.recv() {
+                        Ok(c) => Some(c),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(c) => Some(c),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => break,
+                    }
+                };
+                match cmd {
+                    Some(Cmd::Submit { prompt, params, reply, done }) => {
+                        match engine.submit(prompt, params) {
+                            Ok(id) => {
+                                waiters.insert(id, done);
+                                let _ = reply.send(Ok(id));
+                            }
+                            Err(e) => {
+                                let _ = reply.send(Err(format!("{e:#}")));
+                            }
+                        }
+                        continue; // keep draining submissions greedily
+                    }
+                    Some(Cmd::Metrics { reply }) => {
+                        let _ = reply.send(engine.metrics.clone());
+                        continue;
+                    }
+                    Some(Cmd::Shutdown) => break,
+                    None => {}
+                }
+                // One scheduling step, then deliver whatever finished.
+                match engine.step() {
+                    Ok(_) => {}
+                    Err(e) => {
+                        eprintln!("engine step failed: {e:#}");
+                        break;
+                    }
+                }
+                for resp in engine.take_finished() {
+                    if let Some(w) = waiters.remove(&resp.id) {
+                        let _ = w.send(resp);
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .context("engine thread died before ready")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Self { tx, handle: Some(handle) })
+    }
+
+    /// Submit a prompt; returns (request id, completion receiver).
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Result<(RequestId, Receiver<Response>)> {
+        let (reply_tx, reply_rx) = channel();
+        let (done_tx, done_rx) = channel();
+        self.tx
+            .send(Cmd::Submit { prompt, params, reply: reply_tx, done: done_tx })
+            .context("engine thread gone")?;
+        let id = reply_rx
+            .recv()
+            .context("engine thread gone")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok((id, done_rx))
+    }
+
+    /// Snapshot engine metrics.
+    pub fn metrics(&self) -> Result<EngineMetrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Metrics { reply: tx }).context("engine thread gone")?;
+        rx.recv().context("engine thread gone")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            Some(dir.to_string())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let Some(dir) = artifact_dir() else { return };
+        let server = Server::start(dir, EngineConfig::default()).unwrap();
+        let p = GenParams { max_new_tokens: 3, eos_token: None };
+        let waits: Vec<_> = (0..6)
+            .map(|i| {
+                let prompt = vec![(i % 50) as i32 + 1; (i % 9) + 1];
+                server.submit(prompt, p).unwrap()
+            })
+            .collect();
+        for (id, rx) in waits {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        let m = server.metrics().unwrap();
+        assert_eq!(m.completed, 6);
+    }
+
+    #[test]
+    fn rejects_bad_prompt_without_killing_engine() {
+        let Some(dir) = artifact_dir() else { return };
+        let server = Server::start(dir, EngineConfig::default()).unwrap();
+        let err = server.submit(vec![1; 1000], GenParams::default());
+        assert!(err.is_err());
+        // engine still alive
+        let (_, rx) = server
+            .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, eos_token: None })
+            .unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.tokens.len(), 2);
+    }
+}

@@ -1,0 +1,37 @@
+//! # FastAttention — reproduction library
+//!
+//! Rust + JAX + Pallas reproduction of *FastAttention: Extend
+//! FlashAttention2 to NPUs and Low-resource GPUs for Efficient Inference*
+//! (Lin, Yu, Zhao, et al., 2024).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack
+//! (see `DESIGN.md`):
+//!
+//! * [`runtime`] — loads AOT-compiled HLO artifacts (produced once by
+//!   `python/compile/aot.py` from the JAX model + Pallas kernel) and runs
+//!   them on the PJRT CPU client.  Python is never on the request path.
+//! * [`coordinator`] — the serving engine: request router, continuous
+//!   batcher, prefill/decode scheduler, KV-cache manager, the paper's
+//!   tiling-AllReduce orchestrator and CPU–GPU cooperative offload.
+//! * [`sim`] — the hardware substrates the paper's evaluation ran on
+//!   (Ascend 910B, Tesla V100, PCIe, HCCS ring), rebuilt as calibrated
+//!   analytical + discrete-event models (repro band 0: no NPU/V100 here).
+//! * [`attention`] — real CPU implementations (naive + FlashAttention2
+//!   online-softmax) plus the paper's tiling planner and tiling-mask
+//!   generator.
+//! * [`models`] — the paper's model zoo (Table 1) as shape configs.
+
+pub mod attention;
+pub mod benchkit;
+pub mod coordinator;
+pub mod metrics;
+pub mod models;
+pub mod proptest;
+pub mod reports;
+pub mod runtime;
+pub mod sim;
+
+pub use models::ModelShape;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

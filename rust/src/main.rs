@@ -1,0 +1,205 @@
+//! `repro` — the FastAttention reproduction CLI (leader entrypoint).
+//!
+//! Subcommands (clap is unavailable offline; plain arg parsing):
+//!
+//!   repro serve  [--artifacts DIR] [--requests N] [--gen M]
+//!       Start the serving engine over the AOT artifacts and run a
+//!       synthetic batched workload; prints per-request latency and
+//!       engine throughput.
+//!
+//!   repro table <id>|all
+//!       Regenerate a paper table/figure (fig7, fig8, ..., table9).
+//!
+//!   repro simulate --model NAME --seq S [--devices N]
+//!       One-shot Ascend/Volta operator latencies for a model shape.
+//!
+//!   repro plan-offload --model NAME --seq S [--gpus N]
+//!       The §4.4 memory plan (eq. 15–20): L_GPU/L_CPU split.
+
+use std::process::ExitCode;
+
+use fastattn::benchkit::ms;
+use fastattn::coordinator::{EngineConfig, GenParams, Server};
+use fastattn::models;
+use fastattn::reports;
+use fastattn::sim::ascend::{AscendSpec, FastAttnOptions};
+use fastattn::sim::memory::Deployment;
+use fastattn::sim::volta::{VoltaKernel, VoltaSpec};
+use fastattn::sim::AttnWorkload;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let result = match cmd {
+        "serve" => serve(rest),
+        "table" => table(rest),
+        "simulate" => simulate(rest),
+        "plan-offload" => plan_offload(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — FastAttention reproduction CLI
+
+USAGE:
+  repro serve [--artifacts DIR] [--requests N] [--gen M]
+  repro table <fig7|fig8|fig9|fig10|fig11|fig16|fig17|table2..table9|all>
+  repro simulate --model NAME --seq S [--devices N]
+  repro plan-offload --model NAME --seq S [--gpus N]
+";
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let dir = flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let n: usize = flag(args, "--requests").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let gen: usize = flag(args, "--gen").map(|v| v.parse()).transpose()?.unwrap_or(8);
+
+    println!("loading artifacts from {dir} …");
+    let server = Server::start(dir, EngineConfig::default())?;
+    println!("engine up; submitting {n} requests (gen {gen} tokens each)");
+
+    let t0 = std::time::Instant::now();
+    let waits: Vec<_> = (0..n)
+        .map(|i| {
+            let len = 3 + (i * 7) % 24;
+            let prompt: Vec<i32> = (0..len).map(|j| ((i * 31 + j * 13) % 500 + 1) as i32).collect();
+            server.submit(prompt, GenParams { max_new_tokens: gen, eos_token: None })
+        })
+        .collect::<Result<_, _>>()?;
+    for (id, rx) in waits {
+        let resp = rx.recv()?;
+        println!(
+            "req {id}: prompt {} + {} tokens — ttft {} total {} ({:.1} tok/s decode)",
+            resp.prompt_len,
+            resp.tokens.len(),
+            ms(resp.ttft_s),
+            ms(resp.total_s),
+            resp.decode_tps()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics()?;
+    println!(
+        "\ndone in {wall:.2}s — {} completed | prefill {} steps ({:.0} tok/s) | decode {} steps ({:.1} tok/s, mean batch {:.2})",
+        m.completed,
+        m.prefill_steps,
+        m.prefill_tps(),
+        m.decode_steps,
+        m.decode_tps(),
+        m.mean_decode_batch(),
+    );
+    Ok(())
+}
+
+fn table(args: &[String]) -> anyhow::Result<()> {
+    let id = args.first().map(String::as_str).unwrap_or("all");
+    if id == "all" {
+        for id in reports::ALL {
+            reports::by_id(id).unwrap().print();
+        }
+        return Ok(());
+    }
+    match reports::by_id(id) {
+        Some(t) => {
+            t.print();
+            Ok(())
+        }
+        None => anyhow::bail!("unknown table id '{id}' (try: {})", reports::ALL.join(", ")),
+    }
+}
+
+fn simulate(args: &[String]) -> anyhow::Result<()> {
+    let name = flag(args, "--model").unwrap_or_else(|| "PanGu-38B".into());
+    let seq: u64 = flag(args, "--seq").map(|v| v.parse()).transpose()?.unwrap_or(4096);
+    let devices: u32 = flag(args, "--devices").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let model = models::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+
+    let heads = model.heads_per_device(devices) as u64;
+    let w = AttnWorkload::prefill(1, heads, seq, model.head_dim as u64, true);
+
+    let ascend = AscendSpec::default();
+    let std = ascend.standard_attention_latency(&w);
+    let fast = ascend.fastattn_latency(&w, &FastAttnOptions::default());
+    println!("== {} @ S={seq}, {} heads/device ({} devices) ==", model.name, heads, devices);
+    println!("Ascend 910B:");
+    println!("  standard attention : {}", ms(std));
+    println!(
+        "  FastAttention      : {}  ({:.2}× speedup, cube eff {:.1}%, {} syncs)",
+        ms(fast.latency_s),
+        std / fast.latency_s,
+        fast.efficiency * 100.0,
+        fast.pipeline.syncs
+    );
+
+    let volta = VoltaSpec::default();
+    let xf = volta.attention_latency(VoltaKernel::Xformers, &w);
+    let fa = volta.attention_latency(VoltaKernel::FastAttention, &w);
+    println!("Tesla V100:");
+    println!(
+        "  xformers           : {}  ({:.1} TFLOPs/s)",
+        ms(xf),
+        volta.attention_tflops(VoltaKernel::Xformers, &w)
+    );
+    println!(
+        "  FastAttention      : {}  ({:.1} TFLOPs/s, {:.2}×)",
+        ms(fa),
+        volta.attention_tflops(VoltaKernel::FastAttention, &w),
+        xf / fa
+    );
+    Ok(())
+}
+
+fn plan_offload(args: &[String]) -> anyhow::Result<()> {
+    let name = flag(args, "--model").unwrap_or_else(|| "PanGu-38B".into());
+    let seq: u64 = flag(args, "--seq").map(|v| v.parse()).transpose()?.unwrap_or(65536);
+    let gpus: u32 = flag(args, "--gpus").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let model = models::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    let dep = Deployment { n_gpus: gpus, ..Deployment::v100_node(model, seq, 50) };
+    let plan = dep.plan();
+    let gb = |b: u64| b as f64 / (1u64 << 30) as f64;
+    println!("== CPU–GPU cooperative plan: {} @ S={seq}, {gpus}× V100-16GB ==", model.name);
+    println!("  weights/GPU  : {:>8.2} GiB", gb(plan.weights_per_gpu));
+    println!("  vocab        : {:>8.2} GiB", gb(plan.vocab));
+    println!("  KV/layer/GPU : {:>8.2} MiB", plan.kv_per_layer_per_gpu as f64 / (1 << 20) as f64);
+    println!("  M_mid        : {:>8.2} MiB", plan.mid_per_gpu as f64 / (1 << 20) as f64);
+    println!(
+        "  L_GPU = {}  L_CPU = {}  (of {} layers){}",
+        plan.l_gpu,
+        plan.l_cpu,
+        model.layers,
+        if plan.fits_without_offload { " — fits without offload" } else { "" }
+    );
+    println!(
+        "  max seq without offload : {}K",
+        dep.max_seq_without_offload() / 1024
+    );
+    println!(
+        "  max seq with offload    : {}K (768 GiB host)",
+        dep.max_seq_with_offload(768 << 30) / 1024
+    );
+    Ok(())
+}

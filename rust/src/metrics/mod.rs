@@ -1,0 +1,170 @@
+//! Serving metrics: engine counters + latency histogram + throughput.
+
+use std::time::Instant;
+
+/// Counters maintained by the engine loop.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub prefilled_tokens: u64,
+    pub decoded_tokens: u64,
+    pub completed: u64,
+    /// Cumulative seconds inside prefill / decode execution.
+    pub prefill_s: f64,
+    pub decode_s: f64,
+}
+
+impl EngineMetrics {
+    /// Decode throughput, tokens/second of decode wall time.
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_s <= 0.0 {
+            return 0.0;
+        }
+        self.decoded_tokens as f64 / self.decode_s
+    }
+
+    /// Prefill throughput, prompt tokens/second of prefill wall time.
+    pub fn prefill_tps(&self) -> f64 {
+        if self.prefill_s <= 0.0 {
+            return 0.0;
+        }
+        self.prefilled_tokens as f64 / self.prefill_s
+    }
+
+    /// Mean batched sequences per decode step.
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decoded_tokens as f64 / self.decode_steps as f64
+    }
+}
+
+/// A simple latency histogram with power-of-two microsecond buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) µs; 32 buckets ≈ 71 min.
+    buckets: [u64; 32],
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: [0; 32], count: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, seconds: f64) {
+        let us = (seconds * 1e6).max(1.0);
+        let idx = (us.log2() as usize).min(31);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+        if seconds > self.max_s {
+            self.max_s = seconds;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 2f64.powi(i as i32 + 1) / 1e6;
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Windowless throughput counter.
+#[derive(Debug)]
+pub struct Throughput {
+    started: Instant,
+    events: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self { started: Instant::now(), events: 0 }
+    }
+}
+
+impl Throughput {
+    pub fn add(&mut self, n: u64) {
+        self.events += n;
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_metrics_rates() {
+        let m = EngineMetrics {
+            decode_steps: 10,
+            decoded_tokens: 30,
+            decode_s: 3.0,
+            prefilled_tokens: 100,
+            prefill_s: 2.0,
+            ..Default::default()
+        };
+        assert!((m.decode_tps() - 10.0).abs() < 1e-9);
+        assert!((m.prefill_tps() - 50.0).abs() < 1e-9);
+        assert!((m.mean_decode_batch() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5); // 10µs .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile_s(0.5) <= h.quantile_s(0.99));
+        assert!(h.quantile_s(0.99) <= h.max_s() * 2.0 + 1e-9);
+        assert!(h.mean_s() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_s(0.9), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Model zoo: the paper's evaluation models (Table 1) as shape configs.
+//!
+//! Weights never matter for the reproduced numbers — every latency /
+//! throughput / memory figure in the paper is a function of the shapes
+//! (B, S, N, D, L, H1, H2, V) — so the zoo stores shapes only.  The real
+//! weights for the end-to-end serving example come from the AOT artifact
+//! bundle (`artifacts/weights/`).
+
+mod zoo;
+
+pub use zoo::*;
+
+/// Transformer shape parameters (paper Appendix C notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelShape {
+    /// Human-readable name, e.g. "PanGu-38B".
+    pub name: &'static str,
+    /// Total parameter count (informational, in billions × 10⁹).
+    pub params: u64,
+    /// Number of transformer layers, `L`.
+    pub layers: u32,
+    /// Number of attention heads, `N`.
+    pub heads: u32,
+    /// Head dimension, `D`.
+    pub head_dim: u32,
+    /// FFN hidden size, `H2`.
+    pub ffn: u32,
+    /// Vocabulary size, `V`.
+    pub vocab: u32,
+}
+
+impl ModelShape {
+    /// Attention hidden dimension `H1 = N * D`.
+    pub fn hidden(&self) -> u64 {
+        self.heads as u64 * self.head_dim as u64
+    }
+
+    /// Heads resident on one device under `n`-way tensor parallelism.
+    pub fn heads_per_device(&self, n: u32) -> u32 {
+        (self.heads + n - 1) / n
+    }
+
+    /// FLOPs of one full attention forward (paper §5.2.3 formula):
+    /// `4 · seqlen² · head_dim · heads` per batch element (both GEMMs).
+    pub fn attention_flops(&self, batch: u64, seq: u64) -> f64 {
+        4.0 * (seq as f64) * (seq as f64)
+            * self.head_dim as f64
+            * self.heads as f64
+            * batch as f64
+    }
+
+    /// FLOPs of one decode-step attention (`seq_q = 1`) over a KV of
+    /// length `kv`.
+    pub fn decode_attention_flops(&self, batch: u64, kv: u64) -> f64 {
+        4.0 * kv as f64 * self.head_dim as f64 * self.heads as f64 * batch as f64
+    }
+
+    /// Per-layer GEMM FLOPs for a prefill of `seq` tokens (QKV + O + MLP).
+    pub fn layer_gemm_flops(&self, batch: u64, seq: u64) -> f64 {
+        let h1 = self.hidden() as f64;
+        let h2 = self.ffn as f64;
+        let tok = (batch * seq) as f64;
+        // 4 projections H1×H1 plus 2 MLP GEMMs H1×H2, 2 FLOPs per MAC.
+        2.0 * tok * (4.0 * h1 * h1 + 2.0 * h1 * h2)
+    }
+
+    /// Model weight bytes in fp16 (paper eq. 17):
+    /// `M_w = L (8 H1² + 4 H1 H2)`.
+    pub fn weight_bytes_fp16(&self) -> u64 {
+        let h1 = self.hidden();
+        let h2 = self.ffn as u64;
+        self.layers as u64 * (8 * h1 * h1 + 4 * h1 * h2)
+    }
+
+    /// One layer's KV-cache bytes per device in fp16 (paper eq. 18):
+    /// `M_kv = 4 B H1 (S + O) / n`.
+    pub fn kv_bytes_per_layer_fp16(&self, batch: u64, s_plus_o: u64, n: u32) -> u64 {
+        4 * batch * self.hidden() * s_plus_o / n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hidden_dims_match_table1() {
+        assert_eq!(PANGU_38B.hidden(), 5120);
+        assert_eq!(LLAMA2_7B.hidden(), 4096);
+        assert_eq!(LLAMA2_70B.hidden(), 8192);
+        assert_eq!(OPT_30B.hidden(), 7168);
+        assert_eq!(LLAMA_65B.hidden(), 8192);
+    }
+
+    #[test]
+    fn heads_per_device_8way() {
+        assert_eq!(PANGU_38B.heads_per_device(8), 5); // paper §5.2.1: N=5
+        assert_eq!(PANGU_71B.heads_per_device(8), 4); // paper §5.2.1: N=4
+    }
+
+    #[test]
+    fn attention_flops_formula() {
+        // paper formula: 4 · seqlen² · head_dim · heads
+        let f = PANGU_38B.attention_flops(1, 2048);
+        assert_eq!(f, 4.0 * 2048.0 * 2048.0 * 128.0 * 40.0);
+    }
+
+    #[test]
+    fn weight_bytes_eq17_on_table1_config() {
+        // eq. 17 over Table 1's PanGu-38B config: 40·(8·5120² + 4·5120·
+        // 20480) ≈ 25 GB.  (The table's config understates the 38 B name;
+        // the memory planner uses 2·params instead — see sim::memory.)
+        let w = PANGU_38B.weight_bytes_fp16() as f64 / 1e9;
+        assert!(w > 23.0 && w < 28.0, "got {w} GB");
+    }
+
+    #[test]
+    fn kv_bytes_match_table3_transfer_sizes() {
+        // Table 3 @16K: one layer's per-GPU KV on 8 V100s for PanGu-38B
+        // uploads in 3.58 ms at ~11.7 GB/s -> ~41.9 MB.
+        let kv = PANGU_38B.kv_bytes_per_layer_fp16(1, 16 * 1024, 8);
+        assert_eq!(kv, 4 * 16384 * 5120 / 8);
+        let mb = kv as f64 / 1e6;
+        assert!(mb > 40.0 && mb < 43.0, "got {mb} MB");
+    }
+}

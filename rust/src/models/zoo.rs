@@ -1,0 +1,164 @@
+//! The concrete model configurations used across the paper's evaluation.
+//!
+//! Table 1 plus the models that appear only in the text (PanGu-71B, the
+//! DeiT/ViT family of Appendix D) and the tiny end-to-end serving model
+//! matching `python/compile/model.py::TINY`.
+
+use super::ModelShape;
+
+/// PanGu-38B (Table 1): 40 layers, 40 heads, D=128, FFN 20480.
+pub const PANGU_38B: ModelShape = ModelShape {
+    name: "PanGu-38B",
+    params: 38_000_000_000,
+    layers: 40,
+    heads: 40,
+    head_dim: 128,
+    ffn: 20480,
+    vocab: 100_000,
+};
+
+/// PanGu-71B — not in Table 1; §5.2.1 gives 4 heads per NPU on 8 devices
+/// (=> 32 heads total) with D=128.  Layer count/FFN estimated from the
+/// 71B parameter budget (64 layers, FFN 4·H1).
+pub const PANGU_71B: ModelShape = ModelShape {
+    name: "PanGu-71B",
+    params: 71_000_000_000,
+    layers: 64,
+    heads: 32,
+    head_dim: 128,
+    ffn: 16384,
+    vocab: 100_000,
+};
+
+/// OPT-30B (Table 1): 48 layers, 56 heads, D=128, FFN 28672.
+pub const OPT_30B: ModelShape = ModelShape {
+    name: "OPT-30B",
+    params: 30_000_000_000,
+    layers: 48,
+    heads: 56,
+    head_dim: 128,
+    ffn: 28672,
+    vocab: 50_272,
+};
+
+/// LLaMA2-7B (Table 1): 32 layers, 32 heads, D=128, FFN 11008.
+pub const LLAMA2_7B: ModelShape = ModelShape {
+    name: "LLaMA2-7B",
+    params: 7_000_000_000,
+    layers: 32,
+    heads: 32,
+    head_dim: 128,
+    ffn: 11008,
+    vocab: 32_000,
+};
+
+/// LLaMA2-70B (Table 1): 80 layers, 64 heads, D=128, FFN 28672.
+pub const LLAMA2_70B: ModelShape = ModelShape {
+    name: "LLaMA2-70B",
+    params: 70_000_000_000,
+    layers: 80,
+    heads: 64,
+    head_dim: 128,
+    ffn: 28672,
+    vocab: 32_000,
+};
+
+/// LLaMA-65B (Table 1): 80 layers, 64 heads, D=128, FFN 22016.
+pub const LLAMA_65B: ModelShape = ModelShape {
+    name: "LLaMA-65B",
+    params: 65_000_000_000,
+    layers: 80,
+    heads: 64,
+    head_dim: 128,
+    ffn: 22016,
+    vocab: 32_000,
+};
+
+/// DeiT-B (Appendix D, Table 8): ViT-Base shape, S=197 tokens.
+pub const DEIT_B: ModelShape = ModelShape {
+    name: "DeiT-B",
+    params: 86_000_000,
+    layers: 12,
+    heads: 12,
+    head_dim: 64,
+    ffn: 3072,
+    vocab: 1000,
+};
+
+/// ViT-B (Appendix D, Table 7).
+pub const VIT_B: ModelShape = DEIT_B_WITH_NAME("ViT-B");
+/// DeiT-S (Appendix D, Table 7): 6 heads, H1=384.
+pub const DEIT_S: ModelShape = ModelShape {
+    name: "DeiT-S",
+    params: 22_000_000,
+    layers: 12,
+    heads: 6,
+    head_dim: 64,
+    ffn: 1536,
+    vocab: 1000,
+};
+/// DeiT-Ti (Appendix D, Table 7): 3 heads, H1=192.
+pub const DEIT_TI: ModelShape = ModelShape {
+    name: "DeiT-Ti",
+    params: 5_700_000,
+    layers: 12,
+    heads: 3,
+    head_dim: 64,
+    ffn: 768,
+    vocab: 1000,
+};
+
+#[allow(non_snake_case)]
+const fn DEIT_B_WITH_NAME(name: &'static str) -> ModelShape {
+    ModelShape {
+        name,
+        params: 86_000_000,
+        layers: 12,
+        heads: 12,
+        head_dim: 64,
+        ffn: 3072,
+        vocab: 1000,
+    }
+}
+
+/// The tiny end-to-end serving model — must match
+/// `python/compile/model.py::TINY` (checked against the artifact manifest
+/// at load time).
+pub const TINY: ModelShape = ModelShape {
+    name: "tiny-3m",
+    params: 3_451_136,
+    layers: 4,
+    heads: 4,
+    head_dim: 64,
+    ffn: 1024,
+    vocab: 512,
+};
+
+/// Look up a model by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelShape> {
+    let all = [
+        PANGU_38B, PANGU_71B, OPT_30B, LLAMA2_7B, LLAMA2_70B, LLAMA_65B,
+        DEIT_B, DEIT_S, DEIT_TI, TINY,
+    ];
+    all.into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_finds_models() {
+        assert_eq!(by_name("pangu-38b").unwrap().name, "PanGu-38B");
+        assert_eq!(by_name("LLaMA2-70B").unwrap().heads, 64);
+        assert!(by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_python_model() {
+        assert_eq!(TINY.hidden(), 256);
+        assert_eq!(TINY.layers, 4);
+        assert_eq!(TINY.vocab, 512);
+    }
+}

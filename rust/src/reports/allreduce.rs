@@ -1,0 +1,92 @@
+//! Tiling-AllReduce experiment reports (Appendix D.3 — Figs 16, 17).
+
+use crate::benchkit::{ms, x, Table};
+use crate::models;
+use crate::sim::ascend::{AscendSpec, FastAttnOptions};
+use crate::sim::collective::{best_block_count, make_blocks, serial_schedule, RingSpec};
+use crate::sim::AttnWorkload;
+
+/// Fused attention+Linear compute seconds and AllReduce bytes for one
+/// PanGu-38B layer on one of 8 NPUs (shared with examples/multi_npu.rs).
+pub fn pangu38_layer_compute_and_bytes(b: u64, s: u64) -> (f64, u64) {
+    let spec = AscendSpec::default();
+    let model = models::PANGU_38B;
+    let heads_dev = model.heads_per_device(8) as u64;
+    let w = AttnWorkload::prefill(b, heads_dev, s, model.head_dim as u64, true);
+    let attn = spec.fastattn_latency(&w, &FastAttnOptions::default()).latency_s;
+    let linear = spec.linear_latency(b * s, model.hidden(), model.ffn as u64, 8, 2, true);
+    (attn + linear, 2 * b * s * model.hidden())
+}
+
+/// Fig 16: constant 32K total tokens, batch × seq sweep.
+pub fn fig16_tokens_sweep() -> Table {
+    let ring = RingSpec::default();
+    let mut t = Table::new(
+        "Fig 16 — tiling-AllReduce at 32K total tokens, PanGu-38B 8×910B (paper: ≤1.53×)",
+        &["batch", "seq", "serial (ms)", "tiling-AR (ms)", "blocks", "speedup"],
+    );
+    for (b, s) in [(32u64, 1024u64), (16, 2048), (8, 4096), (4, 8192), (2, 16384), (1, 32768)] {
+        let (compute, bytes) = pangu38_layer_compute_and_bytes(b, s);
+        let serial = serial_schedule(&ring, &make_blocks(bytes, compute, 1, 1.0));
+        let (nb, over) = best_block_count(&ring, bytes, compute);
+        t.row(&[
+            format!("{b}"),
+            format!("{}K", s / 1024),
+            ms(serial),
+            ms(over),
+            format!("{nb}"),
+            x(serial / over),
+        ]);
+    }
+    t
+}
+
+/// Fig 17: with/without tiling-AllReduce across batch and sequence.
+pub fn fig17_ablation() -> Table {
+    let ring = RingSpec::default();
+    let mut t = Table::new(
+        "Fig 17 — ± tiling-AllReduce, PanGu-38B 8×910B (paper: 1.2–1.5×)",
+        &["batch", "seq", "without (ms)", "with (ms)", "speedup", "hidden comm"],
+    );
+    for b in [1u64, 4, 16] {
+        for s in [2048u64, 8192, 32768] {
+            let (compute, bytes) = pangu38_layer_compute_and_bytes(b, s);
+            let serial = serial_schedule(&ring, &make_blocks(bytes, compute, 1, 1.0));
+            let (nb, over) = best_block_count(&ring, bytes, compute);
+            let blocks = make_blocks(bytes, compute, nb.max(1), 0.5 / nb.max(1) as f64);
+            let detail = crate::sim::collective::overlapped_schedule(&ring, &blocks);
+            t.row(&[
+                format!("{b}"),
+                format!("{}K", s / 1024),
+                ms(serial),
+                ms(over),
+                x(serial / over),
+                format!("{:.0}%", detail.hidden_comm_s / detail.total_comm_s.max(1e-12) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16_speedups_in_band() {
+        let ring = RingSpec::default();
+        for (b, s) in [(32u64, 1024u64), (1, 32768)] {
+            let (compute, bytes) = pangu38_layer_compute_and_bytes(b, s);
+            let serial = serial_schedule(&ring, &make_blocks(bytes, compute, 1, 1.0));
+            let (_, over) = best_block_count(&ring, bytes, compute);
+            let sp = serial / over;
+            assert!(sp >= 1.0 && sp < 1.8, "b={b} s={s}: {sp:.2}");
+        }
+    }
+
+    #[test]
+    fn tables_render() {
+        fig16_tokens_sweep().print();
+        fig17_ablation().print();
+    }
+}

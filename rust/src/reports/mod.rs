@@ -1,0 +1,54 @@
+//! Experiment reports: one function per paper table/figure.
+//!
+//! Each function regenerates its experiment through the simulators /
+//! real kernels and returns a [`Table`](crate::benchkit::Table) whose
+//! rows put the paper's reported value next to the reproduced one.
+//! The `rust/benches/*` binaries and the `repro table <id>` CLI
+//! subcommand are thin wrappers over these.
+
+pub mod allreduce;
+pub mod npu;
+pub mod volta;
+
+use crate::benchkit::Table;
+
+/// Every experiment id, in paper order.
+pub const ALL: &[&str] = &[
+    "fig7", "fig8", "fig9", "fig10", "fig11", "fig16", "fig17", "table2",
+    "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+];
+
+/// Dispatch by experiment id.
+pub fn by_id(id: &str) -> Option<Table> {
+    match id {
+        "fig7" => Some(npu::fig7_single_npu()),
+        "fig8" => Some(volta::fig8_xformers()),
+        "fig9" => Some(npu::fig9_blocksize_sweep()),
+        "fig10" => Some(npu::fig10_multi_npu()),
+        "fig11" => Some(volta::fig11_ft_v100()),
+        "fig16" => Some(allreduce::fig16_tokens_sweep()),
+        "fig17" => Some(allreduce::fig17_ablation()),
+        "table2" => Some(npu::table2_ablation()),
+        "table3" => Some(volta::table3_offload()),
+        "table4" => Some(npu::table4_e2e()),
+        "table5" => Some(volta::table5_deepspeed()),
+        "table6" => Some(npu::table6_throughput()),
+        "table7" => Some(npu::table7_vit_breakdown()),
+        "table8" => Some(npu::table8_deit()),
+        "table9" => Some(npu::table9_quant()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_id_dispatches() {
+        for id in ALL {
+            assert!(by_id(id).is_some(), "{id}");
+        }
+        assert!(by_id("nope").is_none());
+    }
+}

@@ -1,0 +1,280 @@
+//! Volta/V100 experiment reports (Fig 8, Table 3, Table 5, Fig 11).
+
+use crate::benchkit::{ms, x, Table};
+use crate::coordinator::offload::{layer_latency_model, measured_cpu_attention, plan};
+use crate::models::{self};
+use crate::sim::memory::Deployment;
+use crate::sim::volta::{VoltaKernel, VoltaSpec};
+use crate::sim::AttnWorkload;
+
+/// Fig 8: FastAttention vs xformers FlashAttention on one V100
+/// (B=8, hidden 2048, 64 heads), in achieved TFLOPs/s.
+pub fn fig8_xformers() -> Table {
+    let spec = VoltaSpec::default();
+    let mut t = Table::new(
+        "Fig 8 — V100 TFLOPs/s vs xformers (paper: 1.03–1.17× no-causal; ≤1.43× causal)",
+        &["causal", "seq", "xformers TF/s", "fastattn TF/s", "speedup", "paper"],
+    );
+    let paper_nc: &[(u64, f64)] =
+        &[(2048, 1.03), (4096, 1.06), (8192, 1.12), (16384, 1.17)];
+    for &(s, p) in paper_nc {
+        let w = AttnWorkload::prefill(8, 64, s, 32, false);
+        let xf = spec.attention_tflops(VoltaKernel::Xformers, &w);
+        let fa = spec.attention_tflops(VoltaKernel::FastAttention, &w);
+        t.row(&[
+            "no".into(),
+            format!("{}K", s / 1024),
+            format!("{xf:.1}"),
+            format!("{fa:.1}"),
+            x(fa / xf),
+            x(p),
+        ]);
+    }
+    for s in [2048u64, 4096, 8192, 16384] {
+        let w = AttnWorkload::prefill(8, 64, s, 32, true);
+        let xf = spec.attention_tflops(VoltaKernel::Xformers, &w);
+        let fa = spec.attention_tflops(VoltaKernel::FastAttention, &w);
+        let paper = if s == 16384 { "1.43×" } else { "—" };
+        t.row(&[
+            "yes".into(),
+            format!("{}K", s / 1024),
+            format!("{xf:.1}"),
+            format!("{fa:.1}"),
+            x(fa / xf),
+            paper.into(),
+        ]);
+    }
+    t
+}
+
+/// Table 3: CPU–GPU cooperative strategy vs classical offloading,
+/// PanGu-38B on 8× V100, per-layer decode attention breakdown.
+pub fn table3_offload() -> Table {
+    let spec = VoltaSpec::default();
+    let model = models::PANGU_38B;
+    let mut t = Table::new(
+        "Table 3 — offload breakdown, PanGu-38B 8×V100 (paper totals: classical 3.892→54.92 ms; coop 2.719→37.806 ms)",
+        &[
+            "seq",
+            "upload (ms)",
+            "GPU calc (ms)",
+            "classical (ms)",
+            "CPU calc (ms)",
+            "off-upload (ms)",
+            "coop (ms)",
+            "speedup",
+            "paper speedup",
+            "live CPU (ms)",
+        ],
+    );
+    let paper: &[(u64, f64, f64)] = &[
+        (16 * 1024, 3.892, 2.719),
+        (32 * 1024, 7.548, 5.345),
+        (64 * 1024, 13.66, 10.685),
+        (128 * 1024, 27.698, 18.721),
+        (256 * 1024, 54.92, 37.806),
+    ];
+    // Short rows (no offload) first, as in the paper.
+    for s in [1024u64, 2048, 4096, 8192] {
+        let per = layer_latency_model(&spec, &model, 8, 1, s);
+        t.row(&[
+            format!("{}K", s / 1024),
+            "—".into(),
+            ms(per.gpu_calc_s),
+            ms(per.gpu_calc_s),
+            "—".into(),
+            "—".into(),
+            ms(per.gpu_calc_s),
+            "1.00×".into(),
+            "—".into(),
+            "—".into(),
+        ]);
+    }
+    for &(s, pc, pf) in paper {
+        let per = layer_latency_model(&spec, &model, 8, 1, s);
+        // live host attention on this machine for the same shard shape
+        let live = measured_cpu_attention(5, s as usize, 128);
+        t.row(&[
+            format!("{}K", s / 1024),
+            ms(per.upload_s),
+            ms(per.gpu_calc_s),
+            ms(per.classical_total()),
+            ms(per.cpu_calc_s),
+            ms(per.off_upload_s),
+            ms(per.coop_total()),
+            x(per.classical_total() / per.coop_total()),
+            x(pc / pf),
+            ms(live),
+        ]);
+    }
+    t
+}
+
+/// Table 5: torch-DeepSpeed baseline on 8× V100 (no CUDA graphs — per-op
+/// launch overhead dominates).
+pub fn table5_deepspeed() -> Table {
+    let spec = VoltaSpec::default();
+    let mut t = Table::new(
+        "Table 5 — DeepSpeed (torch) on 8× V100 (paper: OPT-30B 270→692 ms; LLaMA-65B 513→3849 ms; N/A beyond limits)",
+        &["model", "seq", "latency (ms)", "paper (ms)", "tok/s", "paper tok/s"],
+    );
+    let paper: &[(&str, u64, Option<(f64, f64)>)] = &[
+        ("OPT-30B", 512, Some((270.5, 20.25))),
+        ("OPT-30B", 1024, Some((384.74, 16.27))),
+        ("OPT-30B", 2048, Some((691.67, 11.59))),
+        ("OPT-30B", 4096, None),
+        ("LLaMA-65B", 512, Some((513.15, 10.57))),
+        ("LLaMA-65B", 1024, Some((1046.79, 6.73))),
+        ("LLaMA-65B", 2048, Some((2206.95, 4.08))),
+        ("LLaMA-65B", 4096, Some((3848.61, 2.35))),
+        ("LLaMA-65B", 8192, None),
+    ];
+    for &(name, s, p) in paper {
+        let model = models::by_name(name).unwrap();
+        // model limit: OPT-30B has a 2K context; LLaMA-65B 4K (paper N/A)
+        let limit = if name == "OPT-30B" { 2048 } else { 4096 };
+        if s > limit {
+            t.row(&[
+                name.into(),
+                format!("{s}"),
+                "N/A".into(),
+                "N/A".into(),
+                "N/A".into(),
+                "N/A".into(),
+            ]);
+            continue;
+        }
+        // torch DeepSpeed latency: per-layer GEMMs + attention + per-op
+        // launch overhead × ~14 unfused ops/layer, + allreduce.
+        let h1 = model.hidden();
+        let h2 = model.ffn as u64;
+        let shard = 8;
+        let per_layer = spec.gemm(s, h1, h1 * 4 / shard)
+            + spec.gemm(s, h1, 2 * h2 / shard)
+            + spec.attention_latency(
+                VoltaKernel::Xformers,
+                &AttnWorkload::prefill(1, (model.heads / 8) as u64, s, model.head_dim as u64, true),
+            )
+            + 14.0 * spec.torch_op_overhead_s
+            + spec.allreduce(2 * s * h1, 8);
+        let latency = per_layer * model.layers as f64;
+        // decode throughput: weight-bound GEMV + overheads per layer
+        let w_bytes = 2.0 * (4 * h1 * h1 + 2 * h1 * h2) as f64 / 8.0;
+        let dec_layer = w_bytes / spec.hbm_bw
+            + 14.0 * spec.torch_op_overhead_s
+            + spec.allreduce(2 * h1, 8)
+            + spec.decode_attention_gpu(model.kv_bytes_per_layer_fp16(1, s, 8));
+        let tps = 1.0 / (dec_layer * model.layers as f64);
+        let (pl, pt) = p.map(|(a, b)| (format!("{a:.1}"), format!("{b:.2}")))
+            .unwrap_or(("N/A".into(), "N/A".into()));
+        t.row(&[
+            name.into(),
+            format!("{s}"),
+            ms(latency),
+            pl,
+            format!("{tps:.2}"),
+            pt,
+        ]);
+    }
+    t
+}
+
+/// Fig 11: FasterTransformer ± FastAttention on 8× V100 — latency and
+/// max context (16K → 256K).
+pub fn fig11_ft_v100() -> Table {
+    let spec = VoltaSpec::default();
+    let mut t = Table::new(
+        "Fig 11 — FT ± FastAttention, 8×V100 (paper: ≤1.46× PanGu-38B, ≤1.28× PanGu-71B; 16K→256K)",
+        &["model", "seq", "FT (ms)", "FT+FastAttn (ms)", "speedup", "note"],
+    );
+    for model in [models::PANGU_38B, models::PANGU_71B] {
+        // PanGu-71B's 142 GB of fp16 weights need the 32 GB V100 variant;
+        // PanGu-38B runs on the 16 GB one (which yields the paper's ~16K
+        // baseline ceiling).
+        let mut dep0 = Deployment::v100_node(model, 0, 50);
+        if model.params > 60_000_000_000 {
+            dep0.gpu_mem_bytes = 32 << 30;
+        }
+        let base_max = dep0.max_seq_without_offload();
+        let coop_max = dep0.max_seq_with_offload(768 * (1u64 << 30));
+        for s in [1024u64, 4096, 16384, 65536, 262144] {
+            let heads = (model.heads / 8) as u64;
+            let w = AttnWorkload::prefill(1, heads, s, model.head_dim as u64, true);
+            let h1 = model.hidden();
+            let h2 = model.ffn as u64;
+            let linear = spec.gemm(s, h1, (4 * h1 + 2 * h2) / 8);
+            let comm = spec.allreduce(2 * s * h1, 8);
+
+            let dep = Deployment { seq: s, ..dep0 };
+            let p = plan(&dep);
+            let per = layer_latency_model(&spec, &model, 8, 1, s);
+
+            // FastAttention path latency (prefill-dominated one-token):
+            let fast_attn = spec.attention_latency(VoltaKernel::FastAttention, &w);
+            let fast = (fast_attn + linear + comm) * model.layers as f64
+                + p.l_cpu as f64 * per.off_upload_s;
+
+            if s > base_max {
+                let note = if s <= coop_max {
+                    format!("baseline OOM (max {}K)", base_max / 1024)
+                } else {
+                    "beyond both".into()
+                };
+                t.row(&[
+                    model.name.into(),
+                    format!("{}K", s / 1024),
+                    "N/A".into(),
+                    ms(fast),
+                    "∞".into(),
+                    note,
+                ]);
+            } else {
+                let base_attn = spec.attention_latency(VoltaKernel::Xformers, &w);
+                // The FT baseline attention is not a flash kernel: it
+                // materializes the S×S scores (write + read) and streams
+                // the S×S mask from HBM.
+                let mask_io = 3.0 * w.score_bytes(2) as f64 / spec.hbm_bw;
+                let base = (base_attn + mask_io + linear + comm) * model.layers as f64;
+                t.row(&[
+                    model.name.into(),
+                    format!("{}K", s / 1024),
+                    ms(base),
+                    ms(fast),
+                    x(base / fast),
+                    String::new(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_speedups_in_band() {
+        let spec = VoltaSpec::default();
+        for s in [16 * 1024u64, 256 * 1024] {
+            let per = layer_latency_model(&spec, &models::PANGU_38B, 8, 1, s);
+            let sp = per.classical_total() / per.coop_total();
+            assert!(sp > 1.2 && sp < 1.7, "S={s}: {sp}");
+        }
+    }
+
+    #[test]
+    fn fig11_fastattn_extends_context() {
+        let dep = Deployment::v100_node(models::PANGU_38B, 0, 50);
+        assert!(dep.max_seq_without_offload() < 64 * 1024);
+        assert!(dep.max_seq_with_offload(768 << 30) >= 256 * 1024);
+    }
+
+    #[test]
+    fn all_volta_tables_render() {
+        fig8_xformers().print();
+        table3_offload().print();
+        table5_deepspeed().print();
+        fig11_ft_v100().print();
+    }
+}

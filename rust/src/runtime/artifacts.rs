@@ -1,0 +1,281 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust serving path.
+//!
+//! `artifacts/manifest.json` records the model config, every lowered
+//! entrypoint with its input/output shapes, and the ordered weight dumps.
+//! This module parses it (via the in-crate JSON parser) and loads weight
+//! binaries; compilation/execution lives in [`super::client`].
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use crate::runtime::tensor::HostTensor;
+
+/// One named input or output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+/// One lowered HLO entrypoint.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifact dir.
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One dumped weight tensor (little-endian f32, `param_specs` order).
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+/// Model config as recorded by the AOT step.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub prefill_batches: Vec<usize>,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub weights: Vec<WeightSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req_str("name")?.to_string(),
+        shape: j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.u64().map(|v| v as usize))
+            .collect::<Option<Vec<_>>>()
+            .context("bad shape entry")?,
+        dtype: j.req_str("dtype")?.to_string(),
+    })
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.get("model").context("manifest: missing 'model'")?;
+        let model = ModelInfo {
+            name: m.req_str("name")?.to_string(),
+            vocab: m.req_u64("vocab")? as usize,
+            n_layers: m.req_u64("n_layers")? as usize,
+            d_model: m.req_u64("d_model")? as usize,
+            n_heads: m.req_u64("n_heads")? as usize,
+            n_kv_heads: m.req_u64("n_kv_heads")? as usize,
+            head_dim: m.req_u64("head_dim")? as usize,
+            d_ff: m.req_u64("d_ff")? as usize,
+            max_seq: m.req_u64("max_seq")? as usize,
+            n_params: m.req_u64("n_params")? as usize,
+        };
+
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            j.req_arr(key)?
+                .iter()
+                .map(|d| d.u64().map(|v| v as usize))
+                .collect::<Option<Vec<_>>>()
+                .with_context(|| format!("bad '{key}'"))
+        };
+
+        let weights = j
+            .req_arr("weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    name: w.req_str("name")?.to_string(),
+                    file: w.req_str("file")?.to_string(),
+                    shape: w
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.u64().map(|v| v as usize))
+                        .collect::<Option<Vec<_>>>()
+                        .context("bad weight shape")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.req_str("name")?.to_string(),
+                    file: a.req_str("file")?.to_string(),
+                    inputs: a
+                        .req_arr("inputs")?
+                        .iter()
+                        .map(io_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .req_arr("outputs")?
+                        .iter()
+                        .map(io_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir,
+            model,
+            prefill_batches: usize_arr("prefill_batches")?,
+            prefill_seqs: usize_arr("prefill_seqs")?,
+            decode_batches: usize_arr("decode_batches")?,
+            weights,
+            artifacts,
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Load every weight dump as a host tensor, in manifest order (the
+    /// positional parameter order every model entrypoint expects).
+    pub fn load_weights(&self) -> Result<Vec<HostTensor>> {
+        self.weights
+            .iter()
+            .map(|w| {
+                let path = self.dir.join(&w.file);
+                let bytes = fs::read(&path)
+                    .with_context(|| format!("reading weight {path:?}"))?;
+                if bytes.len() % 4 != 0 {
+                    bail!("weight {:?}: {} bytes not a multiple of 4", w.file, bytes.len());
+                }
+                let n: usize = w.shape.iter().product();
+                if bytes.len() / 4 != n {
+                    bail!(
+                        "weight {:?}: {} elements on disk, shape {:?} needs {n}",
+                        w.file,
+                        bytes.len() / 4,
+                        w.shape
+                    );
+                }
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(HostTensor::f32(w.shape.clone(), data))
+            })
+            .collect()
+    }
+
+    /// The best prefill bucket for `seq` tokens: smallest lowered S ≥ seq.
+    pub fn prefill_bucket(&self, seq: usize) -> Result<usize> {
+        self.prefill_seqs
+            .iter()
+            .copied()
+            .filter(|&s| s >= seq)
+            .min()
+            .with_context(|| {
+                format!(
+                    "prompt of {seq} tokens exceeds the largest prefill bucket {:?}",
+                    self.prefill_seqs
+                )
+            })
+    }
+
+    /// The best batch bucket: smallest lowered B ≥ want.
+    pub fn batch_bucket(&self, buckets: &[usize], want: usize) -> Result<usize> {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= want)
+            .min()
+            .with_context(|| format!("batch {want} exceeds buckets {buckets:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let Some(m) = repo_manifest() else { return };
+        assert_eq!(m.model.name, "tiny-3m");
+        assert_eq!(m.model.n_layers, 4);
+        assert!(m.artifact("decode_b1").is_ok());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn weights_match_param_count() {
+        let Some(m) = repo_manifest() else { return };
+        let weights = m.load_weights().unwrap();
+        let total: usize = weights.iter().map(|w| w.len()).sum();
+        assert_eq!(total, m.model.n_params);
+    }
+
+    #[test]
+    fn artifact_io_shapes_sane() {
+        let Some(m) = repo_manifest() else { return };
+        let a = m.artifact("prefill_b1_s32").unwrap();
+        assert_eq!(a.inputs[0].name, "tokens");
+        assert_eq!(a.inputs[0].shape, vec![1, 32]);
+        assert_eq!(a.outputs[0].shape, vec![1, m.model.vocab]);
+        // inputs = tokens + lengths + every weight
+        assert_eq!(a.inputs[1].name, "lengths");
+        assert_eq!(a.inputs.len(), 2 + m.weights.len());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = repo_manifest() else { return };
+        assert_eq!(m.prefill_bucket(1).unwrap(), 32);
+        assert_eq!(m.prefill_bucket(32).unwrap(), 32);
+        assert_eq!(m.prefill_bucket(33).unwrap(), 64);
+        assert_eq!(m.prefill_bucket(128).unwrap(), 128);
+        assert!(m.prefill_bucket(129).is_err());
+        assert_eq!(m.batch_bucket(&m.decode_batches, 2).unwrap(), 4);
+    }
+}

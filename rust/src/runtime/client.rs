@@ -1,0 +1,261 @@
+//! The PJRT execution wrapper: compile HLO-text artifacts once, execute
+//! them from the serving hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Entrypoints are lowered with
+//! `return_tuple=True`, so each execution yields one tuple literal that we
+//! decompose into the manifest's declared outputs.
+//!
+//! Weights are staged as device buffers once at load time and passed
+//! positionally after the dynamic inputs (the manifest wire order) via
+//! `execute_b` — re-uploading them per call cost 2.8× on the decode step
+//! (EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+use super::tensor::HostTensor;
+
+/// Compiled artifact bundle + staged weight buffers + the PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Weights staged on the device ONCE at load time (§Perf item 1:
+    /// re-uploading 36 weight literals per call dominated the decode
+    /// step before this).
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    /// Compile seconds per artifact (startup cost report).
+    pub compile_times: Vec<(String, f64)>,
+}
+
+impl Runtime {
+    /// Load the manifest, compile every artifact, stage the weights.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::load_with_filter(manifest, |_| true)
+    }
+
+    /// Load compiling only artifacts accepted by `keep` (examples that
+    /// need a single kernel avoid compiling the full model bundle).
+    pub fn load_filtered(
+        dir: impl AsRef<Path>,
+        keep: impl Fn(&str) -> bool,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::load_with_filter(manifest, keep)
+    }
+
+    fn load_with_filter(manifest: Manifest, keep: impl Fn(&str) -> bool) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        let mut compile_times = Vec::new();
+        for spec in &manifest.artifacts {
+            if !keep(&spec.name) {
+                continue;
+            }
+            let path = manifest.hlo_path(spec);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{}'", spec.name))?;
+            compile_times.push((spec.name.clone(), t0.elapsed().as_secs_f64()));
+            executables.insert(spec.name.clone(), exe);
+        }
+        let weight_buffers = manifest
+            .load_weights()?
+            .iter()
+            .map(|w| match w {
+                HostTensor::F32 { shape, data } => client
+                    .buffer_from_host_buffer(data, shape, None)
+                    .map_err(anyhow::Error::from),
+                HostTensor::I32 { shape, data } => client
+                    .buffer_from_host_buffer(data, shape, None)
+                    .map_err(anyhow::Error::from),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { manifest, client, executables, weight_buffers, compile_times })
+    }
+
+    fn input_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of the compiled artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute artifact `name` with `inputs` (dynamic inputs only; weight
+    /// parameters are appended automatically when the artifact declares
+    /// them).  Returns the decomposed output literals in manifest order.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' was not compiled (filtered?)"))?;
+
+        let needs_weights =
+            spec.inputs.len() == inputs.len() + self.weight_buffers.len();
+        if !needs_weights && spec.inputs.len() != inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {} (+{} weights staged)",
+                spec.inputs.len(),
+                inputs.len(),
+                self.weight_buffers.len()
+            );
+        }
+
+        // Validate the dynamic inputs against the manifest.
+        for (io, t) in spec.inputs.iter().zip(inputs) {
+            if io.shape != t.shape() {
+                bail!(
+                    "artifact '{name}' input '{}' expects shape {:?}, got {:?}",
+                    io.name,
+                    io.shape,
+                    t.shape()
+                );
+            }
+        }
+
+        let args: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| self.input_buffer(t))
+            .collect::<Result<Vec<_>>>()?;
+        let arg_refs: Vec<&xla::PjRtBuffer> = if needs_weights {
+            args.iter().chain(self.weight_buffers.iter()).collect()
+        } else {
+            args.iter().collect()
+        };
+
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&arg_refs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("decomposing result tuple")?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute and convert every output to a host tensor.
+    pub fn run_host(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.run(name, inputs)?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+
+    /// Execute with caller-provided device buffers appended after the
+    /// staged weights — the decode loop's fast lane.
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+        with_weights: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' was not compiled"))?;
+        let arg_refs: Vec<&xla::PjRtBuffer> = if with_weights {
+            inputs.iter().copied().chain(self.weight_buffers.iter()).collect()
+        } else {
+            inputs.to_vec()
+        };
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&arg_refs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_with(names: &'static [&'static str]) -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return None;
+        }
+        Some(
+            Runtime::load_filtered(dir, |n| names.contains(&n))
+                .expect("runtime loads"),
+        )
+    }
+
+    #[test]
+    fn kernel_artifact_executes_and_matches_reference() {
+        let Some(rt) =
+            runtime_with(&["kernel_fastattn_causal", "kernel_standard_causal"])
+        else {
+            return;
+        };
+        // (1, 4, 128, 64) deterministic inputs
+        let n = 4 * 128 * 64;
+        let mk = |salt: f32| {
+            let data: Vec<f32> = (0..n)
+                .map(|i| ((i as f32 * 0.137 + salt).sin()) * 0.5)
+                .collect();
+            HostTensor::f32(vec![1, 4, 128, 64], data)
+        };
+        let (q, k, v) = (mk(0.0), mk(1.0), mk(2.0));
+        let fast = rt
+            .run_host("kernel_fastattn_causal", &[q.clone(), k.clone(), v.clone()])
+            .unwrap();
+        let std = rt
+            .run_host("kernel_standard_causal", &[q, k, v])
+            .unwrap();
+        let a = fast[0].as_f32().unwrap();
+        let b = std[0].as_f32().unwrap();
+        let max_err = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 2e-5, "pallas vs standard max err {max_err}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_input() {
+        let Some(rt) = runtime_with(&["kernel_fastattn_causal"]) else {
+            return;
+        };
+        let bad = HostTensor::f32(vec![1, 4, 64, 64], vec![0.0; 4 * 64 * 64]);
+        let err = match rt.run("kernel_fastattn_causal", &[bad.clone(), bad.clone(), bad]) {
+            Err(e) => e,
+            Ok(_) => panic!("bad-shape input unexpectedly accepted"),
+        };
+        assert!(err.to_string().contains("expects shape"), "{err}");
+    }
+}

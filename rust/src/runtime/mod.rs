@@ -1,0 +1,20 @@
+//! PJRT runtime — loads and executes the AOT artifacts.
+//!
+//! The compile path (`make artifacts`) runs Python once; from then on this
+//! module is the only thing that touches the model: it parses
+//! `artifacts/manifest.json` ([`artifacts`]), loads the HLO *text* files
+//! (`HloModuleProto::from_text_file` — text is the interchange format, see
+//! `python/compile/aot.py`), compiles them on the PJRT CPU client and
+//! executes them from the serving hot path ([`client`]).
+//!
+//! serde being unavailable offline, the manifest is parsed with the
+//! in-crate [`json`] parser; host tensors are the plain [`tensor`] types.
+
+pub mod artifacts;
+pub mod client;
+pub mod json;
+pub mod tensor;
+
+pub use artifacts::{ArtifactSpec, IoSpec, Manifest, WeightSpec};
+pub use client::Runtime;
+pub use tensor::HostTensor;

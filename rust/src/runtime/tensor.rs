@@ -1,0 +1,156 @@
+//! Plain host-side tensors and their PJRT `Literal` conversions.
+
+use anyhow::{bail, Context, Result};
+
+/// A host tensor: row-major data + shape.  Two element types cover the
+//  serving path (f32 activations/weights, i32 tokens/positions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    /// f32 tensor; panics on shape/len mismatch.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/len");
+        HostTensor::F32 { shape, data }
+    }
+
+    /// i32 tensor; panics on shape/len mismatch.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/len");
+        HostTensor::I32 { shape, data }
+    }
+
+    /// Scalar i32 (shape `[]`).
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 data; errors if the tensor is i32.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Borrow i32 data; errors if the tensor is f32.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Convert to a PJRT literal (reshaped to this tensor's dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        lit.reshape(&dims).context("literal reshape")
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Index of the max element (argmax over flat data) — greedy sampling.
+    pub fn argmax_f32(&self) -> Result<usize> {
+        let data = self.as_f32()?;
+        if data.is_empty() {
+            bail!("argmax of empty tensor");
+        }
+        let mut best = 0;
+        for (i, &v) in data.iter().enumerate() {
+            if v > data[best] {
+                best = i;
+            }
+        }
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/len")]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let f = HostTensor::f32(vec![1], vec![1.5]);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = HostTensor::i32(vec![1], vec![7]);
+        assert!(i.as_i32().is_ok());
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn argmax() {
+        let t = HostTensor::f32(vec![4], vec![0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_f32().unwrap(), 1);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+}

@@ -1,0 +1,221 @@
+//! AllReduce cost model + the tiling-AllReduce overlap schedule (§4.2).
+//!
+//! In multi-NPU tensor-parallel inference each layer ends with an
+//! AllReduce of the (B·S, H1) activation.  The baseline serializes
+//! `attention → Linear → AllReduce`.  FastAttention fuses attention+Linear
+//! and splits the AllReduce into per-block *B-allreduce* operations that
+//! SDMA executes concurrently with the next block's compute — only the
+//! first block's communication is exposed, so the paper "assigns smaller
+//! computation tasks to the first block".
+
+/// Interconnect parameters for the n-device ring.
+#[derive(Debug, Clone, Copy)]
+pub struct RingSpec {
+    /// Per-link bandwidth, B/s (Ascend HCCS / NVLink class).
+    pub link_bw: f64,
+    /// Per-hop latency, seconds.
+    pub hop_latency_s: f64,
+    /// Number of devices in the ring.
+    pub n: u64,
+    /// Minimum message size at which the link reaches full bandwidth
+    /// (small B-allreduce chunks are latency-bound; the paper enlarges
+    /// blocks "to achieve better bandwidth utilization").
+    pub saturation_bytes: f64,
+}
+
+impl Default for RingSpec {
+    fn default() -> Self {
+        Self {
+            link_bw: 40e9, // effective HCCL ring bus bandwidth per 910B
+            hop_latency_s: 6e-6,
+            n: 8,
+            saturation_bytes: 512.0 * 1024.0, // 512 KiB half-saturation
+        }
+    }
+}
+
+impl RingSpec {
+    /// Effective bandwidth for one `bytes`-sized AllReduce message.
+    pub fn eff_bw(&self, bytes: f64) -> f64 {
+        self.link_bw * bytes / (bytes + self.saturation_bytes)
+    }
+
+    /// Ring AllReduce latency for `bytes` (reduce-scatter + all-gather).
+    pub fn allreduce(&self, bytes: u64) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (self.n - 1);
+        let chunk_traffic = 2.0 * (self.n - 1) as f64 / self.n as f64 * bytes as f64;
+        chunk_traffic / self.eff_bw(bytes as f64 / self.n as f64)
+            + steps as f64 * self.hop_latency_s
+    }
+}
+
+/// One block of the tiling-AllReduce pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct AllReduceBlock {
+    /// Fused attention+Linear compute time for this block, seconds.
+    pub compute_s: f64,
+    /// Bytes this block contributes to the AllReduce.
+    pub bytes: u64,
+}
+
+/// Result of scheduling the tiling-AllReduce pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapResult {
+    /// Total makespan, seconds.
+    pub makespan_s: f64,
+    /// Seconds of communication hidden under compute.
+    pub hidden_comm_s: f64,
+    /// Total communication seconds (as if serialized).
+    pub total_comm_s: f64,
+}
+
+/// Baseline: all compute, then one monolithic AllReduce.
+pub fn serial_schedule(ring: &RingSpec, blocks: &[AllReduceBlock]) -> f64 {
+    let compute: f64 = blocks.iter().map(|b| b.compute_s).sum();
+    let bytes: u64 = blocks.iter().map(|b| b.bytes).sum();
+    compute + ring.allreduce(bytes)
+}
+
+/// Tiling-AllReduce: per-block B-allreduce overlapped with subsequent
+/// blocks' compute via SDMA.  Compute is serial on the device; the
+/// communication channel is serial on the interconnect; comm for block i
+/// starts once block i's compute is done and the channel is free.
+pub fn overlapped_schedule(ring: &RingSpec, blocks: &[AllReduceBlock]) -> OverlapResult {
+    let mut compute_done = 0.0f64;
+    let mut comm_free = 0.0f64;
+    let mut total_comm = 0.0f64;
+    for b in blocks {
+        compute_done += b.compute_s;
+        let t = ring.allreduce(b.bytes);
+        total_comm += t;
+        comm_free = comm_free.max(compute_done) + t;
+    }
+    let makespan = comm_free.max(compute_done);
+    OverlapResult {
+        makespan_s: makespan,
+        hidden_comm_s: (compute_done + total_comm - makespan).max(0.0),
+        total_comm_s: total_comm,
+    }
+}
+
+/// Split a layer's output of `total_bytes` with compute time `compute_s`
+/// into `n_blocks` tiling-AllReduce blocks.  Per the paper, the first
+/// block gets a smaller share (`first_frac`) so its exposed communication
+/// starts early.
+pub fn make_blocks(
+    total_bytes: u64,
+    compute_s: f64,
+    n_blocks: usize,
+    first_frac: f64,
+) -> Vec<AllReduceBlock> {
+    assert!(n_blocks >= 1);
+    if n_blocks == 1 {
+        return vec![AllReduceBlock { compute_s, bytes: total_bytes }];
+    }
+    let rest = (1.0 - first_frac) / (n_blocks - 1) as f64;
+    (0..n_blocks)
+        .map(|i| {
+            let frac = if i == 0 { first_frac } else { rest };
+            AllReduceBlock {
+                compute_s: compute_s * frac,
+                bytes: (total_bytes as f64 * frac) as u64,
+            }
+        })
+        .collect()
+}
+
+/// Pick the block count that minimizes the overlapped makespan for a
+/// layer (`total_bytes`, `compute_s`) — the paper's "enlarge the block
+/// size to achieve better bandwidth utilization" trade-off.
+pub fn best_block_count(ring: &RingSpec, total_bytes: u64, compute_s: f64) -> (usize, f64) {
+    let mut best = (1usize, serial_schedule(ring, &make_blocks(total_bytes, compute_s, 1, 1.0)));
+    for n in [2usize, 4, 6, 8, 12, 16, 24, 32] {
+        let blocks = make_blocks(total_bytes, compute_s, n, 0.5 / n as f64);
+        let r = overlapped_schedule(ring, &blocks);
+        if r.makespan_s < best.1 {
+            best = (n, r.makespan_s);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> RingSpec {
+        RingSpec::default()
+    }
+
+    #[test]
+    fn allreduce_zero_on_single_device() {
+        let r = RingSpec { n: 1, ..ring() };
+        assert_eq!(r.allreduce(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn allreduce_monotone_in_bytes() {
+        let r = ring();
+        assert!(r.allreduce(1 << 20) < r.allreduce(1 << 24));
+        assert!(r.allreduce(1 << 24) < r.allreduce(1 << 28));
+    }
+
+    #[test]
+    fn small_messages_latency_bound() {
+        let r = ring();
+        let per_byte_small = r.allreduce(1 << 12) / (1 << 12) as f64;
+        let per_byte_big = r.allreduce(1 << 28) / (1 << 28) as f64;
+        assert!(per_byte_small > 10.0 * per_byte_big);
+    }
+
+    #[test]
+    fn overlap_beats_serial() {
+        // Fig 17 / Table 2: tiling-AllReduce 1.2–1.5× over serial.
+        let r = ring();
+        let total_bytes = 2u64 * 4096 * 5120; // B·S×H1 fp16, S=4K PanGu-38B
+        let compute = 1.0e-3;
+        let serial = serial_schedule(&r, &make_blocks(total_bytes, compute, 1, 1.0));
+        let (nb, best) = best_block_count(&r, total_bytes, compute);
+        let speedup = serial / best;
+        assert!(nb > 1);
+        assert!(speedup > 1.1 && speedup < 1.6, "speedup {speedup:.2} nb={nb}");
+    }
+
+    #[test]
+    fn first_block_smaller_helps() {
+        let r = ring();
+        let total_bytes = 2u64 * 8192 * 5120;
+        let compute = 2.0e-3;
+        let even = overlapped_schedule(&r, &make_blocks(total_bytes, compute, 8, 1.0 / 8.0));
+        let skewed = overlapped_schedule(&r, &make_blocks(total_bytes, compute, 8, 0.04));
+        // The small first block starts communication earlier; the larger
+        // tail blocks' messages cost slightly more, so allow a 5% band.
+        assert!(skewed.makespan_s <= even.makespan_s * 1.05);
+        // And the exposed head (before any overlap can begin) is smaller.
+        assert!(0.04 * compute < compute / 8.0);
+    }
+
+    #[test]
+    fn too_many_blocks_hurts() {
+        // Latency-bound tiny chunks: 256 blocks must not beat the best.
+        let r = ring();
+        let total_bytes = 2u64 * 2048 * 5120;
+        let compute = 0.5e-3;
+        let (_, best) = best_block_count(&r, total_bytes, compute);
+        let many = overlapped_schedule(&r, &make_blocks(total_bytes, compute, 256, 1.0 / 256.0));
+        assert!(many.makespan_s > best * 0.999);
+    }
+
+    #[test]
+    fn hidden_comm_accounting() {
+        let r = ring();
+        let blocks = make_blocks(1 << 26, 5e-3, 8, 0.05);
+        let res = overlapped_schedule(&r, &blocks);
+        assert!(res.hidden_comm_s >= 0.0);
+        assert!(res.hidden_comm_s <= res.total_comm_s + 1e-12);
+        assert!(res.makespan_s >= 5e-3);
+    }
+}

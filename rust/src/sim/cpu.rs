@@ -1,0 +1,94 @@
+//! Host-CPU attention substrate.
+//!
+//! Table 3's CPU_Calc column is the cooperative strategy's host-side
+//! decode attention.  Here we model it *and* measure it: the analytical
+//! rate lives in `VoltaSpec::decode_attention_cpu`; this module measures
+//! the real rust FlashAttention2 kernel (`attention::flash`) on this
+//! machine so the model can be cross-checked (EXPERIMENTS.md records the
+//! measured stream rate next to the calibrated one).
+
+use std::time::Instant;
+
+use crate::attention::flash::{flash_attention, FlashParams};
+
+/// A measured decode-attention sample.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuSample {
+    /// KV length.
+    pub kv: usize,
+    /// Heads × head_dim used.
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Wall-clock seconds per decode step (batch 1).
+    pub seconds: f64,
+    /// Effective KV streaming rate, bytes/s (fp32 here; fp16 on the paper
+    /// host — rates are comparable since both are memory-bound).
+    pub stream_bw: f64,
+}
+
+/// Measure real decode attention (seq_q = 1) over a KV cache of length
+/// `kv` with `heads`×`head_dim`, repeated `reps` times; returns the best
+/// sample (standard micro-bench practice: min filters scheduler noise).
+pub fn measure_decode(kv: usize, heads: usize, head_dim: usize, reps: usize) -> CpuSample {
+    let q = vec![0.01f32; heads * head_dim];
+    let k = vec![0.02f32; heads * kv * head_dim];
+    let v = vec![0.03f32; heads * kv * head_dim];
+    let mut out = vec![0.0f32; heads * head_dim];
+
+    let params = FlashParams {
+        heads,
+        seq_q: 1,
+        seq_kv: kv,
+        head_dim,
+        causal: false,
+        block_q: 1,
+        block_kv: 64,
+        scale: 1.0 / (head_dim as f32).sqrt(),
+    };
+
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        flash_attention(&q, &k, &v, &mut out, &params);
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+    }
+    let kv_bytes = (2 * heads * kv * head_dim * 4) as f64;
+    CpuSample {
+        kv,
+        heads,
+        head_dim,
+        seconds: best,
+        stream_bw: kv_bytes / best,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_is_positive_and_scales() {
+        let small = measure_decode(512, 4, 64, 3);
+        let large = measure_decode(4096, 4, 64, 3);
+        assert!(small.seconds > 0.0);
+        assert!(large.seconds > small.seconds);
+        // Roughly linear in KV (memory-bound): 8× KV within 3×..20× time.
+        let ratio = large.seconds / small.seconds;
+        assert!(ratio > 3.0 && ratio < 24.0, "ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn stream_bw_plausible() {
+        let s = measure_decode(8192, 8, 64, 3);
+        // Any real machine streams KV between 0.05 (debug build) and
+        // 400 GB/s (the release-build number is what EXPERIMENTS.md cites).
+        assert!(
+            s.stream_bw > 0.05e9 && s.stream_bw < 400e9,
+            "bw {:.2} GB/s",
+            s.stream_bw / 1e9
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Appendix C memory formulas (eq. 15–20) and the CPU–GPU split planner.
+//!
+//! All quantities are bytes, fp16 storage (2 B/element) unless noted:
+//!
+//!   M_w    = L (8 H1² + 4 H1 H2)                (eq. 17)
+//!   M_kv   = 4 B H1 (S + O) / n                 (eq. 18, per layer/GPU)
+//!   M_mid  = 6 B S H1 / n                       (eq. 19)
+//!   M_vocab= 2 V H1
+//!   L_GPU  = (M_GPU - M_w/n - M_mid - M_vocab) / M_kv   (eq. 15/20)
+//!   L_CPU  = L - L_GPU                          (eq. 16)
+//!
+//! Note: eq. 17 applied to Table 1's PanGu-38B config yields ~25 GB — far
+//! below the 76 GB a true 38 B-parameter fp16 model occupies (the paper's
+//! table appears to list a per-branch or reduced config).  The planner
+//! therefore uses the *parameter count* for the weight term
+//! (`M_w = 2·params`) and eq. 17 remains available as
+//! [`Deployment::m_w_eq17`].  The baseline (FasterTransformer-without-
+//! FastAttention) additionally holds a per-token runtime workspace during
+//! its monolithic prefill (activation/logits buffers); the calibrated
+//! default reproduces Fig 11's ~16K ceiling on 8×V100-16GB.  FastAttention
+//! avoids that term by streaming prefill KV to the host asynchronously
+//! (§4.4 step 3).
+
+use crate::models::ModelShape;
+
+/// Default V100 memory (the paper's 8×V100 node, 16 GB SXM2 variant).
+pub const V100_16GB: u64 = 16 * (1 << 30);
+/// Calibrated FT baseline workspace per token of context (activations,
+/// logits, fp32 scratch during monolithic prefill).
+pub const BASELINE_WORKSPACE_PER_TOKEN: u64 = 224 << 10;
+
+/// Inference-deployment description for the memory planner.
+#[derive(Debug, Clone, Copy)]
+pub struct Deployment {
+    pub model: ModelShape,
+    /// Number of GPUs, `n`.
+    pub n_gpus: u32,
+    /// Single-GPU memory, bytes.
+    pub gpu_mem_bytes: u64,
+    /// Batch size `B`.
+    pub batch: u64,
+    /// Input length `S`.
+    pub seq: u64,
+    /// Output length `O`.
+    pub out: u64,
+    /// Baseline per-token prefill workspace (see module docs).
+    pub workspace_per_token: u64,
+}
+
+impl Deployment {
+    /// Standard 8×V100-16GB deployment for `model`.
+    pub fn v100_node(model: ModelShape, seq: u64, out: u64) -> Self {
+        Self {
+            model,
+            n_gpus: 8,
+            gpu_mem_bytes: V100_16GB,
+            batch: 1,
+            seq,
+            out,
+            workspace_per_token: BASELINE_WORKSPACE_PER_TOKEN,
+        }
+    }
+}
+
+/// The planner's memory breakdown (bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBreakdown {
+    pub weights_total: u64,
+    pub weights_per_gpu: u64,
+    pub kv_per_layer_per_gpu: u64,
+    pub mid_per_gpu: u64,
+    pub vocab: u64,
+    /// Layers whose KV cache fits on the GPU (eq. 15), clamped to [0, L].
+    pub l_gpu: u32,
+    /// Layers whose KV cache lives on the host (eq. 16).
+    pub l_cpu: u32,
+    /// Whether decode-state KV fits entirely on-device.
+    pub fits_without_offload: bool,
+}
+
+impl Deployment {
+    /// Weight bytes: `2 · params` (true fp16 footprint).
+    pub fn m_w(&self) -> u64 {
+        2 * self.model.params
+    }
+
+    /// eq. 17 as literally written (transformer-block GEMM weights only).
+    pub fn m_w_eq17(&self) -> u64 {
+        self.model.weight_bytes_fp16()
+    }
+
+    /// eq. 18: one layer's KV cache per GPU, fp16.
+    pub fn m_kv(&self) -> u64 {
+        self.model
+            .kv_bytes_per_layer_fp16(self.batch, self.seq + self.out, self.n_gpus)
+    }
+
+    /// eq. 19: intermediate activations per GPU, fp16.
+    pub fn m_mid(&self) -> u64 {
+        6 * self.batch * self.model.hidden() * self.seq / self.n_gpus as u64
+    }
+
+    /// Vocabulary matrix, fp16 (replicated in FT).
+    pub fn m_vocab(&self) -> u64 {
+        2 * self.model.vocab as u64 * self.model.hidden()
+    }
+
+    /// eq. 15/16/20: the full breakdown + layer split (decode state — the
+    /// quantity the cooperative strategy plans against).
+    pub fn plan(&self) -> MemoryBreakdown {
+        let m_w = self.m_w();
+        let m_kv = self.m_kv();
+        let m_mid = self.m_mid();
+        let m_vocab = self.m_vocab();
+        let per_gpu_w = m_w / self.n_gpus as u64;
+
+        let free = self.gpu_mem_bytes as i128
+            - per_gpu_w as i128
+            - m_mid as i128
+            - m_vocab as i128;
+        let l = self.model.layers;
+        let l_gpu = if free <= 0 || m_kv == 0 {
+            0
+        } else {
+            ((free as u128 / m_kv as u128) as u64).min(l as u64) as u32
+        };
+        MemoryBreakdown {
+            weights_total: m_w,
+            weights_per_gpu: per_gpu_w,
+            kv_per_layer_per_gpu: m_kv,
+            mid_per_gpu: m_mid,
+            vocab: m_vocab,
+            l_gpu,
+            l_cpu: l - l_gpu,
+            fits_without_offload: l_gpu >= l,
+        }
+    }
+
+    /// Per-GPU bytes the *baseline* needs at context length `s`:
+    /// weights + vocab + full KV residency + monolithic-prefill workspace.
+    fn baseline_bytes_at(&self, s: u64) -> u128 {
+        let d = Deployment { seq: s, ..*self };
+        let plan = d.plan();
+        plan.weights_per_gpu as u128
+            + plan.vocab as u128
+            + plan.mid_per_gpu as u128
+            + plan.kv_per_layer_per_gpu as u128 * self.model.layers as u128
+            + (self.workspace_per_token * s * self.batch) as u128
+    }
+
+    /// Largest input length `S` the baseline supports (full KV on-device,
+    /// monolithic prefill) — Fig 11: FT-without-FastAttention ≈ 16K.
+    pub fn max_seq_without_offload(&self) -> u64 {
+        let mut lo = 0u64;
+        let mut hi = 1u64 << 24;
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.baseline_bytes_at(mid) <= self.gpu_mem_bytes as u128 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Largest input length with the CPU–GPU cooperative strategy: the
+    /// host absorbs pre-L_CPU layers' KV; the device keeps weights, vocab,
+    /// the L_GPU layers' KV, and only block-streamed prefill buffers
+    /// (§4.4 step 3 eliminates the monolithic workspace).
+    pub fn max_seq_with_offload(&self, host_mem_bytes: u64) -> u64 {
+        let mut lo = 0u64;
+        let mut hi = 1u64 << 24;
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            let d = Deployment { seq: mid, ..*self };
+            let plan = d.plan();
+            let host_kv = plan.kv_per_layer_per_gpu as u128
+                * plan.l_cpu as u128
+                * self.n_gpus as u128;
+            let dev = plan.weights_per_gpu as u128
+                + plan.vocab as u128
+                + plan.mid_per_gpu as u128
+                + plan.kv_per_layer_per_gpu as u128 * plan.l_gpu as u128;
+            let ok =
+                host_kv <= host_mem_bytes as u128 && dev <= self.gpu_mem_bytes as u128;
+            if ok {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::PANGU_38B;
+
+    const GB: u64 = 1 << 30;
+
+    fn pangu_deploy(seq: u64) -> Deployment {
+        Deployment::v100_node(PANGU_38B, seq, 50)
+    }
+
+    #[test]
+    fn short_seq_fits_without_offload() {
+        // Table 3: rows 1K–8K show '-' (no offload needed).
+        for s in [1024, 2048, 4096, 8192] {
+            assert!(
+                pangu_deploy(s).plan().fits_without_offload,
+                "S={s} should fit"
+            );
+        }
+    }
+
+    #[test]
+    fn long_seq_requires_offload() {
+        // Table 3: from 64K the KV split engages; at 16K the KV itself
+        // still fits but the baseline workspace doesn't (Fig 11 ceiling).
+        for s in [64 * 1024, 128 * 1024, 256 * 1024] {
+            let plan = pangu_deploy(s).plan();
+            assert!(!plan.fits_without_offload, "S={s} should need offload");
+            assert!(plan.l_cpu > 0);
+            assert_eq!(plan.l_cpu + plan.l_gpu, PANGU_38B.layers);
+        }
+    }
+
+    #[test]
+    fn baseline_max_seq_near_16k() {
+        // Fig 11: FT without FastAttention supports up to ~16K.
+        let max = pangu_deploy(0).max_seq_without_offload();
+        assert!(
+            (10 * 1024..32 * 1024).contains(&max),
+            "baseline max_seq = {max}"
+        );
+    }
+
+    #[test]
+    fn offload_reaches_256k() {
+        // Fig 11 / Table 3: 256K with the cooperative strategy
+        // (host-memory bound; a DGX-class host has ~512 GB+).
+        let max = pangu_deploy(0).max_seq_with_offload(768 * GB);
+        assert!(max >= 256 * 1024, "offload max_seq = {max}");
+    }
+
+    #[test]
+    fn l_gpu_decreases_with_seq() {
+        let a = pangu_deploy(32 * 1024).plan().l_gpu;
+        let b = pangu_deploy(96 * 1024).plan().l_gpu;
+        let c = pangu_deploy(256 * 1024).plan().l_gpu;
+        assert!(a > b && b > c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn kv_matches_eq18() {
+        let d = pangu_deploy(16 * 1024);
+        assert_eq!(d.m_kv(), 4 * 5120 * (16 * 1024 + 50) / 8);
+    }
+
+    #[test]
+    fn mid_matches_eq19() {
+        let d = pangu_deploy(4096);
+        assert_eq!(d.m_mid(), 6 * 4096 * 5120 / 8);
+    }
+
+    #[test]
+    fn eq17_lower_bound_documented() {
+        // eq. 17 on Table 1's config understates the fp16 footprint; the
+        // planner uses 2·params.  Keep both observable.
+        let d = pangu_deploy(1024);
+        assert!(d.m_w_eq17() < d.m_w());
+        assert_eq!(d.m_w(), 76 * 1_000_000_000 / 1); // 2 × 38e9
+    }
+}

@@ -1,0 +1,266 @@
+//! Tesla V100 (Volta) cost model.
+//!
+//! Covers the paper's low-resource-GPU experiments:
+//!
+//! * Fig 8 — FastAttention (redesigned m8n8k4 SRAM layout, FP16
+//!   accumulators, bank-conflict-free) vs xformers' memory-efficient /
+//!   FlashAttention kernel, as achieved TFLOPs/s across sequence lengths;
+//! * Table 3 — decode attention: GPU compute vs PCIe KV upload vs host
+//!   CPU compute (the CPU–GPU cooperative strategy's crossover);
+//! * Fig 11 / Table 5 — end-to-end FasterTransformer / DeepSpeed layers.
+//!
+//! Calibration anchors (paper Table 3, PanGu-38B on 8 V100):
+//!   GPU_Calc(1K) = 0.058 ms → fixed launch ≈ 42 µs + KV read at an
+//!   effective ~160 GB/s;  Upload(16K) = 3.58 ms → PCIe ≈ 11.7 GB/s;
+//!   CPU_Calc(16K) = 2.676 ms → host ≈ 17.5 GB/s streaming.
+
+use super::AttnWorkload;
+
+/// V100 + host parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct VoltaSpec {
+    /// Tensor-core peak, FP16 FLOP/s (V100: 112–125 TFLOPs).
+    pub tc_flops_fp16: f64,
+    /// HBM2 bandwidth, B/s.
+    pub hbm_bw: f64,
+    /// Effective HBM bandwidth for the small, latency-bound decode
+    /// attention reads (calibrated from Table 3 GPU_Calc slope).
+    pub decode_eff_bw: f64,
+    /// Fixed per-kernel launch + sync overhead, seconds (Table 3
+    /// GPU_Calc intercept).
+    pub kernel_overhead_s: f64,
+    /// Effective PCIe 3.0 ×16 bandwidth per direction, B/s (Table 3
+    /// Upload slope; theoretical 16 GB/s, real ~11.7).
+    pub pcie_bw: f64,
+    /// PCIe transfer setup latency, seconds.
+    pub pcie_latency_s: f64,
+    /// Host CPU effective streaming rate for attention over the resident
+    /// KV cache, B/s (Table 3 CPU_Calc slope).
+    pub cpu_stream_bw: f64,
+    /// Host attention fixed overhead, seconds.
+    pub cpu_overhead_s: f64,
+    /// NVLink bandwidth per GPU for the 8-GPU AllReduce, B/s.
+    pub nvlink_bw: f64,
+    /// Per-op launch overhead without CUDA graphs (Table 5's
+    /// torch-DeepSpeed penalty), seconds.
+    pub torch_op_overhead_s: f64,
+}
+
+impl Default for VoltaSpec {
+    fn default() -> Self {
+        Self {
+            tc_flops_fp16: 112e12,
+            hbm_bw: 900e9,
+            decode_eff_bw: 160e9,
+            kernel_overhead_s: 42e-6,
+            pcie_bw: 11.7e9,
+            pcie_latency_s: 22e-6,
+            cpu_stream_bw: 17.5e9,
+            cpu_overhead_s: 0.2e-3,
+            nvlink_bw: 130e9,
+            torch_op_overhead_s: 45e-6,
+        }
+    }
+}
+
+/// Which Volta attention kernel to model (Fig 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VoltaKernel {
+    /// xformers' cutlass-based FlashAttention: FP32 accumulators force an
+    /// inter-thread element exchange between the two GEMMs (Appendix B,
+    /// Fig 14) and its generic layouts leave SRAM bank conflicts.
+    Xformers,
+    /// FastAttention: m8n8k4 with FP16 accumulators — GEMM1's C feeds
+    /// GEMM2's A without exchange (Fig 15), bank-conflict-free SRAM
+    /// layout, coalesced HBM access.
+    FastAttention,
+}
+
+impl VoltaSpec {
+    /// Achieved fraction of tensor-core peak for a prefill attention
+    /// kernel.  Efficiency grows with sequence length (tile-quantization
+    /// and launch overheads amortize) and saturates at a kernel-specific
+    /// ceiling.
+    pub fn kernel_efficiency(&self, kernel: VoltaKernel, w: &AttnWorkload) -> f64 {
+        let s = w.seq_q as f64;
+        // Saturation half-point and ceiling per kernel.
+        let (ceil, half) = match kernel {
+            // xformers: layout exchange + bank conflicts cap efficiency
+            // and it saturates early (its masked-block handling also
+            // costs more, see below).
+            VoltaKernel::Xformers => (0.36, 600.0),
+            // FastAttention: FP16-accumulator path, conflict-free SRAM.
+            VoltaKernel::FastAttention => (0.42, 900.0),
+        };
+        let mut eff = ceil * s / (s + half);
+        if w.causal {
+            // Causal handling: FastAttention skips fully-masked blocks
+            // exactly (tiling classification); xformers still pays
+            // partial-block overhead that grows with S (paper: causal
+            // speedup rises to 1.43× at 16K).
+            let waste = match kernel {
+                VoltaKernel::Xformers => 0.12 + 0.05 * (s / 16384.0).min(1.0),
+                VoltaKernel::FastAttention => 0.04,
+            };
+            eff *= 1.0 - waste;
+        }
+        eff
+    }
+
+    /// Prefill kernel latency (Fig 8 workloads).
+    pub fn attention_latency(&self, kernel: VoltaKernel, w: &AttnWorkload) -> f64 {
+        // Fig 8's FLOP convention counts the full S² (no causal discount);
+        // causal kernels do less work but report against full FLOPs.
+        let useful = w.flops() * w.causal_keep_fraction(128);
+        let eff = self.kernel_efficiency(kernel, w);
+        useful / (self.tc_flops_fp16 * eff) + self.kernel_overhead_s
+    }
+
+    /// Achieved TFLOPs/s as Fig 8 reports it (full-FLOPs convention).
+    pub fn attention_tflops(&self, kernel: VoltaKernel, w: &AttnWorkload) -> f64 {
+        w.flops() / self.attention_latency(kernel, w) / 1e12
+    }
+
+    /// Decode attention on the GPU over `kv_bytes` of cache (Table 3
+    /// GPU_Calc).
+    pub fn decode_attention_gpu(&self, kv_bytes: u64) -> f64 {
+        self.kernel_overhead_s + kv_bytes as f64 / self.decode_eff_bw
+    }
+
+    /// PCIe upload of `bytes` host→device (Table 3 Upload).
+    pub fn pcie_transfer(&self, bytes: u64) -> f64 {
+        self.pcie_latency_s + bytes as f64 / self.pcie_bw
+    }
+
+    /// Decode attention on the host CPU over `kv_bytes` of resident cache
+    /// (Table 3 CPU_Calc).  The analytical twin of the real kernel in
+    /// `attention::flash` (see `sim::cpu` for the measured cross-check).
+    pub fn decode_attention_cpu(&self, kv_bytes: u64) -> f64 {
+        self.cpu_overhead_s + kv_bytes as f64 / self.cpu_stream_bw
+    }
+
+    /// The cooperative strategy's Off_Upload: ship the one-token QKV down
+    /// and the attention result back (fixed-size, Table 3's ~constant
+    /// 0.04–0.07 ms column).
+    pub fn offload_roundtrip(&self, qkv_bytes: u64, result_bytes: u64) -> f64 {
+        2.0 * self.pcie_latency_s
+            + (qkv_bytes + result_bytes) as f64 / self.pcie_bw
+    }
+
+    /// One dense GEMM of `m×k×n` on tensor cores at large-tile efficiency.
+    pub fn gemm(&self, m: u64, k: u64, n: u64) -> f64 {
+        let flops = 2.0 * (m * k * n) as f64;
+        let eff = 0.55; // large weight GEMMs on cutlass/V100
+        flops / (self.tc_flops_fp16 * eff) + self.kernel_overhead_s
+    }
+
+    /// Ring AllReduce over NVLink for `bytes` on `n` GPUs.
+    pub fn allreduce(&self, bytes: u64, n: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1) as f64 / n as f64 * bytes as f64 / self.nvlink_bw
+            + 2.0 * (n - 1) as f64 * 8e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig8_w(s: u64, causal: bool) -> AttnWorkload {
+        // Fig 8: batch 8, hidden 2048, 64 heads → D = 32.
+        AttnWorkload::prefill(8, 64, s, 32, causal)
+    }
+
+    #[test]
+    fn fastattn_beats_xformers_noncausal_paper_range() {
+        // Fig 8 w/o causal: 1.03–1.17× from 2K to 16K.
+        let spec = VoltaSpec::default();
+        let mut prev = 0.0;
+        for (s, lo, hi) in
+            [(2048u64, 1.0, 1.12), (4096, 1.02, 1.14), (8192, 1.04, 1.2), (16384, 1.06, 1.3)]
+        {
+            let w = fig8_w(s, false);
+            let x = spec.attention_latency(VoltaKernel::Xformers, &w);
+            let f = spec.attention_latency(VoltaKernel::FastAttention, &w);
+            let speedup = x / f;
+            assert!(speedup >= lo && speedup <= hi, "S={s}: {speedup:.3}");
+            assert!(speedup >= prev, "monotone in S");
+            prev = speedup;
+        }
+    }
+
+    #[test]
+    fn causal_speedup_grows_toward_1_43() {
+        let spec = VoltaSpec::default();
+        let w = fig8_w(16384, true);
+        let x = spec.attention_latency(VoltaKernel::Xformers, &w);
+        let f = spec.attention_latency(VoltaKernel::FastAttention, &w);
+        let speedup = x / f;
+        assert!(speedup > 1.25 && speedup < 1.6, "{speedup:.3}");
+    }
+
+    #[test]
+    fn tflops_increase_with_seqlen() {
+        let spec = VoltaSpec::default();
+        let a = spec.attention_tflops(VoltaKernel::FastAttention, &fig8_w(2048, false));
+        let b = spec.attention_tflops(VoltaKernel::FastAttention, &fig8_w(16384, false));
+        assert!(b > a);
+        assert!(b < 112.0); // below peak
+    }
+
+    #[test]
+    fn table3_gpu_calc_anchors() {
+        // KV bytes per GPU per layer for PanGu-38B: 4·B·H1·S / n.
+        let spec = VoltaSpec::default();
+        for (s, want_ms, tol) in [(1024u64, 0.058, 0.02), (16384, 0.312, 0.06), (262144, 4.11, 0.6)]
+        {
+            let kv = 4 * s * 5120 / 8;
+            let got = spec.decode_attention_gpu(kv) * 1e3;
+            assert!(
+                (got - want_ms).abs() < tol,
+                "S={s}: got {got:.3} ms want {want_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn table3_upload_anchor() {
+        let spec = VoltaSpec::default();
+        let kv = 4u64 * 16384 * 5120 / 8;
+        let got = spec.pcie_transfer(kv) * 1e3;
+        assert!((got - 3.58).abs() < 0.4, "got {got:.2} ms");
+    }
+
+    #[test]
+    fn table3_cpu_calc_anchor() {
+        let spec = VoltaSpec::default();
+        let kv = 4u64 * 16384 * 5120 / 8;
+        let got = spec.decode_attention_cpu(kv) * 1e3;
+        assert!((got - 2.676).abs() < 0.4, "got {got:.2} ms");
+    }
+
+    #[test]
+    fn cpu_calc_beats_classical_upload() {
+        // Table 3's headline: CPU compute < PCIe upload + GPU compute.
+        let spec = VoltaSpec::default();
+        for s in [16384u64, 65536, 262144] {
+            let kv = 4 * s * 5120 / 8;
+            let classical = spec.pcie_transfer(kv) + spec.decode_attention_gpu(kv);
+            let coop = spec.decode_attention_cpu(kv)
+                + spec.offload_roundtrip(3 * 2 * 5120 / 8, 2 * 5120 / 8);
+            let speedup = classical / coop;
+            assert!(speedup > 1.2 && speedup < 1.7, "S={s}: {speedup:.2}");
+        }
+    }
+
+    #[test]
+    fn offload_roundtrip_nearly_constant() {
+        let spec = VoltaSpec::default();
+        let a = spec.offload_roundtrip(1280, 1280);
+        let b = spec.offload_roundtrip(1280 * 4, 1280 * 4);
+        assert!((b - a).abs() / a < 0.05);
+        assert!(a * 1e3 > 0.03 && a * 1e3 < 0.08, "{} ms", a * 1e3);
+    }
+}

@@ -1,0 +1,84 @@
+//! Offload + collective integration: the §4.2/§4.4 subsystems composed.
+
+use std::time::Duration;
+
+use fastattn::coordinator::allreduce::{
+    serial_all_reduce, tiled_all_reduce, BlockCompute,
+};
+use fastattn::coordinator::offload::{plan, step_latency, LayerPlacement};
+use fastattn::models::{LLAMA2_70B, PANGU_38B, PANGU_71B};
+use fastattn::sim::memory::Deployment;
+use fastattn::sim::volta::VoltaSpec;
+
+#[test]
+fn offload_plan_consistent_across_models() {
+    for model in [PANGU_38B, LLAMA2_70B, PANGU_71B] {
+        let mut dep = Deployment::v100_node(model, 128 * 1024, 50);
+        // bigger models need the 32 GB V100 variant
+        if 2 * model.params / 8 > dep.gpu_mem_bytes {
+            dep.gpu_mem_bytes = 32 << 30;
+        }
+        let p = plan(&dep);
+        assert_eq!(p.placements.len(), model.layers as usize, "{}", model.name);
+        assert_eq!(p.l_cpu + p.l_gpu, model.layers, "{}", model.name);
+        // host layers are a strict prefix
+        let mut seen_device = false;
+        for pl in &p.placements {
+            match pl {
+                LayerPlacement::DeviceCompute => seen_device = true,
+                LayerPlacement::HostCompute => {
+                    assert!(!seen_device, "{}: non-prefix host layer", model.name)
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cooperative_never_slower_than_classical() {
+    let spec = VoltaSpec::default();
+    for s in [16u64, 32, 64, 128, 256] {
+        let dep = Deployment::v100_node(PANGU_38B, s * 1024, 50);
+        let p = plan(&dep);
+        let st = step_latency(&spec, &dep, &p);
+        assert!(
+            st.cooperative_s <= st.classical_s + 1e-9,
+            "S={s}K: coop {} > classical {}",
+            st.cooperative_s,
+            st.classical_s
+        );
+    }
+}
+
+#[test]
+fn speedup_grows_with_offloaded_fraction() {
+    let spec = VoltaSpec::default();
+    let mut last = 1.0f64;
+    for s in [32u64, 128, 256] {
+        let dep = Deployment::v100_node(PANGU_38B, s * 1024, 50);
+        let p = plan(&dep);
+        let st = step_latency(&spec, &dep, &p);
+        let sp = st.classical_s / st.cooperative_s;
+        assert!(sp >= last * 0.98, "S={s}K: {sp:.3} < {last:.3}");
+        last = sp;
+    }
+    assert!(last > 1.25, "max speedup {last:.2}");
+}
+
+#[test]
+fn real_tiled_allreduce_matches_serial_under_load() {
+    // Larger-scale numeric check of the threaded ring with compute delays.
+    let compute: Box<BlockCompute> = Box::new(|b, buf| {
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = ((b + 1) * (i % 251)) as f32 * 1e-3;
+        }
+    });
+    let serial =
+        serial_all_reduce(8, 4096, 5, &compute, Duration::from_micros(200)).unwrap();
+    let tiled =
+        tiled_all_reduce(8, 4096, 5, &compute, Duration::from_micros(200)).unwrap();
+    assert_eq!(serial.len(), tiled.len());
+    for (i, (a, b)) in serial.iter().zip(&tiled).enumerate() {
+        assert!((a - b).abs() < 1e-4, "elem {i}: {a} vs {b}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Reproduction-claims integration tests: every paper table/figure
+//! regenerates, and the headline directional claims hold in the models.
+
+use fastattn::models;
+use fastattn::reports;
+use fastattn::sim::ascend::{AscendSpec, FastAttnOptions, Tiling};
+use fastattn::sim::collective::{best_block_count, make_blocks, serial_schedule, RingSpec};
+use fastattn::sim::memory::Deployment;
+use fastattn::sim::volta::{VoltaKernel, VoltaSpec};
+use fastattn::sim::AttnWorkload;
+
+#[test]
+fn every_experiment_regenerates() {
+    for id in reports::ALL {
+        let t = reports::by_id(id).unwrap_or_else(|| panic!("missing {id}"));
+        t.print();
+    }
+}
+
+#[test]
+fn headline_fig7_band() {
+    // "FastAttention is 4.85–10.7× faster than standard attention on an
+    // Ascend NPU" — allow a ±35% calibration margin on each end.
+    let spec = AscendSpec::default();
+    let opts = FastAttnOptions::default();
+    let mut speedups = Vec::new();
+    for s in [1024u64, 2048, 4096, 8192, 16384] {
+        let w = AttnWorkload::prefill(1, 5, s, 128, true);
+        let sp = spec.standard_attention_latency(&w)
+            / spec.fastattn_latency(&w, &opts).latency_s;
+        speedups.push(sp);
+    }
+    let lo = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = speedups.iter().cloned().fold(0.0, f64::max);
+    assert!(lo > 3.2 && lo < 7.0, "low end {lo:.2} (paper 4.85)");
+    assert!(hi > 7.0 && hi < 14.0, "high end {hi:.2} (paper 10.7)");
+    // monotone in S (the paper's curves grow with sequence length)
+    for w in speedups.windows(2) {
+        assert!(w[1] >= w[0] * 0.95, "speedup collapsed: {speedups:?}");
+    }
+}
+
+#[test]
+fn headline_fig8_band() {
+    // "1.43× speedup compared to its equivalents in xformers" (causal,
+    // 16K); non-causal 1.03–1.17 monotone.
+    let spec = VoltaSpec::default();
+    let mut prev = 0.0;
+    for s in [2048u64, 4096, 8192, 16384] {
+        let w = AttnWorkload::prefill(8, 64, s, 32, false);
+        let sp = spec.attention_latency(VoltaKernel::Xformers, &w)
+            / spec.attention_latency(VoltaKernel::FastAttention, &w);
+        assert!(sp >= prev && sp < 1.35, "S={s}: {sp:.2}");
+        prev = sp;
+    }
+    let w = AttnWorkload::prefill(8, 64, 16384, 32, true);
+    let sp = spec.attention_latency(VoltaKernel::Xformers, &w)
+        / spec.attention_latency(VoltaKernel::FastAttention, &w);
+    assert!(sp > 1.28 && sp < 1.6, "causal 16K: {sp:.2} (paper 1.43)");
+}
+
+#[test]
+fn headline_context_extension() {
+    // "supports a maximal input length of 256K on 8 V100 GPUs" vs 16K.
+    let dep = Deployment::v100_node(models::PANGU_38B, 0, 50);
+    let base = dep.max_seq_without_offload();
+    let coop = dep.max_seq_with_offload(768 << 30);
+    assert!(base < 32 * 1024, "baseline {base}");
+    assert!(coop >= 256 * 1024, "coop {coop}");
+    assert!(coop / base.max(1) >= 8, "extension factor");
+}
+
+#[test]
+fn headline_two_level_vs_unified() {
+    // Table 2 ordering: two-level strictly dominates unified at every S.
+    let spec = AscendSpec::default();
+    for s in [1024u64, 4096, 16384] {
+        let w = AttnWorkload::prefill(1, 5, s, 128, true);
+        let uni = spec
+            .fastattn_latency(
+                &w,
+                &FastAttnOptions { tiling: Tiling::Unified { block: 128 }, ..Default::default() },
+            )
+            .latency_s;
+        let two = spec.fastattn_latency(&w, &FastAttnOptions::default()).latency_s;
+        assert!(two < uni, "S={s}");
+    }
+}
+
+#[test]
+fn headline_allreduce_overlap_band() {
+    // Fig 16/17: tiling-AllReduce gains 1.2–1.7× on the layer total.
+    let ring = RingSpec::default();
+    let spec = AscendSpec::default();
+    for s in [8192u64, 32768] {
+        let w = AttnWorkload::prefill(1, 5, s, 128, true);
+        let compute = spec.fastattn_latency(&w, &FastAttnOptions::default()).latency_s
+            + spec.linear_latency(s, 5120, 20480, 8, 2, true);
+        let bytes = 2 * s * 5120;
+        let serial = serial_schedule(&ring, &make_blocks(bytes, compute, 1, 1.0));
+        let (nb, over) = best_block_count(&ring, bytes, compute);
+        let sp = serial / over;
+        assert!(nb >= 2, "S={s}: no tiling chosen");
+        assert!(sp > 1.1 && sp < 1.9, "S={s}: {sp:.2}");
+    }
+}
+
+#[test]
+fn tiling_mask_memory_claim() {
+    // 8 GB full mask at 64K vs sub-MB M-mask (paper §4.1).
+    use fastattn::attention::mask::MMask;
+    let mm = MMask::new(512);
+    let full = 64u64 * 1024 * 64 * 1024 * 2;
+    assert_eq!(full, 8 << 30);
+    assert!(mm.bytes() < (4 << 20));
+}

@@ -1,0 +1,105 @@
+//! Full-stack integration: artifacts → runtime → engine → server.
+//!
+//! One `Runtime` load per test binary (PJRT compilation is the expensive
+//! part); every scenario drives the real three-layer stack.
+
+use fastattn::coordinator::{Engine, EngineConfig, GenParams};
+use fastattn::runtime::Runtime;
+
+fn artifact_dir() -> Option<&'static str> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(dir)
+        .join("manifest.json")
+        .exists()
+        .then_some(dir)
+}
+
+#[test]
+fn full_stack_serving_scenarios() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::load(dir).expect("runtime loads");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let mut engine = Engine::new(rt, EngineConfig::default());
+
+    // --- scenario 1: mixed-length burst, all complete -----------------
+    let p3 = GenParams { max_new_tokens: 3, eos_token: None };
+    let mut ids = Vec::new();
+    for i in 0..12usize {
+        let len = 1 + (i * 11) % 120;
+        let prompt: Vec<i32> = (0..len).map(|j| ((i * 37 + j) % 500 + 1) as i32).collect();
+        ids.push(engine.submit(prompt, p3).unwrap());
+    }
+    let out = engine.run_until_idle().unwrap();
+    assert_eq!(out.len(), 12);
+    let mut got: Vec<_> = out.iter().map(|r| r.id).collect();
+    got.sort();
+    assert_eq!(got, ids);
+    assert!(out.iter().all(|r| r.tokens.len() == 3));
+    assert!(out.iter().all(|r| r.tokens.iter().all(|&t| t >= 0 && t < 512)));
+
+    // --- scenario 2: determinism across a second engine pass ----------
+    let a = engine.submit(vec![9, 8, 7, 6], GenParams { max_new_tokens: 6, eos_token: None });
+    let out_a = engine.run_until_idle().unwrap();
+    let b = engine.submit(vec![9, 8, 7, 6], GenParams { max_new_tokens: 6, eos_token: None });
+    let out_b = engine.run_until_idle().unwrap();
+    assert!(a.is_ok() && b.is_ok());
+    assert_eq!(out_a[0].tokens, out_b[0].tokens, "same prompt, same greedy tokens");
+
+    // --- scenario 3: interleaved submissions while decoding -----------
+    let long = engine
+        .submit(vec![5; 100], GenParams { max_new_tokens: 10, eos_token: None })
+        .unwrap();
+    // step a few times, then inject more work mid-flight
+    for _ in 0..3 {
+        engine.step().unwrap();
+    }
+    let late = engine
+        .submit(vec![7; 4], GenParams { max_new_tokens: 2, eos_token: None })
+        .unwrap();
+    let out = engine.run_until_idle().unwrap();
+    assert_eq!(out.len(), 2);
+    assert!(out.iter().any(|r| r.id == long && r.tokens.len() == 10));
+    assert!(out.iter().any(|r| r.id == late && r.tokens.len() == 2));
+
+    // --- scenario 4: failure injection — invalid prompts rejected,
+    // engine stays healthy
+    assert!(engine.submit(vec![], p3).is_err());
+    assert!(engine.submit(vec![1; 1000], p3).is_err());
+    assert!(engine
+        .submit(vec![1; 100], GenParams { max_new_tokens: 100, eos_token: None })
+        .is_err());
+    let ok = engine.submit(vec![1, 2], p3).unwrap();
+    let out = engine.run_until_idle().unwrap();
+    assert_eq!(out[0].id, ok);
+
+    // --- metrics sanity -------------------------------------------------
+    let m = engine.metrics.clone();
+    assert!(m.completed >= 16);
+    assert!(m.decode_steps > 0 && m.prefill_steps > 0);
+    assert!(m.decode_tps() > 0.0);
+    assert!(m.mean_decode_batch() >= 1.0);
+}
+
+#[test]
+fn cache_isolation_across_batch_slots() {
+    // Two sequences with identical prompts must generate identical tokens
+    // whether batched together with others or not — KV slots don't leak.
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(dir).expect("runtime loads");
+    let mut engine = Engine::new(rt, EngineConfig::default());
+    let p = GenParams { max_new_tokens: 5, eos_token: None };
+
+    // twin prompts surrounded by noise
+    let twin: Vec<i32> = vec![42, 7, 99, 3];
+    let id1 = engine.submit(twin.clone(), p).unwrap();
+    engine.submit(vec![13; 50], p).unwrap();
+    let id2 = engine.submit(twin.clone(), p).unwrap();
+    engine.submit(vec![77; 31], p).unwrap();
+    let out = engine.run_until_idle().unwrap();
+    let t1 = &out.iter().find(|r| r.id == id1).unwrap().tokens;
+    let t2 = &out.iter().find(|r| r.id == id2).unwrap().tokens;
+    assert_eq!(t1, t2, "identical prompts diverged across batch slots");
+}
