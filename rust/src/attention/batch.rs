@@ -1,0 +1,462 @@
+//! Batched parallel decode attention — the serving hot path fused across
+//! an entire decode batch.
+//!
+//! The seed kernel ([`flash`](super::flash)) runs one sequence, one head
+//! at a time on a single thread, and the engine used to call it
+//! per-sequence in a loop.  FlashAttention-2 gets its wins from better
+//! work partitioning across heads and sequences (Dao, 2023); serving
+//! engines like FlashInfer extend that to whole batches with
+//! head-group-aware scheduling.  This module does the same for the host
+//! decode path:
+//!
+//! * every `(sequence, query-head)` pair of a decode batch becomes one
+//!   item of a flat work queue;
+//! * a [`WorkPool`] splits the queue into per-worker ranges, weighted by
+//!   each item's KV length, and runs them on scoped threads
+//!   (`std::thread::scope` — workers borrow the batch in place, no
+//!   copies, and are joined before the call returns, so the engine API
+//!   stays synchronous and deterministic);
+//! * grouped-query attention (GQA) is native: `kv_heads ≤ heads`, query
+//!   head `h` reads KV head `h / (heads / kv_heads)` directly from the
+//!   cache layout — KV is never materialized per query head.
+//!
+//! Every item is computed by the same single-head FlashAttention2 kernel
+//! regardless of the thread count, so results are **bit-identical**
+//! between `threads = 1` (the sequential fallback, equivalent to the
+//! seed's per-sequence loop) and any `threads = N`.
+
+use super::flash::{flash_attention, FlashParams};
+
+/// Parallelism knobs for the batched attention path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads; `1` selects the sequential in-place path (no
+    /// spawns), which is bit-identical to the parallel one.
+    pub threads: usize,
+    /// Minimum work (KV rows) per worker: batches with less total work
+    /// than `threads * min_work_per_thread` use fewer workers, so tiny
+    /// batches never pay spawn overhead.  `0` disables the floor.
+    pub min_work_per_thread: usize,
+}
+
+impl ParallelConfig {
+    /// The sequential fallback (`threads = 1`).
+    pub fn sequential() -> Self {
+        Self { threads: 1, min_work_per_thread: 0 }
+    }
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        // ~4K KV rows ≈ a few hundred µs of streaming per worker — well
+        // above scoped-spawn cost (~tens of µs).
+        Self { threads, min_work_per_thread: 4096 }
+    }
+}
+
+/// A reusable pool policy executing cost-weighted item ranges on scoped
+/// threads.  The pool object carries the sizing policy across calls;
+/// workers are scoped to each dispatch so they can borrow the batch
+/// in place and the caller never observes a thread.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkPool {
+    cfg: ParallelConfig,
+}
+
+impl WorkPool {
+    pub fn new(cfg: ParallelConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> ParallelConfig {
+        self.cfg
+    }
+
+    /// Workers to use for `items` items totalling `total_cost` work.
+    fn effective_workers(&self, total_cost: usize, items: usize) -> usize {
+        let t = self.cfg.threads.max(1);
+        if t == 1 || items <= 1 {
+            return 1;
+        }
+        let by_work = if self.cfg.min_work_per_thread == 0 {
+            t
+        } else {
+            (total_cost / self.cfg.min_work_per_thread).max(1)
+        };
+        t.min(by_work).min(items)
+    }
+
+    /// Run `f(item_index, item_output)` for every item, in parallel over
+    /// cost-balanced contiguous ranges.  `out` is `items × item_elems`
+    /// flat; each item owns its disjoint `item_elems` output chunk.
+    /// Results are identical for any worker count (items are
+    /// independent), and `threads = 1` runs inline with zero spawns.
+    pub fn run_items<F>(&self, costs: &[usize], out: &mut [f32], item_elems: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let n = costs.len();
+        assert!(item_elems > 0, "item_elems must be positive");
+        assert_eq!(out.len(), n * item_elems, "out shape");
+        if n == 0 {
+            return;
+        }
+        let total: usize = costs.iter().sum();
+        let workers = self.effective_workers(total, n);
+        if workers <= 1 {
+            for (i, chunk) in out.chunks_mut(item_elems).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+
+        let ranges = partition_by_cost(costs, workers);
+        let fref = &f;
+        std::thread::scope(|scope| {
+            let mut rest = out;
+            for &(lo, hi) in &ranges {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((hi - lo) * item_elems);
+                rest = tail;
+                scope.spawn(move || {
+                    for (j, item_out) in chunk.chunks_mut(item_elems).enumerate() {
+                        fref(lo + j, item_out);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Split items into ≤ `parts` contiguous ranges of near-equal total cost
+/// (each range non-empty; assumes every cost ≥ 1).
+///
+/// A boundary closes *before* the item whose inclusion would overshoot
+/// the proportional target by more than stopping short undershoots it —
+/// so a dominant-cost item at the tail ends up alone in its range
+/// instead of swallowing every cheaper item queued ahead of it.
+fn partition_by_cost(costs: &[usize], parts: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let total: usize = costs.iter().sum();
+    if parts == 1 || total == 0 {
+        return vec![(0, n)];
+    }
+    let mut ranges = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize; // cost of the open range
+    let mut done = 0usize; // cost of the closed ranges
+    for (i, &c) in costs.iter().enumerate() {
+        let k = ranges.len() + 1; // index of the boundary being sought
+        if k < parts && i > start {
+            // ideal cumulative cost after k ranges, rounded
+            let target = (total * k + parts / 2) / parts;
+            let without = done + acc;
+            let with = without + c;
+            if with > target && with - target >= target.saturating_sub(without) {
+                ranges.push((start, i));
+                done += acc;
+                acc = 0;
+                start = i;
+            }
+        }
+        acc += c;
+    }
+    ranges.push((start, n));
+    ranges
+}
+
+/// Shape of one batched decode-attention call (shared by all sequences).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchShape {
+    pub heads: usize,
+    /// KV heads (GQA): must divide `heads`.
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Allocated KV rows per head in the cache layout (`max_seq`); each
+    /// sequence's valid prefix is its own `kv_len`.
+    pub kv_stride: usize,
+    /// KV rows per tile of the inner flash kernel.
+    pub block_kv: usize,
+    pub scale: f32,
+}
+
+impl BatchShape {
+    pub fn new(heads: usize, kv_heads: usize, head_dim: usize, kv_stride: usize) -> Self {
+        Self {
+            heads,
+            kv_heads,
+            head_dim,
+            kv_stride,
+            block_kv: 128,
+            scale: 1.0 / (head_dim as f32).sqrt(),
+        }
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        self.heads / self.kv_heads
+    }
+}
+
+/// One sequence's slice of a decode batch.
+///
+/// `q` is `[heads, head_dim]` (the one new token's query rows); `k`/`v`
+/// are the sequence's cache planes `[kv_heads, kv_stride, head_dim]` of
+/// which the first `kv_len` rows per head are valid.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqAttn<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub kv_len: usize,
+}
+
+/// Fused decode attention over a whole batch: all sequences × all query
+/// heads as one flat work queue, executed on `pool`.
+///
+/// `out` is `[seqs, heads, head_dim]` flat.  Bit-identical for any
+/// `ParallelConfig` (see module docs).
+pub fn batch_decode_attention(
+    shape: &BatchShape,
+    seqs: &[SeqAttn<'_>],
+    out: &mut [f32],
+    pool: &WorkPool,
+) {
+    let (h, kvh, d) = (shape.heads, shape.kv_heads, shape.head_dim);
+    assert!(kvh >= 1 && h % kvh == 0, "kv_heads {kvh} must divide heads {h}");
+    assert_eq!(out.len(), seqs.len() * h * d, "out shape");
+    let group = shape.group_size();
+    let plane = shape.kv_stride * d;
+    for (i, s) in seqs.iter().enumerate() {
+        assert_eq!(s.q.len(), h * d, "seq {i} q shape");
+        assert_eq!(s.k.len(), kvh * plane, "seq {i} k shape");
+        assert_eq!(s.v.len(), kvh * plane, "seq {i} v shape");
+        assert!(s.kv_len <= shape.kv_stride, "seq {i} kv_len > kv_stride");
+    }
+
+    // cost model: one item streams kv_len KV rows (+1 keeps zero-length
+    // sequences schedulable).
+    let costs: Vec<usize> = seqs
+        .iter()
+        .flat_map(|s| std::iter::repeat(s.kv_len + 1).take(h))
+        .collect();
+
+    pool.run_items(&costs, out, d, |item, item_out| {
+        let (si, head) = (item / h, item % h);
+        let s = &seqs[si];
+        let g = head / group;
+        let kv = s.kv_len;
+        let p = FlashParams {
+            heads: 1,
+            kv_heads: 1,
+            seq_q: 1,
+            seq_kv: kv,
+            head_dim: d,
+            causal: false,
+            block_q: 1,
+            block_kv: shape.block_kv,
+            scale: shape.scale,
+        };
+        let qh = &s.q[head * d..][..d];
+        let kh = &s.k[g * plane..][..kv * d];
+        let vh = &s.v[g * plane..][..kv * d];
+        flash_attention(qh, kh, vh, item_out, &p);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Rng;
+
+    /// Reference: per-sequence GQA flash over the valid prefix.
+    fn reference(shape: &BatchShape, seqs: &[SeqAttn<'_>]) -> Vec<f32> {
+        let (h, kvh, d) = (shape.heads, shape.kv_heads, shape.head_dim);
+        let mut out = vec![0.0f32; seqs.len() * h * d];
+        for (i, s) in seqs.iter().enumerate() {
+            // compact the valid prefix of each KV head into [kvh, kv, d]
+            let kv = s.kv_len;
+            let mut k = Vec::with_capacity(kvh * kv * d);
+            let mut v = Vec::with_capacity(kvh * kv * d);
+            for g in 0..kvh {
+                k.extend_from_slice(&s.k[g * shape.kv_stride * d..][..kv * d]);
+                v.extend_from_slice(&s.v[g * shape.kv_stride * d..][..kv * d]);
+            }
+            let p = FlashParams {
+                heads: h,
+                kv_heads: kvh,
+                seq_q: 1,
+                seq_kv: kv,
+                head_dim: d,
+                causal: false,
+                block_q: 1,
+                block_kv: shape.block_kv,
+                scale: shape.scale,
+            };
+            flash_attention(s.q, &k, &v, &mut out[i * h * d..][..h * d], &p);
+        }
+        out
+    }
+
+    struct Batch {
+        shape: BatchShape,
+        q: Vec<Vec<f32>>,
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        lens: Vec<usize>,
+    }
+
+    impl Batch {
+        fn random(rng: &mut Rng, nseq: usize, h: usize, kvh: usize, d: usize, stride: usize) -> Self {
+            let shape = BatchShape::new(h, kvh, d, stride);
+            let mut q = Vec::new();
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            let mut lens = Vec::new();
+            for _ in 0..nseq {
+                q.push(rng.f32_vec(h * d));
+                k.push(rng.f32_vec(kvh * stride * d));
+                v.push(rng.f32_vec(kvh * stride * d));
+                lens.push(rng.range(0, stride + 1));
+            }
+            Self { shape, q, k, v, lens }
+        }
+
+        fn seqs(&self) -> Vec<SeqAttn<'_>> {
+            (0..self.q.len())
+                .map(|i| SeqAttn {
+                    q: &self.q[i],
+                    k: &self.k[i],
+                    v: &self.v[i],
+                    kv_len: self.lens[i],
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn matches_per_sequence_flash_mha() {
+        let mut rng = Rng::new(11);
+        let b = Batch::random(&mut rng, 5, 4, 4, 8, 24);
+        let seqs = b.seqs();
+        let mut out = vec![0.0; seqs.len() * 4 * 8];
+        let pool = WorkPool::new(ParallelConfig { threads: 4, min_work_per_thread: 0 });
+        batch_decode_attention(&b.shape, &seqs, &mut out, &pool);
+        assert_eq!(out, reference(&b.shape, &seqs));
+    }
+
+    #[test]
+    fn matches_per_sequence_flash_gqa() {
+        let mut rng = Rng::new(12);
+        let b = Batch::random(&mut rng, 6, 8, 2, 16, 33);
+        let seqs = b.seqs();
+        let mut out = vec![0.0; seqs.len() * 8 * 16];
+        let pool = WorkPool::new(ParallelConfig { threads: 3, min_work_per_thread: 0 });
+        batch_decode_attention(&b.shape, &seqs, &mut out, &pool);
+        assert_eq!(out, reference(&b.shape, &seqs));
+    }
+
+    #[test]
+    fn threads_do_not_change_bits() {
+        let mut rng = Rng::new(13);
+        let b = Batch::random(&mut rng, 9, 6, 3, 8, 40);
+        let seqs = b.seqs();
+        let n = seqs.len() * 6 * 8;
+        let mut seq_out = vec![0.0; n];
+        batch_decode_attention(
+            &b.shape,
+            &seqs,
+            &mut seq_out,
+            &WorkPool::new(ParallelConfig::sequential()),
+        );
+        for threads in [2, 4, 7] {
+            let mut par_out = vec![0.0; n];
+            let pool =
+                WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+            batch_decode_attention(&b.shape, &seqs, &mut par_out, &pool);
+            assert_eq!(seq_out, par_out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_kv_are_safe() {
+        let shape = BatchShape::new(2, 2, 4, 8);
+        let pool = WorkPool::new(ParallelConfig::default());
+        let mut out: Vec<f32> = Vec::new();
+        batch_decode_attention(&shape, &[], &mut out, &pool);
+
+        // kv_len = 0 → zero output rows
+        let q = vec![1.0f32; 2 * 4];
+        let k = vec![1.0f32; 2 * 8 * 4];
+        let v = vec![1.0f32; 2 * 8 * 4];
+        let seqs = [SeqAttn { q: &q, k: &k, v: &v, kv_len: 0 }];
+        let mut out = vec![9.0f32; 2 * 4];
+        batch_decode_attention(&shape, &seqs, &mut out, &pool);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn min_work_floor_collapses_to_sequential() {
+        // total work far below the floor → one worker regardless of
+        // `threads`; output must still be complete.
+        let mut rng = Rng::new(14);
+        let b = Batch::random(&mut rng, 2, 2, 1, 4, 6);
+        let seqs = b.seqs();
+        let pool =
+            WorkPool::new(ParallelConfig { threads: 8, min_work_per_thread: 1 << 20 });
+        assert_eq!(pool.effective_workers(10, 4), 1);
+        let mut out = vec![0.0; seqs.len() * 2 * 4];
+        batch_decode_attention(&b.shape, &seqs, &mut out, &pool);
+        assert_eq!(out, reference(&b.shape, &seqs));
+    }
+
+    #[test]
+    fn partition_covers_all_items_in_order() {
+        for (costs, parts) in [
+            (vec![1usize; 10], 3usize),
+            (vec![100, 1, 1, 1], 4),
+            (vec![1, 1, 1, 100], 4),
+            (vec![5], 4),
+            (vec![3, 3, 3, 3, 3, 3, 3, 3], 8),
+        ] {
+            let ranges = partition_by_cost(&costs, parts);
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= parts.min(costs.len()));
+            let mut next = 0;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, next, "gap before {lo}");
+                assert!(hi > lo, "empty range at {lo}");
+                next = hi;
+            }
+            assert_eq!(next, costs.len(), "items uncovered");
+        }
+        assert!(partition_by_cost(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn run_items_visits_every_item_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = WorkPool::new(ParallelConfig { threads: 4, min_work_per_thread: 0 });
+        let costs = vec![1usize; 37];
+        let mut out = vec![0.0f32; 37 * 2];
+        let calls = AtomicUsize::new(0);
+        pool.run_items(&costs, &mut out, 2, |i, chunk| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            chunk[0] = i as f32;
+            chunk[1] = 2.0 * i as f32;
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 37);
+        for i in 0..37 {
+            assert_eq!(out[i * 2], i as f32);
+            assert_eq!(out[i * 2 + 1], 2.0 * i as f32);
+        }
+    }
+}

@@ -8,12 +8,17 @@
 //! instead of uploading tens of MB of KV over PCIe.
 //!
 //! Layout matches [`standard`](super::standard): flat
-//! `[heads][seq][head_dim]` row-major f32.
+//! `[heads][seq][head_dim]` row-major f32 for Q and the output.  K/V are
+//! `[kv_heads][seq][head_dim]` — grouped-query attention (GQA) shares one
+//! KV head across `heads / kv_heads` query heads; `kv_heads == heads`
+//! recovers classic multi-head attention.
 
 /// Tiling + shape parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct FlashParams {
     pub heads: usize,
+    /// KV heads (GQA): must divide `heads`; `== heads` is plain MHA.
+    pub kv_heads: usize,
     pub seq_q: usize,
     pub seq_kv: usize,
     pub head_dim: usize,
@@ -26,10 +31,17 @@ pub struct FlashParams {
 }
 
 impl FlashParams {
-    /// Decode-step shape: one query row over `kv` cached tokens.
+    /// Decode-step shape: one query row over `kv` cached tokens (MHA).
     pub fn decode(heads: usize, kv: usize, head_dim: usize) -> Self {
+        Self::decode_gqa(heads, heads, kv, head_dim)
+    }
+
+    /// Decode-step shape with grouped-query attention: `kv_heads` KV
+    /// heads shared across `heads` query heads.
+    pub fn decode_gqa(heads: usize, kv_heads: usize, kv: usize, head_dim: usize) -> Self {
         Self {
             heads,
+            kv_heads,
             seq_q: 1,
             seq_kv: kv,
             head_dim,
@@ -38,6 +50,11 @@ impl FlashParams {
             block_kv: 128,
             scale: 1.0 / (head_dim as f32).sqrt(),
         }
+    }
+
+    /// Query heads sharing each KV head.
+    pub fn group_size(&self) -> usize {
+        self.heads / self.kv_heads
     }
 }
 
@@ -63,12 +80,18 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// FlashAttention2 forward: `out = softmax(q kᵀ·scale [+causal]) v`.
+///
+/// With `kv_heads < heads` (GQA), query head `h` reads KV head
+/// `h / (heads / kv_heads)`.
 pub fn flash_attention(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], p: &FlashParams) {
     let (h, sq, skv, d) = (p.heads, p.seq_q, p.seq_kv, p.head_dim);
+    let kvh = p.kv_heads;
+    assert!(kvh >= 1 && h % kvh == 0, "kv_heads {kvh} must divide heads {h}");
     assert_eq!(q.len(), h * sq * d, "q shape");
-    assert_eq!(k.len(), h * skv * d, "k shape");
-    assert_eq!(v.len(), h * skv * d, "v shape");
+    assert_eq!(k.len(), kvh * skv * d, "k shape");
+    assert_eq!(v.len(), kvh * skv * d, "v shape");
     assert_eq!(out.len(), h * sq * d, "out shape");
+    let group = p.group_size();
     let bq = p.block_q.max(1).min(sq.max(1));
     let bkv = p.block_kv.max(1).min(skv.max(1));
 
@@ -79,9 +102,10 @@ pub fn flash_attention(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], p: &Fla
     let mut acc = vec![0.0f32; bq * d];
 
     for head in 0..h {
+        let kv_head = head / group;
         let qh = &q[head * sq * d..][..sq * d];
-        let kh = &k[head * skv * d..][..skv * d];
-        let vh = &v[head * skv * d..][..skv * d];
+        let kh = &k[kv_head * skv * d..][..skv * d];
+        let vh = &v[kv_head * skv * d..][..skv * d];
         let oh = &mut out[head * sq * d..][..sq * d];
 
         let mut q0 = 0;
@@ -201,6 +225,7 @@ mod tests {
             &mut flash,
             &FlashParams {
                 heads: h,
+                kv_heads: h,
                 seq_q: sq,
                 seq_kv: skv,
                 head_dim: d,
@@ -278,6 +303,59 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// GQA must equal MHA with each KV head repeated `group` times.
+    #[test]
+    fn gqa_equals_expanded_mha() {
+        let (h, kvh, sq, skv, d) = (6usize, 2usize, 5usize, 19usize, 8usize);
+        let mut rng = crate::proptest::Rng::new(77);
+        let q = rng.f32_vec(h * sq * d);
+        let k = rng.f32_vec(kvh * skv * d);
+        let v = rng.f32_vec(kvh * skv * d);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let mut gqa = vec![0.0; h * sq * d];
+        flash_attention(
+            &q,
+            &k,
+            &v,
+            &mut gqa,
+            &FlashParams {
+                heads: h,
+                kv_heads: kvh,
+                seq_q: sq,
+                seq_kv: skv,
+                head_dim: d,
+                causal: true,
+                block_q: 2,
+                block_kv: 7,
+                scale,
+            },
+        );
+
+        // expand KV per query head, run as MHA
+        let ke = crate::proptest::expand_kv(&k, h, kvh, skv, d);
+        let ve = crate::proptest::expand_kv(&v, h, kvh, skv, d);
+        let mut mha = vec![0.0; h * sq * d];
+        flash_attention(
+            &q,
+            &ke,
+            &ve,
+            &mut mha,
+            &FlashParams {
+                heads: h,
+                kv_heads: h,
+                seq_q: sq,
+                seq_kv: skv,
+                head_dim: d,
+                causal: true,
+                block_q: 2,
+                block_kv: 7,
+                scale,
+            },
+        );
+        assert_eq!(gqa, mha, "GQA must be bit-identical to expanded MHA");
     }
 
     /// Property: output rows are convex combinations of V rows — within

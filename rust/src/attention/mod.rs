@@ -3,8 +3,14 @@
 //! * [`standard`] — naive `softmax(QKᵀ/√d)V`, the numeric oracle for
 //!   property tests and the paper's baseline definition (§5.1);
 //! * [`flash`]    — a real FlashAttention2 (online-softmax, tiled) CPU
-//!   kernel in rust; it executes the cooperative strategy's host-side
-//!   decode attention (§4.4) and is what `sim::cpu` measures;
+//!   kernel in rust with native grouped-query attention
+//!   (`kv_heads ≤ heads`); it executes the cooperative strategy's
+//!   host-side decode attention (§4.4) and is what `sim::cpu` measures;
+//! * [`batch`]    — the serving hot path: decode attention fused across a
+//!   whole batch (all sequences × all query heads as one flat,
+//!   cost-weighted work queue) on a scoped thread pool.  `threads = 1` is
+//!   bit-identical to the per-sequence loop; the engine selects
+//!   parallelism via `ParallelConfig` on its config (see `DESIGN.md`);
 //! * [`tiling`]   — the two-level tile-size planner under L0/L1 capacity
 //!   constraints (§4.1);
 //! * [`mask`]     — the tiling-mask generator: M-mask, B-mask extraction
@@ -12,9 +18,16 @@
 //! * [`volta_layout`] — the Appendix B m8n8k4 thread-layout model: why
 //!   FP16 accumulators feed back-to-back GEMMs without a register
 //!   exchange while FP32 cannot.
+//!
+//! Numeric contract: `standard` is the oracle; `flash` matches it within
+//! FP tolerance for every shape/tiling; `batch` matches `flash` exactly
+//! (same inner kernel) and is invariant to thread count.
 
+pub mod batch;
 pub mod flash;
 pub mod mask;
 pub mod standard;
 pub mod tiling;
 pub mod volta_layout;
+
+pub use batch::{batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool};

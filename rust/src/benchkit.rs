@@ -107,6 +107,25 @@ pub fn ms(v_s: f64) -> String {
     format!("{:.3}", v_s * 1e3)
 }
 
+/// Format an event rate (`events` per `seconds`) with an adaptive unit,
+/// e.g. `"12.3 ktok/s"` — the decode-throughput column of the parallel
+/// attention benches.
+pub fn rate(events: f64, seconds: f64, unit: &str) -> String {
+    if seconds <= 0.0 {
+        return format!("∞ {unit}/s");
+    }
+    let r = events / seconds;
+    if r >= 1e9 {
+        format!("{:.2} G{unit}/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M{unit}/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k{unit}/s", r / 1e3)
+    } else {
+        format!("{r:.1} {unit}/s")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +137,15 @@ mod tests {
         assert_eq!(s.iters, 10);
         assert_eq!(n, 12);
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.p99_s);
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(rate(500.0, 1.0, "tok"), "500.0 tok/s");
+        assert_eq!(rate(12_300.0, 1.0, "tok"), "12.30 ktok/s");
+        assert_eq!(rate(2.5e6, 1.0, "B"), "2.50 MB/s");
+        assert_eq!(rate(3.0e9, 1.0, "flop"), "3.00 Gflop/s");
+        assert!(rate(1.0, 0.0, "tok").contains('∞'));
     }
 
     #[test]

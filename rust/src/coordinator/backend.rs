@@ -1,0 +1,643 @@
+//! Execution backends for the serving engine.
+//!
+//! The engine owns scheduling, batching and KV-cache bookkeeping; a
+//! [`Backend`] owns the actual model math of one prefill or decode step.
+//! Two implementations:
+//!
+//! * [`ArtifactBackend`] — the AOT path: executes the lowered
+//!   `prefill_b*_s*` / `decode_b*` artifacts on the PJRT runtime
+//!   (attention happens inside the compiled HLO);
+//! * [`HostModelBackend`] — a pure-rust tiny transformer whose decode
+//!   attention runs through [`batch_decode_attention`]: all sequences ×
+//!   all query heads of the step fused into one flat work queue on the
+//!   engine's [`WorkPool`].  Weights are deterministic functions of a
+//!   seed, so two backends with the same seed generate token-for-token
+//!   identical outputs — which is what lets the integration tests assert
+//!   sequential-vs-parallel parity without any artifact bundle.
+//!
+//! Both speak the engine's wire format: token/position vectors per batch
+//! slot plus packed `[L, B, Nkv, S, D]` KV planes (see
+//! [`kv_cache`](super::kv_cache)).
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::batch::{
+    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool,
+};
+use crate::coordinator::kv_cache::CacheShape;
+use crate::models::ModelShape;
+use crate::proptest::Rng;
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+/// Model geometry a backend serves (mirrors the artifact manifest's
+/// `model` block; the host backend synthesizes one).
+pub use crate::runtime::artifacts::ModelInfo;
+
+/// The (batch, seq) bucket grid a backend was lowered for.
+#[derive(Debug, Clone)]
+pub struct BucketGrid {
+    pub prefill_batches: Vec<usize>,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+}
+
+/// Outputs of one prefill or decode step.
+pub struct StepOut {
+    /// `[B, vocab]` flat.
+    pub logits: Vec<f32>,
+    /// Updated K cache plane, `[L, B, Nkv, S, D]` flat.
+    pub k_plane: Vec<f32>,
+    /// Updated V cache plane, same shape.
+    pub v_plane: Vec<f32>,
+}
+
+/// One model-execution backend.
+pub trait Backend {
+    /// Model geometry (cache shape, vocab, …).
+    fn model(&self) -> &ModelInfo;
+
+    /// The lowered bucket grid.
+    fn buckets(&self) -> BucketGrid;
+
+    /// Adopt the engine's parallelism config (backends that manage their
+    /// own parallelism, like PJRT, may ignore it).
+    fn set_parallel(&mut self, _cfg: ParallelConfig) {}
+
+    /// Run a prefill over `tokens` `[B, S]` (right-padded) with per-row
+    /// `lengths` `[B]`; returns last-token logits and fresh KV planes.
+    fn prefill(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<StepOut>;
+
+    /// Run one decode step: per-slot `tokens` `[B]` at `pos` `[B]` over
+    /// the packed KV planes; returns next-token logits and the planes
+    /// with the new row written.
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        k_plane: Vec<f32>,
+        v_plane: Vec<f32>,
+        pos: &[i32],
+    ) -> Result<StepOut>;
+}
+
+// ---------------------------------------------------------------------
+// Artifact (PJRT) backend
+// ---------------------------------------------------------------------
+
+/// The AOT-artifact backend: thin adapter over [`Runtime`].
+pub struct ArtifactBackend {
+    rt: Runtime,
+}
+
+impl ArtifactBackend {
+    pub fn new(rt: Runtime) -> Self {
+        Self { rt }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn step_out(outs: Vec<HostTensor>, what: &str) -> Result<StepOut> {
+        let mut it = outs.into_iter();
+        let logits = it.next().with_context(|| format!("{what}: missing logits"))?;
+        let k = it.next().with_context(|| format!("{what}: missing k cache"))?;
+        let v = it.next().with_context(|| format!("{what}: missing v cache"))?;
+        Ok(StepOut {
+            logits: logits.into_f32()?,
+            k_plane: k.into_f32()?,
+            v_plane: v.into_f32()?,
+        })
+    }
+}
+
+impl Backend for ArtifactBackend {
+    fn model(&self) -> &ModelInfo {
+        &self.rt.manifest.model
+    }
+
+    fn buckets(&self) -> BucketGrid {
+        BucketGrid {
+            prefill_batches: self.rt.manifest.prefill_batches.clone(),
+            prefill_seqs: self.rt.manifest.prefill_seqs.clone(),
+            decode_batches: self.rt.manifest.decode_batches.clone(),
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<StepOut> {
+        let name = format!("prefill_b{batch}_s{seq}");
+        let outs = self
+            .rt
+            .run_host(
+                &name,
+                &[
+                    HostTensor::i32(vec![batch, seq], tokens.to_vec()),
+                    HostTensor::i32(vec![batch], lengths.to_vec()),
+                ],
+            )
+            .with_context(|| format!("prefill artifact {name}"))?;
+        Self::step_out(outs, &name)
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        k_plane: Vec<f32>,
+        v_plane: Vec<f32>,
+        pos: &[i32],
+    ) -> Result<StepOut> {
+        let m = &self.rt.manifest.model;
+        let name = format!("decode_b{batch}");
+        let cache_dims =
+            vec![m.n_layers, batch, m.n_kv_heads, m.max_seq, m.head_dim];
+        let outs = self
+            .rt
+            .run_host(
+                &name,
+                &[
+                    HostTensor::i32(vec![batch, 1], tokens.to_vec()),
+                    HostTensor::f32(cache_dims.clone(), k_plane),
+                    HostTensor::f32(cache_dims, v_plane),
+                    HostTensor::i32(vec![batch], pos.to_vec()),
+                ],
+            )
+            .with_context(|| format!("decode artifact {name}"))?;
+        Self::step_out(outs, &name)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Host-model backend
+// ---------------------------------------------------------------------
+
+/// Configuration of the pure-rust host model.
+#[derive(Debug, Clone)]
+pub struct HostModelConfig {
+    /// Transformer shape (GQA-aware: `kv_heads ≤ heads`).
+    pub model: ModelShape,
+    /// Cache capacity (tokens).
+    pub max_seq: usize,
+    /// Weight seed: equal seeds ⇒ bit-identical models.
+    pub seed: u64,
+    pub buckets: BucketGrid,
+}
+
+impl HostModelConfig {
+    /// A small GQA config sized for tests and benches: 4 query heads
+    /// over 2 KV heads.  Forward math is a few µs per token.
+    pub fn tiny_gqa() -> Self {
+        Self {
+            model: ModelShape {
+                name: "host-tiny-gqa",
+                params: 0,
+                layers: 2,
+                heads: 4,
+                kv_heads: 2,
+                head_dim: 8,
+                ffn: 64,
+                vocab: 64,
+            },
+            max_seq: 96,
+            seed: 0xFA57_A77E,
+            buckets: BucketGrid {
+                prefill_batches: vec![1, 4],
+                prefill_seqs: vec![8, 16, 32],
+                decode_batches: vec![1, 4, 8],
+            },
+        }
+    }
+
+    /// Wrap any zoo shape (e.g. [`crate::models::TINY_GQA`]): the
+    /// prefill bucket grid is derived from `max_seq` (powers of two from
+    /// 8 up to `max_seq`), so prompts are only limited by the cache.
+    pub fn for_shape(model: ModelShape, max_seq: usize) -> Self {
+        let mut prefill_seqs = Vec::new();
+        let mut s = 8usize;
+        while s < max_seq {
+            prefill_seqs.push(s);
+            s *= 2;
+        }
+        prefill_seqs.push(max_seq);
+        Self {
+            model,
+            max_seq,
+            buckets: BucketGrid {
+                prefill_batches: vec![1, 4],
+                prefill_seqs,
+                decode_batches: vec![1, 4, 8],
+            },
+            ..Self::tiny_gqa()
+        }
+    }
+}
+
+/// Per-layer projection weights, row-major `[fan_in, fan_out]`.
+struct LayerWeights {
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+}
+
+/// A deterministic tiny transformer running decode attention through the
+/// batched parallel path.
+pub struct HostModelBackend {
+    cfg: HostModelConfig,
+    info: ModelInfo,
+    cache: CacheShape,
+    /// Token embedding `[vocab, d_model]`; also the (tied) unembedding.
+    embed: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    pool: WorkPool,
+}
+
+/// `out[j] = Σ_i x[i] · w[i * cols + j]` (row-major mat-vec).
+fn matvec(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let cols = out.len();
+    debug_assert_eq!(w.len(), x.len() * cols);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        let wrow = &w[i * cols..][..cols];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xi * wv;
+        }
+    }
+}
+
+/// RMS-normalize into a fresh vector (parameter-free).
+fn rmsnorm(x: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len().max(1) as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().map(|v| v * inv).collect()
+}
+
+impl HostModelBackend {
+    pub fn new(cfg: HostModelConfig) -> Self {
+        Self::with_parallel(cfg, ParallelConfig::default())
+    }
+
+    pub fn with_parallel(cfg: HostModelConfig, par: ParallelConfig) -> Self {
+        let m = &cfg.model;
+        let (d_model, heads, kvh, hd) = (
+            m.hidden() as usize,
+            m.heads as usize,
+            m.kv_heads as usize,
+            m.head_dim as usize,
+        );
+        assert!(kvh >= 1 && heads % kvh == 0, "kv_heads must divide heads");
+        let (d_ff, vocab, layers) = (m.ffn as usize, m.vocab as usize, m.layers as usize);
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut init = |fan_in: usize, fan_out: usize| -> Vec<f32> {
+            let scale = (1.0 / fan_in.max(1) as f32).sqrt();
+            (0..fan_in * fan_out).map(|_| rng.f32() * scale).collect()
+        };
+        let embed = init(d_model, vocab); // stored [vocab, d_model] via transpose-free indexing below
+        let layer_weights: Vec<LayerWeights> = (0..layers)
+            .map(|_| LayerWeights {
+                wq: init(d_model, heads * hd),
+                wk: init(d_model, kvh * hd),
+                wv: init(d_model, kvh * hd),
+                wo: init(heads * hd, d_model),
+                w1: init(d_model, d_ff),
+                w2: init(d_ff, d_model),
+            })
+            .collect();
+
+        let n_params = embed.len()
+            + layer_weights
+                .iter()
+                .map(|l| {
+                    l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len() + l.w1.len() + l.w2.len()
+                })
+                .sum::<usize>();
+        let info = ModelInfo {
+            name: m.name.to_string(),
+            vocab,
+            n_layers: layers,
+            d_model,
+            n_heads: heads,
+            n_kv_heads: kvh,
+            head_dim: hd,
+            d_ff,
+            max_seq: cfg.max_seq,
+            n_params,
+        };
+        let cache = CacheShape {
+            layers,
+            kv_heads: kvh,
+            max_seq: cfg.max_seq,
+            head_dim: hd,
+        };
+        Self { cfg, info, cache, embed, layers: layer_weights, pool: WorkPool::new(par) }
+    }
+
+    fn d_model(&self) -> usize {
+        self.info.d_model
+    }
+
+    /// Embedding row of a token (ids folded into the vocab — prompts are
+    /// synthetic and may exceed it).
+    fn embed_row(&self, token: i32) -> Vec<f32> {
+        let v = self.info.vocab;
+        let t = (token.rem_euclid(v as i32)) as usize;
+        self.embed[t * self.d_model()..][..self.d_model()].to_vec()
+    }
+
+    /// Tied unembedding: `logits[v] = rmsnorm(x) · embed[v]`.
+    fn logits_row(&self, x: &[f32], out: &mut [f32]) {
+        let d = self.d_model();
+        let h = rmsnorm(x);
+        for (v, o) in out.iter_mut().enumerate() {
+            let row = &self.embed[v * d..][..d];
+            *o = h.iter().zip(row).map(|(a, b)| a * b).sum();
+        }
+    }
+
+    /// One token step for `rows = [(slot, token, pos)]`: writes each
+    /// row's new K/V into the planes, runs **batched** decode attention
+    /// across all rows × heads per layer, returns final hidden states
+    /// aligned with `rows`.
+    fn forward_step(
+        &self,
+        batch: usize,
+        rows: &[(usize, i32, usize)],
+        k_plane: &mut [f32],
+        v_plane: &mut [f32],
+    ) -> Vec<Vec<f32>> {
+        let d = self.d_model();
+        let (heads, kvh, hd) = (self.info.n_heads, self.info.n_kv_heads, self.info.head_dim);
+        let (qdim, kvdim) = (heads * hd, kvh * hd);
+        let le = self.cache.layer_elems();
+        let bshape = BatchShape::new(heads, kvh, hd, self.cache.max_seq);
+
+        let mut xs: Vec<Vec<f32>> =
+            rows.iter().map(|&(_, tok, _)| self.embed_row(tok)).collect();
+        let mut qbuf = vec![0.0f32; rows.len() * qdim];
+        let mut attn = vec![0.0f32; rows.len() * qdim];
+        let mut krow = vec![0.0f32; kvdim];
+        let mut vrow = vec![0.0f32; kvdim];
+        let mut proj = vec![0.0f32; d.max(self.info.d_ff)];
+
+        for (l, w) in self.layers.iter().enumerate() {
+            // ---- projections + KV write (per row, sequential) --------
+            for (ri, &(slot, _, pos)) in rows.iter().enumerate() {
+                let h = rmsnorm(&xs[ri]);
+                matvec(&h, &w.wq, &mut qbuf[ri * qdim..][..qdim]);
+                matvec(&h, &w.wk, &mut krow);
+                matvec(&h, &w.wv, &mut vrow);
+                for g in 0..kvh {
+                    let at = self.cache.batch_row_offset(batch, l, slot, g, pos);
+                    k_plane[at..at + hd].copy_from_slice(&krow[g * hd..][..hd]);
+                    v_plane[at..at + hd].copy_from_slice(&vrow[g * hd..][..hd]);
+                }
+            }
+
+            // ---- fused batched attention over all rows × heads -------
+            let kp: &[f32] = k_plane;
+            let vp: &[f32] = v_plane;
+            let seqs: Vec<SeqAttn<'_>> = rows
+                .iter()
+                .enumerate()
+                .map(|(ri, &(slot, _, pos))| SeqAttn {
+                    q: &qbuf[ri * qdim..][..qdim],
+                    k: &kp[self.cache.batch_slot_offset(batch, l, slot)..][..le],
+                    v: &vp[self.cache.batch_slot_offset(batch, l, slot)..][..le],
+                    kv_len: pos + 1,
+                })
+                .collect();
+            batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
+
+            // ---- output proj + MLP (per row, sequential) -------------
+            for (ri, x) in xs.iter_mut().enumerate() {
+                matvec(&attn[ri * qdim..][..qdim], &w.wo, &mut proj[..d]);
+                for (xi, &p) in x.iter_mut().zip(&proj[..d]) {
+                    *xi += p;
+                }
+                let h = rmsnorm(x);
+                matvec(&h, &w.w1, &mut proj[..self.info.d_ff]);
+                for p in &mut proj[..self.info.d_ff] {
+                    *p = p.max(0.0); // ReLU
+                }
+                let mlp = proj[..self.info.d_ff].to_vec();
+                matvec(&mlp, &w.w2, &mut proj[..d]);
+                for (xi, &p) in x.iter_mut().zip(&proj[..d]) {
+                    *xi += p;
+                }
+            }
+        }
+        xs
+    }
+
+    fn plane_elems(&self, batch: usize) -> usize {
+        self.info.n_layers * batch * self.cache.layer_elems()
+    }
+}
+
+impl Backend for HostModelBackend {
+    fn model(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    fn buckets(&self) -> BucketGrid {
+        self.cfg.buckets.clone()
+    }
+
+    fn set_parallel(&mut self, cfg: ParallelConfig) {
+        self.pool = WorkPool::new(cfg);
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<StepOut> {
+        if tokens.len() != batch * seq || lengths.len() != batch {
+            bail!(
+                "prefill shape: {} tokens / {} lengths for b={batch} s={seq}",
+                tokens.len(),
+                lengths.len()
+            );
+        }
+        let max_len = lengths.iter().copied().max().unwrap_or(0).max(0) as usize;
+        if max_len > seq {
+            bail!("prefill length {max_len} exceeds seq bucket {seq}");
+        }
+        if max_len > self.cache.max_seq {
+            bail!("prefill length {max_len} exceeds max_seq {}", self.cache.max_seq);
+        }
+        let mut k_plane = vec![0.0f32; self.plane_elems(batch)];
+        let mut v_plane = vec![0.0f32; self.plane_elems(batch)];
+        let vocab = self.info.vocab;
+        let mut finals: Vec<Vec<f32>> = vec![Vec::new(); batch];
+
+        for t in 0..max_len {
+            let rows: Vec<(usize, i32, usize)> = (0..batch)
+                .filter(|&i| (t as i32) < lengths[i])
+                .map(|i| (i, tokens[i * seq + t], t))
+                .collect();
+            let xs = self.forward_step(batch, &rows, &mut k_plane, &mut v_plane);
+            for (&(slot, _, _), x) in rows.iter().zip(xs) {
+                if t as i32 == lengths[slot] - 1 {
+                    finals[slot] = x;
+                }
+            }
+        }
+
+        let mut logits = vec![0.0f32; batch * vocab];
+        for (slot, x) in finals.iter().enumerate() {
+            if !x.is_empty() {
+                self.logits_row(x, &mut logits[slot * vocab..][..vocab]);
+            }
+        }
+        Ok(StepOut { logits, k_plane, v_plane })
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        mut k_plane: Vec<f32>,
+        mut v_plane: Vec<f32>,
+        pos: &[i32],
+    ) -> Result<StepOut> {
+        if tokens.len() != batch || pos.len() != batch {
+            bail!("decode shape: {} tokens / {} pos for b={batch}", tokens.len(), pos.len());
+        }
+        if k_plane.len() != self.plane_elems(batch) || v_plane.len() != k_plane.len() {
+            bail!(
+                "decode planes: {} elems, want {}",
+                k_plane.len(),
+                self.plane_elems(batch)
+            );
+        }
+        for (i, &p) in pos.iter().enumerate() {
+            if p < 0 || p as usize >= self.cache.max_seq {
+                bail!("decode pos[{i}] = {p} out of cache range {}", self.cache.max_seq);
+            }
+        }
+        let rows: Vec<(usize, i32, usize)> =
+            (0..batch).map(|i| (i, tokens[i], pos[i] as usize)).collect();
+        let xs = self.forward_step(batch, &rows, &mut k_plane, &mut v_plane);
+
+        let vocab = self.info.vocab;
+        let mut logits = vec![0.0f32; batch * vocab];
+        for (slot, x) in xs.iter().enumerate() {
+            self.logits_row(x, &mut logits[slot * vocab..][..vocab]);
+        }
+        Ok(StepOut { logits, k_plane, v_plane })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(par: ParallelConfig) -> HostModelBackend {
+        HostModelBackend::with_parallel(HostModelConfig::tiny_gqa(), par)
+    }
+
+    #[test]
+    fn same_seed_same_weights() {
+        let a = backend(ParallelConfig::sequential());
+        let b = backend(ParallelConfig::sequential());
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.layers[0].wq, b.layers[0].wq);
+        assert!(a.info.n_params > 0);
+        assert_eq!(a.info.n_kv_heads, 2);
+    }
+
+    #[test]
+    fn decode_continues_prefill() {
+        // prefill [t0 t1 t2] then decode t3 must equal prefill [t0..t3]:
+        // same cache contents and the same last-token logits.
+        let mut be = backend(ParallelConfig::sequential());
+        let toks = [3i32, 9, 17, 25];
+
+        let full = be.prefill(1, 8, &pad(&toks, 8), &[4]).unwrap();
+        let part = be.prefill(1, 8, &pad(&toks[..3], 8), &[3]).unwrap();
+        let step = be
+            .decode(1, &[toks[3]], part.k_plane, part.v_plane, &[3])
+            .unwrap();
+        assert_eq!(valid_prefix(&be, &full.k_plane, 4), valid_prefix(&be, &step.k_plane, 4));
+        let la = &full.logits[..be.info.vocab];
+        let lb = &step.logits[..be.info.vocab];
+        let err = la
+            .iter()
+            .zip(lb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-5, "prefill-vs-decode logits diverge: {err}");
+    }
+
+    #[test]
+    fn parallel_backend_is_bit_identical() {
+        let mut seq = backend(ParallelConfig::sequential());
+        let mut par = backend(ParallelConfig { threads: 4, min_work_per_thread: 0 });
+        let toks: Vec<i32> = (0..24).map(|i| i * 7 + 1).collect();
+        let a = seq.prefill(4, 8, &grid(&toks, 4, 8), &[8, 8, 8, 8]).unwrap();
+        let b = par.prefill(4, 8, &grid(&toks, 4, 8), &[8, 8, 8, 8]).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.k_plane, b.k_plane);
+
+        let da = seq.decode(4, &[1, 2, 3, 4], a.k_plane, a.v_plane, &[8, 8, 8, 8]).unwrap();
+        let db = par.decode(4, &[1, 2, 3, 4], b.k_plane, b.v_plane, &[8, 8, 8, 8]).unwrap();
+        assert_eq!(da.logits, db.logits);
+        assert_eq!(da.k_plane, db.k_plane);
+        assert_eq!(da.v_plane, db.v_plane);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut be = backend(ParallelConfig::sequential());
+        assert!(be.prefill(2, 8, &[0; 8], &[1, 1]).is_err());
+        assert!(be.decode(2, &[0, 0], vec![0.0; 8], vec![0.0; 8], &[0, 0]).is_err());
+        let n = be.plane_elems(1);
+        assert!(be
+            .decode(1, &[0], vec![0.0; n], vec![0.0; n], &[be.cache.max_seq as i32])
+            .is_err());
+    }
+
+    fn pad(toks: &[i32], s: usize) -> Vec<i32> {
+        let mut v = toks.to_vec();
+        v.resize(s, 0);
+        v
+    }
+
+    fn grid(toks: &[i32], b: usize, s: usize) -> Vec<i32> {
+        let mut v = vec![0i32; b * s];
+        for (i, chunk) in toks.chunks(s).take(b).enumerate() {
+            v[i * s..][..chunk.len()].copy_from_slice(chunk);
+        }
+        v
+    }
+
+    /// The first `len` rows of every (layer, head) plane of slot 0.
+    fn valid_prefix(be: &HostModelBackend, plane: &[f32], len: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in 0..be.info.n_layers {
+            for g in 0..be.info.n_kv_heads {
+                let at = be.cache.batch_row_offset(1, l, 0, g, 0);
+                out.extend_from_slice(&plane[at..at + len * be.info.head_dim]);
+            }
+        }
+        out
+    }
+}

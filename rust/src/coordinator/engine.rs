@@ -1,22 +1,27 @@
-//! The serving engine: owns the PJRT runtime and all sequence state,
-//! executes prefill/decode batches chosen by the scheduler.
+//! The serving engine: owns an execution [`Backend`] and all sequence
+//! state, executes prefill/decode batches chosen by the scheduler.
 //!
 //! Single-threaded by design — PJRT handles are kept on one engine thread
 //! (see [`super::server`] for the threaded front-end); the engine API is
 //! synchronous and fully deterministic, which is what the integration
-//! tests and benches drive.
+//! tests and benches drive.  Parallelism lives *inside* a step: the
+//! batched decode-attention path fans (sequence × head) work across a
+//! scoped thread pool sized by [`EngineConfig::parallel`], and
+//! `threads = 1` is bit-identical to the multithreaded result.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{ArtifactBackend, Backend};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{pack_batch, unpack_batch, CachePool, CacheShape, SeqCache, Tier};
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
+use crate::attention::batch::ParallelConfig;
 use crate::metrics::EngineMetrics;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::Runtime;
 
 /// A live sequence.
 struct SeqState {
@@ -51,6 +56,10 @@ pub struct EngineConfig {
     pub device_kv_budget: usize,
     /// Cap on concurrently decoding sequences.
     pub max_active: usize,
+    /// Intra-step parallelism for backends that honor it (the host
+    /// batched-attention path); `threads = 1` is the sequential
+    /// fallback, bit-identical to any `threads = N`.
+    pub parallel: ParallelConfig,
 }
 
 impl Default for EngineConfig {
@@ -59,13 +68,14 @@ impl Default for EngineConfig {
             policy: Policy::Fair { quantum: 4 },
             device_kv_budget: 64 << 20,
             max_active: 16,
+            parallel: ParallelConfig::default(),
         }
     }
 }
 
 /// The engine.
 pub struct Engine {
-    rt: Runtime,
+    backend: Box<dyn Backend>,
     shape: CacheShape,
     batcher: Batcher,
     scheduler: Scheduler,
@@ -78,22 +88,31 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build an engine over a loaded runtime.
+    /// Build an engine over a loaded PJRT runtime (the AOT-artifact
+    /// backend).
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Self {
-        let m = &rt.manifest.model;
+        Self::with_backend(Box::new(ArtifactBackend::new(rt)), cfg)
+    }
+
+    /// Build an engine over any execution backend.
+    pub fn with_backend(mut backend: Box<dyn Backend>, cfg: EngineConfig) -> Self {
+        backend.set_parallel(cfg.parallel);
+        let m = backend.model();
         let shape = CacheShape {
             layers: m.n_layers,
             kv_heads: m.n_kv_heads,
             max_seq: m.max_seq,
             head_dim: m.head_dim,
         };
+        let buckets = backend.buckets();
         let batcher = Batcher::new(BatcherConfig {
-            prefill_batches: rt.manifest.prefill_batches.clone(),
-            prefill_seqs: rt.manifest.prefill_seqs.clone(),
-            decode_batches: rt.manifest.decode_batches.clone(),
+            prefill_batches: buckets.prefill_batches,
+            prefill_seqs: buckets.prefill_seqs,
+            decode_batches: buckets.decode_batches,
             max_active: cfg.max_active,
         });
         Self {
+            backend,
             shape,
             batcher,
             scheduler: Scheduler::new(cfg.policy),
@@ -103,7 +122,6 @@ impl Engine {
             finished: Vec::new(),
             next_id: 1,
             metrics: EngineMetrics::default(),
-            rt,
         }
     }
 
@@ -170,7 +188,6 @@ impl Engine {
         let t0 = Instant::now();
         let b = batch.batch_bucket;
         let s = batch.seq_bucket;
-        let name = format!("prefill_b{b}_s{s}");
 
         // tokens [B, S] (right-padded), lengths [B] (dummy rows: 1).
         let mut tokens = vec![0i32; b * s];
@@ -179,20 +196,12 @@ impl Engine {
             tokens[i * s..][..req.prompt.len()].copy_from_slice(&req.prompt);
             lengths[i] = req.prompt.len() as i32;
         }
-        let outs = self
-            .rt
-            .run_host(
-                &name,
-                &[
-                    HostTensor::i32(vec![b, s], tokens),
-                    HostTensor::i32(vec![b], lengths),
-                ],
-            )
-            .with_context(|| format!("prefill artifact {name}"))?;
-        let logits = outs[0].as_f32()?;
-        let kc = outs[1].as_f32()?;
-        let vc = outs[2].as_f32()?;
-        let vocab = self.rt.manifest.model.vocab;
+        let out = self
+            .backend
+            .prefill(b, s, &tokens, &lengths)
+            .with_context(|| format!("prefill step b{b}_s{s}"))?;
+        let (logits, kc, vc) = (&out.logits, &out.k_plane, &out.v_plane);
+        let vocab = self.backend.model().vocab;
 
         for (i, req) in batch.requests.into_iter().enumerate() {
             let row = &logits[i * vocab..][..vocab];
@@ -230,7 +239,6 @@ impl Engine {
     fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {
         let t0 = Instant::now();
         let b = batch.batch_bucket;
-        let name = format!("decode_b{b}");
 
         let mut token = vec![0i32; b];
         let mut pos = vec![0i32; b];
@@ -248,29 +256,12 @@ impl Engine {
         drop(packs);
         drop(packs_v);
 
-        let cache_dims = vec![
-            self.shape.layers,
-            b,
-            self.shape.kv_heads,
-            self.shape.max_seq,
-            self.shape.head_dim,
-        ];
-        let outs = self
-            .rt
-            .run_host(
-                &name,
-                &[
-                    HostTensor::i32(vec![b, 1], token),
-                    HostTensor::f32(cache_dims.clone(), k_plane),
-                    HostTensor::f32(cache_dims, v_plane),
-                    HostTensor::i32(vec![b], pos),
-                ],
-            )
-            .with_context(|| format!("decode artifact {name}"))?;
-        let logits = outs[0].as_f32()?;
-        let kc = outs[1].as_f32()?;
-        let vc = outs[2].as_f32()?;
-        let vocab = self.rt.manifest.model.vocab;
+        let out = self
+            .backend
+            .decode(b, &token, k_plane, v_plane, &pos)
+            .with_context(|| format!("decode step b{b}"))?;
+        let (logits, kc, vc) = (&out.logits, &out.k_plane, &out.v_plane);
+        let vocab = self.backend.model().vocab;
 
         let mut done: Vec<RequestId> = Vec::new();
         for (slot, id) in batch.seq_ids.iter().enumerate() {
@@ -329,6 +320,71 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::{HostModelBackend, HostModelConfig};
+
+    fn host_engine(threads: usize) -> Engine {
+        let cfg = EngineConfig {
+            parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+            ..EngineConfig::default()
+        };
+        Engine::with_backend(
+            Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn host_backend_single_request_completes() {
+        let mut e = host_engine(1);
+        let id = e
+            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, eos_token: None })
+            .unwrap();
+        let out = e.run_until_idle().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].tokens.len(), 4);
+        let vocab = 64;
+        assert!(out[0].tokens.iter().all(|&t| t >= 0 && t < vocab));
+    }
+
+    #[test]
+    fn host_backend_batched_equals_solo() {
+        let p = GenParams { max_new_tokens: 5, eos_token: None };
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![1, 2, 3], vec![10, 20, 30, 40, 50, 60], vec![7; 12], vec![3, 1]];
+        let mut batched = host_engine(2);
+        let mut ids = Vec::new();
+        for pr in &prompts {
+            ids.push(batched.submit(pr.clone(), p).unwrap());
+        }
+        let mut out = batched.run_until_idle().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), prompts.len());
+
+        for (pr, want) in prompts.iter().zip(&out) {
+            let mut solo = host_engine(2);
+            solo.submit(pr.clone(), p).unwrap();
+            let got = solo.run_until_idle().unwrap();
+            assert_eq!(got[0].tokens, want.tokens, "prompt {pr:?}");
+        }
+    }
+
+    #[test]
+    fn host_backend_parallel_matches_sequential() {
+        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![5, 4, 3, 2, 1], vec![11; 9], vec![2, 4, 6, 8]];
+        let run = |threads: usize| {
+            let mut e = host_engine(threads);
+            for pr in &prompts {
+                e.submit(pr.clone(), p).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4), "threads must not change greedy tokens");
+    }
 
     fn engine() -> Option<Engine> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");

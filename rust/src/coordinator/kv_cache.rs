@@ -24,14 +24,38 @@ impl CacheShape {
         self.layers * self.kv_heads * self.max_seq * self.head_dim
     }
 
-    /// Elements of one layer-row within a single-sequence cache.
-    fn layer_elems(&self) -> usize {
+    /// Elements of one layer-row within a single-sequence cache
+    /// (`[Nkv, S, D]` — also the per-(layer, slot) plane of a batch
+    /// tensor, which is exactly what batched decode attention consumes).
+    pub fn layer_elems(&self) -> usize {
         self.kv_heads * self.max_seq * self.head_dim
     }
 
     /// Bytes of one sequence's full KV (K + V) cache.
     pub fn seq_bytes(&self) -> usize {
         2 * 4 * self.seq_elems()
+    }
+
+    /// Flat offset of `(layer, slot)` inside a `[L, B, Nkv, S, D]` batch
+    /// plane — the start of that sequence's `[Nkv, S, D]` sub-plane.
+    pub fn batch_slot_offset(&self, batch: usize, layer: usize, slot: usize) -> usize {
+        debug_assert!(slot < batch);
+        (layer * batch + slot) * self.layer_elems()
+    }
+
+    /// Flat offset of `(layer, slot, kv_head, row)` inside a batch plane
+    /// — where a decode step writes the new token's K/V row.
+    pub fn batch_row_offset(
+        &self,
+        batch: usize,
+        layer: usize,
+        slot: usize,
+        kv_head: usize,
+        row: usize,
+    ) -> usize {
+        debug_assert!(kv_head < self.kv_heads && row < self.max_seq);
+        self.batch_slot_offset(batch, layer, slot)
+            + (kv_head * self.max_seq + row) * self.head_dim
     }
 }
 
@@ -225,6 +249,27 @@ mod tests {
         let plane = pack_batch(sh, 2, &[(1, &a)]).unwrap();
         assert_eq!(plane[(0 * 2 + 1) * le], 7.0);
         assert_eq!(plane[(1 * 2 + 1) * le], 9.0);
+    }
+
+    #[test]
+    fn batch_offsets_match_pack_layout() {
+        // a value written at (layer, slot, kv_head, row) in a sequence
+        // cache must land at batch_row_offset after pack_batch.
+        let sh = shape();
+        let (layer, kv_head, row, t) = (1usize, 2usize, 3usize, 1usize);
+        let mut a = vec![0.0f32; sh.seq_elems()];
+        let seq_idx = layer * sh.layer_elems()
+            + (kv_head * sh.max_seq + row) * sh.head_dim
+            + t;
+        a[seq_idx] = 5.5;
+        let b = 3;
+        let slot = 2;
+        let plane = pack_batch(sh, b, &[(slot, &a)]).unwrap();
+        assert_eq!(plane[sh.batch_row_offset(b, layer, slot, kv_head, row) + t], 5.5);
+        assert_eq!(
+            sh.batch_slot_offset(b, layer, slot),
+            (layer * b + slot) * sh.layer_elems()
+        );
     }
 
     #[test]

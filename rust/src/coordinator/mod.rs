@@ -2,6 +2,9 @@
 //!
 //! A vLLM-router-style engine over the AOT artifacts:
 //!
+//! * [`backend`]   — the execution backends behind the engine: the PJRT
+//!   artifact path and the pure-rust host model whose decode attention
+//!   runs through the batched parallel path (`attention::batch`);
 //! * [`request`]   — request/response types;
 //! * [`batcher`]   — continuous batcher over the artifact bucket grid;
 //! * [`scheduler`] — prefill/decode policy (decode-priority + fairness
@@ -20,6 +23,7 @@
 //!   FlashAttention2 path.
 
 pub mod allreduce;
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
@@ -28,6 +32,9 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
+pub use backend::{
+    ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig, StepOut,
+};
 pub use engine::{Engine, EngineConfig};
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::Server;

@@ -21,6 +21,9 @@ pub struct ModelShape {
     pub layers: u32,
     /// Number of attention heads, `N`.
     pub heads: u32,
+    /// Number of KV heads, `N_kv ≤ N` (grouped-query attention; `== N`
+    /// for the classic multi-head models of Table 1).
+    pub kv_heads: u32,
     /// Head dimension, `D`.
     pub head_dim: u32,
     /// FFN hidden size, `H2`.
@@ -33,6 +36,16 @@ impl ModelShape {
     /// Attention hidden dimension `H1 = N * D`.
     pub fn hidden(&self) -> u64 {
         self.heads as u64 * self.head_dim as u64
+    }
+
+    /// KV hidden dimension `N_kv * D` (equals `H1` for MHA models).
+    pub fn kv_hidden(&self) -> u64 {
+        self.kv_heads as u64 * self.head_dim as u64
+    }
+
+    /// Query heads sharing each KV head (GQA group size).
+    pub fn group_size(&self) -> u32 {
+        self.heads / self.kv_heads.max(1)
     }
 
     /// Heads resident on one device under `n`-way tensor parallelism.
@@ -72,10 +85,11 @@ impl ModelShape {
         self.layers as u64 * (8 * h1 * h1 + 4 * h1 * h2)
     }
 
-    /// One layer's KV-cache bytes per device in fp16 (paper eq. 18):
-    /// `M_kv = 4 B H1 (S + O) / n`.
+    /// One layer's KV-cache bytes per device in fp16 (paper eq. 18,
+    /// generalized to GQA): `M_kv = 4 B N_kv D (S + O) / n`.  For the
+    /// paper's MHA models `N_kv D == H1`, recovering eq. 18 exactly.
     pub fn kv_bytes_per_layer_fp16(&self, batch: u64, s_plus_o: u64, n: u32) -> u64 {
-        4 * batch * self.hidden() * s_plus_o / n as u64
+        4 * batch * self.kv_hidden() * s_plus_o / n as u64
     }
 }
 
@@ -112,6 +126,22 @@ mod tests {
         // the memory planner uses 2·params instead — see sim::memory.)
         let w = PANGU_38B.weight_bytes_fp16() as f64 / 1e9;
         assert!(w > 23.0 && w < 28.0, "got {w} GB");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_not_hidden() {
+        assert_eq!(LLAMA2_70B_GQA.hidden(), LLAMA2_70B.hidden());
+        assert_eq!(LLAMA2_70B_GQA.group_size(), 8);
+        assert_eq!(LLAMA2_70B_GQA.kv_hidden() * 8, LLAMA2_70B.kv_hidden());
+        // KV cache shrinks by the group factor
+        let mha = LLAMA2_70B.kv_bytes_per_layer_fp16(1, 4096, 1);
+        let gqa = LLAMA2_70B_GQA.kv_bytes_per_layer_fp16(1, 4096, 1);
+        assert_eq!(mha, 8 * gqa);
+        // MHA models keep eq. 18 exactly
+        assert_eq!(
+            PANGU_38B.kv_bytes_per_layer_fp16(1, 1024, 1),
+            4 * PANGU_38B.hidden() * 1024
+        );
     }
 
     #[test]

@@ -79,6 +79,28 @@ impl Rng {
     }
 }
 
+/// Largest absolute elementwise difference (∞-norm of `a - b`); the
+/// agreement metric every cross-kernel property uses.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Expand GQA KV `[kv_heads, skv, d]` to MHA `[heads, skv, d]` by
+/// repeating each KV head over its query-head group — the bridge every
+/// GQA-vs-oracle test uses (`kv_heads` must divide `heads`).
+pub fn expand_kv(src: &[f32], heads: usize, kv_heads: usize, skv: usize, d: usize) -> Vec<f32> {
+    assert!(kv_heads >= 1 && heads % kv_heads == 0, "kv_heads must divide heads");
+    assert_eq!(src.len(), kv_heads * skv * d, "src shape");
+    let group = heads / kv_heads;
+    let mut out = Vec::with_capacity(heads * skv * d);
+    for head in 0..heads {
+        let g = head / group;
+        out.extend_from_slice(&src[g * skv * d..][..skv * d]);
+    }
+    out
+}
+
 /// Run `prop` over `cases` seeded RNGs; panics with the failing seed on
 /// the first `Err`.
 pub fn check<F>(cases: u64, mut prop: F)
@@ -154,6 +176,198 @@ mod tests {
             } else {
                 Ok(())
             }
+        });
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}
+
+/// Cross-kernel agreement properties: `standard` is the numeric oracle,
+/// `flash` must match it within FP tolerance for every shape/tiling
+/// (including GQA), and `batch` must match `flash` **exactly** while
+/// being invariant to the worker count.
+#[cfg(test)]
+mod attention_props {
+    use super::{check, expand_kv, max_abs_diff, Rng};
+    use crate::attention::batch::{
+        batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool,
+    };
+    use crate::attention::flash::{flash_attention, FlashParams};
+    use crate::attention::standard::{standard_attention, StdParams};
+    use crate::prop_ensure;
+
+    /// Pick a random (heads, kv_heads) pair with kv_heads | heads.
+    fn gqa_pair(rng: &mut Rng) -> (usize, usize) {
+        let h = *rng.pick(&[1usize, 2, 3, 4, 6, 8]);
+        let divisors: Vec<usize> = (1..=h).filter(|k| h % k == 0).collect();
+        let kvh = *rng.pick(&divisors);
+        (h, kvh)
+    }
+
+    /// flash (GQA, any tiling, causal or not) == standard on expanded KV.
+    #[test]
+    fn prop_flash_gqa_equals_standard() {
+        check(64, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let sq = rng.range(1, 16);
+            let skv = sq + rng.range(0, 24);
+            let d = *rng.pick(&[1usize, 4, 8, 16]);
+            let causal = rng.bool();
+            let (bq, bkv) = (rng.range(1, 10), rng.range(1, 16));
+            let q = rng.f32_vec(h * sq * d);
+            let k = rng.f32_vec(kvh * skv * d);
+            let v = rng.f32_vec(kvh * skv * d);
+            let scale = 1.0 / (d as f32).sqrt();
+
+            let mut flash = vec![0.0; h * sq * d];
+            flash_attention(
+                &q,
+                &k,
+                &v,
+                &mut flash,
+                &FlashParams {
+                    heads: h,
+                    kv_heads: kvh,
+                    seq_q: sq,
+                    seq_kv: skv,
+                    head_dim: d,
+                    causal,
+                    block_q: bq,
+                    block_kv: bkv,
+                    scale,
+                },
+            );
+
+            let (ke, ve) = (expand_kv(&k, h, kvh, skv, d), expand_kv(&v, h, kvh, skv, d));
+            let mut std = vec![0.0; h * sq * d];
+            standard_attention(
+                &q,
+                &ke,
+                &ve,
+                &mut std,
+                &StdParams { heads: h, seq_q: sq, seq_kv: skv, head_dim: d, causal, scale },
+            );
+            let err = max_abs_diff(&flash, &std);
+            prop_ensure!(
+                err < 2e-5,
+                "h={h} kvh={kvh} sq={sq} skv={skv} d={d} causal={causal} \
+                 bq={bq} bkv={bkv}: err {err}"
+            );
+            Ok(())
+        });
+    }
+
+    /// batch == per-sequence flash (bit-exact) == standard (tolerance),
+    /// and threads=1 == threads=N bit-exact — over random decode batches.
+    #[test]
+    fn prop_batch_flash_standard_agree() {
+        check(40, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let d = *rng.pick(&[4usize, 8, 16]);
+            let stride = rng.range(1, 40);
+            let nseq = rng.range(1, 9);
+            let block_kv = rng.range(1, 20);
+            let threads = rng.range(2, 6);
+
+            let mut qs = Vec::new();
+            let mut ks = Vec::new();
+            let mut vs = Vec::new();
+            let mut lens = Vec::new();
+            for _ in 0..nseq {
+                qs.push(rng.f32_vec(h * d));
+                ks.push(rng.f32_vec(kvh * stride * d));
+                vs.push(rng.f32_vec(kvh * stride * d));
+                lens.push(rng.range(0, stride + 1));
+            }
+            let seqs: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn { q: &qs[i], k: &ks[i], v: &vs[i], kv_len: lens[i] })
+                .collect();
+            let mut shape = BatchShape::new(h, kvh, d, stride);
+            shape.block_kv = block_kv;
+
+            let n = nseq * h * d;
+            let mut seq_out = vec![0.0; n];
+            batch_decode_attention(
+                &shape,
+                &seqs,
+                &mut seq_out,
+                &WorkPool::new(ParallelConfig::sequential()),
+            );
+            let mut par_out = vec![0.0; n];
+            batch_decode_attention(
+                &shape,
+                &seqs,
+                &mut par_out,
+                &WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 }),
+            );
+            prop_ensure!(
+                seq_out == par_out,
+                "threads=1 vs threads={threads} not bit-identical \
+                 (h={h} kvh={kvh} d={d} nseq={nseq})"
+            );
+
+            // per-sequence flash on the compacted valid prefix
+            for (i, s) in seqs.iter().enumerate() {
+                let kv = s.kv_len;
+                let mut k = Vec::with_capacity(kvh * kv * d);
+                let mut v = Vec::with_capacity(kvh * kv * d);
+                for g in 0..kvh {
+                    k.extend_from_slice(&s.k[g * stride * d..][..kv * d]);
+                    v.extend_from_slice(&s.v[g * stride * d..][..kv * d]);
+                }
+                let mut flash = vec![0.0; h * d];
+                flash_attention(
+                    s.q,
+                    &k,
+                    &v,
+                    &mut flash,
+                    &FlashParams {
+                        heads: h,
+                        kv_heads: kvh,
+                        seq_q: 1,
+                        seq_kv: kv,
+                        head_dim: d,
+                        causal: false,
+                        block_q: 1,
+                        block_kv,
+                        scale: shape.scale,
+                    },
+                );
+                prop_ensure!(
+                    par_out[i * h * d..][..h * d] == flash[..],
+                    "batch vs flash mismatch at seq {i} (h={h} kvh={kvh} kv={kv})"
+                );
+
+                if kv > 0 {
+                    let (ke, ve) =
+                        (expand_kv(&k, h, kvh, kv, d), expand_kv(&v, h, kvh, kv, d));
+                    let mut std = vec![0.0; h * d];
+                    standard_attention(
+                        s.q,
+                        &ke,
+                        &ve,
+                        &mut std,
+                        &StdParams {
+                            heads: h,
+                            seq_q: 1,
+                            seq_kv: kv,
+                            head_dim: d,
+                            causal: false,
+                            scale: shape.scale,
+                        },
+                    );
+                    let err = max_abs_diff(&flash, &std);
+                    prop_ensure!(
+                        err < 2e-5,
+                        "batch vs standard err {err} at seq {i} (h={h} kvh={kvh} kv={kv})"
+                    );
+                }
+            }
+            Ok(())
         });
     }
 }

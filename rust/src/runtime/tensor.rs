@@ -53,6 +53,14 @@ impl HostTensor {
         }
     }
 
+    /// Take ownership of f32 data; errors if the tensor is i32.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
     /// Borrow i32 data; errors if the tensor is f32.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {

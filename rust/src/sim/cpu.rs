@@ -37,6 +37,7 @@ pub fn measure_decode(kv: usize, heads: usize, head_dim: usize, reps: usize) -> 
 
     let params = FlashParams {
         heads,
+        kv_heads: heads,
         seq_q: 1,
         seq_kv: kv,
         head_dim,

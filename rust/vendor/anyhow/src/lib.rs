@@ -1,0 +1,199 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The registry is unreachable in this environment, so this vendored
+//! crate provides the exact API subset `fastattn` uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` /
+//! `bail!` macros.  Semantics follow the real crate where it matters:
+//!
+//! * `Error` does **not** implement `std::error::Error`, which is what
+//!   makes the blanket `From<E: std::error::Error>` conversion possible
+//!   on stable (the same trick the real crate uses);
+//! * `.context(..)` / `.with_context(..)` prepend a message, and the
+//!   chain renders outermost-first with `: ` separators for both `{}`
+//!   and `{:#}` formatting.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error value: a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything displayable (what `anyhow!(expr)` expands to).
+    pub fn from_display<D: fmt::Display>(d: D) -> Self {
+        Error { chain: vec![d.to_string()] }
+    }
+
+    /// Build from a message (mirrors `anyhow::Error::msg`).
+    pub fn msg<D: fmt::Display>(d: D) -> Self {
+        Self::from_display(d)
+    }
+
+    /// Prepend a context message.
+    pub fn context<D: fmt::Display>(mut self, ctx: D) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// The blanket conversion every `?` relies on.  `Error` itself must not
+// implement `std::error::Error` or this would conflict with the
+// reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Render the source chain eagerly; the stand-in stores strings.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, ctx: D) -> Result<T> {
+        self.ok_or_else(|| Error::from_display(ctx))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::from_display(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_display(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::from_display(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_display($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            return ::core::result::Result::Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_prepends_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("loading manifest"), "{s}");
+        assert!(s.contains("missing file"), "{s}");
+        // alternate formatting renders the same chain
+        assert_eq!(s, format!("{e:#}"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("thing absent").unwrap_err();
+        assert_eq!(e.to_string(), "thing absent");
+        let w: Option<u32> = Some(7);
+        assert_eq!(w.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("three is right out (n={})", n);
+            }
+            Err(anyhow!(String::from("plain string error")))
+        }
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        assert!(f(1).unwrap_err().to_string().contains("plain string"));
+    }
+
+    #[test]
+    fn anyhow_error_recontexts() {
+        fn inner() -> Result<()> {
+            Err(anyhow!("inner failure"))
+        }
+        let e = inner().context("outer step").unwrap_err();
+        assert_eq!(e.to_string(), "outer step: inner failure");
+    }
+}

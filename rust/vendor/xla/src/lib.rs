@@ -1,0 +1,289 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! This environment has no libxla / PJRT plugin, so the real binding
+//! crate cannot build here.  This stand-in keeps the same API surface the
+//! serving runtime uses so the crate compiles and the pure-host paths
+//! (tensors, literals) work for real; anything that would need the
+//! actual PJRT runtime ([`PjRtClient::cpu`] onward) returns
+//! [`Error::BackendUnavailable`], and every artifact-dependent test
+//! self-skips on the missing `artifacts/manifest.json`.
+//!
+//! [`Literal`] is a genuine host-side implementation (typed storage +
+//! dims + reshape), because `HostTensor` round-trips through it in unit
+//! tests that run everywhere.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Errors surfaced by the stand-in binding.
+#[derive(Debug)]
+pub enum Error {
+    /// The real PJRT backend is not linked into this build.
+    BackendUnavailable(&'static str),
+    /// Host-side literal misuse (shape/type mismatch).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => write!(
+                f,
+                "xla backend unavailable in this build ({what}); \
+                 artifact execution requires the real xla-rs binding"
+            ),
+            Error::Literal(msg) => write!(f, "literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a literal can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    S32,
+    F16,
+    F64,
+    Pred,
+}
+
+/// Host types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn store(data: &[Self]) -> Storage;
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+/// Typed backing storage of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn store(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn store(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dimensions + element type of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side literal: typed data + dims (tuples hold nested literals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    /// A tuple literal wrapping `parts`.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { storage: Storage::Tuple(parts), dims: vec![] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error::Literal(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape of an array literal; errors on tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.storage {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+            Storage::Tuple(_) => {
+                return Err(Error::Literal("tuple literal has no array shape".into()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the data out as `Vec<T>`; errors on element-type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage).ok_or_else(|| {
+            Error::Literal(format!("literal is not {:?}", T::TY))
+        })
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(parts) => Ok(parts),
+            _ => Err(Error::Literal("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stand-in).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::BackendUnavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stand-in).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer handle.  Never constructible in the stand-in.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::BackendUnavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable handle.  Never constructible in the stand-in.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// The PJRT client.  [`PjRtClient::cpu`] fails in the stand-in, which is
+/// the single choke point that keeps every artifact path unreachable.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::BackendUnavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::BackendUnavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape_to_rank0() {
+        let lit = Literal::vec1(&[42i32]);
+        let r = lit.reshape(&[]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_count() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn backend_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
