@@ -4,21 +4,25 @@
 //!   * PJRT artifact execution (standalone kernel, prefill, decode)
 //!   * engine decode step end-to-end (pack → execute → unpack → sample)
 //!   * batched parallel decode attention (GQA), single-thread vs
-//!     parallel: per-batch latency, decode tok/s, speedup
+//!     parallel vs **paged** (block-table gather): per-batch latency,
+//!     decode tok/s, speedup
 //!   * the host-model engine end-to-end (no artifacts needed)
 //!   * KV-cache batch pack/unpack memcpy
 //!   * the rust CPU FlashAttention2 kernel (offload host path)
 //!   * the threaded ring AllReduce
 //!
-//! Run with `cargo bench --bench hotpath` (release profile).
+//! Run with `cargo bench --bench hotpath` (release profile).  Decode
+//! throughput rows are additionally written to `BENCH_decode.json` in
+//! the invocation directory, so the perf trajectory is machine-readable
+//! across PRs.
 
 use fastattn::attention::batch::{
-    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool,
+    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
 use fastattn::attention::flash::{flash_attention, FlashParams};
-use fastattn::benchkit::{bench, fmt_time, rate, x, Table};
+use fastattn::benchkit::{bench, fmt_time, rate, write_bench_json, x, Table};
 use fastattn::coordinator::allreduce::ring_all_reduce;
-use fastattn::coordinator::kv_cache::{pack_batch, CacheShape};
+use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PagePool};
 use fastattn::coordinator::{
     Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig,
 };
@@ -52,7 +56,52 @@ impl DecodeBatchData {
 
     fn seqs(&self) -> Vec<SeqAttn<'_>> {
         (0..self.q.len())
-            .map(|i| SeqAttn { q: &self.q[i], k: &self.k[i], v: &self.v[i], kv_len: self.kv })
+            .map(|i| SeqAttn::contig(&self.q[i], &self.k[i], &self.v[i], self.kv))
+            .collect()
+    }
+
+    /// Scatter the same rows into a paged pool (single-layer cache
+    /// geometry) so the paged gather can be benched on identical data.
+    fn paged(&self, page_size: usize) -> (PagePool, Vec<BlockTable>) {
+        let (kvh, d, stride) =
+            (self.shape.kv_heads, self.shape.head_dim, self.shape.kv_stride);
+        let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+        let per_seq = BlockTable::pages_needed(cache, page_size, stride);
+        let mut pool = PagePool::new(page_size, d, per_seq * self.q.len());
+        let mut tables = Vec::new();
+        for i in 0..self.q.len() {
+            let mut t = BlockTable::new(cache, page_size);
+            t.ensure_capacity(self.kv, &mut pool).expect("pool sized for batch");
+            for g in 0..kvh {
+                for r in 0..self.kv {
+                    let (page, slot) = t.locate(0, g, r);
+                    let src = g * self.kv * d + r * d;
+                    pool.write_row(
+                        page,
+                        slot,
+                        &self.k[i][src..src + d],
+                        &self.v[i][src..src + d],
+                    );
+                }
+            }
+            tables.push(t);
+        }
+        (pool, tables)
+    }
+
+    fn paged_seqs<'a>(&'a self, pool: &'a PagePool, tables: &'a [BlockTable]) -> Vec<SeqAttn<'a>> {
+        (0..self.q.len())
+            .map(|i| SeqAttn {
+                q: &self.q[i],
+                kv: SeqKv::Paged {
+                    k_store: pool.k_store(),
+                    v_store: pool.v_store(),
+                    pages: tables[i].layer_pages(0),
+                    max_blocks: tables[i].max_blocks(),
+                    page_size: pool.page_size(),
+                },
+                kv_len: self.kv,
+            })
             .collect()
     }
 }
@@ -87,19 +136,25 @@ fn main() {
         ]);
     }
 
-    // --- batched decode attention: sequential vs parallel -------------
+    // --- batched decode attention: sequential vs parallel vs paged ----
     // The tentpole path: all sequences × all query heads of a decode
     // batch as one flat work queue.  Mistral-7B GQA (32 q heads / 8 KV
     // heads) at batch 8 — the ISSUE's ≥2× @ threads ≥ 4 criterion.
+    // The paged rows gather identical data through a block table
+    // (page_size 16) and must produce identical bits.
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
     {
         // ≥4 workers per the ISSUE criterion, capped at 8 to avoid
         // spawning one thread per core on large hosts; the row label
         // carries the count so undersized machines are visible.
         let threads = hw_threads.clamp(4, 8);
         let par_cfg = ParallelConfig { threads, min_work_per_thread: 0 };
+        let page_size = 16;
         for (m, nseq, kv) in [(&MISTRAL_7B, 8usize, 2048usize), (&MISTRAL_7B, 16, 1024)] {
             let data = DecodeBatchData::synth(m, nseq, kv);
             let seqs = data.seqs();
+            let (pool, tables) = data.paged(page_size);
+            let paged_seqs = data.paged_seqs(&pool, &tables);
             let n_out = nseq * m.heads as usize * m.head_dim as usize;
             let mut out = vec![0.0f32; n_out];
 
@@ -111,6 +166,13 @@ fn main() {
             let sn = bench(2, 8, || {
                 batch_decode_attention(&data.shape, &seqs, &mut out, &par_pool)
             });
+            // paged gather: bit-identical output, measured cost of the
+            // page-table indirection
+            let contig_out = out.clone();
+            let sp = bench(2, 8, || {
+                batch_decode_attention(&data.shape, &paged_seqs, &mut out, &par_pool)
+            });
+            assert_eq!(contig_out, out, "paged decode must be bit-identical");
 
             // decode-attention throughput: one generated token per
             // sequence per batch call.
@@ -126,6 +188,24 @@ fn main() {
                 rate(nseq as f64, sn.mean_s, "tok"),
                 x(s1.mean_s / sn.mean_s),
             ]);
+            tp.row(&[
+                format!("{} b={nseq} kv={kv} paged ps={page_size} threads={threads}", m.name),
+                fmt_time(sp.mean_s),
+                rate(nseq as f64, sp.mean_s, "tok"),
+                x(s1.mean_s / sp.mean_s),
+            ]);
+            json_rows.push((
+                format!("{} b={nseq} kv={kv} sequential", m.name),
+                nseq as f64 / s1.mean_s,
+            ));
+            json_rows.push((
+                format!("{} b={nseq} kv={kv} parallel threads={threads}", m.name),
+                nseq as f64 / sn.mean_s,
+            ));
+            json_rows.push((
+                format!("{} b={nseq} kv={kv} paged ps={page_size} threads={threads}", m.name),
+                nseq as f64 / sp.mean_s,
+            ));
         }
     }
 
@@ -168,6 +248,13 @@ fn main() {
             rate(m.decoded_tokens as f64, m.decode_s, "tok"),
             String::from("—"),
         ]);
+        json_rows.push((
+            format!(
+                "host engine paged decode threads={threads} (occ peak {:.0}%)",
+                m.peak_page_occupancy() * 100.0
+            ),
+            m.decoded_tokens as f64 / m.decode_s.max(1e-12),
+        ));
     }
 
     // --- KV pack (continuous-batching memcpy boundary) ----------------
@@ -282,4 +369,11 @@ fn main() {
 
     t.print();
     tp.print();
+
+    // machine-readable decode throughput for cross-PR comparison
+    let json_path = std::path::Path::new("BENCH_decode.json");
+    match write_bench_json(json_path, "decode", "tok/s", &json_rows) {
+        Ok(()) => println!("\nwrote {} ({} rows)", json_path.display(), json_rows.len()),
+        Err(e) => eprintln!("\nBENCH_decode.json not written: {e}"),
+    }
 }

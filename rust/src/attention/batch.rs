@@ -25,7 +25,7 @@
 //! between `threads = 1` (the sequential fallback, equivalent to the
 //! seed's per-sequence loop) and any `threads = N`.
 
-use super::flash::{flash_attention, FlashParams};
+use super::flash::{flash_attention_view, FlashParams, KvView};
 
 /// Parallelism knobs for the batched attention path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -206,24 +206,74 @@ impl BatchShape {
     }
 }
 
+/// Where one sequence's K/V rows live: contiguous cache planes or the
+/// paged pool behind a block table.  Both stream identical rows through
+/// [`KvView`], so the two layouts are bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub enum SeqKv<'a> {
+    /// `[kv_heads, kv_stride, head_dim]` planes (the packed engine wire
+    /// format).
+    Contig { k: &'a [f32], v: &'a [f32] },
+    /// Rows gathered through a page table: `pages` is `[kv_heads,
+    /// max_blocks]` page ids into `[num_pages, page_size, head_dim]`
+    /// stores (see `coordinator::kv_cache::{PagePool, BlockTable}`).
+    Paged {
+        k_store: &'a [f32],
+        v_store: &'a [f32],
+        pages: &'a [u32],
+        max_blocks: usize,
+        page_size: usize,
+    },
+}
+
+impl<'a> SeqKv<'a> {
+    /// (K, V) row views of KV head `g`.  `kv_stride` is the contiguous
+    /// row stride (ignored by the paged layout).
+    pub fn head(&self, g: usize, d: usize, kv_stride: usize) -> (KvView<'a>, KvView<'a>) {
+        match *self {
+            SeqKv::Contig { k, v } => {
+                let plane = kv_stride * d;
+                (
+                    KvView::Contig(&k[g * plane..][..plane]),
+                    KvView::Contig(&v[g * plane..][..plane]),
+                )
+            }
+            SeqKv::Paged { k_store, v_store, pages, max_blocks, page_size } => {
+                let p = &pages[g * max_blocks..][..max_blocks];
+                (
+                    KvView::Paged { store: k_store, pages: p, page_size },
+                    KvView::Paged { store: v_store, pages: p, page_size },
+                )
+            }
+        }
+    }
+}
+
 /// One sequence's slice of a decode batch.
 ///
-/// `q` is `[heads, head_dim]` (the one new token's query rows); `k`/`v`
-/// are the sequence's cache planes `[kv_heads, kv_stride, head_dim]` of
-/// which the first `kv_len` rows per head are valid.
+/// `q` is `[heads, head_dim]` (the one new token's query rows); `kv`
+/// names the sequence's K/V rows of which the first `kv_len` per KV
+/// head are valid.
 #[derive(Debug, Clone, Copy)]
 pub struct SeqAttn<'a> {
     pub q: &'a [f32],
-    pub k: &'a [f32],
-    pub v: &'a [f32],
+    pub kv: SeqKv<'a>,
     pub kv_len: usize,
+}
+
+impl<'a> SeqAttn<'a> {
+    /// A sequence over contiguous `[kv_heads, kv_stride, head_dim]`
+    /// cache planes (the pre-paging layout).
+    pub fn contig(q: &'a [f32], k: &'a [f32], v: &'a [f32], kv_len: usize) -> Self {
+        Self { q, kv: SeqKv::Contig { k, v }, kv_len }
+    }
 }
 
 /// Fused decode attention over a whole batch: all sequences × all query
 /// heads as one flat work queue, executed on `pool`.
 ///
 /// `out` is `[seqs, heads, head_dim]` flat.  Bit-identical for any
-/// `ParallelConfig` (see module docs).
+/// `ParallelConfig` and for contiguous-vs-paged KV (see module docs).
 pub fn batch_decode_attention(
     shape: &BatchShape,
     seqs: &[SeqAttn<'_>],
@@ -237,9 +287,26 @@ pub fn batch_decode_attention(
     let plane = shape.kv_stride * d;
     for (i, s) in seqs.iter().enumerate() {
         assert_eq!(s.q.len(), h * d, "seq {i} q shape");
-        assert_eq!(s.k.len(), kvh * plane, "seq {i} k shape");
-        assert_eq!(s.v.len(), kvh * plane, "seq {i} v shape");
         assert!(s.kv_len <= shape.kv_stride, "seq {i} kv_len > kv_stride");
+        match s.kv {
+            SeqKv::Contig { k, v } => {
+                assert_eq!(k.len(), kvh * plane, "seq {i} k shape");
+                assert_eq!(v.len(), kvh * plane, "seq {i} v shape");
+            }
+            SeqKv::Paged { k_store, v_store, pages, max_blocks, page_size } => {
+                assert!(page_size >= 1, "seq {i} page_size");
+                assert_eq!(pages.len(), kvh * max_blocks, "seq {i} page table shape");
+                assert_eq!(k_store.len(), v_store.len(), "seq {i} store shapes");
+                let used = s.kv_len.div_ceil(page_size);
+                assert!(used <= max_blocks, "seq {i} kv_len beyond page table");
+                for g in 0..kvh {
+                    for &p in &pages[g * max_blocks..][..used] {
+                        let end = (p as usize + 1) * page_size * d;
+                        assert!(end <= k_store.len(), "seq {i} page {p} out of store");
+                    }
+                }
+            }
+        }
     }
 
     // cost model: one item streams kv_len KV rows (+1 keeps zero-length
@@ -266,15 +333,15 @@ pub fn batch_decode_attention(
             scale: shape.scale,
         };
         let qh = &s.q[head * d..][..d];
-        let kh = &s.k[g * plane..][..kv * d];
-        let vh = &s.v[g * plane..][..kv * d];
-        flash_attention(qh, kh, vh, item_out, &p);
+        let (kview, vview) = s.kv.head(g, d, shape.kv_stride);
+        flash_attention_view(qh, &kview, &vview, item_out, &p);
     });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::flash::flash_attention;
     use crate::proptest::Rng;
 
     /// Reference: per-sequence GQA flash over the valid prefix.
@@ -282,13 +349,16 @@ mod tests {
         let (h, kvh, d) = (shape.heads, shape.kv_heads, shape.head_dim);
         let mut out = vec![0.0f32; seqs.len() * h * d];
         for (i, s) in seqs.iter().enumerate() {
+            let SeqKv::Contig { k: sk, v: sv } = s.kv else {
+                panic!("reference expects contiguous KV");
+            };
             // compact the valid prefix of each KV head into [kvh, kv, d]
             let kv = s.kv_len;
             let mut k = Vec::with_capacity(kvh * kv * d);
             let mut v = Vec::with_capacity(kvh * kv * d);
             for g in 0..kvh {
-                k.extend_from_slice(&s.k[g * shape.kv_stride * d..][..kv * d]);
-                v.extend_from_slice(&s.v[g * shape.kv_stride * d..][..kv * d]);
+                k.extend_from_slice(&sk[g * shape.kv_stride * d..][..kv * d]);
+                v.extend_from_slice(&sv[g * shape.kv_stride * d..][..kv * d]);
             }
             let p = FlashParams {
                 heads: h,
@@ -332,11 +402,63 @@ mod tests {
 
         fn seqs(&self) -> Vec<SeqAttn<'_>> {
             (0..self.q.len())
+                .map(|i| SeqAttn::contig(&self.q[i], &self.k[i], &self.v[i], self.lens[i]))
+                .collect()
+        }
+
+        /// The same batch with every sequence's rows scattered into a
+        /// shared paged store (per-seq tables, shuffled page order).
+        fn paged(&self) -> PagedBatch {
+            let (kvh, d, stride) = (self.shape.kv_heads, self.shape.head_dim, self.shape.kv_stride);
+            let page_size = 3;
+            let max_blocks = stride.div_ceil(page_size);
+            let pages_per_seq = kvh * max_blocks;
+            let npages = pages_per_seq * self.q.len();
+            let mut k_store = vec![0.0f32; npages * page_size * d];
+            let mut v_store = vec![0.0f32; npages * page_size * d];
+            let mut tables = Vec::new();
+            for i in 0..self.q.len() {
+                // reversed page order scatters blocks away from identity
+                let base = i * pages_per_seq;
+                let pages: Vec<u32> = (0..pages_per_seq)
+                    .map(|j| (base + pages_per_seq - 1 - j) as u32)
+                    .collect();
+                for g in 0..kvh {
+                    for r in 0..stride {
+                        let p = pages[g * max_blocks + r / page_size] as usize;
+                        let at = (p * page_size + r % page_size) * d;
+                        let src = g * stride * d + r * d;
+                        k_store[at..at + d].copy_from_slice(&self.k[i][src..src + d]);
+                        v_store[at..at + d].copy_from_slice(&self.v[i][src..src + d]);
+                    }
+                }
+                tables.push(pages);
+            }
+            PagedBatch { k_store, v_store, tables, max_blocks, page_size }
+        }
+    }
+
+    struct PagedBatch {
+        k_store: Vec<f32>,
+        v_store: Vec<f32>,
+        tables: Vec<Vec<u32>>,
+        max_blocks: usize,
+        page_size: usize,
+    }
+
+    impl PagedBatch {
+        fn seqs<'a>(&'a self, b: &'a Batch) -> Vec<SeqAttn<'a>> {
+            (0..b.q.len())
                 .map(|i| SeqAttn {
-                    q: &self.q[i],
-                    k: &self.k[i],
-                    v: &self.v[i],
-                    kv_len: self.lens[i],
+                    q: &b.q[i],
+                    kv: SeqKv::Paged {
+                        k_store: &self.k_store,
+                        v_store: &self.v_store,
+                        pages: &self.tables[i],
+                        max_blocks: self.max_blocks,
+                        page_size: self.page_size,
+                    },
+                    kv_len: b.lens[i],
                 })
                 .collect()
         }
@@ -397,10 +519,28 @@ mod tests {
         let q = vec![1.0f32; 2 * 4];
         let k = vec![1.0f32; 2 * 8 * 4];
         let v = vec![1.0f32; 2 * 8 * 4];
-        let seqs = [SeqAttn { q: &q, k: &k, v: &v, kv_len: 0 }];
+        let seqs = [SeqAttn::contig(&q, &k, &v, 0)];
         let mut out = vec![9.0f32; 2 * 4];
         batch_decode_attention(&shape, &seqs, &mut out, &pool);
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn paged_gather_is_bit_identical_to_contig() {
+        let mut rng = Rng::new(21);
+        for threads in [1usize, 4] {
+            let b = Batch::random(&mut rng, 7, 6, 3, 8, 26);
+            let contig = b.seqs();
+            let pb = b.paged();
+            let paged = pb.seqs(&b);
+            let n = contig.len() * 6 * 8;
+            let pool = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+            let mut out_c = vec![0.0; n];
+            batch_decode_attention(&b.shape, &contig, &mut out_c, &pool);
+            let mut out_p = vec![0.0; n];
+            batch_decode_attention(&b.shape, &paged, &mut out_p, &pool);
+            assert_eq!(out_c, out_p, "threads={threads}");
+        }
     }
 
     #[test]

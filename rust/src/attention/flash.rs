@@ -79,6 +79,187 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
     (s0 + s1) + (s2 + s3) + rest
 }
 
+/// A row source for K or V: either a contiguous `[rows, head_dim]`
+/// slice, or rows gathered through a page table (the paged KV cache's
+/// block-table layout — see `coordinator::kv_cache`).
+///
+/// The kernel reads rows one at a time through [`KvView::row`], so the
+/// contiguous and paged layouts stream the exact same values in the
+/// exact same order — paged attention is **bit-identical** to
+/// contiguous attention by construction.
+#[derive(Debug, Clone, Copy)]
+pub enum KvView<'a> {
+    /// Contiguous `[rows, head_dim]` row-major.
+    Contig(&'a [f32]),
+    /// `pages[r / page_size]` names the page holding row `r` at in-page
+    /// slot `r % page_size`; `store` is `[num_pages, page_size,
+    /// head_dim]` flat.
+    Paged {
+        store: &'a [f32],
+        pages: &'a [u32],
+        page_size: usize,
+    },
+}
+
+impl<'a> KvView<'a> {
+    /// Row `r` as a `head_dim`-length slice.
+    #[inline(always)]
+    pub fn row(&self, r: usize, d: usize) -> &'a [f32] {
+        match *self {
+            KvView::Contig(s) => &s[r * d..][..d],
+            KvView::Paged { store, pages, page_size } => {
+                let page = pages[r / page_size] as usize;
+                &store[(page * page_size + r % page_size) * d..][..d]
+            }
+        }
+    }
+
+    /// Rows this view can address (an upper bound for `Paged`, whose
+    /// tail pages may be unallocated sentinels — callers bound reads by
+    /// their own `kv_len`).
+    pub fn addressable_rows(&self, d: usize) -> usize {
+        match *self {
+            KvView::Contig(s) => s.len() / d.max(1),
+            KvView::Paged { pages, page_size, .. } => pages.len() * page_size,
+        }
+    }
+}
+
+/// Per-call scratch of the single-head kernel (one (bq × bkv) score
+/// tile + running online-softmax stats).
+struct FlashScratch {
+    scores: Vec<f32>,
+    m: Vec<f32>,
+    l: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+impl FlashScratch {
+    fn new(bq: usize, bkv: usize, d: usize) -> Self {
+        Self {
+            scores: vec![0.0; bq * bkv],
+            m: vec![0.0; bq],
+            l: vec![0.0; bq],
+            acc: vec![0.0; bq * d],
+        }
+    }
+}
+
+/// Effective tile sizes and geometry of one head's kernel run.
+#[derive(Debug, Clone, Copy)]
+struct HeadGeom {
+    sq: usize,
+    skv: usize,
+    d: usize,
+    causal: bool,
+    bq: usize,
+    bkv: usize,
+    scale: f32,
+}
+
+impl HeadGeom {
+    fn of(p: &FlashParams) -> Self {
+        Self {
+            sq: p.seq_q,
+            skv: p.seq_kv,
+            d: p.head_dim,
+            causal: p.causal,
+            bq: p.block_q.max(1).min(p.seq_q.max(1)),
+            bkv: p.block_kv.max(1).min(p.seq_kv.max(1)),
+            scale: p.scale,
+        }
+    }
+}
+
+/// The single-head FlashAttention2 loop over one pair of K/V views.
+fn flash_head(
+    qh: &[f32],
+    k: &KvView<'_>,
+    v: &KvView<'_>,
+    oh: &mut [f32],
+    g: HeadGeom,
+    s: &mut FlashScratch,
+) {
+    let HeadGeom { sq, skv, d, causal, bq, bkv, scale } = g;
+    let (scores, m, l, acc) = (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc);
+
+    let mut q0 = 0;
+    while q0 < sq {
+        let nq = bq.min(sq - q0);
+        m[..nq].fill(f32::NEG_INFINITY);
+        l[..nq].fill(0.0);
+        acc[..nq * d].fill(0.0);
+
+        // causal suffix alignment: row i sees cols <= i + (skv - sq)
+        let row_limit = |i: usize| -> usize {
+            if causal { q0 + i + 1 + skv - sq } else { skv }
+        };
+        let block_cols = if causal { row_limit(nq - 1).min(skv) } else { skv };
+
+        let mut k0 = 0;
+        while k0 < block_cols {
+            let nk = bkv.min(block_cols - k0);
+
+            // --- scores tile: q_blk @ k_blkᵀ -----------------------
+            for i in 0..nq {
+                let qi = &qh[(q0 + i) * d..][..d];
+                let srow = &mut scores[i * bkv..][..nk];
+                for (j, sc) in srow.iter_mut().enumerate() {
+                    *sc = dot4(qi, k.row(k0 + j, d)) * scale;
+                }
+            }
+
+            // --- online softmax update per row ---------------------
+            for i in 0..nq {
+                let limit = row_limit(i);
+                // columns of this tile visible to row i
+                let vis = limit.saturating_sub(k0).min(nk);
+                if vis == 0 {
+                    continue;
+                }
+                let srow = &mut scores[i * bkv..][..nk];
+                let mut blk_max = f32::NEG_INFINITY;
+                for &sc in &srow[..vis] {
+                    if sc > blk_max {
+                        blk_max = sc;
+                    }
+                }
+                let m_new = m[i].max(blk_max);
+                let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
+                let arow = &mut acc[i * d..][..d];
+                if alpha != 1.0 {
+                    for a in arow.iter_mut() {
+                        *a *= alpha;
+                    }
+                }
+                let mut psum = 0.0f32;
+                for j in 0..vis {
+                    let pij = (srow[j] - m_new).exp();
+                    psum += pij;
+                    let vj = v.row(k0 + j, d);
+                    for t in 0..d {
+                        arow[t] += pij * vj[t];
+                    }
+                }
+                l[i] = l[i] * alpha + psum;
+                m[i] = m_new;
+            }
+            k0 += nk;
+        }
+
+        // --- final normalize ---------------------------------------
+        for i in 0..nq {
+            let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
+            let orow = &mut oh[(q0 + i) * d..][..d];
+            let arow = &acc[i * d..][..d];
+            for t in 0..d {
+                orow[t] = arow[t] * inv;
+            }
+        }
+        q0 += nq;
+    }
+}
+
 /// FlashAttention2 forward: `out = softmax(q kᵀ·scale [+causal]) v`.
 ///
 /// With `kv_heads < heads` (GQA), query head `h` reads KV head
@@ -92,98 +273,43 @@ pub fn flash_attention(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], p: &Fla
     assert_eq!(v.len(), kvh * skv * d, "v shape");
     assert_eq!(out.len(), h * sq * d, "out shape");
     let group = p.group_size();
-    let bq = p.block_q.max(1).min(sq.max(1));
-    let bkv = p.block_kv.max(1).min(skv.max(1));
-
-    // Per-thread scratch: scores for one (bq × bkv) tile + running stats.
-    let mut scores = vec![0.0f32; bq * bkv];
-    let mut m = vec![0.0f32; bq];
-    let mut l = vec![0.0f32; bq];
-    let mut acc = vec![0.0f32; bq * d];
+    let geom = HeadGeom::of(p);
+    let mut scratch = FlashScratch::new(geom.bq, geom.bkv, d);
 
     for head in 0..h {
         let kv_head = head / group;
         let qh = &q[head * sq * d..][..sq * d];
-        let kh = &k[kv_head * skv * d..][..skv * d];
-        let vh = &v[kv_head * skv * d..][..skv * d];
+        let kview = KvView::Contig(&k[kv_head * skv * d..][..skv * d]);
+        let vview = KvView::Contig(&v[kv_head * skv * d..][..skv * d]);
         let oh = &mut out[head * sq * d..][..sq * d];
+        flash_head(qh, &kview, &vview, oh, geom, &mut scratch);
+    }
+}
 
-        let mut q0 = 0;
-        while q0 < sq {
-            let nq = bq.min(sq - q0);
-            m[..nq].fill(f32::NEG_INFINITY);
-            l[..nq].fill(0.0);
-            acc[..nq * d].fill(0.0);
+/// FlashAttention2 forward over [`KvView`] row sources — the paged-KV
+/// entry point.  All `p.heads` query heads read the *same* pair of
+/// views, so `p.kv_heads` must be 1 (callers with several KV heads run
+/// one call per head-group, as `attention::batch` does).
+pub fn flash_attention_view(
+    q: &[f32],
+    k: &KvView<'_>,
+    v: &KvView<'_>,
+    out: &mut [f32],
+    p: &FlashParams,
+) {
+    let (h, sq, skv, d) = (p.heads, p.seq_q, p.seq_kv, p.head_dim);
+    assert_eq!(p.kv_heads, 1, "flash_attention_view is single-KV-head");
+    assert_eq!(q.len(), h * sq * d, "q shape");
+    assert_eq!(out.len(), h * sq * d, "out shape");
+    assert!(k.addressable_rows(d) >= skv, "k view shorter than seq_kv");
+    assert!(v.addressable_rows(d) >= skv, "v view shorter than seq_kv");
+    let geom = HeadGeom::of(p);
+    let mut scratch = FlashScratch::new(geom.bq, geom.bkv, d);
 
-            // causal suffix alignment: row i sees cols <= i + (skv - sq)
-            let row_limit = |i: usize| -> usize {
-                if p.causal { q0 + i + 1 + skv - sq } else { skv }
-            };
-            let block_cols = if p.causal { row_limit(nq - 1).min(skv) } else { skv };
-
-            let mut k0 = 0;
-            while k0 < block_cols {
-                let nk = bkv.min(block_cols - k0);
-
-                // --- scores tile: q_blk @ k_blkᵀ -----------------------
-                for i in 0..nq {
-                    let qi = &qh[(q0 + i) * d..][..d];
-                    let srow = &mut scores[i * bkv..][..nk];
-                    for (j, s) in srow.iter_mut().enumerate() {
-                        let kj = &kh[(k0 + j) * d..][..d];
-                        *s = dot4(qi, kj) * p.scale;
-                    }
-                }
-
-                // --- online softmax update per row ---------------------
-                for i in 0..nq {
-                    let limit = row_limit(i);
-                    // columns of this tile visible to row i
-                    let vis = limit.saturating_sub(k0).min(nk);
-                    if vis == 0 {
-                        continue;
-                    }
-                    let srow = &mut scores[i * bkv..][..nk];
-                    let mut blk_max = f32::NEG_INFINITY;
-                    for &s in &srow[..vis] {
-                        if s > blk_max {
-                            blk_max = s;
-                        }
-                    }
-                    let m_new = m[i].max(blk_max);
-                    let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
-                    let arow = &mut acc[i * d..][..d];
-                    if alpha != 1.0 {
-                        for a in arow.iter_mut() {
-                            *a *= alpha;
-                        }
-                    }
-                    let mut psum = 0.0f32;
-                    for j in 0..vis {
-                        let pij = (srow[j] - m_new).exp();
-                        psum += pij;
-                        let vj = &vh[(k0 + j) * d..][..d];
-                        for t in 0..d {
-                            arow[t] += pij * vj[t];
-                        }
-                    }
-                    l[i] = l[i] * alpha + psum;
-                    m[i] = m_new;
-                }
-                k0 += nk;
-            }
-
-            // --- final normalize ---------------------------------------
-            for i in 0..nq {
-                let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
-                let orow = &mut oh[(q0 + i) * d..][..d];
-                let arow = &acc[i * d..][..d];
-                for t in 0..d {
-                    orow[t] = arow[t] * inv;
-                }
-            }
-            q0 += nq;
-        }
+    for head in 0..h {
+        let qh = &q[head * sq * d..][..sq * d];
+        let oh = &mut out[head * sq * d..][..sq * d];
+        flash_head(qh, k, v, oh, geom, &mut scratch);
     }
 }
 
@@ -303,6 +429,51 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// A paged view over scattered pages must be bit-identical to the
+    /// contiguous kernel on the same rows.
+    #[test]
+    fn view_paged_equals_contig() {
+        let (h, skv, d, page_size) = (3usize, 29usize, 8usize, 4usize);
+        let mut rng = crate::proptest::Rng::new(5);
+        let q = rng.f32_vec(h * d);
+        let k = rng.f32_vec(skv * d);
+        let v = rng.f32_vec(skv * d);
+
+        // scatter rows into an oversized store through a permuted map
+        let nblocks = skv.div_ceil(page_size);
+        let npages = nblocks + 2;
+        let pages: Vec<u32> = (0..nblocks).map(|b| (npages - 1 - b) as u32).collect();
+        let mut kstore = vec![0.0f32; npages * page_size * d];
+        let mut vstore = vec![0.0f32; npages * page_size * d];
+        for r in 0..skv {
+            let p = pages[r / page_size] as usize;
+            let at = (p * page_size + r % page_size) * d;
+            kstore[at..at + d].copy_from_slice(&k[r * d..][..d]);
+            vstore[at..at + d].copy_from_slice(&v[r * d..][..d]);
+        }
+
+        let p = FlashParams {
+            heads: h,
+            kv_heads: 1,
+            seq_q: 1,
+            seq_kv: skv,
+            head_dim: d,
+            causal: false,
+            block_q: 1,
+            block_kv: 7,
+            scale: 1.0 / (d as f32).sqrt(),
+        };
+        let mut contig = vec![0.0; h * d];
+        flash_attention(&q, &k, &v, &mut contig, &p);
+
+        let kview = KvView::Paged { store: &kstore, pages: &pages, page_size };
+        let vview = KvView::Paged { store: &vstore, pages: &pages, page_size };
+        assert_eq!(kview.addressable_rows(d), nblocks * page_size);
+        let mut paged = vec![0.0; h * d];
+        flash_attention_view(&q, &kview, &vview, &mut paged, &p);
+        assert_eq!(contig, paged, "paged gather must not change bits");
     }
 
     /// GQA must equal MHA with each KV head repeated `group` times.

@@ -121,6 +121,39 @@ pub fn classify_block(row0: u64, col0: u64, b: usize) -> BlockKind {
     }
 }
 
+// ---------------------------------------------------------------------
+// Chunked-prefill masking
+// ---------------------------------------------------------------------
+//
+// Chunked prefill runs a prompt in slices of rows: chunk rows are
+// *relative*, but causal visibility is over *absolute* positions, so a
+// chunk starting at absolute position `chunk_start` attends both to all
+// KV written by earlier chunks and, triangularly, to its own rows.  The
+// helpers below express that shift; composing per-chunk masks over any
+// partition reproduces the full causal mask exactly (property-tested),
+// which is the correctness contract of `Backend::prefill_chunk`.
+
+/// Visible KV columns of row `r` (chunk-relative) of a prefill chunk
+/// whose first row sits at absolute position `chunk_start`: columns
+/// `0 ..= chunk_start + r`, i.e. `chunk_start + r + 1` of them.
+pub fn chunk_row_visible(chunk_start: usize, r: usize) -> usize {
+    chunk_start + r + 1
+}
+
+/// Classify a b×b attention_score block of a chunked-prefill step:
+/// block rows start at chunk-relative `row0` in the chunk at
+/// `chunk_start`; columns are absolute KV positions from `col0`.
+pub fn classify_chunk_block(chunk_start: u64, row0: u64, col0: u64, b: usize) -> BlockKind {
+    classify_block(chunk_start + row0, col0, b)
+}
+
+/// Extract the B-mask of a chunked-prefill block from the M-mask
+/// generator — the shifted-view trick works unchanged because only the
+/// *absolute* row offset enters the shift.
+pub fn chunk_b_mask(mm: &MMask, chunk_start: u64, row0: u64, col0: u64, b: usize) -> Vec<u8> {
+    mm.b_mask(chunk_start + row0, col0, b)
+}
+
 /// Count block kinds over the full (S/b)² causal grid — drives the Cube /
 /// Vector savings accounting in the Ascend model and Table 2.
 pub fn census(seq: u64, b: usize) -> (u64, u64, u64) {
@@ -232,6 +265,66 @@ mod tests {
             prop_ensure!(
                 mm.b_mask(row0, col0, b) == b_mask_direct(row0, col0, b),
                 "({row0},{col0}) b={b} m={m}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Stacking per-chunk visibilities over any random partition of S
+    /// rows reproduces the full causal mask — chunk boundaries change
+    /// nothing (the `prefill_chunk` correctness contract).
+    #[test]
+    fn prop_chunked_masks_tile_causal() {
+        check(128, |rng| {
+            let s = rng.range(1, 48);
+            // random partition of [0, s)
+            let mut starts = vec![0usize];
+            while *starts.last().unwrap() < s {
+                let last = *starts.last().unwrap();
+                starts.push(last + rng.range(1, s - last + 1));
+            }
+            for w in starts.windows(2) {
+                let (chunk_start, chunk_end) = (w[0], w[1]);
+                for r in 0..chunk_end - chunk_start {
+                    let vis = chunk_row_visible(chunk_start, r);
+                    let abs_row = chunk_start + r;
+                    prop_ensure!(
+                        vis == abs_row + 1,
+                        "s={s} chunk_start={chunk_start} r={r}: vis {vis}"
+                    );
+                    for c in 0..s {
+                        let visible = c < vis;
+                        prop_ensure!(
+                            visible == (c <= abs_row),
+                            "s={s} row {abs_row} col {c}: chunked {visible}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Chunk-block classification and B-mask extraction agree with the
+    /// absolute-offset oracle for random chunk offsets.
+    #[test]
+    fn prop_chunk_blocks_match_absolute() {
+        check(128, |rng| {
+            let chunk_start = rng.below(1024);
+            let row0 = rng.below(64);
+            let col0 = rng.below(1024);
+            let b = rng.range(1, 12);
+            let m = b + rng.range(0, 8);
+            let mm = MMask::new(m);
+            prop_ensure!(
+                classify_chunk_block(chunk_start, row0, col0, b)
+                    == classify_block(chunk_start + row0, col0, b),
+                "classify ({chunk_start},{row0},{col0}) b={b}"
+            );
+            prop_ensure!(
+                chunk_b_mask(&mm, chunk_start, row0, col0, b)
+                    == b_mask_direct(chunk_start + row0, col0, b),
+                "b_mask ({chunk_start},{row0},{col0}) b={b} m={m}"
             );
             Ok(())
         });

@@ -9,8 +9,10 @@
 //! * [`batch`]    — the serving hot path: decode attention fused across a
 //!   whole batch (all sequences × all query heads as one flat,
 //!   cost-weighted work queue) on a scoped thread pool.  `threads = 1` is
-//!   bit-identical to the per-sequence loop; the engine selects
-//!   parallelism via `ParallelConfig` on its config (see `DESIGN.md`);
+//!   bit-identical to the per-sequence loop; K/V rows come from
+//!   contiguous planes or from the paged KV cache through a block table
+//!   (`SeqKv`), bit-identically; the engine selects parallelism via
+//!   `ParallelConfig` on its config (see `DESIGN.md`);
 //! * [`tiling`]   — the two-level tile-size planner under L0/L1 capacity
 //!   constraints (§4.1);
 //! * [`mask`]     — the tiling-mask generator: M-mask, B-mask extraction
@@ -30,4 +32,5 @@ pub mod standard;
 pub mod tiling;
 pub mod volta_layout;
 
-pub use batch::{batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool};
+pub use batch::{batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool};
+pub use flash::KvView;

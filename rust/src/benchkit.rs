@@ -1,9 +1,12 @@
 //! Minimal benchmarking harness (criterion is not available offline).
 //!
 //! Used by every `rust/benches/*.rs` target: warmup, timed iterations,
-//! robust statistics, and the paper-vs-measured table printer that the
-//! table/figure reproduction benches share.
+//! robust statistics, the paper-vs-measured table printer that the
+//! table/figure reproduction benches share, and machine-readable JSON
+//! emission (`BENCH_<name>.json`) so the perf trajectory is comparable
+//! across PRs without scraping stdout.
 
+use std::path::Path;
 use std::time::Instant;
 
 /// Timing statistics over the measured iterations.
@@ -126,6 +129,64 @@ pub fn rate(events: f64, seconds: f64, unit: &str) -> String {
     }
 }
 
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a bench report as a JSON object:
+/// `{"bench": .., "unit": .., "rows": [{"config": .., "value": ..}, ..]}`.
+/// Non-finite values serialize as `null`.
+pub fn bench_json(bench: &str, unit: &str, rows: &[(String, f64)]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\"bench\":\"{}\",\"unit\":\"{}\",\"rows\":[",
+        json_escape(bench),
+        json_escape(unit)
+    ));
+    for (i, (config, value)) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        if value.is_finite() {
+            s.push_str(&format!(
+                "{{\"config\":\"{}\",\"value\":{value}}}",
+                json_escape(config)
+            ));
+        } else {
+            s.push_str(&format!(
+                "{{\"config\":\"{}\",\"value\":null}}",
+                json_escape(config)
+            ));
+        }
+    }
+    s.push_str("]}\n");
+    s
+}
+
+/// Write `bench_json` to `path` (conventionally `BENCH_<name>.json` in
+/// the invocation directory) so each PR's numbers are machine-diffable.
+pub fn write_bench_json(
+    path: &Path,
+    bench: &str,
+    unit: &str,
+    rows: &[(String, f64)],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(bench, unit, rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +229,32 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn bench_json_parses_back() {
+        let rows = vec![
+            ("seq threads=1".to_string(), 1234.5),
+            ("par \"q\"\\x".to_string(), f64::NAN),
+        ];
+        let s = bench_json("decode", "tok/s", &rows);
+        let j = crate::runtime::json::Json::parse(&s).expect("emitted JSON parses");
+        assert_eq!(j.req_str("bench").unwrap(), "decode");
+        assert_eq!(j.req_str("unit").unwrap(), "tok/s");
+        let arr = j.req_arr("rows").unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req_str("config").unwrap(), "seq threads=1");
+        assert!((arr[0].get("value").unwrap().num().unwrap() - 1234.5).abs() < 1e-9);
+        assert_eq!(arr[1].req_str("config").unwrap(), "par \"q\"\\x");
+        assert!(arr[1].get("value").unwrap().num().is_none(), "NaN → null");
+    }
+
+    #[test]
+    fn write_bench_json_roundtrip() {
+        let path = std::env::temp_dir().join("fastattn_bench_json_test.json");
+        write_bench_json(&path, "b", "u", &[("c".into(), 2.0)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\":\"b\""));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -17,14 +17,20 @@
 //!
 //! Both speak the engine's wire format: token/position vectors per batch
 //! slot plus packed `[L, B, Nkv, S, D]` KV planes (see
-//! [`kv_cache`](super::kv_cache)).
+//! [`kv_cache`](super::kv_cache)).  The host backend additionally
+//! executes against the **paged** KV cache (`supports_paged`):
+//! [`Backend::decode_paged`] and [`Backend::prefill_chunk`] read and
+//! write rows in place through per-sequence block tables, which is what
+//! lets the engine drop the pack/unpack memcpy and admit prompts longer
+//! than any prefill bucket.  Plane and paged execution share
+//! `forward_step`, so they are bit-identical.
 
 use anyhow::{bail, Context, Result};
 
 use crate::attention::batch::{
-    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool,
+    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
-use crate::coordinator::kv_cache::CacheShape;
+use crate::coordinator::kv_cache::{BlockTable, CacheShape, PagePool};
 use crate::models::ModelShape;
 use crate::proptest::Rng;
 use crate::runtime::{HostTensor, Manifest, Runtime};
@@ -84,6 +90,45 @@ pub trait Backend {
         v_plane: Vec<f32>,
         pos: &[i32],
     ) -> Result<StepOut>;
+
+    /// True when the backend can execute against a paged KV cache —
+    /// the engine then serves through [`Backend::decode_paged`] /
+    /// [`Backend::prefill_chunk`] instead of packing planes.
+    fn supports_paged(&self) -> bool {
+        false
+    }
+
+    /// One decode step over paged KV: each row's K/V is read and the
+    /// new token's row written *in place* through its block table (no
+    /// pack/unpack memcpy).  Tables must already have capacity for row
+    /// `pos`.  Returns `[rows, vocab]` logits.
+    fn decode_paged(&mut self, _rows: &[PagedRow<'_>], _pool: &mut PagePool) -> Result<Vec<f32>> {
+        bail!("backend does not support paged KV")
+    }
+
+    /// One chunked-prefill step for a single sequence: run `tokens`
+    /// (occupying absolute positions `start_pos ..`) through the model,
+    /// writing KV through `table`; causal masking across the chunk
+    /// boundary is exact because every token attends to all rows
+    /// `<= its position`, including those written by earlier chunks.
+    /// Returns the chunk's last-token `[vocab]` logits.
+    fn prefill_chunk(
+        &mut self,
+        _tokens: &[i32],
+        _start_pos: usize,
+        _table: &BlockTable,
+        _pool: &mut PagePool,
+    ) -> Result<Vec<f32>> {
+        bail!("backend does not support chunked prefill")
+    }
+}
+
+/// One paged decode row: the sequence behind `table` feeds `token` at
+/// cache position `pos`.
+pub struct PagedRow<'a> {
+    pub table: &'a BlockTable,
+    pub token: i32,
+    pub pos: usize,
 }
 
 // ---------------------------------------------------------------------
@@ -370,16 +415,15 @@ impl HostModelBackend {
     }
 
     /// One token step for `rows = [(slot, token, pos)]`: writes each
-    /// row's new K/V into the planes, runs **batched** decode attention
-    /// across all rows × heads per layer, returns final hidden states
-    /// aligned with `rows`.
-    fn forward_step(
-        &self,
-        batch: usize,
-        rows: &[(usize, i32, usize)],
-        k_plane: &mut [f32],
-        v_plane: &mut [f32],
-    ) -> Vec<Vec<f32>> {
+    /// row's new K/V into the backing (packed planes or the paged
+    /// pool), runs **batched** decode attention across all rows × heads
+    /// per layer, returns final hidden states aligned with `rows`.
+    ///
+    /// For [`StepKv::Plane`], `slot` indexes the batch plane; for
+    /// [`StepKv::Paged`], `slot` indexes `tables`.  The per-row math is
+    /// identical either way — the backings stream the same rows through
+    /// `KvView` — so plane and paged execution are bit-identical.
+    fn forward_step(&self, rows: &[(usize, i32, usize)], kv: &mut StepKv<'_>) -> Vec<Vec<f32>> {
         let d = self.d_model();
         let (heads, kvh, hd) = (self.info.n_heads, self.info.n_kv_heads, self.info.head_dim);
         let (qdim, kvdim) = (heads * hd, kvh * hd);
@@ -401,27 +445,64 @@ impl HostModelBackend {
                 matvec(&h, &w.wq, &mut qbuf[ri * qdim..][..qdim]);
                 matvec(&h, &w.wk, &mut krow);
                 matvec(&h, &w.wv, &mut vrow);
-                for g in 0..kvh {
-                    let at = self.cache.batch_row_offset(batch, l, slot, g, pos);
-                    k_plane[at..at + hd].copy_from_slice(&krow[g * hd..][..hd]);
-                    v_plane[at..at + hd].copy_from_slice(&vrow[g * hd..][..hd]);
+                match kv {
+                    StepKv::Plane { batch, k, v } => {
+                        for g in 0..kvh {
+                            let at = self.cache.batch_row_offset(*batch, l, slot, g, pos);
+                            k[at..at + hd].copy_from_slice(&krow[g * hd..][..hd]);
+                            v[at..at + hd].copy_from_slice(&vrow[g * hd..][..hd]);
+                        }
+                    }
+                    StepKv::Paged { pool, tables } => {
+                        for g in 0..kvh {
+                            let (page, in_page) = tables[ri].locate(l, g, pos);
+                            pool.write_row(
+                                page,
+                                in_page,
+                                &krow[g * hd..][..hd],
+                                &vrow[g * hd..][..hd],
+                            );
+                        }
+                    }
                 }
             }
 
             // ---- fused batched attention over all rows × heads -------
-            let kp: &[f32] = k_plane;
-            let vp: &[f32] = v_plane;
-            let seqs: Vec<SeqAttn<'_>> = rows
-                .iter()
-                .enumerate()
-                .map(|(ri, &(slot, _, pos))| SeqAttn {
-                    q: &qbuf[ri * qdim..][..qdim],
-                    k: &kp[self.cache.batch_slot_offset(batch, l, slot)..][..le],
-                    v: &vp[self.cache.batch_slot_offset(batch, l, slot)..][..le],
-                    kv_len: pos + 1,
-                })
-                .collect();
-            batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
+            {
+                let seqs: Vec<SeqAttn<'_>> = match &*kv {
+                    StepKv::Plane { batch, k, v } => {
+                        let kp: &[f32] = &**k;
+                        let vp: &[f32] = &**v;
+                        rows.iter()
+                            .enumerate()
+                            .map(|(ri, &(slot, _, pos))| SeqAttn {
+                                q: &qbuf[ri * qdim..][..qdim],
+                                kv: SeqKv::Contig {
+                                    k: &kp[self.cache.batch_slot_offset(*batch, l, slot)..][..le],
+                                    v: &vp[self.cache.batch_slot_offset(*batch, l, slot)..][..le],
+                                },
+                                kv_len: pos + 1,
+                            })
+                            .collect()
+                    }
+                    StepKv::Paged { pool, tables } => rows
+                        .iter()
+                        .enumerate()
+                        .map(|(ri, &(_, _, pos))| SeqAttn {
+                            q: &qbuf[ri * qdim..][..qdim],
+                            kv: SeqKv::Paged {
+                                k_store: pool.k_store(),
+                                v_store: pool.v_store(),
+                                pages: tables[ri].layer_pages(l),
+                                max_blocks: tables[ri].max_blocks(),
+                                page_size: tables[ri].page_size(),
+                            },
+                            kv_len: pos + 1,
+                        })
+                        .collect(),
+                };
+                batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
+            }
 
             // ---- output proj + MLP (per row, sequential) -------------
             for (ri, x) in xs.iter_mut().enumerate() {
@@ -447,6 +528,44 @@ impl HostModelBackend {
     fn plane_elems(&self, batch: usize) -> usize {
         self.info.n_layers * batch * self.cache.layer_elems()
     }
+
+    /// A table's geometry must match the model's cache shape and the
+    /// pool's page layout — a mismatched pair would index the row store
+    /// with the wrong stride and corrupt KV silently.
+    fn check_table(&self, t: &BlockTable, pool: &PagePool, what: &str) -> Result<()> {
+        if t.layers() != self.cache.layers || t.kv_heads() != self.cache.kv_heads {
+            bail!(
+                "{what}: block table is [{} layers, {} kv_heads], model wants [{}, {}]",
+                t.layers(),
+                t.kv_heads(),
+                self.cache.layers,
+                self.cache.kv_heads
+            );
+        }
+        if t.page_size() != pool.page_size() {
+            bail!(
+                "{what}: table page_size {} != pool page_size {}",
+                t.page_size(),
+                pool.page_size()
+            );
+        }
+        if pool.head_dim() != self.cache.head_dim {
+            bail!(
+                "{what}: pool head_dim {} != model head_dim {}",
+                pool.head_dim(),
+                self.cache.head_dim
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Where a host-model forward step reads/writes KV: the engine wire
+/// format's packed `[L, B, Nkv, S, D]` planes, or the paged pool behind
+/// per-row block tables.
+enum StepKv<'a> {
+    Plane { batch: usize, k: &'a mut [f32], v: &'a mut [f32] },
+    Paged { pool: &'a mut PagePool, tables: &'a [&'a BlockTable] },
 }
 
 impl Backend for HostModelBackend {
@@ -493,7 +612,10 @@ impl Backend for HostModelBackend {
                 .filter(|&i| (t as i32) < lengths[i])
                 .map(|i| (i, tokens[i * seq + t], t))
                 .collect();
-            let xs = self.forward_step(batch, &rows, &mut k_plane, &mut v_plane);
+            let xs = self.forward_step(
+                &rows,
+                &mut StepKv::Plane { batch, k: &mut k_plane, v: &mut v_plane },
+            );
             for (&(slot, _, _), x) in rows.iter().zip(xs) {
                 if t as i32 == lengths[slot] - 1 {
                     finals[slot] = x;
@@ -535,7 +657,10 @@ impl Backend for HostModelBackend {
         }
         let rows: Vec<(usize, i32, usize)> =
             (0..batch).map(|i| (i, tokens[i], pos[i] as usize)).collect();
-        let xs = self.forward_step(batch, &rows, &mut k_plane, &mut v_plane);
+        let xs = self.forward_step(
+            &rows,
+            &mut StepKv::Plane { batch, k: &mut k_plane, v: &mut v_plane },
+        );
 
         let vocab = self.info.vocab;
         let mut logits = vec![0.0f32; batch * vocab];
@@ -543,6 +668,87 @@ impl Backend for HostModelBackend {
             self.logits_row(x, &mut logits[slot * vocab..][..vocab]);
         }
         Ok(StepOut { logits, k_plane, v_plane })
+    }
+
+    fn supports_paged(&self) -> bool {
+        true
+    }
+
+    fn decode_paged(&mut self, rows: &[PagedRow<'_>], pool: &mut PagePool) -> Result<Vec<f32>> {
+        for (i, r) in rows.iter().enumerate() {
+            self.check_table(r.table, pool, "decode_paged")?;
+            if r.pos >= self.cache.max_seq {
+                bail!(
+                    "decode_paged row {i}: pos {} out of cache range {}",
+                    r.pos,
+                    self.cache.max_seq
+                );
+            }
+            if r.table.capacity_tokens() <= r.pos {
+                bail!(
+                    "decode_paged row {i}: table holds {} tokens, row {} needs capacity first",
+                    r.table.capacity_tokens(),
+                    r.pos
+                );
+            }
+        }
+        let tables: Vec<&BlockTable> = rows.iter().map(|r| r.table).collect();
+        let frows: Vec<(usize, i32, usize)> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.token, r.pos))
+            .collect();
+        let xs = self.forward_step(&frows, &mut StepKv::Paged { pool, tables: &tables });
+
+        let vocab = self.info.vocab;
+        let mut logits = vec![0.0f32; rows.len() * vocab];
+        for (i, x) in xs.iter().enumerate() {
+            self.logits_row(x, &mut logits[i * vocab..][..vocab]);
+        }
+        Ok(logits)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        start_pos: usize,
+        table: &BlockTable,
+        pool: &mut PagePool,
+    ) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("prefill_chunk: empty chunk");
+        }
+        self.check_table(table, pool, "prefill_chunk")?;
+        let end = start_pos + tokens.len();
+        if end > self.cache.max_seq {
+            bail!("prefill_chunk: positions ..{end} exceed max_seq {}", self.cache.max_seq);
+        }
+        if table.capacity_tokens() < end {
+            bail!(
+                "prefill_chunk: table holds {} tokens, chunk ends at {end}",
+                table.capacity_tokens()
+            );
+        }
+        let tables = [table];
+        let mut last: Vec<f32> = Vec::new();
+        for (t, &tok) in tokens.iter().enumerate() {
+            // chunk-boundary causality contract: row `t` of this chunk
+            // attends exactly the KV rows `attention::mask` says it may
+            // (forward_step derives kv_len = pos + 1 from the same
+            // absolute position).
+            debug_assert_eq!(
+                crate::attention::mask::chunk_row_visible(start_pos, t),
+                start_pos + t + 1,
+            );
+            let xs = self.forward_step(
+                &[(0, tok, start_pos + t)],
+                &mut StepKv::Paged { pool, tables: &tables },
+            );
+            last = xs.into_iter().next().expect("one row per step");
+        }
+        let mut logits = vec![0.0f32; self.info.vocab];
+        self.logits_row(&last, &mut logits);
+        Ok(logits)
     }
 }
 
@@ -613,6 +819,105 @@ mod tests {
         assert!(be
             .decode(1, &[0], vec![0.0; n], vec![0.0; n], &[be.cache.max_seq as i32])
             .is_err());
+    }
+
+    /// Chunked paged prefill must be bit-identical to the plane prefill
+    /// of the same prompt, for any chunk partition — the chunk-boundary
+    /// causal-masking property.
+    #[test]
+    fn chunked_paged_prefill_matches_plane() {
+        let mut rng = Rng::new(99);
+        for case in 0..12u64 {
+            let mut be = backend(ParallelConfig::sequential());
+            let len = rng.range(1, 33);
+            let toks: Vec<i32> = (0..len).map(|_| rng.below(64) as i32).collect();
+
+            // plane path: one bucketed prefill over the whole prompt
+            let plane = be.prefill(1, len, &toks, &[len as i32]).unwrap();
+
+            // paged path: random chunk partition
+            let page_size = rng.range(1, 7);
+            let mut pool = PagePool::new(
+                page_size,
+                be.cache.head_dim,
+                BlockTable::pages_needed(be.cache, page_size, be.cache.max_seq),
+            );
+            let mut table = BlockTable::new(be.cache, page_size);
+            let mut start = 0;
+            let mut logits = Vec::new();
+            while start < len {
+                let chunk = rng.range(1, len - start + 1);
+                let end = start + chunk;
+                table.ensure_capacity(end, &mut pool).unwrap();
+                logits = be
+                    .prefill_chunk(&toks[start..end], start, &table, &mut pool)
+                    .unwrap();
+                start = end;
+            }
+            assert_eq!(
+                &plane.logits[..be.info.vocab],
+                &logits[..],
+                "case {case}: len={len} page_size={page_size}"
+            );
+
+            // the caches agree row for row
+            for l in 0..be.cache.layers {
+                for g in 0..be.cache.kv_heads {
+                    for r in 0..len {
+                        let at = be.cache.batch_row_offset(1, l, 0, g, r);
+                        let (page, slot) = table.locate(l, g, r);
+                        let pat = (page as usize * page_size + slot) * be.cache.head_dim;
+                        assert_eq!(
+                            &plane.k_plane[at..at + be.cache.head_dim],
+                            &pool.k_store()[pat..pat + be.cache.head_dim],
+                            "case {case}: K row l={l} g={g} r={r}"
+                        );
+                        assert_eq!(
+                            &plane.v_plane[at..at + be.cache.head_dim],
+                            &pool.v_store()[pat..pat + be.cache.head_dim],
+                            "case {case}: V row l={l} g={g} r={r}"
+                        );
+                    }
+                }
+            }
+
+            // decode continuation agrees bit for bit too
+            let next = 7i32;
+            let dp = be
+                .decode(1, &[next], plane.k_plane, plane.v_plane, &[len as i32])
+                .unwrap();
+            table.ensure_capacity(len + 1, &mut pool).unwrap();
+            let rows = [PagedRow { table: &table, token: next, pos: len }];
+            let dl = be.decode_paged(&rows, &mut pool).unwrap();
+            assert_eq!(&dp.logits[..be.info.vocab], &dl[..], "case {case}: decode");
+        }
+    }
+
+    #[test]
+    fn paged_rejects_bad_geometry() {
+        let mut be = backend(ParallelConfig::sequential());
+        let mut pool = PagePool::new(4, be.cache.head_dim, 64);
+        let mut table = BlockTable::new(be.cache, 4);
+        // no capacity yet → decode_paged refuses
+        let rows = [PagedRow { table: &table, token: 1, pos: 0 }];
+        assert!(be.decode_paged(&rows, &mut pool).is_err());
+        // wrong-shape table refused
+        let other = CacheShape { layers: 1, kv_heads: 1, max_seq: 8, head_dim: be.cache.head_dim };
+        let bad = BlockTable::new(other, 4);
+        let rows = [PagedRow { table: &bad, token: 1, pos: 0 }];
+        assert!(be.decode_paged(&rows, &mut pool).is_err());
+        // page_size mismatch between table and pool refused (would
+        // otherwise index the row store with the wrong stride)
+        let mut pool8 = PagePool::new(8, be.cache.head_dim, 64);
+        let mut skewed = BlockTable::new(be.cache, 8);
+        skewed.ensure_capacity(1, &mut pool8).unwrap();
+        let rows = [PagedRow { table: &skewed, token: 1, pos: 0 }];
+        assert!(be.decode_paged(&rows, &mut pool).is_err());
+        // chunk beyond capacity refused; empty chunk refused
+        assert!(be.prefill_chunk(&[1, 2], 0, &table, &mut pool).is_err());
+        table.ensure_capacity(2, &mut pool).unwrap();
+        assert!(be.prefill_chunk(&[], 0, &table, &mut pool).is_err());
+        assert!(be.prefill_chunk(&[1, 2], 0, &table, &mut pool).is_ok());
     }
 
     fn pad(toks: &[i32], s: usize) -> Vec<i32> {

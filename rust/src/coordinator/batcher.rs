@@ -6,10 +6,50 @@
 //! bucket; decode batches take up to `max(decode_batches)` active
 //! sequences regardless of their positions (per-row `pos`/`lengths` make
 //! ragged batches exact — see `python/compile/model.py`).
+//!
+//! Admission is typed ([`AdmitError`]): only empty prompts and
+//! KV-budget-impossible lengths are rejected outright.  With chunked
+//! prefill enabled (`allow_chunked`, the paged engine path) prompts
+//! longer than the largest prefill bucket are admissible — the engine
+//! splits them into bucket-sized chunks; without it they fit no lowered
+//! artifact and are refused with [`AdmitError::NoBucket`].
 
 use std::collections::VecDeque;
+use std::fmt;
 
 use super::request::{Request, RequestId};
+
+/// Why a request cannot be admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Empty prompts carry no work.
+    EmptyPrompt,
+    /// `prompt + max_new_tokens` can never fit the per-sequence KV
+    /// capacity, whatever the scheduler does.
+    ImpossibleLength { need: usize, capacity: usize },
+    /// The prompt fits no prefill bucket and chunked prefill is off
+    /// (the contiguous / artifact path).
+    NoBucket { len: usize, max_bucket: usize },
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::EmptyPrompt => write!(f, "empty prompt"),
+            Self::ImpossibleLength { need, capacity } => write!(
+                f,
+                "prompt + max_new_tokens = {need} tokens exceeds KV capacity {capacity}"
+            ),
+            Self::NoBucket { len, max_bucket } => write!(
+                f,
+                "prompt of {len} tokens exceeds the largest prefill bucket \
+                 {max_bucket} and chunked prefill is unavailable"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 /// A planned prefill execution.
 #[derive(Debug, Clone)]
@@ -39,6 +79,11 @@ pub struct BatcherConfig {
     pub decode_batches: Vec<usize>,
     /// Max sequences decoding concurrently (KV budget).
     pub max_active: usize,
+    /// Per-sequence KV capacity in tokens (prompt + generated).
+    pub max_seq_tokens: usize,
+    /// Admit prompts longer than the largest prefill bucket (the engine
+    /// runs them as chunked prefill over the paged cache).
+    pub allow_chunked: bool,
 }
 
 /// The waiting queue + batch formation logic.
@@ -53,18 +98,52 @@ impl Batcher {
         Self { cfg, waiting: VecDeque::new() }
     }
 
-    /// Enqueue a request; rejects prompts that fit no bucket.
-    pub fn push(&mut self, req: Request) -> Result<(), Request> {
-        let max_seq = self.cfg.prefill_seqs.iter().copied().max().unwrap_or(0);
-        if req.prompt.is_empty() || req.prompt.len() > max_seq {
-            return Err(req);
+    /// Enqueue a request.  Rejects only empty prompts and KV-impossible
+    /// lengths — and, when chunked prefill is unavailable, prompts that
+    /// fit no prefill bucket.
+    pub fn push(&mut self, req: Request) -> Result<(), AdmitError> {
+        if req.prompt.is_empty() {
+            return Err(AdmitError::EmptyPrompt);
+        }
+        let need = req.prompt.len() + req.params.max_new_tokens;
+        if need > self.cfg.max_seq_tokens {
+            return Err(AdmitError::ImpossibleLength {
+                need,
+                capacity: self.cfg.max_seq_tokens,
+            });
+        }
+        let max_bucket = self.cfg.prefill_seqs.iter().copied().max().unwrap_or(0);
+        if !self.cfg.allow_chunked && req.prompt.len() > max_bucket {
+            return Err(AdmitError::NoBucket { len: req.prompt.len(), max_bucket });
         }
         self.waiting.push_back(req);
         Ok(())
     }
 
+    /// Put a preempted request back at the head of the line — it was
+    /// admitted before everything still waiting, so FCFS order is
+    /// preserved.
+    pub fn requeue_front(&mut self, req: Request) {
+        self.waiting.push_front(req);
+    }
+
     pub fn waiting(&self) -> usize {
         self.waiting.len()
+    }
+
+    /// The head-of-line request, if any.
+    pub fn peek(&self) -> Option<&Request> {
+        self.waiting.front()
+    }
+
+    /// Pop the head-of-line request for chunked (paged) admission — one
+    /// sequence at a time; `None` when the active-capacity budget is
+    /// full.
+    pub fn next_request(&mut self, active_now: usize) -> Option<Request> {
+        if self.cfg.max_active.saturating_sub(active_now) == 0 {
+            return None;
+        }
+        self.waiting.pop_front()
     }
 
     /// Smallest bucket ≥ want, if any.
@@ -134,6 +213,8 @@ mod tests {
             prefill_seqs: vec![32, 64, 128],
             decode_batches: vec![1, 4],
             max_active: 8,
+            max_seq_tokens: 256,
+            allow_chunked: false,
         }
     }
 
@@ -193,9 +274,56 @@ mod tests {
     #[test]
     fn rejects_oversized_and_empty() {
         let mut b = Batcher::new(cfg());
-        assert!(b.push(req(1, 500)).is_err());
-        assert!(b.push(req(2, 0)).is_err());
+        assert_eq!(
+            b.push(req(1, 500)),
+            Err(AdmitError::ImpossibleLength { need: 516, capacity: 256 })
+        );
+        assert_eq!(b.push(req(2, 0)), Err(AdmitError::EmptyPrompt));
+        // fits KV, exceeds every bucket, chunking off → NoBucket
+        assert_eq!(
+            b.push(req(3, 200)),
+            Err(AdmitError::NoBucket { len: 200, max_bucket: 128 })
+        );
         assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn chunked_admits_beyond_largest_bucket() {
+        let mut b = Batcher::new(BatcherConfig { allow_chunked: true, ..cfg() });
+        // longer than the 128 bucket but within KV capacity
+        b.push(req(1, 200)).unwrap();
+        assert_eq!(b.waiting(), 1);
+        // KV-impossible still refused even with chunking
+        assert_eq!(
+            b.push(req(2, 250)),
+            Err(AdmitError::ImpossibleLength { need: 266, capacity: 256 })
+        );
+        // long head-of-line prompt fits no bucket → no bucketed prefill
+        assert!(b.next_prefill(0).is_none());
+        // ...but pops through the chunked admission path
+        let r = b.next_request(0).unwrap();
+        assert_eq!(r.id, 1);
+        assert!(b.next_request(0).is_none());
+    }
+
+    #[test]
+    fn requeue_front_preserves_fcfs() {
+        let mut b = Batcher::new(cfg());
+        b.push(req(2, 8)).unwrap();
+        b.push(req(3, 8)).unwrap();
+        // a preempted earlier request goes back to the head
+        b.requeue_front(req(1, 8));
+        assert_eq!(b.peek().unwrap().id, 1);
+        let batch = b.next_prefill(0).unwrap();
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn next_request_respects_capacity() {
+        let mut b = Batcher::new(BatcherConfig { allow_chunked: true, ..cfg() });
+        b.push(req(1, 8)).unwrap();
+        assert!(b.next_request(8).is_none(), "no room at max_active");
+        assert_eq!(b.next_request(7).unwrap().id, 1);
     }
 
     #[test]

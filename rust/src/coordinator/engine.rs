@@ -8,31 +8,69 @@
 //! batched decode-attention path fans (sequence × head) work across a
 //! scoped thread pool sized by [`EngineConfig::parallel`], and
 //! `threads = 1` is bit-identical to the multithreaded result.
+//!
+//! ## KV layouts
+//!
+//! The engine serves from one of two cache layouts:
+//!
+//! * **Paged** (the default whenever the backend `supports_paged`, e.g.
+//!   [`HostModelBackend`](super::backend::HostModelBackend)): a
+//!   [`PagePool`] block allocator plus a per-sequence [`BlockTable`].
+//!   Sequences hold only the pages their tokens occupy; decode reads
+//!   and writes rows in place (no pack/unpack memcpy); prompts longer
+//!   than any prefill bucket are admitted and **chunk-prefilled**
+//!   (`max_chunk` tokens per step, interleaved with decodes by the
+//!   scheduler's `Chunked` step).  Page-allocation failure preempts the
+//!   youngest sequence (recompute-style: its request goes back to the
+//!   head of the waiting queue) instead of panicking; admission is
+//!   gated on worst-case page demand so the oldest sequence always
+//!   completes and the system cannot livelock.
+//! * **Contiguous** (artifact/PJRT backends): fixed `[L,1,Nkv,S,D]`
+//!   per-sequence slabs packed into `[L,B,Nkv,S,D]` batch planes — the
+//!   AOT wire format — with the device/host `CachePool` tiering.
+//!
+//! Both layouts produce bit-identical tokens: paged attention gathers
+//! the same rows through the block table (see `attention::flash::KvView`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{ArtifactBackend, Backend};
+use super::backend::{ArtifactBackend, Backend, PagedRow};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
-use super::kv_cache::{pack_batch, unpack_batch, CachePool, CacheShape, SeqCache, Tier};
+use super::kv_cache::{
+    pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError, PagePool,
+    SeqCache, Tier,
+};
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
 use crate::attention::batch::ParallelConfig;
 use crate::metrics::EngineMetrics;
 use crate::runtime::Runtime;
 
+/// Where a live sequence's KV rows are stored.
+enum SeqStore {
+    /// A contiguous `[L,1,Nkv,S,D]` slab in the tiered cache pool.
+    Contig { cache: SeqCache, tier: Tier },
+    /// Pages named by a block table in the engine's page pool.
+    Paged { table: BlockTable },
+}
+
 /// A live sequence.
 struct SeqState {
     id: RequestId,
-    prompt_len: usize,
+    /// The full prompt — kept for chunked prefill and for
+    /// recompute-style preemption requeue.
+    prompt: Vec<i32>,
     /// Generated tokens (first comes from prefill logits).
     tokens: Vec<i32>,
-    cache: SeqCache,
-    tier: Tier,
+    store: SeqStore,
     params: GenParams,
     phase: Phase,
+    /// Prompt tokens whose KV is already cached (equals `prompt.len()`
+    /// once prefill — bucketed or chunked — completes).
+    prefilled: usize,
     submitted_at: Instant,
     first_token_at: Option<Instant>,
 }
@@ -41,7 +79,7 @@ impl SeqState {
     /// Cache position of the *latest* generated token (where the next
     /// decode step writes it).
     fn pos(&self) -> usize {
-        self.prompt_len + self.tokens.len() - 1
+        self.prompt.len() + self.tokens.len() - 1
     }
 
     fn last_token(&self) -> i32 {
@@ -49,17 +87,34 @@ impl SeqState {
     }
 }
 
+/// Which KV layout the engine serves from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Paged when the backend supports it, contiguous otherwise.
+    Auto,
+    /// Force contiguous per-sequence slabs (the artifact wire format).
+    Contiguous,
+    /// Force the paged path; panics at engine build if the backend
+    /// cannot execute against paged KV.
+    Paged,
+}
+
 /// Engine configuration knobs.
 pub struct EngineConfig {
     pub policy: Policy,
-    /// Device KV budget in bytes (drives CachePool tiering).
+    /// Device KV budget in bytes: sizes the page pool (paged layout) or
+    /// drives CachePool tiering (contiguous layout).
     pub device_kv_budget: usize,
-    /// Cap on concurrently decoding sequences.
+    /// Cap on concurrently live sequences (decoding + chunk-prefilling).
     pub max_active: usize,
     /// Intra-step parallelism for backends that honor it (the host
     /// batched-attention path); `threads = 1` is the sequential
     /// fallback, bit-identical to any `threads = N`.
     pub parallel: ParallelConfig,
+    /// KV cache layout selection.
+    pub kv_layout: KvLayout,
+    /// Tokens per KV page (paged layout).
+    pub page_size: usize,
 }
 
 impl Default for EngineConfig {
@@ -69,8 +124,16 @@ impl Default for EngineConfig {
             device_kv_budget: 64 << 20,
             max_active: 16,
             parallel: ParallelConfig::default(),
+            kv_layout: KvLayout::Auto,
+            page_size: 16,
         }
     }
+}
+
+/// The engine's KV backing.
+enum EngineKv {
+    Contig(CachePool),
+    Paged(PagePool),
 }
 
 /// The engine.
@@ -79,11 +142,16 @@ pub struct Engine {
     shape: CacheShape,
     batcher: Batcher,
     scheduler: Scheduler,
-    pool: CachePool,
+    kv: EngineKv,
     active: Vec<RequestId>,
+    /// Sequences mid chunked-prefill, oldest first.
+    chunking: VecDeque<RequestId>,
     seqs: HashMap<RequestId, SeqState>,
     finished: Vec<Response>,
     next_id: RequestId,
+    /// Largest prefill seq bucket — the chunk size of chunked prefill.
+    max_chunk: usize,
+    page_size: usize,
     pub metrics: EngineMetrics,
 }
 
@@ -104,43 +172,82 @@ impl Engine {
             max_seq: m.max_seq,
             head_dim: m.head_dim,
         };
+        let paged = match cfg.kv_layout {
+            KvLayout::Auto => backend.supports_paged(),
+            KvLayout::Contiguous => false,
+            KvLayout::Paged => {
+                assert!(
+                    backend.supports_paged(),
+                    "KvLayout::Paged requires a paged-capable backend"
+                );
+                true
+            }
+        };
         let buckets = backend.buckets();
+        let max_chunk = buckets
+            .prefill_seqs
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(shape.max_seq)
+            .max(1);
         let batcher = Batcher::new(BatcherConfig {
             prefill_batches: buckets.prefill_batches,
             prefill_seqs: buckets.prefill_seqs,
             decode_batches: buckets.decode_batches,
             max_active: cfg.max_active,
+            max_seq_tokens: shape.max_seq,
+            allow_chunked: paged,
         });
+        let kv = if paged {
+            EngineKv::Paged(PagePool::for_budget(shape, cfg.page_size, cfg.device_kv_budget))
+        } else {
+            EngineKv::Contig(CachePool::new(shape, cfg.device_kv_budget))
+        };
         Self {
             backend,
             shape,
             batcher,
             scheduler: Scheduler::new(cfg.policy),
-            pool: CachePool::new(shape, cfg.device_kv_budget),
+            kv,
             active: Vec::new(),
+            chunking: VecDeque::new(),
             seqs: HashMap::new(),
             finished: Vec::new(),
             next_id: 1,
+            max_chunk,
+            page_size: cfg.page_size,
             metrics: EngineMetrics::default(),
         }
     }
 
+    /// True when the engine serves from the paged KV cache.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.kv, EngineKv::Paged(_))
+    }
+
     /// Submit a prompt; returns its request id.
     pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams) -> Result<RequestId> {
-        let max_seq = self.shape.max_seq;
-        if prompt.len() + params.max_new_tokens > max_seq {
-            bail!(
-                "prompt {} + max_new_tokens {} exceeds cache capacity {max_seq}",
-                prompt.len(),
-                params.max_new_tokens
+        if let EngineKv::Paged(pool) = &self.kv {
+            let need = BlockTable::pages_needed(
+                self.shape,
+                self.page_size,
+                prompt.len() + params.max_new_tokens,
             );
+            if need > pool.num_pages() {
+                bail!(
+                    "request needs {need} KV pages ({} tokens), pool holds only {}",
+                    prompt.len() + params.max_new_tokens,
+                    pool.num_pages()
+                );
+            }
         }
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, prompt, params);
         self.batcher
             .push(req)
-            .map_err(|r| anyhow::anyhow!("prompt of {} tokens fits no bucket", r.prompt.len()))?;
+            .map_err(|e| anyhow::anyhow!("cannot admit request: {e}"))?;
         Ok(id)
     }
 
@@ -149,18 +256,40 @@ impl Engine {
         self.active.len()
     }
 
+    /// Sequences mid chunked-prefill.
+    pub fn chunking_count(&self) -> usize {
+        self.chunking.len()
+    }
+
     /// Run one scheduling step.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
-        match self.scheduler.next_step(&self.batcher, self.active.len()) {
+        match self
+            .scheduler
+            .next_step(&self.batcher, self.active.len(), self.chunking.len())
+        {
             Step::Idle => Ok(false),
             Step::Prefill => {
-                if let Some(batch) = self.batcher.next_prefill(self.active.len()) {
+                let admitted = if self.is_paged() {
+                    self.admit_chunked()?
+                } else if let Some(batch) = self.batcher.next_prefill(self.active.len()) {
                     self.run_prefill(batch)?;
-                } else if !self.active.is_empty() {
+                    true
+                } else {
+                    false
+                };
+                if !admitted && !self.active.is_empty() {
                     // capacity-blocked: fall back to decode
                     if let Some(batch) = self.batcher.next_decode(&self.active) {
                         self.run_decode(batch)?;
                     }
+                }
+                Ok(true)
+            }
+            Step::Chunked => {
+                if let Some(&id) = self.chunking.front() {
+                    self.run_chunk(id)?;
+                } else if let Some(batch) = self.batcher.next_decode(&self.active) {
+                    self.run_decode(batch)?;
                 }
                 Ok(true)
             }
@@ -184,6 +313,10 @@ impl Engine {
         std::mem::take(&mut self.finished)
     }
 
+    // -----------------------------------------------------------------
+    // Contiguous (plane) path
+    // -----------------------------------------------------------------
+
     fn run_prefill(&mut self, batch: PrefillBatch) -> Result<()> {
         let t0 = Instant::now();
         let b = batch.batch_bucket;
@@ -206,21 +339,25 @@ impl Engine {
         for (i, req) in batch.requests.into_iter().enumerate() {
             let row = &logits[i * vocab..][..vocab];
             let first = argmax(row) as i32;
-            let (mut cache, tier) = self.pool.allocate();
+            let (mut cache, tier) = match &mut self.kv {
+                EngineKv::Contig(pool) => pool.allocate(),
+                EngineKv::Paged(_) => bail!("bucketed prefill on a paged engine"),
+            };
             unpack_batch(self.shape, b, kc, &mut [(i, &mut cache.k)])?;
             unpack_batch(self.shape, b, vc, &mut [(i, &mut cache.v)])?;
+            let prompt_len = req.prompt.len();
             let state = SeqState {
                 id: req.id,
-                prompt_len: req.prompt.len(),
+                prompt: req.prompt,
                 tokens: vec![first],
-                cache,
-                tier,
+                store: SeqStore::Contig { cache, tier },
                 params: req.params,
                 phase: Phase::Decoding,
+                prefilled: prompt_len,
                 submitted_at: req.submitted_at,
                 first_token_at: Some(Instant::now()),
             };
-            self.metrics.prefilled_tokens += req.prompt.len() as u64;
+            self.metrics.prefilled_tokens += prompt_len as u64;
             // done already? (max_new_tokens == 1 or instant EOS)
             if state.tokens.len() >= state.params.max_new_tokens
                 || state.params.eos_token == Some(first)
@@ -236,7 +373,7 @@ impl Engine {
         Ok(())
     }
 
-    fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {
+    fn run_decode_plane(&mut self, batch: DecodeBatch) -> Result<()> {
         let t0 = Instant::now();
         let b = batch.batch_bucket;
 
@@ -246,10 +383,13 @@ impl Engine {
         let mut packs_v: Vec<(usize, &[f32])> = Vec::with_capacity(batch.seq_ids.len());
         for (slot, id) in batch.seq_ids.iter().enumerate() {
             let s = self.seqs.get(id).context("active seq missing")?;
+            let SeqStore::Contig { cache, .. } = &s.store else {
+                bail!("plane decode on a paged sequence");
+            };
             token[slot] = s.last_token();
             pos[slot] = s.pos() as i32;
-            packs.push((slot, &s.cache.k));
-            packs_v.push((slot, &s.cache.v));
+            packs.push((slot, &cache.k));
+            packs_v.push((slot, &cache.v));
         }
         let k_plane = pack_batch(self.shape, b, &packs)?;
         let v_plane = pack_batch(self.shape, b, &packs_v)?;
@@ -266,8 +406,11 @@ impl Engine {
         let mut done: Vec<RequestId> = Vec::new();
         for (slot, id) in batch.seq_ids.iter().enumerate() {
             let s = self.seqs.get_mut(id).unwrap();
-            unpack_batch(self.shape, b, kc, &mut [(slot, &mut s.cache.k)])?;
-            unpack_batch(self.shape, b, vc, &mut [(slot, &mut s.cache.v)])?;
+            let SeqStore::Contig { cache, .. } = &mut s.store else {
+                bail!("plane decode on a paged sequence");
+            };
+            unpack_batch(self.shape, b, kc, &mut [(slot, &mut cache.k)])?;
+            unpack_batch(self.shape, b, vc, &mut [(slot, &mut cache.v)])?;
             let next = argmax(&logits[slot * vocab..][..vocab]) as i32;
             s.tokens.push(next);
             self.metrics.decoded_tokens += 1;
@@ -288,9 +431,263 @@ impl Engine {
         Ok(())
     }
 
+    // -----------------------------------------------------------------
+    // Paged path
+    // -----------------------------------------------------------------
+
+    /// Admit the head-of-line request onto the paged cache and run its
+    /// first prefill chunk.  Admission is gated on worst-case page
+    /// demand (prompt + full generation budget): an admitted sequence
+    /// can always finish by preempting only younger sequences, so the
+    /// oldest always completes and admission cannot livelock.
+    fn admit_chunked(&mut self) -> Result<bool> {
+        let EngineKv::Paged(pool) = &self.kv else {
+            bail!("chunked admission on a contiguous engine");
+        };
+        let Some(head) = self.batcher.peek() else {
+            return Ok(false);
+        };
+        let need = BlockTable::pages_needed(
+            self.shape,
+            self.page_size,
+            head.prompt.len() + head.params.max_new_tokens,
+        );
+        if pool.free_pages() < need {
+            return Ok(false); // wait for capacity; decode keeps draining
+        }
+        let live = self.active.len() + self.chunking.len();
+        let Some(req) = self.batcher.next_request(live) else {
+            return Ok(false);
+        };
+        let id = req.id;
+        let state = SeqState {
+            id,
+            prompt: req.prompt,
+            tokens: Vec::new(),
+            store: SeqStore::Paged { table: BlockTable::new(self.shape, self.page_size) },
+            params: req.params,
+            phase: Phase::Chunking,
+            prefilled: 0,
+            submitted_at: req.submitted_at,
+            first_token_at: None,
+        };
+        self.seqs.insert(id, state);
+        self.chunking.push_back(id);
+        self.run_chunk(id)?;
+        Ok(true)
+    }
+
+    /// Run the next prefill chunk of `id` (≤ `max_chunk` tokens).  When
+    /// the chunk completes the prompt the sequence is promoted to
+    /// decoding with its first generated token.
+    fn run_chunk(&mut self, id: RequestId) -> Result<()> {
+        let t0 = Instant::now();
+        let (start, end) = {
+            let s = self.seqs.get(&id).context("chunked seq missing")?;
+            let start = s.prefilled;
+            (start, (start + self.max_chunk).min(s.prompt.len()))
+        };
+        debug_assert!(end > start, "chunk queue holds only partial sequences");
+        if !self.ensure_pages(id, end)? {
+            return Ok(()); // the sequence itself was preempted
+        }
+        let logits = {
+            let s = self.seqs.get(&id).expect("survived ensure_pages");
+            let SeqStore::Paged { table } = &s.store else {
+                bail!("chunked sequence without a block table");
+            };
+            let EngineKv::Paged(pool) = &mut self.kv else {
+                bail!("chunked sequence without a page pool");
+            };
+            self.backend
+                .prefill_chunk(&s.prompt[start..end], start, table, pool)
+                .with_context(|| format!("prefill chunk {start}..{end} of seq {id}"))?
+        };
+        let s = self.seqs.get_mut(&id).expect("survived backend step");
+        s.prefilled = end;
+        self.metrics.prefilled_tokens += (end - start) as u64;
+        self.metrics.chunk_steps += 1;
+        if end == s.prompt.len() {
+            // prompt fully cached: first generated token from the last
+            // chunk's logits
+            let first = argmax(&logits) as i32;
+            s.tokens.push(first);
+            s.first_token_at = Some(Instant::now());
+            s.phase = Phase::Decoding;
+            let done = s.tokens.len() >= s.params.max_new_tokens
+                || s.params.eos_token == Some(first);
+            self.chunking.retain(|&c| c != id);
+            if done {
+                let state = self.seqs.remove(&id).unwrap();
+                self.finish(state);
+            } else {
+                self.active.push(id);
+            }
+        }
+        self.metrics.prefill_s += t0.elapsed().as_secs_f64();
+        self.update_page_metrics();
+        Ok(())
+    }
+
+    fn run_decode_paged(&mut self, batch: DecodeBatch) -> Result<()> {
+        let t0 = Instant::now();
+        // grow each table for the row it writes this step; allocation
+        // failure preempts the youngest sequence instead of panicking.
+        for id in batch.seq_ids.iter().copied() {
+            if !self.seqs.contains_key(&id) {
+                continue; // preempted by an earlier row's allocation
+            }
+            let need = self.seqs[&id].pos() + 1;
+            self.ensure_pages(id, need)?;
+        }
+        let ids: Vec<RequestId> = batch
+            .seq_ids
+            .iter()
+            .copied()
+            .filter(|id| self.seqs.contains_key(id))
+            .collect();
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let logits = {
+            let rows: Vec<PagedRow<'_>> = ids
+                .iter()
+                .map(|id| {
+                    let s = &self.seqs[id];
+                    let SeqStore::Paged { table } = &s.store else {
+                        unreachable!("paged engine tracks paged sequences");
+                    };
+                    PagedRow { table, token: s.last_token(), pos: s.pos() }
+                })
+                .collect();
+            let EngineKv::Paged(pool) = &mut self.kv else {
+                bail!("paged decode on a contiguous engine");
+            };
+            self.backend
+                .decode_paged(&rows, pool)
+                .with_context(|| format!("paged decode step b{}", ids.len()))?
+        };
+        let vocab = self.backend.model().vocab;
+
+        let mut done: Vec<RequestId> = Vec::new();
+        for (i, id) in ids.iter().enumerate() {
+            let s = self.seqs.get_mut(id).unwrap();
+            let next = argmax(&logits[i * vocab..][..vocab]) as i32;
+            s.tokens.push(next);
+            self.metrics.decoded_tokens += 1;
+            let finished = s.tokens.len() >= s.params.max_new_tokens
+                || s.params.eos_token == Some(next)
+                || s.pos() + 1 >= self.shape.max_seq;
+            if finished {
+                done.push(*id);
+            }
+        }
+        for id in done {
+            let state = self.seqs.remove(&id).unwrap();
+            self.active.retain(|&a| a != id);
+            self.finish(state);
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_s += t0.elapsed().as_secs_f64();
+        self.update_page_metrics();
+        Ok(())
+    }
+
+    fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {
+        match self.kv {
+            EngineKv::Paged(_) => self.run_decode_paged(batch),
+            EngineKv::Contig(_) => self.run_decode_plane(batch),
+        }
+    }
+
+    /// Grow `id`'s block table to hold `tokens` rows.  On pool
+    /// exhaustion, preempt the youngest live sequence and retry;
+    /// returns `Ok(false)` when the sequence *itself* was the youngest
+    /// and got preempted.
+    fn ensure_pages(&mut self, id: RequestId, tokens: usize) -> Result<bool> {
+        loop {
+            {
+                let EngineKv::Paged(pool) = &mut self.kv else {
+                    bail!("ensure_pages on a contiguous engine");
+                };
+                let Some(s) = self.seqs.get_mut(&id) else {
+                    return Ok(false);
+                };
+                let SeqStore::Paged { table } = &mut s.store else {
+                    bail!("ensure_pages on a contiguous sequence");
+                };
+                match table.ensure_capacity(tokens, pool) {
+                    Ok(()) => return Ok(true),
+                    Err(PageAllocError::ExceedsMaxSeq) => {
+                        bail!("sequence {id} exceeds max_seq {}", self.shape.max_seq)
+                    }
+                    Err(PageAllocError::OutOfPages) => {
+                        self.metrics.alloc_failures += 1;
+                    }
+                }
+            }
+            let Some(victim) = self.preempt_youngest() else {
+                bail!("KV page pool exhausted with nothing to preempt");
+            };
+            if victim == id {
+                return Ok(false);
+            }
+        }
+    }
+
+    /// Evict the youngest live sequence (recompute-style preemption):
+    /// free its pages and put its request back at the head of the
+    /// waiting queue.  Request ids are monotonic, so max(id) is the
+    /// most recently admitted sequence.
+    fn preempt_youngest(&mut self) -> Option<RequestId> {
+        let victim = self
+            .active
+            .iter()
+            .chain(self.chunking.iter())
+            .copied()
+            .max()?;
+        let mut state = self.seqs.remove(&victim).expect("victim is tracked");
+        self.active.retain(|&a| a != victim);
+        self.chunking.retain(|&c| c != victim);
+        if let (SeqStore::Paged { table }, EngineKv::Paged(pool)) =
+            (&mut state.store, &mut self.kv)
+        {
+            table.release_all(pool);
+        }
+        self.batcher.requeue_front(Request {
+            id: victim,
+            prompt: std::mem::take(&mut state.prompt),
+            params: state.params,
+            submitted_at: state.submitted_at,
+        });
+        self.metrics.preemptions += 1;
+        Some(victim)
+    }
+
+    fn update_page_metrics(&mut self) {
+        if let EngineKv::Paged(pool) = &self.kv {
+            self.metrics.pages_used = pool.used_pages() as u64;
+            self.metrics.pages_total = pool.num_pages() as u64;
+            self.metrics.peak_pages_used =
+                self.metrics.peak_pages_used.max(self.metrics.pages_used);
+        }
+    }
+
     fn finish(&mut self, mut state: SeqState) {
         state.phase = Phase::Finished;
-        self.pool.release(state.tier);
+        match &mut state.store {
+            SeqStore::Contig { tier, .. } => {
+                if let EngineKv::Contig(pool) = &mut self.kv {
+                    pool.release(*tier);
+                }
+            }
+            SeqStore::Paged { table } => {
+                if let EngineKv::Paged(pool) = &mut self.kv {
+                    table.release_all(pool);
+                }
+            }
+        }
+        self.update_page_metrics();
         let now = Instant::now();
         let ttft = state
             .first_token_at
@@ -299,7 +696,7 @@ impl Engine {
         self.metrics.completed += 1;
         self.finished.push(Response {
             id: state.id,
-            prompt_len: state.prompt_len,
+            prompt_len: state.prompt.len(),
             tokens: state.tokens,
             ttft_s: ttft,
             total_s: (now - state.submitted_at).as_secs_f64(),
@@ -333,9 +730,22 @@ mod tests {
         )
     }
 
+    fn host_engine_with_layout(threads: usize, layout: KvLayout) -> Engine {
+        let cfg = EngineConfig {
+            parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+            kv_layout: layout,
+            ..EngineConfig::default()
+        };
+        Engine::with_backend(
+            Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+            cfg,
+        )
+    }
+
     #[test]
     fn host_backend_single_request_completes() {
         let mut e = host_engine(1);
+        assert!(e.is_paged(), "host backend defaults to the paged layout");
         let id = e
             .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, eos_token: None })
             .unwrap();
@@ -345,6 +755,10 @@ mod tests {
         assert_eq!(out[0].tokens.len(), 4);
         let vocab = 64;
         assert!(out[0].tokens.iter().all(|&t| t >= 0 && t < vocab));
+        // pages reported and fully released at idle
+        assert!(e.metrics.pages_total > 0);
+        assert_eq!(e.metrics.pages_used, 0);
+        assert!(e.metrics.peak_pages_used > 0);
     }
 
     #[test]
@@ -384,6 +798,42 @@ mod tests {
             out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(1), run(4), "threads must not change greedy tokens");
+    }
+
+    #[test]
+    fn paged_engine_matches_contiguous_engine() {
+        // the paged path must be token-identical to the plane path
+        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![1, 2, 3], vec![9; 17], vec![4, 5], vec![30, 20, 10, 5, 2, 1, 7]];
+        let run = |layout: KvLayout| {
+            let mut e = host_engine_with_layout(2, layout);
+            for pr in &prompts {
+                e.submit(pr.clone(), p).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let contig = run(KvLayout::Contiguous);
+        let paged = run(KvLayout::Paged);
+        assert_eq!(contig, paged, "KV layout must not change greedy tokens");
+    }
+
+    #[test]
+    fn contiguous_layout_rejects_unbucketed_prompt() {
+        // tiny_gqa's largest prefill bucket is 32: without chunked
+        // prefill a 40-token prompt is refused, with it it completes.
+        let mut contig = host_engine_with_layout(1, KvLayout::Contiguous);
+        assert!(contig.submit(vec![3; 40], GenParams::default()).is_err());
+        let mut paged = host_engine_with_layout(1, KvLayout::Paged);
+        let id = paged
+            .submit(vec![3; 40], GenParams { max_new_tokens: 3, eos_token: None })
+            .unwrap();
+        let out = paged.run_until_idle().unwrap();
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].tokens.len(), 3);
+        assert!(paged.metrics.chunk_steps >= 2, "40 tokens need >1 chunk of 32");
     }
 
     fn engine() -> Option<Engine> {

@@ -1,11 +1,22 @@
-//! KV-cache manager: per-sequence caches, batch packing, and the
-//! host/device tier accounting the CPU–GPU cooperative strategy uses.
+//! KV-cache manager: paged block-table caches, contiguous per-sequence
+//! caches, batch packing, and the host/device tier accounting the
+//! CPU–GPU cooperative strategy uses.
 //!
-//! The AOT decode artifact consumes caches of shape
-//! `[L, B, Nkv, max_seq, D]` for a fixed batch bucket `B`.  Sequences own
-//! caches of shape `[L, 1, Nkv, max_seq, D]`; this module packs any
-//! (≤ B)-subset of sequences into the batch tensor and scatters the
-//! updated batch back — the memcpy boundary of continuous batching.
+//! Two layouts coexist:
+//!
+//! * **Contiguous** — the AOT decode artifact consumes caches of shape
+//!   `[L, B, Nkv, max_seq, D]` for a fixed batch bucket `B`.  Sequences
+//!   own caches of shape `[L, 1, Nkv, max_seq, D]`; `pack_batch` /
+//!   `unpack_batch` move any (≤ B)-subset of sequences in and out of the
+//!   batch tensor — the memcpy boundary of continuous batching.
+//! * **Paged** — [`PagePool`] owns fixed-size pages of `page_size` KV
+//!   rows, one page per (layer, kv-head) block; a per-sequence
+//!   [`BlockTable`] maps logical token blocks to pages.  Pages are
+//!   ref-counted (prefix sharing keeps a page alive across sequences)
+//!   and recycled through a free list, so a 16-token sequence holds one
+//!   block instead of a `max_seq` slab.  Attention gathers rows through
+//!   the table (`attention::flash::KvView`), bit-identically to the
+//!   contiguous layout.
 
 use anyhow::{bail, Result};
 
@@ -201,6 +212,300 @@ impl CachePool {
     }
 }
 
+// ---------------------------------------------------------------------
+// Paged KV: PagePool + BlockTable
+// ---------------------------------------------------------------------
+
+/// Marker for an unallocated block-table slot.
+pub const NO_PAGE: u32 = u32::MAX;
+
+/// Why a page allocation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageAllocError {
+    /// The pool's free list is empty — the caller should preempt a
+    /// sequence (or shed load) and retry.
+    OutOfPages,
+    /// The sequence would exceed its `max_seq` block budget.
+    ExceedsMaxSeq,
+}
+
+impl std::fmt::Display for PageAllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::OutOfPages => write!(f, "KV page pool exhausted"),
+            Self::ExceedsMaxSeq => write!(f, "sequence exceeds max_seq block budget"),
+        }
+    }
+}
+
+impl std::error::Error for PageAllocError {}
+
+/// A fixed-size page allocator for KV rows.
+///
+/// One page holds `page_size` rows of `head_dim` f32 for K and the same
+/// for V, and belongs to exactly one (layer, kv-head) plane of one
+/// sequence block (ownership is the [`BlockTable`]'s — the pool only
+/// tracks ref counts).  `refs == 0` pages sit on the free list.
+#[derive(Debug)]
+pub struct PagePool {
+    page_size: usize,
+    head_dim: usize,
+    /// `[num_pages, page_size, head_dim]` flat K rows.
+    k: Vec<f32>,
+    /// Same shape, V rows.
+    v: Vec<f32>,
+    refs: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, head_dim: usize, num_pages: usize) -> Self {
+        assert!(page_size >= 1, "page_size must be >= 1");
+        assert!(head_dim >= 1, "head_dim must be >= 1");
+        assert!(num_pages <= NO_PAGE as usize, "num_pages overflows page id space");
+        let elems = num_pages * page_size * head_dim;
+        Self {
+            page_size,
+            head_dim,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            refs: vec![0; num_pages],
+            // LIFO free list, lowest ids on top.
+            free: (0..num_pages as u32).rev().collect(),
+        }
+    }
+
+    /// Size the pool for a device budget: as many pages as
+    /// `budget_bytes` holds at f32 K+V rows (at least one).
+    pub fn for_budget(shape: CacheShape, page_size: usize, budget_bytes: usize) -> Self {
+        let page_bytes = 2 * 4 * page_size * shape.head_dim;
+        let num_pages = (budget_bytes / page_bytes.max(1)).max(1);
+        Self::new(page_size, shape.head_dim, num_pages)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.num_pages() - self.free_pages()
+    }
+
+    /// Fraction of pages in use, 0.0 ..= 1.0.
+    pub fn occupancy(&self) -> f64 {
+        if self.refs.is_empty() {
+            return 0.0;
+        }
+        self.used_pages() as f64 / self.num_pages() as f64
+    }
+
+    /// Bytes of one page (K + V).
+    pub fn page_bytes(&self) -> usize {
+        2 * 4 * self.page_size * self.head_dim
+    }
+
+    /// Allocate one page (`refs = 1`).  Page contents are stale — the
+    /// paged attention contract is that rows `< kv_len` are written
+    /// before they are read, and rows `>= kv_len` are never read.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = self.free.pop()?;
+        self.refs[id as usize] = 1;
+        Some(id)
+    }
+
+    /// Bump a page's ref count (prefix sharing across sequences).
+    pub fn retain(&mut self, id: u32) {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "retain of free page {id}");
+        *r += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    pub fn release(&mut self, id: u32) {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "release of free page {id}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+        }
+    }
+
+    /// Reference count of a page (0 = free).
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// The flat K row store (`[num_pages, page_size, head_dim]`) —
+    /// what `KvView::Paged` gathers from.
+    pub fn k_store(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The flat V row store, same shape.
+    pub fn v_store(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Write one token's K and V rows into `slot` of `page`.
+    pub fn write_row(&mut self, page: u32, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.page_size, "slot {slot} out of page");
+        debug_assert!(self.refs[page as usize] > 0, "write to free page {page}");
+        let d = self.head_dim;
+        let at = (page as usize * self.page_size + slot) * d;
+        self.k[at..at + d].copy_from_slice(&k_row[..d]);
+        self.v[at..at + d].copy_from_slice(&v_row[..d]);
+    }
+}
+
+/// A sequence's logical-block → page mapping: `[layers, kv_heads,
+/// max_blocks]` page ids, where block `b` covers token rows
+/// `[b*page_size, (b+1)*page_size)`.  Blocks allocate as a group — one
+/// page per (layer, kv-head) — so a sequence always has the same number
+/// of blocks in every plane.
+#[derive(Debug, Clone)]
+pub struct BlockTable {
+    layers: usize,
+    kv_heads: usize,
+    page_size: usize,
+    max_blocks: usize,
+    /// Allocated logical blocks (all planes).
+    blocks: usize,
+    table: Vec<u32>,
+}
+
+impl BlockTable {
+    pub fn new(shape: CacheShape, page_size: usize) -> Self {
+        assert!(page_size >= 1, "page_size must be >= 1");
+        let max_blocks = shape.max_seq.div_ceil(page_size);
+        Self {
+            layers: shape.layers,
+            kv_heads: shape.kv_heads,
+            page_size,
+            max_blocks,
+            blocks: 0,
+            table: vec![NO_PAGE; shape.layers * shape.kv_heads * max_blocks],
+        }
+    }
+
+    /// Pages a sequence of `tokens` tokens needs in total under `shape`.
+    pub fn pages_needed(shape: CacheShape, page_size: usize, tokens: usize) -> usize {
+        shape.layers * shape.kv_heads * tokens.div_ceil(page_size.max(1))
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Token rows the allocated blocks can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        self.blocks * self.page_size
+    }
+
+    /// Pages currently held (all planes).
+    pub fn pages_held(&self) -> usize {
+        self.blocks * self.layers * self.kv_heads
+    }
+
+    /// Grow until `tokens` rows fit, allocating one page per
+    /// (layer, kv-head) per new block.  All-or-nothing per block: a
+    /// partial group is rolled back before `OutOfPages` is returned, so
+    /// a failed call never leaks pages.
+    pub fn ensure_capacity(
+        &mut self,
+        tokens: usize,
+        pool: &mut PagePool,
+    ) -> std::result::Result<(), PageAllocError> {
+        debug_assert_eq!(pool.page_size(), self.page_size, "pool/table page_size");
+        while self.capacity_tokens() < tokens {
+            if self.blocks == self.max_blocks {
+                return Err(PageAllocError::ExceedsMaxSeq);
+            }
+            let group = self.layers * self.kv_heads;
+            let mut got: Vec<u32> = Vec::with_capacity(group);
+            for _ in 0..group {
+                match pool.alloc() {
+                    Some(p) => got.push(p),
+                    None => {
+                        for p in got {
+                            pool.release(p);
+                        }
+                        return Err(PageAllocError::OutOfPages);
+                    }
+                }
+            }
+            let b = self.blocks;
+            let mut it = got.into_iter();
+            for l in 0..self.layers {
+                for g in 0..self.kv_heads {
+                    self.table[(l * self.kv_heads + g) * self.max_blocks + b] =
+                        it.next().expect("group sized to planes");
+                }
+            }
+            self.blocks += 1;
+        }
+        Ok(())
+    }
+
+    /// The (page, in-page slot) holding token row `row` of
+    /// (`layer`, `kv_head`).  The block must be allocated.
+    pub fn locate(&self, layer: usize, kv_head: usize, row: usize) -> (u32, usize) {
+        let b = row / self.page_size;
+        debug_assert!(b < self.blocks, "row {row} beyond allocated blocks");
+        let page = self.table[(layer * self.kv_heads + kv_head) * self.max_blocks + b];
+        debug_assert_ne!(page, NO_PAGE, "unallocated block {b}");
+        (page, row % self.page_size)
+    }
+
+    /// One layer's `[kv_heads, max_blocks]` page-id plane — the gather
+    /// table paged attention consumes.
+    pub fn layer_pages(&self, layer: usize) -> &[u32] {
+        let n = self.kv_heads * self.max_blocks;
+        &self.table[layer * n..][..n]
+    }
+
+    /// Release every held page back to `pool` and reset to empty.
+    pub fn release_all(&mut self, pool: &mut PagePool) {
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                for b in 0..self.blocks {
+                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    pool.release(self.table[at]);
+                    self.table[at] = NO_PAGE;
+                }
+            }
+        }
+        self.blocks = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,5 +597,114 @@ mod tests {
         assert_eq!(pool.active(), 3);
         pool.release(t1);
         assert!(pool.has_device_room());
+    }
+
+    // --- paged KV -----------------------------------------------------
+
+    #[test]
+    fn page_pool_alloc_release_reuse() {
+        let mut pool = PagePool::new(4, 2, 3);
+        assert_eq!(pool.num_pages(), 3);
+        assert_eq!(pool.free_pages(), 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.alloc(), None);
+        assert_eq!(pool.used_pages(), 3);
+        assert!((pool.occupancy() - 1.0).abs() < 1e-12);
+        pool.release(b);
+        assert_eq!(pool.free_pages(), 1);
+        // LIFO reuse of the freed page
+        assert_eq!(pool.alloc(), Some(b));
+        pool.release(a);
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn page_refcounts_keep_shared_pages_alive() {
+        let mut pool = PagePool::new(4, 2, 2);
+        let p = pool.alloc().unwrap();
+        pool.retain(p); // a second sequence shares the prefix
+        pool.release(p);
+        assert_eq!(pool.ref_count(p), 1);
+        assert_eq!(pool.used_pages(), 1, "shared page must stay allocated");
+        pool.release(p);
+        assert_eq!(pool.ref_count(p), 0);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn page_rows_roundtrip() {
+        let mut pool = PagePool::new(4, 2, 2);
+        let p = pool.alloc().unwrap();
+        pool.write_row(p, 3, &[1.0, 2.0], &[3.0, 4.0]);
+        let at = (p as usize * 4 + 3) * 2;
+        assert_eq!(&pool.k_store()[at..at + 2], &[1.0, 2.0]);
+        assert_eq!(&pool.v_store()[at..at + 2], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn block_table_grows_and_locates() {
+        let sh = shape(); // layers 2, kv_heads 3, max_seq 4, head_dim 2
+        let mut pool = PagePool::new(2, sh.head_dim, 32);
+        let mut t = BlockTable::new(sh, 2);
+        assert_eq!(t.max_blocks(), 2);
+        assert_eq!(t.capacity_tokens(), 0);
+        t.ensure_capacity(1, &mut pool).unwrap();
+        assert_eq!(t.blocks(), 1);
+        assert_eq!(t.capacity_tokens(), 2);
+        assert_eq!(t.pages_held(), 6); // layers * kv_heads
+        assert_eq!(pool.used_pages(), 6);
+        // growing within capacity is a no-op
+        t.ensure_capacity(2, &mut pool).unwrap();
+        assert_eq!(t.blocks(), 1);
+        t.ensure_capacity(4, &mut pool).unwrap();
+        assert_eq!(t.blocks(), 2);
+
+        // every (layer, kv_head) plane has distinct pages; row 3 lives in
+        // block 1 slot 1
+        let (p0, s0) = t.locate(0, 0, 3);
+        let (p1, s1) = t.locate(1, 2, 3);
+        assert_eq!(s0, 1);
+        assert_eq!(s1, 1);
+        assert_ne!(p0, p1);
+        let lp = t.layer_pages(1);
+        assert_eq!(lp.len(), sh.kv_heads * t.max_blocks());
+        assert_eq!(lp[2 * t.max_blocks() + 1], p1);
+
+        t.ensure_capacity(5, &mut pool)
+            .expect_err("beyond max_seq must fail");
+        t.release_all(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(t.blocks(), 0);
+    }
+
+    #[test]
+    fn block_table_rolls_back_partial_groups() {
+        let sh = shape(); // group = 6 pages per block
+        let mut pool = PagePool::new(2, sh.head_dim, 4);
+        let mut t = BlockTable::new(sh, 2);
+        assert_eq!(
+            t.ensure_capacity(1, &mut pool),
+            Err(PageAllocError::OutOfPages)
+        );
+        // the partial group was rolled back — nothing leaked
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(t.blocks(), 0);
+    }
+
+    #[test]
+    fn pages_needed_math() {
+        let sh = shape();
+        assert_eq!(BlockTable::pages_needed(sh, 2, 0), 0);
+        assert_eq!(BlockTable::pages_needed(sh, 2, 1), 6);
+        assert_eq!(BlockTable::pages_needed(sh, 2, 2), 6);
+        assert_eq!(BlockTable::pages_needed(sh, 2, 3), 12);
+        let pool = PagePool::for_budget(sh, 2, 6 * 2 * 4 * 2 * sh.head_dim);
+        assert_eq!(pool.num_pages(), 6);
+        assert_eq!(pool.page_bytes(), 2 * 4 * 2 * sh.head_dim);
     }
 }

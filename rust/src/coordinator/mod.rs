@@ -6,14 +6,19 @@
 //!   artifact path and the pure-rust host model whose decode attention
 //!   runs through the batched parallel path (`attention::batch`);
 //! * [`request`]   — request/response types;
-//! * [`batcher`]   — continuous batcher over the artifact bucket grid;
-//! * [`scheduler`] — prefill/decode policy (decode-priority + fairness
-//!   quantum);
-//! * [`kv_cache`]  — per-sequence KV caches, ragged batch packing, tiered
-//!   (device/host) capacity pool;
-//! * [`engine`]    — the synchronous execution core over the PJRT
-//!   runtime: ragged prefill (per-row lengths), ragged decode (per-row
-//!   positions), greedy sampling;
+//! * [`batcher`]   — continuous batcher over the artifact bucket grid,
+//!   with typed admission ([`batcher::AdmitError`]) and chunked-prefill
+//!   admission of prompts longer than any bucket;
+//! * [`scheduler`] — prefill/chunked/decode policy (decode-priority +
+//!   fairness quantum; chunk continuation beats new admission);
+//! * [`kv_cache`]  — the paged KV cache (`PagePool` block allocator +
+//!   per-sequence `BlockTable`, ref-counted pages), plus the contiguous
+//!   per-sequence caches, ragged batch packing and the tiered
+//!   (device/host) capacity pool of the artifact path;
+//! * [`engine`]    — the synchronous execution core: paged decode and
+//!   chunked prefill with evict-youngest preemption over a paged-capable
+//!   backend, or ragged plane prefill/decode over the PJRT runtime;
+//!   greedy sampling either way;
 //! * [`server`]    — threaded front-end (PJRT handles stay on one
 //!   thread; clients use channels);
 //! * [`allreduce`] — the paper's tiling-AllReduce (§4.2) as a real
@@ -33,8 +38,10 @@ pub mod scheduler;
 pub mod server;
 
 pub use backend::{
-    ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig, StepOut,
+    ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig, PagedRow, StepOut,
 };
-pub use engine::{Engine, EngineConfig};
+pub use batcher::AdmitError;
+pub use engine::{Engine, EngineConfig, KvLayout};
+pub use kv_cache::{BlockTable, CacheShape, PageAllocError, PagePool};
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::Server;

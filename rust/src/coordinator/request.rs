@@ -43,6 +43,9 @@ impl Request {
 pub enum Phase {
     /// Queued, not yet prefilled.
     Waiting,
+    /// Admitted; prompt KV being built chunk by chunk (chunked prefill
+    /// over the paged cache).
+    Chunking,
     /// Prefilled; generating tokens.
     Decoding,
     /// Done (budget exhausted or EOS).

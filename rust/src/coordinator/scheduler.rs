@@ -1,16 +1,26 @@
 //! Prefill/decode scheduling policy.
 //!
-//! The engine alternates two step kinds; the policy decides which runs
+//! The engine alternates step kinds; the policy decides which runs
 //! next.  Default is decode-priority with an anti-starvation prefill
 //! quantum (classic continuous-batching trade-off: prefill grows the
-//! running batch — throughput; decode drains it — latency).
+//! running batch — throughput; decode drains it — latency).  Sequences
+//! mid chunked-prefill add a third kind: [`Step::Chunked`] continues
+//! the oldest partially-prefilled sequence, and takes priority over
+//! admitting new work (partial sequences hold KV pages — finishing them
+//! frees capacity fastest).  Under `Fair`, chunks share the prefill
+//! quantum, so long prompts interleave with decodes instead of
+//! monopolizing the engine.
 
 use super::batcher::Batcher;
 
 /// What the engine should do next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Step {
+    /// Admit waiting request(s) (bucketed prefill, or the first chunk
+    /// of a paged sequence).
     Prefill,
+    /// Continue a partially-prefilled (chunked) sequence.
+    Chunked,
     Decode,
     /// Nothing to do.
     Idle,
@@ -40,19 +50,22 @@ impl Scheduler {
         Self { policy, decodes_since_prefill: 0 }
     }
 
-    /// Pick the next step given queue state.
-    pub fn next_step(&mut self, batcher: &Batcher, active: usize) -> Step {
-        let has_waiting = batcher.waiting() > 0;
+    /// Pick the next step given queue state.  `chunking` counts
+    /// sequences mid chunked-prefill (they are not in `active` yet).
+    pub fn next_step(&mut self, batcher: &Batcher, active: usize, chunking: usize) -> Step {
+        let has_prefill_work = batcher.waiting() > 0 || chunking > 0;
         let has_active = active > 0;
-        let step = match (has_waiting, has_active, self.policy) {
+        // continuing a partial sequence beats admitting a new one
+        let prefill_kind = if chunking > 0 { Step::Chunked } else { Step::Prefill };
+        let step = match (has_prefill_work, has_active, self.policy) {
             (false, false, _) => Step::Idle,
-            (true, false, _) => Step::Prefill,
+            (true, false, _) => prefill_kind,
             (false, true, _) => Step::Decode,
-            (true, true, Policy::PrefillFirst) => Step::Prefill,
+            (true, true, Policy::PrefillFirst) => prefill_kind,
             (true, true, Policy::DecodeFirst) => Step::Decode,
             (true, true, Policy::Fair { quantum }) => {
                 if self.decodes_since_prefill >= quantum {
-                    Step::Prefill
+                    prefill_kind
                 } else {
                     Step::Decode
                 }
@@ -60,7 +73,7 @@ impl Scheduler {
         };
         match step {
             Step::Decode => self.decodes_since_prefill += 1,
-            Step::Prefill => self.decodes_since_prefill = 0,
+            Step::Prefill | Step::Chunked => self.decodes_since_prefill = 0,
             Step::Idle => {}
         }
         step
@@ -79,6 +92,8 @@ mod tests {
             prefill_seqs: vec![32],
             decode_batches: vec![1, 4],
             max_active: 8,
+            max_seq_tokens: 64,
+            allow_chunked: false,
         });
         for id in 0..waiting as u64 {
             b.push(Request::new(id, vec![1; 4], GenParams::default())).unwrap();
@@ -89,25 +104,25 @@ mod tests {
     #[test]
     fn idle_when_empty() {
         let mut s = Scheduler::new(Policy::Fair { quantum: 4 });
-        assert_eq!(s.next_step(&batcher(0), 0), Step::Idle);
+        assert_eq!(s.next_step(&batcher(0), 0, 0), Step::Idle);
     }
 
     #[test]
     fn prefill_when_only_waiting() {
         let mut s = Scheduler::new(Policy::DecodeFirst);
-        assert_eq!(s.next_step(&batcher(1), 0), Step::Prefill);
+        assert_eq!(s.next_step(&batcher(1), 0, 0), Step::Prefill);
     }
 
     #[test]
     fn decode_first_prefers_decode() {
         let mut s = Scheduler::new(Policy::DecodeFirst);
-        assert_eq!(s.next_step(&batcher(1), 2), Step::Decode);
+        assert_eq!(s.next_step(&batcher(1), 2, 0), Step::Decode);
     }
 
     #[test]
     fn prefill_first_prefers_prefill() {
         let mut s = Scheduler::new(Policy::PrefillFirst);
-        assert_eq!(s.next_step(&batcher(1), 2), Step::Prefill);
+        assert_eq!(s.next_step(&batcher(1), 2, 0), Step::Prefill);
     }
 
     #[test]
@@ -115,11 +130,63 @@ mod tests {
         let mut s = Scheduler::new(Policy::Fair { quantum: 3 });
         let b = batcher(1);
         // three decodes pass, the fourth call must be a prefill
-        assert_eq!(s.next_step(&b, 1), Step::Decode);
-        assert_eq!(s.next_step(&b, 1), Step::Decode);
-        assert_eq!(s.next_step(&b, 1), Step::Decode);
-        assert_eq!(s.next_step(&b, 1), Step::Prefill);
+        assert_eq!(s.next_step(&b, 1, 0), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 0), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 0), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 0), Step::Prefill);
         // counter reset after the prefill
-        assert_eq!(s.next_step(&b, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 0), Step::Decode);
+    }
+
+    #[test]
+    fn fair_quantum_holds_under_continuous_decode_pressure() {
+        // with work always waiting and actives never draining, prefills
+        // fire exactly every quantum+1 steps — no starvation, no drift.
+        let mut s = Scheduler::new(Policy::Fair { quantum: 2 });
+        let b = batcher(4);
+        let steps: Vec<Step> = (0..9).map(|_| s.next_step(&b, 3, 0)).collect();
+        assert_eq!(
+            steps,
+            vec![
+                Step::Decode,
+                Step::Decode,
+                Step::Prefill,
+                Step::Decode,
+                Step::Decode,
+                Step::Prefill,
+                Step::Decode,
+                Step::Decode,
+                Step::Prefill,
+            ]
+        );
+    }
+
+    #[test]
+    fn chunked_continues_before_admitting() {
+        // a partially-prefilled sequence takes the prefill slot
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step(&batcher(1), 2, 1), Step::Chunked);
+        // with no waiting work either, chunks still run
+        let mut s = Scheduler::new(Policy::Fair { quantum: 4 });
+        assert_eq!(s.next_step(&batcher(0), 0, 2), Step::Chunked);
+    }
+
+    #[test]
+    fn fair_quantum_schedules_chunks() {
+        // a chunked sequence interleaves with decodes under Fair, and
+        // resets the quantum like a prefill does.
+        let mut s = Scheduler::new(Policy::Fair { quantum: 2 });
+        let b = batcher(0);
+        assert_eq!(s.next_step(&b, 1, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 1), Step::Decode);
+        assert_eq!(s.next_step(&b, 1, 1), Step::Chunked);
+        assert_eq!(s.next_step(&b, 1, 1), Step::Decode);
+    }
+
+    #[test]
+    fn decode_first_drains_before_chunks() {
+        let mut s = Scheduler::new(Policy::DecodeFirst);
+        assert_eq!(s.next_step(&batcher(0), 1, 1), Step::Decode);
+        assert_eq!(s.next_step(&batcher(0), 0, 1), Step::Chunked);
     }
 }

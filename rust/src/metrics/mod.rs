@@ -7,15 +7,42 @@ use std::time::Instant;
 pub struct EngineMetrics {
     pub prefill_steps: u64,
     pub decode_steps: u64,
+    /// Chunked-prefill steps (paged engine; one chunk of one sequence).
+    pub chunk_steps: u64,
     pub prefilled_tokens: u64,
     pub decoded_tokens: u64,
     pub completed: u64,
     /// Cumulative seconds inside prefill / decode execution.
     pub prefill_s: f64,
     pub decode_s: f64,
+    /// Paged KV: pages in use after the latest step / pool size /
+    /// high-water mark.  Zero on contiguous engines.
+    pub pages_used: u64,
+    pub pages_total: u64,
+    pub peak_pages_used: u64,
+    /// Page-allocation failures (each one triggers a preemption
+    /// attempt) and sequences actually preempted back to the queue.
+    pub alloc_failures: u64,
+    pub preemptions: u64,
 }
 
 impl EngineMetrics {
+    /// Fraction of the page pool in use after the latest step,
+    /// 0.0 ..= 1.0 (0.0 on contiguous engines).
+    pub fn page_occupancy(&self) -> f64 {
+        if self.pages_total == 0 {
+            return 0.0;
+        }
+        self.pages_used as f64 / self.pages_total as f64
+    }
+
+    /// High-water page occupancy over the engine's lifetime.
+    pub fn peak_page_occupancy(&self) -> f64 {
+        if self.pages_total == 0 {
+            return 0.0;
+        }
+        self.peak_pages_used as f64 / self.pages_total as f64
+    }
     /// Decode throughput, tokens/second of decode wall time.
     pub fn decode_tps(&self) -> f64 {
         if self.decode_s <= 0.0 {
@@ -147,6 +174,22 @@ mod tests {
         assert!((m.decode_tps() - 10.0).abs() < 1e-9);
         assert!((m.prefill_tps() - 50.0).abs() < 1e-9);
         assert!((m.mean_decode_batch() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn page_occupancy_ratios() {
+        let m = EngineMetrics {
+            pages_used: 3,
+            pages_total: 12,
+            peak_pages_used: 9,
+            ..Default::default()
+        };
+        assert!((m.page_occupancy() - 0.25).abs() < 1e-12);
+        assert!((m.peak_page_occupancy() - 0.75).abs() < 1e-12);
+        // contiguous engines report zero, not NaN
+        let z = EngineMetrics::default();
+        assert_eq!(z.page_occupancy(), 0.0);
+        assert_eq!(z.peak_page_occupancy(), 0.0);
     }
 
     #[test]

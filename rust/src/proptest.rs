@@ -194,10 +194,11 @@ mod tests {
 mod attention_props {
     use super::{check, expand_kv, max_abs_diff, Rng};
     use crate::attention::batch::{
-        batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, WorkPool,
+        batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
     };
     use crate::attention::flash::{flash_attention, FlashParams};
     use crate::attention::standard::{standard_attention, StdParams};
+    use crate::coordinator::kv_cache::{BlockTable, CacheShape, PagePool};
     use crate::prop_ensure;
 
     /// Pick a random (heads, kv_heads) pair with kv_heads | heads.
@@ -284,7 +285,7 @@ mod attention_props {
                 lens.push(rng.range(0, stride + 1));
             }
             let seqs: Vec<SeqAttn<'_>> = (0..nseq)
-                .map(|i| SeqAttn { q: &qs[i], k: &ks[i], v: &vs[i], kv_len: lens[i] })
+                .map(|i| SeqAttn::contig(&qs[i], &ks[i], &vs[i], lens[i]))
                 .collect();
             let mut shape = BatchShape::new(h, kvh, d, stride);
             shape.block_kv = block_kv;
@@ -316,8 +317,8 @@ mod attention_props {
                 let mut k = Vec::with_capacity(kvh * kv * d);
                 let mut v = Vec::with_capacity(kvh * kv * d);
                 for g in 0..kvh {
-                    k.extend_from_slice(&s.k[g * stride * d..][..kv * d]);
-                    v.extend_from_slice(&s.v[g * stride * d..][..kv * d]);
+                    k.extend_from_slice(&ks[i][g * stride * d..][..kv * d]);
+                    v.extend_from_slice(&vs[i][g * stride * d..][..kv * d]);
                 }
                 let mut flash = vec![0.0; h * d];
                 flash_attention(
@@ -367,6 +368,88 @@ mod attention_props {
                     );
                 }
             }
+            Ok(())
+        });
+    }
+
+    /// Paged KV (real `PagePool` + `BlockTable` glue) is bit-identical
+    /// to contiguous planes over random page sizes, GQA shapes, KV
+    /// lengths and thread counts.
+    #[test]
+    fn prop_paged_equals_contig() {
+        check(40, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let d = *rng.pick(&[4usize, 8, 16]);
+            let stride = rng.range(1, 40);
+            let nseq = rng.range(1, 7);
+            let page_size = rng.range(1, 9);
+            let threads = rng.range(1, 6);
+
+            // single-layer cache geometry: attention sees one layer plane
+            let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+            let max_blocks = stride.div_ceil(page_size);
+            let mut pool =
+                PagePool::new(page_size, d, (nseq + 2) * kvh * max_blocks + 3);
+            // churn the free list so tables get non-identity page maps
+            let mut churn = BlockTable::new(cache, page_size);
+            churn.ensure_capacity(stride.min(page_size * 2), &mut pool).unwrap();
+
+            let mut qs = Vec::new();
+            let mut ks = Vec::new();
+            let mut vs = Vec::new();
+            let mut lens = Vec::new();
+            let mut tables = Vec::new();
+            for i in 0..nseq {
+                qs.push(rng.f32_vec(h * d));
+                ks.push(rng.f32_vec(kvh * stride * d));
+                vs.push(rng.f32_vec(kvh * stride * d));
+                lens.push(rng.range(0, stride + 1));
+                let mut t = BlockTable::new(cache, page_size);
+                t.ensure_capacity(lens[i], &mut pool).unwrap();
+                if i == 0 {
+                    churn.release_all(&mut pool);
+                }
+                for g in 0..kvh {
+                    for r in 0..lens[i] {
+                        let (page, slot) = t.locate(0, g, r);
+                        let src = g * stride * d + r * d;
+                        pool.write_row(page, slot, &ks[i][src..src + d], &vs[i][src..src + d]);
+                    }
+                }
+                tables.push(t);
+            }
+
+            let shape = BatchShape::new(h, kvh, d, stride);
+            let n = nseq * h * d;
+            let wp = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+
+            let contig: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn::contig(&qs[i], &ks[i], &vs[i], lens[i]))
+                .collect();
+            let mut out_c = vec![0.0; n];
+            batch_decode_attention(&shape, &contig, &mut out_c, &wp);
+
+            let paged: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn {
+                    q: &qs[i],
+                    kv: SeqKv::Paged {
+                        k_store: pool.k_store(),
+                        v_store: pool.v_store(),
+                        pages: tables[i].layer_pages(0),
+                        max_blocks: tables[i].max_blocks(),
+                        page_size,
+                    },
+                    kv_len: lens[i],
+                })
+                .collect();
+            let mut out_p = vec![0.0; n];
+            batch_decode_attention(&shape, &paged, &mut out_p, &wp);
+
+            prop_ensure!(
+                out_c == out_p,
+                "paged != contig (h={h} kvh={kvh} d={d} stride={stride} \
+                 page_size={page_size} threads={threads})"
+            );
             Ok(())
         });
     }

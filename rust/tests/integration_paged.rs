@@ -1,0 +1,185 @@
+//! Integration: the paged KV cache + chunked prefill serving path.
+//!
+//! Runs the full engine stack over [`HostModelBackend`] (no artifacts
+//! needed): long prompts beyond every prefill bucket complete through
+//! chunked prefill; the paged layout is token-identical to the
+//! contiguous layout; pool exhaustion preempts instead of panicking and
+//! preempted requests still finish with identical tokens; page
+//! occupancy is reported through `EngineMetrics`.
+
+use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+};
+
+fn engine_with(cfg: HostModelConfig, ecfg: EngineConfig) -> Engine {
+    Engine::with_backend(Box::new(HostModelBackend::new(cfg)), ecfg)
+}
+
+fn seq_cfg(layout: KvLayout) -> EngineConfig {
+    EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: layout,
+        ..EngineConfig::default()
+    }
+}
+
+/// A prompt longer than the largest prefill bucket (32 for `tiny_gqa`)
+/// completes end-to-end through chunked prefill, and its tokens are
+/// bit-identical to the same model served contiguously through a
+/// large-enough bucket.
+#[test]
+fn long_prompt_completes_via_chunked_prefill() {
+    let prompt: Vec<i32> = (0..50).map(|i| (i * 3 + 1) % 64).collect();
+    let p = GenParams { max_new_tokens: 6, eos_token: None };
+
+    // paged engine with the stock small buckets: must chunk
+    let mut paged = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Paged));
+    let id = paged.submit(prompt.clone(), p).unwrap();
+    let out = paged.run_until_idle().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, id);
+    assert_eq!(out[0].prompt_len, 50);
+    assert_eq!(out[0].tokens.len(), 6);
+    assert!(
+        paged.metrics.chunk_steps >= 2,
+        "50 tokens over 32-token chunks need at least 2 chunk steps, got {}",
+        paged.metrics.chunk_steps
+    );
+    assert_eq!(paged.metrics.prefilled_tokens, 50);
+    assert!(paged.metrics.pages_total > 0);
+    assert_eq!(paged.metrics.pages_used, 0, "pages released at idle");
+    assert!(paged.metrics.peak_pages_used > 0);
+
+    // same model (same seed) with a 64 bucket, contiguous layout: the
+    // unchunked reference
+    let mut big = HostModelConfig::tiny_gqa();
+    big.buckets.prefill_seqs = vec![8, 16, 32, 64];
+    let mut contig = engine_with(big, seq_cfg(KvLayout::Contiguous));
+    contig.submit(prompt.clone(), p).unwrap();
+    let want = contig.run_until_idle().unwrap();
+    assert_eq!(
+        out[0].tokens, want[0].tokens,
+        "chunked paged serving must not change greedy tokens"
+    );
+
+    // the contiguous engine with stock buckets rejects the same prompt
+    let mut small = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Contiguous));
+    assert!(small.submit(prompt, p).is_err());
+}
+
+/// Mixed workload parity: paged vs contiguous layouts generate
+/// identical tokens for every request, across thread counts.
+#[test]
+fn paged_vs_contiguous_under_load() {
+    let p = GenParams { max_new_tokens: 7, eos_token: None };
+    let prompts: Vec<Vec<i32>> = (0..9)
+        .map(|i| (0..(i * 5 + 2) % 30 + 1).map(|t| ((t * 7 + i) % 64) as i32).collect())
+        .collect();
+    let run = |layout: KvLayout, threads: usize| {
+        let cfg = EngineConfig {
+            parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+            kv_layout: layout,
+            ..EngineConfig::default()
+        };
+        let mut e = engine_with(HostModelConfig::tiny_gqa(), cfg);
+        for pr in &prompts {
+            e.submit(pr.clone(), p).unwrap();
+        }
+        let mut out = e.run_until_idle().unwrap();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    let contig = run(KvLayout::Contiguous, 1);
+    assert_eq!(contig, run(KvLayout::Paged, 1), "layouts diverge (threads=1)");
+    assert_eq!(contig, run(KvLayout::Paged, 4), "layouts diverge (threads=4)");
+}
+
+/// A page pool too small for two full sequences: the engine preempts
+/// the youngest (recompute-style) instead of panicking, both requests
+/// still complete, and their tokens match unconstrained solo runs.
+#[test]
+fn pool_exhaustion_preempts_youngest_and_recovers() {
+    // tiny_gqa: layers 2 × kv_heads 2 → 4 pages per 16-token block.
+    // Each request spans 8 prompt + 24 generated = 32 tokens = 8 pages;
+    // a 12-page pool fits one full sequence plus half of another.
+    let p = GenParams { max_new_tokens: 24, eos_token: None };
+    let prompts: Vec<Vec<i32>> = vec![vec![1; 8], vec![2; 8]];
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: 12 * 1024, // 12 pages at page_size 16, head_dim 8
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    let mut e = engine_with(HostModelConfig::tiny_gqa(), cfg);
+    assert!(e.is_paged());
+    for pr in &prompts {
+        e.submit(pr.clone(), p).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 2, "both requests complete despite preemption");
+    assert!(out.iter().all(|r| r.tokens.len() == 24));
+    assert!(
+        e.metrics.preemptions >= 1,
+        "the overcommitted pool must have preempted (preemptions = {})",
+        e.metrics.preemptions
+    );
+    assert!(e.metrics.alloc_failures >= 1);
+    assert_eq!(e.metrics.pages_used, 0, "all pages released at idle");
+    assert!(e.metrics.peak_pages_used <= 12);
+
+    // preemption + recompute must not change any request's tokens
+    for (pr, got) in prompts.iter().zip(&out) {
+        let mut solo = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Paged));
+        solo.submit(pr.clone(), p).unwrap();
+        let want = solo.run_until_idle().unwrap();
+        assert_eq!(want[0].tokens, got.tokens, "prompt {pr:?}");
+    }
+}
+
+/// Requests too large for the whole pool are refused up front (typed
+/// admission), not admitted and then starved.
+#[test]
+fn impossible_requests_refused_up_front() {
+    let cfg = EngineConfig {
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: 4 * 1024, // 4 pages → one 16-token block
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    let mut e = engine_with(HostModelConfig::tiny_gqa(), cfg);
+    // 8 + 16 = 24 tokens → 2 blocks → 8 pages > 4 in the pool
+    assert!(e.submit(vec![1; 8], GenParams { max_new_tokens: 16, eos_token: None }).is_err());
+    // empty prompts and over-max_seq prompts stay refused too
+    assert!(e.submit(vec![], GenParams::default()).is_err());
+    assert!(e
+        .submit(vec![1; 90], GenParams { max_new_tokens: 20, eos_token: None })
+        .is_err());
+    // a request that fits the pool is accepted and completes
+    let id = e
+        .submit(vec![1; 8], GenParams { max_new_tokens: 8, eos_token: None })
+        .unwrap();
+    let out = e.run_until_idle().unwrap();
+    assert_eq!(out[0].id, id);
+    assert_eq!(out[0].tokens.len(), 8);
+}
+
+/// Page occupancy is visible mid-flight through `EngineMetrics`.
+#[test]
+fn occupancy_visible_during_decode() {
+    let mut e = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Paged));
+    e.submit(vec![5; 12], GenParams { max_new_tokens: 10, eos_token: None })
+        .unwrap();
+    // first step admits + chunk-prefills: pages must be in use
+    e.step().unwrap();
+    assert!(e.metrics.pages_used > 0, "occupancy after prefill chunk");
+    assert!(e.metrics.page_occupancy() > 0.0);
+    assert!(e.metrics.page_occupancy() <= 1.0);
+    let during = e.metrics.pages_used;
+    let out = e.run_until_idle().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(e.metrics.pages_used, 0);
+    assert!(e.metrics.peak_pages_used >= during);
+}
