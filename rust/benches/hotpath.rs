@@ -7,13 +7,16 @@
 //!     parallel vs **paged** (block-table gather): per-batch latency,
 //!     decode tok/s, speedup
 //!   * the host-model engine end-to-end (no artifacts needed)
+//!   * tiered paged KV: device-only vs cold-page host offload at
+//!     several modeled device capacities (token-parity asserted)
 //!   * KV-cache batch pack/unpack memcpy
 //!   * the rust CPU FlashAttention2 kernel (offload host path)
 //!   * the threaded ring AllReduce
 //!
 //! Run with `cargo bench --bench hotpath` (release profile).  Decode
-//! throughput rows are additionally written to `BENCH_decode.json` in
-//! the invocation directory, so the perf trajectory is machine-readable
+//! throughput rows are additionally written to `BENCH_decode.json`, and
+//! the device-only-vs-tiered rows to `BENCH_offload.json`, in the
+//! invocation directory, so the perf trajectory is machine-readable
 //! across PRs.
 
 use fastattn::attention::batch::{
@@ -24,7 +27,7 @@ use fastattn::benchkit::{bench, fmt_time, rate, write_bench_json, x, Table};
 use fastattn::coordinator::allreduce::ring_all_reduce;
 use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PagePool};
 use fastattn::coordinator::{
-    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig,
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
 };
 use fastattn::models::{ModelShape, MISTRAL_7B, TINY_GQA};
 use fastattn::proptest::Rng;
@@ -196,15 +199,15 @@ fn main() {
             ]);
             json_rows.push((
                 format!("{} b={nseq} kv={kv} sequential", m.name),
-                nseq as f64 / s1.mean_s,
+                s1.events_per_s(nseq as f64),
             ));
             json_rows.push((
                 format!("{} b={nseq} kv={kv} parallel threads={threads}", m.name),
-                nseq as f64 / sn.mean_s,
+                sn.events_per_s(nseq as f64),
             ));
             json_rows.push((
                 format!("{} b={nseq} kv={kv} paged ps={page_size} threads={threads}", m.name),
-                nseq as f64 / sp.mean_s,
+                sp.events_per_s(nseq as f64),
             ));
         }
     }
@@ -255,6 +258,82 @@ fn main() {
             ),
             m.decoded_tokens as f64 / m.decode_s.max(1e-12),
         ));
+    }
+
+    // --- tiered paged KV: device-only vs cold-page host offload -------
+    // The §4.4 cooperative strategy at page granularity: the same
+    // workload served with the whole cache device-resident vs with the
+    // device pool capped at several modeled capacities (cold pages
+    // spill to the host tier over the modeled PCIe link).  Tokens must
+    // be identical in every configuration; the tok/s delta is the
+    // tiered-gather + migration cost.  Rows land in BENCH_offload.json.
+    let mut offload_rows: Vec<(String, f64)> = Vec::new();
+    {
+        // tiny_gqa geometry: a block group is layers 2 × kv_heads 2 = 4
+        // pages of 2·4·16·8 B = 1 KiB → 4 KiB per group.
+        let group_bytes = 4 * 1024usize;
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|i| vec![(i as i32) * 9 + 3; 24]).collect();
+        let gp = GenParams { max_new_tokens: 24, eos_token: None };
+        let run = |device_groups: usize, host_groups: usize| {
+            let cfg = EngineConfig {
+                parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+                kv_layout: KvLayout::Paged,
+                device_kv_budget: device_groups * group_bytes,
+                host_kv_budget: host_groups * group_bytes,
+                page_size: 16,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::with_backend(
+                Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+                cfg,
+            );
+            for pr in &prompts {
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+
+        // each request spans 24 + 24 = 48 tokens = 3 block groups; 16
+        // groups hold the whole batch device-resident.
+        let (base_toks, base_m) = run(16, 0);
+        assert_eq!(base_m.pages_migrated, 0);
+        offload_rows.push(("device-only dev=16 groups".into(), base_m.decode_tps()));
+        tp.row(&[
+            "tiered offload dev=16 groups (device-only)".into(),
+            fmt_time(base_m.decode_s / base_m.decode_steps.max(1) as f64),
+            rate(base_m.decoded_tokens as f64, base_m.decode_s, "tok"),
+            String::from("—"),
+        ]);
+        for dg in [8usize, 6, 4] {
+            let (toks, m) = run(dg, 12);
+            assert_eq!(
+                base_toks, toks,
+                "tiered serving changed tokens at device={dg} groups"
+            );
+            offload_rows.push((
+                format!(
+                    "tiered dev={dg} groups host=12 (migrated {} pages in {} moves, \
+                     pcie {:.1} µs, {} preemptions)",
+                    m.pages_migrated,
+                    m.migrations,
+                    m.pcie_modeled_s * 1e6,
+                    m.preemptions
+                ),
+                m.decode_tps(),
+            ));
+            tp.row(&[
+                format!("tiered offload dev={dg} groups host=12"),
+                fmt_time(m.decode_s / m.decode_steps.max(1) as f64),
+                rate(m.decoded_tokens as f64, m.decode_s, "tok"),
+                // same convention as the rows above: >1 means faster
+                // than the device-only baseline
+                x(m.decode_tps() / base_m.decode_tps().max(1e-12)),
+            ]);
+        }
     }
 
     // --- KV pack (continuous-batching memcpy boundary) ----------------
@@ -375,5 +454,12 @@ fn main() {
     match write_bench_json(json_path, "decode", "tok/s", &json_rows) {
         Ok(()) => println!("\nwrote {} ({} rows)", json_path.display(), json_rows.len()),
         Err(e) => eprintln!("\nBENCH_decode.json not written: {e}"),
+    }
+
+    // device-only vs tiered throughput at the modeled device capacities
+    let offload_path = std::path::Path::new("BENCH_offload.json");
+    match write_bench_json(offload_path, "offload", "tok/s", &offload_rows) {
+        Ok(()) => println!("wrote {} ({} rows)", offload_path.display(), offload_rows.len()),
+        Err(e) => eprintln!("BENCH_offload.json not written: {e}"),
     }
 }

@@ -25,6 +25,8 @@
 //! between `threads = 1` (the sequential fallback, equivalent to the
 //! seed's per-sequence loop) and any `threads = N`.
 
+use crate::coordinator::kv_cache::Tier;
+
 use super::flash::{flash_attention_view, FlashParams, KvView};
 
 /// Parallelism knobs for the batched attention path.
@@ -206,9 +208,11 @@ impl BatchShape {
     }
 }
 
-/// Where one sequence's K/V rows live: contiguous cache planes or the
-/// paged pool behind a block table.  Both stream identical rows through
-/// [`KvView`], so the two layouts are bit-identical.
+/// Where one sequence's K/V rows live: contiguous cache planes, the
+/// paged pool behind a block table, or the *tiered* paged pool whose
+/// blocks are split between a device store and a host store (cold-page
+/// offload).  All layouts stream identical rows through [`KvView`], so
+/// they are bit-identical.
 #[derive(Debug, Clone, Copy)]
 pub enum SeqKv<'a> {
     /// `[kv_heads, kv_stride, head_dim]` planes (the packed engine wire
@@ -224,11 +228,25 @@ pub enum SeqKv<'a> {
         max_blocks: usize,
         page_size: usize,
     },
+    /// Rows gathered across both tiers of the tiered paged cache:
+    /// `tiers` (parallel to `pages`, `[kv_heads, max_blocks]`) says
+    /// which store each block's page id indexes (see
+    /// `coordinator::kv_cache::TieredPagePool`).
+    Tiered {
+        k_device: &'a [f32],
+        v_device: &'a [f32],
+        k_host: &'a [f32],
+        v_host: &'a [f32],
+        pages: &'a [u32],
+        tiers: &'a [Tier],
+        max_blocks: usize,
+        page_size: usize,
+    },
 }
 
 impl<'a> SeqKv<'a> {
     /// (K, V) row views of KV head `g`.  `kv_stride` is the contiguous
-    /// row stride (ignored by the paged layout).
+    /// row stride (ignored by the paged layouts).
     pub fn head(&self, g: usize, d: usize, kv_stride: usize) -> (KvView<'a>, KvView<'a>) {
         match *self {
             SeqKv::Contig { k, v } => {
@@ -243,6 +261,35 @@ impl<'a> SeqKv<'a> {
                 (
                     KvView::Paged { store: k_store, pages: p, page_size },
                     KvView::Paged { store: v_store, pages: p, page_size },
+                )
+            }
+            SeqKv::Tiered {
+                k_device,
+                v_device,
+                k_host,
+                v_host,
+                pages,
+                tiers,
+                max_blocks,
+                page_size,
+            } => {
+                let p = &pages[g * max_blocks..][..max_blocks];
+                let t = &tiers[g * max_blocks..][..max_blocks];
+                (
+                    KvView::Tiered {
+                        device_store: k_device,
+                        host_store: k_host,
+                        pages: p,
+                        tiers: t,
+                        page_size,
+                    },
+                    KvView::Tiered {
+                        device_store: v_device,
+                        host_store: v_host,
+                        pages: p,
+                        tiers: t,
+                        page_size,
+                    },
                 )
             }
         }
@@ -303,6 +350,36 @@ pub fn batch_decode_attention(
                     for &p in &pages[g * max_blocks..][..used] {
                         let end = (p as usize + 1) * page_size * d;
                         assert!(end <= k_store.len(), "seq {i} page {p} out of store");
+                    }
+                }
+            }
+            SeqKv::Tiered {
+                k_device,
+                v_device,
+                k_host,
+                v_host,
+                pages,
+                tiers,
+                max_blocks,
+                page_size,
+            } => {
+                assert!(page_size >= 1, "seq {i} page_size");
+                assert_eq!(pages.len(), kvh * max_blocks, "seq {i} page table shape");
+                assert_eq!(tiers.len(), pages.len(), "seq {i} tier tags shape");
+                assert_eq!(k_device.len(), v_device.len(), "seq {i} device store shapes");
+                assert_eq!(k_host.len(), v_host.len(), "seq {i} host store shapes");
+                let used = s.kv_len.div_ceil(page_size);
+                assert!(used <= max_blocks, "seq {i} kv_len beyond page table");
+                for g in 0..kvh {
+                    let ps = &pages[g * max_blocks..][..used];
+                    let ts = &tiers[g * max_blocks..][..used];
+                    for (&p, &t) in ps.iter().zip(ts) {
+                        let store_len = match t {
+                            Tier::Device => k_device.len(),
+                            Tier::Host => k_host.len(),
+                        };
+                        let end = (p as usize + 1) * page_size * d;
+                        assert!(end <= store_len, "seq {i} page {p} out of {t:?} store");
                     }
                 }
             }
@@ -540,6 +617,74 @@ mod tests {
             let mut out_p = vec![0.0; n];
             batch_decode_attention(&b.shape, &paged, &mut out_p, &pool);
             assert_eq!(out_c, out_p, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiered_gather_is_bit_identical_to_contig() {
+        use crate::coordinator::kv_cache::{BlockTable, CacheShape, PcieLink, TieredPagePool};
+        let mut rng = Rng::new(22);
+        for threads in [1usize, 4] {
+            let b = Batch::random(&mut rng, 5, 6, 3, 8, 26);
+            let (kvh, d, stride) = (3usize, 8usize, 26usize);
+            let page_size = 4;
+            let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+            let max_blocks = stride.div_ceil(page_size);
+            let mut pools = TieredPagePool::new(
+                page_size,
+                d,
+                5 * kvh * max_blocks,
+                5 * kvh * max_blocks,
+                PcieLink::default(),
+            );
+            // fill per-seq tables on device, then migrate every other
+            // block to the host tier
+            let mut tables = Vec::new();
+            for i in 0..5 {
+                let mut t = BlockTable::new(cache, page_size);
+                t.ensure_capacity(b.lens[i], pools.device_mut()).unwrap();
+                for g in 0..kvh {
+                    for r in 0..b.lens[i] {
+                        let (tier, page, slot) = t.locate_tiered(0, g, r);
+                        let src = g * stride * d + r * d;
+                        pools.write_row(
+                            tier,
+                            page,
+                            slot,
+                            &b.k[i][src..src + d],
+                            &b.v[i][src..src + d],
+                        );
+                    }
+                }
+                for blk in (0..t.blocks()).step_by(2) {
+                    t.migrate_block_to_host(blk, &mut pools).unwrap();
+                }
+                tables.push(t);
+            }
+            let tiered: Vec<SeqAttn<'_>> = (0..5)
+                .map(|i| SeqAttn {
+                    q: &b.q[i],
+                    kv: SeqKv::Tiered {
+                        k_device: pools.device().k_store(),
+                        v_device: pools.device().v_store(),
+                        k_host: pools.host().k_store(),
+                        v_host: pools.host().v_store(),
+                        pages: tables[i].layer_pages(0),
+                        tiers: tables[i].layer_tiers(0),
+                        max_blocks: tables[i].max_blocks(),
+                        page_size,
+                    },
+                    kv_len: b.lens[i],
+                })
+                .collect();
+            let contig = b.seqs();
+            let n = 5 * 6 * 8;
+            let pool = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+            let mut out_c = vec![0.0; n];
+            batch_decode_attention(&b.shape, &contig, &mut out_c, &pool);
+            let mut out_t = vec![0.0; n];
+            batch_decode_attention(&b.shape, &tiered, &mut out_t, &pool);
+            assert_eq!(out_c, out_t, "threads={threads}");
         }
     }
 

@@ -79,14 +79,18 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
     (s0 + s1) + (s2 + s3) + rest
 }
 
-/// A row source for K or V: either a contiguous `[rows, head_dim]`
-/// slice, or rows gathered through a page table (the paged KV cache's
-/// block-table layout — see `coordinator::kv_cache`).
+use crate::coordinator::kv_cache::Tier;
+
+/// A row source for K or V: a contiguous `[rows, head_dim]` slice, rows
+/// gathered through a page table (the paged KV cache's block-table
+/// layout — see `coordinator::kv_cache`), or rows gathered across the
+/// *two* stores of the tiered cache (device + host), with a per-block
+/// tier tag selecting the store.
 ///
-/// The kernel reads rows one at a time through [`KvView::row`], so the
-/// contiguous and paged layouts stream the exact same values in the
-/// exact same order — paged attention is **bit-identical** to
-/// contiguous attention by construction.
+/// The kernel reads rows one at a time through [`KvView::row`], so all
+/// three layouts stream the exact same values in the exact same order —
+/// paged and tiered attention are **bit-identical** to contiguous
+/// attention by construction.
 #[derive(Debug, Clone, Copy)]
 pub enum KvView<'a> {
     /// Contiguous `[rows, head_dim]` row-major.
@@ -97,6 +101,16 @@ pub enum KvView<'a> {
     Paged {
         store: &'a [f32],
         pages: &'a [u32],
+        page_size: usize,
+    },
+    /// Like `Paged`, but block `r / page_size` lives in whichever store
+    /// `tiers[r / page_size]` names — the partially-offloaded sequence
+    /// of the §4.4 cold-page strategy.  Page ids are per-store.
+    Tiered {
+        device_store: &'a [f32],
+        host_store: &'a [f32],
+        pages: &'a [u32],
+        tiers: &'a [Tier],
         page_size: usize,
     },
 }
@@ -111,16 +125,27 @@ impl<'a> KvView<'a> {
                 let page = pages[r / page_size] as usize;
                 &store[(page * page_size + r % page_size) * d..][..d]
             }
+            KvView::Tiered { device_store, host_store, pages, tiers, page_size } => {
+                let b = r / page_size;
+                let store = match tiers[b] {
+                    Tier::Device => device_store,
+                    Tier::Host => host_store,
+                };
+                &store[(pages[b] as usize * page_size + r % page_size) * d..][..d]
+            }
         }
     }
 
-    /// Rows this view can address (an upper bound for `Paged`, whose
-    /// tail pages may be unallocated sentinels — callers bound reads by
-    /// their own `kv_len`).
+    /// Rows this view can address (an upper bound for `Paged`/`Tiered`,
+    /// whose tail pages may be unallocated sentinels — callers bound
+    /// reads by their own `kv_len`).
     pub fn addressable_rows(&self, d: usize) -> usize {
         match *self {
             KvView::Contig(s) => s.len() / d.max(1),
             KvView::Paged { pages, page_size, .. } => pages.len() * page_size,
+            KvView::Tiered { pages, tiers, page_size, .. } => {
+                pages.len().min(tiers.len()) * page_size
+            }
         }
     }
 }
@@ -474,6 +499,87 @@ mod tests {
         let mut paged = vec![0.0; h * d];
         flash_attention_view(&q, &kview, &vview, &mut paged, &p);
         assert_eq!(contig, paged, "paged gather must not change bits");
+    }
+
+    /// A tiered view with blocks split across two stores must be
+    /// bit-identical to the contiguous kernel on the same rows.
+    #[test]
+    fn view_tiered_equals_contig() {
+        use crate::coordinator::kv_cache::Tier;
+        let (h, skv, d, page_size) = (2usize, 23usize, 8usize, 4usize);
+        let mut rng = crate::proptest::Rng::new(6);
+        let q = rng.f32_vec(h * d);
+        let k = rng.f32_vec(skv * d);
+        let v = rng.f32_vec(skv * d);
+
+        // even blocks stay "device", odd blocks go "host"; page ids are
+        // per-store and deliberately non-identity
+        let nblocks = skv.div_ceil(page_size);
+        let tiers: Vec<Tier> = (0..nblocks)
+            .map(|b| if b % 2 == 0 { Tier::Device } else { Tier::Host })
+            .collect();
+        let per_store = nblocks.div_ceil(2) + 1;
+        let mut pages = vec![0u32; nblocks];
+        let (mut next_dev, mut next_host) = (per_store as u32 - 1, 0u32);
+        for b in 0..nblocks {
+            match tiers[b] {
+                Tier::Device => {
+                    pages[b] = next_dev;
+                    next_dev -= 1;
+                }
+                Tier::Host => {
+                    pages[b] = next_host;
+                    next_host += 1;
+                }
+            }
+        }
+        let mut kdev = vec![0.0f32; per_store * page_size * d];
+        let mut vdev = kdev.clone();
+        let mut khost = kdev.clone();
+        let mut vhost = kdev.clone();
+        for r in 0..skv {
+            let b = r / page_size;
+            let at = (pages[b] as usize * page_size + r % page_size) * d;
+            let (ks, vs) = match tiers[b] {
+                Tier::Device => (&mut kdev, &mut vdev),
+                Tier::Host => (&mut khost, &mut vhost),
+            };
+            ks[at..at + d].copy_from_slice(&k[r * d..][..d]);
+            vs[at..at + d].copy_from_slice(&v[r * d..][..d]);
+        }
+
+        let p = FlashParams {
+            heads: h,
+            kv_heads: 1,
+            seq_q: 1,
+            seq_kv: skv,
+            head_dim: d,
+            causal: false,
+            block_q: 1,
+            block_kv: 5,
+            scale: 1.0 / (d as f32).sqrt(),
+        };
+        let mut contig = vec![0.0; h * d];
+        flash_attention(&q, &k, &v, &mut contig, &p);
+
+        let kview = KvView::Tiered {
+            device_store: &kdev,
+            host_store: &khost,
+            pages: &pages,
+            tiers: &tiers,
+            page_size,
+        };
+        let vview = KvView::Tiered {
+            device_store: &vdev,
+            host_store: &vhost,
+            pages: &pages,
+            tiers: &tiers,
+            page_size,
+        };
+        assert_eq!(kview.addressable_rows(d), nblocks * page_size);
+        let mut tiered = vec![0.0; h * d];
+        flash_attention_view(&q, &kview, &vview, &mut tiered, &p);
+        assert_eq!(contig, tiered, "tiered gather must not change bits");
     }
 
     /// GQA must equal MHA with each KV head repeated `group` times.

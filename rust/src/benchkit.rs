@@ -19,6 +19,17 @@ pub struct Stats {
     pub p99_s: f64,
 }
 
+impl Stats {
+    /// Events/second at the mean iteration time — the tok/s column of
+    /// the decode-throughput benches (0.0 when nothing was measured).
+    pub fn events_per_s(&self, events: f64) -> f64 {
+        if self.mean_s <= 0.0 {
+            return 0.0;
+        }
+        events / self.mean_s
+    }
+}
+
 /// Run `f` with `warmup` unmeasured and `iters` measured iterations.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
@@ -198,6 +209,14 @@ mod tests {
         assert_eq!(s.iters, 10);
         assert_eq!(n, 12);
         assert!(s.min_s <= s.p50_s && s.p50_s <= s.p99_s);
+    }
+
+    #[test]
+    fn events_per_s_inverts_mean() {
+        let s = Stats { iters: 1, mean_s: 0.5, min_s: 0.5, p50_s: 0.5, p99_s: 0.5 };
+        assert!((s.events_per_s(8.0) - 16.0).abs() < 1e-12);
+        let z = Stats { iters: 0, mean_s: 0.0, min_s: 0.0, p50_s: 0.0, p99_s: 0.0 };
+        assert_eq!(z.events_per_s(8.0), 0.0);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::attention::batch::{
     batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
-use crate::coordinator::kv_cache::{BlockTable, CacheShape, PagePool};
+use crate::coordinator::kv_cache::{BlockTable, CacheShape, TieredPagePool};
 use crate::models::ModelShape;
 use crate::proptest::Rng;
 use crate::runtime::{HostTensor, Manifest, Runtime};
@@ -98,11 +98,17 @@ pub trait Backend {
         false
     }
 
-    /// One decode step over paged KV: each row's K/V is read and the
-    /// new token's row written *in place* through its block table (no
-    /// pack/unpack memcpy).  Tables must already have capacity for row
-    /// `pos`.  Returns `[rows, vocab]` logits.
-    fn decode_paged(&mut self, _rows: &[PagedRow<'_>], _pool: &mut PagePool) -> Result<Vec<f32>> {
+    /// One decode step over (tiered) paged KV: each row's K/V is read
+    /// and the new token's row written *in place* through its block
+    /// table (no pack/unpack memcpy); blocks migrated to the host tier
+    /// are gathered from the host store, bit-identically.  Tables must
+    /// already have capacity for row `pos`.  Returns `[rows, vocab]`
+    /// logits.
+    fn decode_paged(
+        &mut self,
+        _rows: &[PagedRow<'_>],
+        _pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
         bail!("backend does not support paged KV")
     }
 
@@ -117,7 +123,7 @@ pub trait Backend {
         _tokens: &[i32],
         _start_pos: usize,
         _table: &BlockTable,
-        _pool: &mut PagePool,
+        _pools: &mut TieredPagePool,
     ) -> Result<Vec<f32>> {
         bail!("backend does not support chunked prefill")
     }
@@ -453,10 +459,11 @@ impl HostModelBackend {
                             v[at..at + hd].copy_from_slice(&vrow[g * hd..][..hd]);
                         }
                     }
-                    StepKv::Paged { pool, tables } => {
+                    StepKv::Paged { pools, tables } => {
                         for g in 0..kvh {
-                            let (page, in_page) = tables[ri].locate(l, g, pos);
-                            pool.write_row(
+                            let (tier, page, in_page) = tables[ri].locate_tiered(l, g, pos);
+                            pools.write_row(
+                                tier,
                                 page,
                                 in_page,
                                 &krow[g * hd..][..hd],
@@ -485,21 +492,40 @@ impl HostModelBackend {
                             })
                             .collect()
                     }
-                    StepKv::Paged { pool, tables } => rows
-                        .iter()
-                        .enumerate()
-                        .map(|(ri, &(_, _, pos))| SeqAttn {
-                            q: &qbuf[ri * qdim..][..qdim],
-                            kv: SeqKv::Paged {
-                                k_store: pool.k_store(),
-                                v_store: pool.v_store(),
-                                pages: tables[ri].layer_pages(l),
-                                max_blocks: tables[ri].max_blocks(),
-                                page_size: tables[ri].page_size(),
-                            },
-                            kv_len: pos + 1,
-                        })
-                        .collect(),
+                    StepKv::Paged { pools, tables } => {
+                        // with no host tier configured nothing can ever
+                        // be host-resident — keep the single-store
+                        // gather (no per-row tier dispatch) on that
+                        // default path; both stream identical rows.
+                        let host_empty = pools.host().num_pages() == 0;
+                        rows.iter()
+                            .enumerate()
+                            .map(|(ri, &(_, _, pos))| SeqAttn {
+                                q: &qbuf[ri * qdim..][..qdim],
+                                kv: if host_empty {
+                                    SeqKv::Paged {
+                                        k_store: pools.device().k_store(),
+                                        v_store: pools.device().v_store(),
+                                        pages: tables[ri].layer_pages(l),
+                                        max_blocks: tables[ri].max_blocks(),
+                                        page_size: tables[ri].page_size(),
+                                    }
+                                } else {
+                                    SeqKv::Tiered {
+                                        k_device: pools.device().k_store(),
+                                        v_device: pools.device().v_store(),
+                                        k_host: pools.host().k_store(),
+                                        v_host: pools.host().v_store(),
+                                        pages: tables[ri].layer_pages(l),
+                                        tiers: tables[ri].layer_tiers(l),
+                                        max_blocks: tables[ri].max_blocks(),
+                                        page_size: tables[ri].page_size(),
+                                    }
+                                },
+                                kv_len: pos + 1,
+                            })
+                            .collect()
+                    }
                 };
                 batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
             }
@@ -532,7 +558,7 @@ impl HostModelBackend {
     /// A table's geometry must match the model's cache shape and the
     /// pool's page layout — a mismatched pair would index the row store
     /// with the wrong stride and corrupt KV silently.
-    fn check_table(&self, t: &BlockTable, pool: &PagePool, what: &str) -> Result<()> {
+    fn check_table(&self, t: &BlockTable, pools: &TieredPagePool, what: &str) -> Result<()> {
         if t.layers() != self.cache.layers || t.kv_heads() != self.cache.kv_heads {
             bail!(
                 "{what}: block table is [{} layers, {} kv_heads], model wants [{}, {}]",
@@ -542,17 +568,17 @@ impl HostModelBackend {
                 self.cache.kv_heads
             );
         }
-        if t.page_size() != pool.page_size() {
+        if t.page_size() != pools.page_size() {
             bail!(
                 "{what}: table page_size {} != pool page_size {}",
                 t.page_size(),
-                pool.page_size()
+                pools.page_size()
             );
         }
-        if pool.head_dim() != self.cache.head_dim {
+        if pools.head_dim() != self.cache.head_dim {
             bail!(
                 "{what}: pool head_dim {} != model head_dim {}",
-                pool.head_dim(),
+                pools.head_dim(),
                 self.cache.head_dim
             );
         }
@@ -561,11 +587,12 @@ impl HostModelBackend {
 }
 
 /// Where a host-model forward step reads/writes KV: the engine wire
-/// format's packed `[L, B, Nkv, S, D]` planes, or the paged pool behind
-/// per-row block tables.
+/// format's packed `[L, B, Nkv, S, D]` planes, or the tiered paged pool
+/// behind per-row block tables (rows gather across the device and host
+/// stores; fresh rows land on whichever tier the table names).
 enum StepKv<'a> {
     Plane { batch: usize, k: &'a mut [f32], v: &'a mut [f32] },
-    Paged { pool: &'a mut PagePool, tables: &'a [&'a BlockTable] },
+    Paged { pools: &'a mut TieredPagePool, tables: &'a [&'a BlockTable] },
 }
 
 impl Backend for HostModelBackend {
@@ -674,9 +701,13 @@ impl Backend for HostModelBackend {
         true
     }
 
-    fn decode_paged(&mut self, rows: &[PagedRow<'_>], pool: &mut PagePool) -> Result<Vec<f32>> {
+    fn decode_paged(
+        &mut self,
+        rows: &[PagedRow<'_>],
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
         for (i, r) in rows.iter().enumerate() {
-            self.check_table(r.table, pool, "decode_paged")?;
+            self.check_table(r.table, pools, "decode_paged")?;
             if r.pos >= self.cache.max_seq {
                 bail!(
                     "decode_paged row {i}: pos {} out of cache range {}",
@@ -698,7 +729,7 @@ impl Backend for HostModelBackend {
             .enumerate()
             .map(|(i, r)| (i, r.token, r.pos))
             .collect();
-        let xs = self.forward_step(&frows, &mut StepKv::Paged { pool, tables: &tables });
+        let xs = self.forward_step(&frows, &mut StepKv::Paged { pools, tables: &tables });
 
         let vocab = self.info.vocab;
         let mut logits = vec![0.0f32; rows.len() * vocab];
@@ -713,12 +744,12 @@ impl Backend for HostModelBackend {
         tokens: &[i32],
         start_pos: usize,
         table: &BlockTable,
-        pool: &mut PagePool,
+        pools: &mut TieredPagePool,
     ) -> Result<Vec<f32>> {
         if tokens.is_empty() {
             bail!("prefill_chunk: empty chunk");
         }
-        self.check_table(table, pool, "prefill_chunk")?;
+        self.check_table(table, pools, "prefill_chunk")?;
         let end = start_pos + tokens.len();
         if end > self.cache.max_seq {
             bail!("prefill_chunk: positions ..{end} exceed max_seq {}", self.cache.max_seq);
@@ -742,7 +773,7 @@ impl Backend for HostModelBackend {
             );
             let xs = self.forward_step(
                 &[(0, tok, start_pos + t)],
-                &mut StepKv::Paged { pool, tables: &tables },
+                &mut StepKv::Paged { pools: &mut *pools, tables: &tables },
             );
             last = xs.into_iter().next().expect("one row per step");
         }
@@ -755,6 +786,7 @@ impl Backend for HostModelBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::kv_cache::PcieLink;
 
     fn backend(par: ParallelConfig) -> HostModelBackend {
         HostModelBackend::with_parallel(HostModelConfig::tiny_gqa(), par)
@@ -823,7 +855,8 @@ mod tests {
 
     /// Chunked paged prefill must be bit-identical to the plane prefill
     /// of the same prompt, for any chunk partition — the chunk-boundary
-    /// causal-masking property.
+    /// causal-masking property — even with cold blocks migrating to the
+    /// host tier between chunks.
     #[test]
     fn chunked_paged_prefill_matches_plane() {
         let mut rng = Rng::new(99);
@@ -835,12 +868,15 @@ mod tests {
             // plane path: one bucketed prefill over the whole prompt
             let plane = be.prefill(1, len, &toks, &[len as i32]).unwrap();
 
-            // paged path: random chunk partition
+            // paged path: random chunk partition over the tiered pool
             let page_size = rng.range(1, 7);
-            let mut pool = PagePool::new(
+            let cap = BlockTable::pages_needed(be.cache, page_size, be.cache.max_seq);
+            let mut pools = TieredPagePool::new(
                 page_size,
                 be.cache.head_dim,
-                BlockTable::pages_needed(be.cache, page_size, be.cache.max_seq),
+                cap,
+                cap,
+                PcieLink::default(),
             );
             let mut table = BlockTable::new(be.cache, page_size);
             let mut start = 0;
@@ -848,11 +884,18 @@ mod tests {
             while start < len {
                 let chunk = rng.range(1, len - start + 1);
                 let end = start + chunk;
-                table.ensure_capacity(end, &mut pool).unwrap();
+                table.ensure_capacity(end, pools.device_mut()).unwrap();
                 logits = be
-                    .prefill_chunk(&toks[start..end], start, &table, &mut pool)
+                    .prefill_chunk(&toks[start..end], start, &table, &mut pools)
                     .unwrap();
                 start = end;
+                // randomly offload the coldest block between chunks —
+                // later chunks and decode must not care where KV lives
+                if rng.bool() {
+                    if let Some(b) = table.coldest_device_block(true) {
+                        table.migrate_block_to_host(b, &mut pools).unwrap();
+                    }
+                }
             }
             assert_eq!(
                 &plane.logits[..be.info.vocab],
@@ -860,22 +903,22 @@ mod tests {
                 "case {case}: len={len} page_size={page_size}"
             );
 
-            // the caches agree row for row
+            // the caches agree row for row, whichever tier holds them
             for l in 0..be.cache.layers {
                 for g in 0..be.cache.kv_heads {
                     for r in 0..len {
                         let at = be.cache.batch_row_offset(1, l, 0, g, r);
-                        let (page, slot) = table.locate(l, g, r);
+                        let (tier, page, slot) = table.locate_tiered(l, g, r);
                         let pat = (page as usize * page_size + slot) * be.cache.head_dim;
                         assert_eq!(
                             &plane.k_plane[at..at + be.cache.head_dim],
-                            &pool.k_store()[pat..pat + be.cache.head_dim],
-                            "case {case}: K row l={l} g={g} r={r}"
+                            &pools.k_store(tier)[pat..pat + be.cache.head_dim],
+                            "case {case}: K row l={l} g={g} r={r} ({tier:?})"
                         );
                         assert_eq!(
                             &plane.v_plane[at..at + be.cache.head_dim],
-                            &pool.v_store()[pat..pat + be.cache.head_dim],
-                            "case {case}: V row l={l} g={g} r={r}"
+                            &pools.v_store(tier)[pat..pat + be.cache.head_dim],
+                            "case {case}: V row l={l} g={g} r={r} ({tier:?})"
                         );
                     }
                 }
@@ -886,17 +929,46 @@ mod tests {
             let dp = be
                 .decode(1, &[next], plane.k_plane, plane.v_plane, &[len as i32])
                 .unwrap();
-            table.ensure_capacity(len + 1, &mut pool).unwrap();
+            table.ensure_capacity(len + 1, pools.device_mut()).unwrap();
             let rows = [PagedRow { table: &table, token: next, pos: len }];
-            let dl = be.decode_paged(&rows, &mut pool).unwrap();
+            let dl = be.decode_paged(&rows, &mut pools).unwrap();
             assert_eq!(&dp.logits[..be.info.vocab], &dl[..], "case {case}: decode");
         }
+    }
+
+    /// Decode over a partially-offloaded sequence (some blocks migrated
+    /// to the host tier) must be bit-identical to decode over the same
+    /// sequence fully device-resident.
+    #[test]
+    fn decode_after_migration_bit_identical() {
+        let mut be = backend(ParallelConfig::sequential());
+        let page_size = 4usize;
+        let cap = BlockTable::pages_needed(be.cache, page_size, be.cache.max_seq);
+        let toks: Vec<i32> = (0..20).map(|i| (i * 5 + 3) % 64).collect();
+
+        let run = |be: &mut HostModelBackend, migrate: &[usize]| -> Vec<f32> {
+            let mut pools =
+                TieredPagePool::new(page_size, be.cache.head_dim, cap, cap, PcieLink::default());
+            let mut table = BlockTable::new(be.cache, page_size);
+            table.ensure_capacity(toks.len(), pools.device_mut()).unwrap();
+            be.prefill_chunk(&toks, 0, &table, &mut pools).unwrap();
+            for &b in migrate {
+                table.migrate_block_to_host(b, &mut pools).unwrap();
+            }
+            table.ensure_capacity(toks.len() + 1, pools.device_mut()).unwrap();
+            let rows = [PagedRow { table: &table, token: 9, pos: toks.len() }];
+            be.decode_paged(&rows, &mut pools).unwrap()
+        };
+        let device_only = run(&mut be, &[]);
+        // 20 tokens at page_size 4 → 5 blocks; offload two cold ones
+        let tiered = run(&mut be, &[0, 2]);
+        assert_eq!(device_only, tiered, "migration must not change decode bits");
     }
 
     #[test]
     fn paged_rejects_bad_geometry() {
         let mut be = backend(ParallelConfig::sequential());
-        let mut pool = PagePool::new(4, be.cache.head_dim, 64);
+        let mut pool = TieredPagePool::new(4, be.cache.head_dim, 64, 0, PcieLink::default());
         let mut table = BlockTable::new(be.cache, 4);
         // no capacity yet → decode_paged refuses
         let rows = [PagedRow { table: &table, token: 1, pos: 0 }];
@@ -908,14 +980,14 @@ mod tests {
         assert!(be.decode_paged(&rows, &mut pool).is_err());
         // page_size mismatch between table and pool refused (would
         // otherwise index the row store with the wrong stride)
-        let mut pool8 = PagePool::new(8, be.cache.head_dim, 64);
+        let mut pool8 = TieredPagePool::new(8, be.cache.head_dim, 64, 0, PcieLink::default());
         let mut skewed = BlockTable::new(be.cache, 8);
-        skewed.ensure_capacity(1, &mut pool8).unwrap();
+        skewed.ensure_capacity(1, pool8.device_mut()).unwrap();
         let rows = [PagedRow { table: &skewed, token: 1, pos: 0 }];
         assert!(be.decode_paged(&rows, &mut pool).is_err());
         // chunk beyond capacity refused; empty chunk refused
         assert!(be.prefill_chunk(&[1, 2], 0, &table, &mut pool).is_err());
-        table.ensure_capacity(2, &mut pool).unwrap();
+        table.ensure_capacity(2, pool.device_mut()).unwrap();
         assert!(be.prefill_chunk(&[], 0, &table, &mut pool).is_err());
         assert!(be.prefill_chunk(&[1, 2], 0, &table, &mut pool).is_ok());
     }

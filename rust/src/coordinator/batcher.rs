@@ -319,6 +319,75 @@ mod tests {
     }
 
     #[test]
+    fn requeue_front_restores_fcfs_after_cascaded_preemptions() {
+        // the engine preempts youngest-first and requeues each victim at
+        // the head: pushing 3 then 2 then 1 must leave 1, 2, 3 — i.e.
+        // cascaded preemption reconstructs the original admission order.
+        let mut b = Batcher::new(BatcherConfig { allow_chunked: true, ..cfg() });
+        b.push(req(4, 8)).unwrap();
+        b.requeue_front(req(3, 8));
+        b.requeue_front(req(2, 8));
+        b.requeue_front(req(1, 8));
+        let order: Vec<u64> = std::iter::from_fn(|| b.next_request(0).map(|r| r.id)).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn requeued_request_survives_rejection_free() {
+        // requeue_front bypasses admission (the request was already
+        // admitted once) — even one that would now fail a push gate
+        let mut b = Batcher::new(cfg());
+        // longer than every prefill bucket: push would refuse it…
+        assert!(matches!(b.push(req(7, 200)), Err(AdmitError::NoBucket { .. })));
+        // …but a preempted one comes back and is visible at the head
+        b.requeue_front(req(7, 200));
+        assert_eq!(b.waiting(), 1);
+        assert_eq!(b.peek().unwrap().id, 7);
+    }
+
+    #[test]
+    fn admit_errors_display_capacity_details() {
+        let mut b = Batcher::new(cfg());
+        let e = b.push(req(1, 500)).unwrap_err();
+        assert_eq!(e, AdmitError::ImpossibleLength { need: 516, capacity: 256 });
+        let msg = e.to_string();
+        assert!(msg.contains("516") && msg.contains("256"), "{msg}");
+
+        let e = b.push(req(2, 0)).unwrap_err();
+        assert_eq!(e.to_string(), "empty prompt");
+
+        let e = b.push(req(3, 130)).unwrap_err();
+        assert_eq!(e, AdmitError::NoBucket { len: 130, max_bucket: 128 });
+        let msg = e.to_string();
+        assert!(msg.contains("130") && msg.contains("128"), "{msg}");
+        // all three rejections left the queue untouched
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn admit_boundaries_are_exact() {
+        let mut b = Batcher::new(cfg());
+        // exactly the largest bucket: admitted; one more token: NoBucket
+        b.push(req(1, 128)).unwrap();
+        assert!(matches!(b.push(req(2, 129)), Err(AdmitError::NoBucket { .. })));
+        // prompt + max_new_tokens exactly at KV capacity: admitted
+        b.push(Request::new(3, vec![1; 100], GenParams { max_new_tokens: 156, eos_token: None }))
+            .unwrap();
+        assert!(matches!(
+            b.push(Request::new(
+                4,
+                vec![1; 100],
+                GenParams { max_new_tokens: 157, eos_token: None }
+            )),
+            Err(AdmitError::ImpossibleLength { need: 257, capacity: 256 })
+        ));
+        // with chunking on, the bucket gate vanishes but KV gate stays
+        let mut c = Batcher::new(BatcherConfig { allow_chunked: true, ..cfg() });
+        c.push(req(5, 129)).unwrap();
+        assert!(matches!(c.push(req(6, 500)), Err(AdmitError::ImpossibleLength { .. })));
+    }
+
+    #[test]
     fn next_request_respects_capacity() {
         let mut b = Batcher::new(BatcherConfig { allow_chunked: true, ..cfg() });
         b.push(req(1, 8)).unwrap();

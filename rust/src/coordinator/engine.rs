@@ -15,16 +15,21 @@
 //!
 //! * **Paged** (the default whenever the backend `supports_paged`, e.g.
 //!   [`HostModelBackend`](super::backend::HostModelBackend)): a
-//!   [`PagePool`] block allocator plus a per-sequence [`BlockTable`].
-//!   Sequences hold only the pages their tokens occupy; decode reads
-//!   and writes rows in place (no pack/unpack memcpy); prompts longer
-//!   than any prefill bucket are admitted and **chunk-prefilled**
-//!   (`max_chunk` tokens per step, interleaved with decodes by the
-//!   scheduler's `Chunked` step).  Page-allocation failure preempts the
-//!   youngest sequence (recompute-style: its request goes back to the
-//!   head of the waiting queue) instead of panicking; admission is
-//!   gated on worst-case page demand so the oldest sequence always
-//!   completes and the system cannot livelock.
+//!   two-tier [`TieredPagePool`] block allocator plus a per-sequence
+//!   [`BlockTable`] with per-block tier tags.  Sequences hold only the
+//!   pages their tokens occupy; decode reads and writes rows in place
+//!   (no pack/unpack memcpy), gathering across the device and host
+//!   stores when blocks have been offloaded; prompts longer than any
+//!   prefill bucket are admitted and **chunk-prefilled** (`max_chunk`
+//!   tokens per step, interleaved with decodes by the scheduler's
+//!   `Chunked` step).  On device-page exhaustion the engine first
+//!   **migrates cold blocks to the host tier** (§4.4 at page
+//!   granularity — oldest positions of the longest sequence, one
+//!   batched move over the modeled [`PcieLink`]) and only then falls
+//!   back to preempting the youngest sequence (recompute-style: its
+//!   request goes back to the head of the waiting queue); admission is
+//!   gated on worst-case page demand across both tiers so the oldest
+//!   sequence always completes and the system cannot livelock.
 //! * **Contiguous** (artifact/PJRT backends): fixed `[L,1,Nkv,S,D]`
 //!   per-sequence slabs packed into `[L,B,Nkv,S,D]` batch planes — the
 //!   AOT wire format — with the device/host `CachePool` tiering.
@@ -40,8 +45,8 @@ use anyhow::{bail, Context, Result};
 use super::backend::{ArtifactBackend, Backend, PagedRow};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
-    pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError, PagePool,
-    SeqCache, Tier,
+    pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError, PcieLink,
+    SeqCache, Tier, TieredPagePool,
 };
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
@@ -102,9 +107,17 @@ pub enum KvLayout {
 /// Engine configuration knobs.
 pub struct EngineConfig {
     pub policy: Policy,
-    /// Device KV budget in bytes: sizes the page pool (paged layout) or
-    /// drives CachePool tiering (contiguous layout).
+    /// Device KV budget in bytes: sizes the device page pool (paged
+    /// layout) or drives CachePool tiering (contiguous layout).
     pub device_kv_budget: usize,
+    /// Host-tier KV budget in bytes (paged layout): capacity for cold
+    /// pages migrated off-device (§4.4 at page granularity).  `0`
+    /// disables the host tier — page exhaustion then falls straight
+    /// through to evict-youngest preemption.
+    pub host_kv_budget: usize,
+    /// Modeled host↔device link that cold-page migrations are charged
+    /// to (`EngineMetrics::pcie_modeled_s`).
+    pub pcie: PcieLink,
     /// Cap on concurrently live sequences (decoding + chunk-prefilling).
     pub max_active: usize,
     /// Intra-step parallelism for backends that honor it (the host
@@ -122,6 +135,8 @@ impl Default for EngineConfig {
         Self {
             policy: Policy::Fair { quantum: 4 },
             device_kv_budget: 64 << 20,
+            host_kv_budget: 0,
+            pcie: PcieLink::default(),
             max_active: 16,
             parallel: ParallelConfig::default(),
             kv_layout: KvLayout::Auto,
@@ -133,7 +148,7 @@ impl Default for EngineConfig {
 /// The engine's KV backing.
 enum EngineKv {
     Contig(CachePool),
-    Paged(PagePool),
+    Paged(TieredPagePool),
 }
 
 /// The engine.
@@ -200,7 +215,13 @@ impl Engine {
             allow_chunked: paged,
         });
         let kv = if paged {
-            EngineKv::Paged(PagePool::for_budget(shape, cfg.page_size, cfg.device_kv_budget))
+            EngineKv::Paged(TieredPagePool::for_budget(
+                shape,
+                cfg.page_size,
+                cfg.device_kv_budget,
+                cfg.host_kv_budget,
+                cfg.pcie,
+            ))
         } else {
             EngineKv::Contig(CachePool::new(shape, cfg.device_kv_budget))
         };
@@ -226,19 +247,37 @@ impl Engine {
         matches!(self.kv, EngineKv::Paged(_))
     }
 
+    /// Pages the paged engine can actually place, rounded to block
+    /// groups per tier: new blocks allocate whole groups on the device,
+    /// cold blocks migrate as whole groups to the host, so a tier's
+    /// trailing partial group is dead capacity.  This is what makes the
+    /// no-livelock induction go through — the oldest sequence alone can
+    /// always grow to `usable_pages` by migrating its own cold blocks.
+    fn usable_pages(&self, pools: &TieredPagePool) -> usize {
+        let group = self.shape.layers * self.shape.kv_heads;
+        (pools.device().num_pages() / group + pools.host().num_pages() / group) * group
+    }
+
     /// Submit a prompt; returns its request id.
     pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams) -> Result<RequestId> {
-        if let EngineKv::Paged(pool) = &self.kv {
+        if let EngineKv::Paged(pools) = &self.kv {
+            let group = self.shape.layers * self.shape.kv_heads;
+            if pools.device().num_pages() < group {
+                bail!(
+                    "device page pool holds {} pages but one block group needs {group}",
+                    pools.device().num_pages()
+                );
+            }
             let need = BlockTable::pages_needed(
                 self.shape,
                 self.page_size,
                 prompt.len() + params.max_new_tokens,
             );
-            if need > pool.num_pages() {
+            let usable = self.usable_pages(pools);
+            if need > usable {
                 bail!(
-                    "request needs {need} KV pages ({} tokens), pool holds only {}",
+                    "request needs {need} KV pages ({} tokens), tiers hold only {usable} usable",
                     prompt.len() + params.max_new_tokens,
-                    pool.num_pages()
                 );
             }
         }
@@ -263,10 +302,22 @@ impl Engine {
 
     /// Run one scheduling step.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
-        match self
-            .scheduler
-            .next_step(&self.batcher, self.active.len(), self.chunking.len())
-        {
+        // memory pressure: the device tier cannot place even one block
+        // group, so admitting a new sequence would only bounce off the
+        // allocator — prefer draining work that frees pages.
+        let pressure = match &self.kv {
+            EngineKv::Paged(pools) => {
+                let group = self.shape.layers * self.shape.kv_heads;
+                pools.device().free_pages() < group
+            }
+            EngineKv::Contig(_) => false,
+        };
+        match self.scheduler.next_step_pressured(
+            &self.batcher,
+            self.active.len(),
+            self.chunking.len(),
+            pressure,
+        ) {
             Step::Idle => Ok(false),
             Step::Prefill => {
                 let admitted = if self.is_paged() {
@@ -441,7 +492,7 @@ impl Engine {
     /// can always finish by preempting only younger sequences, so the
     /// oldest always completes and admission cannot livelock.
     fn admit_chunked(&mut self) -> Result<bool> {
-        let EngineKv::Paged(pool) = &self.kv else {
+        let EngineKv::Paged(pools) = &self.kv else {
             bail!("chunked admission on a contiguous engine");
         };
         let Some(head) = self.batcher.peek() else {
@@ -452,7 +503,12 @@ impl Engine {
             self.page_size,
             head.prompt.len() + head.params.max_new_tokens,
         );
-        if pool.free_pages() < need {
+        // same group rounding as the submit gate: a tier's partial
+        // trailing group is dead capacity and must not admit anyone
+        let group = self.shape.layers * self.shape.kv_heads;
+        let usable_free =
+            (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
+        if usable_free < need {
             return Ok(false); // wait for capacity; decode keeps draining
         }
         let live = self.active.len() + self.chunking.len();
@@ -496,11 +552,11 @@ impl Engine {
             let SeqStore::Paged { table } = &s.store else {
                 bail!("chunked sequence without a block table");
             };
-            let EngineKv::Paged(pool) = &mut self.kv else {
+            let EngineKv::Paged(pools) = &mut self.kv else {
                 bail!("chunked sequence without a page pool");
             };
             self.backend
-                .prefill_chunk(&s.prompt[start..end], start, table, pool)
+                .prefill_chunk(&s.prompt[start..end], start, table, pools)
                 .with_context(|| format!("prefill chunk {start}..{end} of seq {id}"))?
         };
         let s = self.seqs.get_mut(&id).expect("survived backend step");
@@ -560,11 +616,11 @@ impl Engine {
                     PagedRow { table, token: s.last_token(), pos: s.pos() }
                 })
                 .collect();
-            let EngineKv::Paged(pool) = &mut self.kv else {
+            let EngineKv::Paged(pools) = &mut self.kv else {
                 bail!("paged decode on a contiguous engine");
             };
             self.backend
-                .decode_paged(&rows, pool)
+                .decode_paged(&rows, pools)
                 .with_context(|| format!("paged decode step b{}", ids.len()))?
         };
         let vocab = self.backend.model().vocab;
@@ -600,14 +656,16 @@ impl Engine {
         }
     }
 
-    /// Grow `id`'s block table to hold `tokens` rows.  On pool
-    /// exhaustion, preempt the youngest live sequence and retry;
-    /// returns `Ok(false)` when the sequence *itself* was the youngest
-    /// and got preempted.
+    /// Grow `id`'s block table to hold `tokens` rows.  On device-pool
+    /// exhaustion the engine first migrates cold pages to the host tier
+    /// (§4.4 at page granularity), and only when nothing can migrate
+    /// falls back to preempting the youngest live sequence; returns
+    /// `Ok(false)` when the sequence *itself* was the youngest and got
+    /// preempted.
     fn ensure_pages(&mut self, id: RequestId, tokens: usize) -> Result<bool> {
         loop {
             {
-                let EngineKv::Paged(pool) = &mut self.kv else {
+                let EngineKv::Paged(pools) = &mut self.kv else {
                     bail!("ensure_pages on a contiguous engine");
                 };
                 let Some(s) = self.seqs.get_mut(&id) else {
@@ -616,7 +674,7 @@ impl Engine {
                 let SeqStore::Paged { table } = &mut s.store else {
                     bail!("ensure_pages on a contiguous sequence");
                 };
-                match table.ensure_capacity(tokens, pool) {
+                match table.ensure_capacity(tokens, pools.device_mut()) {
                     Ok(()) => return Ok(true),
                     Err(PageAllocError::ExceedsMaxSeq) => {
                         bail!("sequence {id} exceeds max_seq {}", self.shape.max_seq)
@@ -626,6 +684,11 @@ impl Engine {
                     }
                 }
             }
+            // migrate-before-preempt: each successful migration frees
+            // exactly one device block group — what one retry needs.
+            if self.migrate_cold_block() {
+                continue;
+            }
             let Some(victim) = self.preempt_youngest() else {
                 bail!("KV page pool exhausted with nothing to preempt");
             };
@@ -633,6 +696,53 @@ impl Engine {
                 return Ok(false);
             }
         }
+    }
+
+    /// Move the coldest block in the system to the host tier: the
+    /// lowest-index device block (oldest token positions) of the
+    /// longest live sequence, as one batched PCIe move.  The hot tail
+    /// block of each sequence is spared unless nothing else qualifies
+    /// (a device tier too small for two blocks).  Returns false when
+    /// the host tier is absent/full or no device block exists — the
+    /// caller falls back to preemption.
+    ///
+    /// Termination: every migration consumes host free pages, every
+    /// preemption removes a live sequence, and neither is undone within
+    /// one `ensure_pages` call — the exhaustion loop cannot cycle.
+    fn migrate_cold_block(&mut self) -> bool {
+        let EngineKv::Paged(pools) = &mut self.kv else {
+            return false;
+        };
+        let group = self.shape.layers * self.shape.kv_heads;
+        if pools.host().free_pages() < group {
+            return false;
+        }
+        // longest cached sequence first; deterministic id tie-break
+        // (active/chunking vectors, not HashMap order).
+        let mut order: Vec<(usize, RequestId)> = self
+            .active
+            .iter()
+            .chain(self.chunking.iter())
+            .map(|&sid| {
+                let blocks = match &self.seqs[&sid].store {
+                    SeqStore::Paged { table } => table.blocks(),
+                    SeqStore::Contig { .. } => 0,
+                };
+                (blocks, sid)
+            })
+            .collect();
+        order.sort_by_key(|&(blocks, sid)| (std::cmp::Reverse(blocks), sid));
+        for include_tail in [false, true] {
+            for &(_, sid) in &order {
+                let Some(s) = self.seqs.get_mut(&sid) else { continue };
+                let SeqStore::Paged { table } = &mut s.store else { continue };
+                let Some(b) = table.coldest_device_block(include_tail) else { continue };
+                if table.migrate_block_to_host(b, pools).is_ok() {
+                    return true;
+                }
+            }
+        }
+        false
     }
 
     /// Evict the youngest live sequence (recompute-style preemption):
@@ -649,10 +759,10 @@ impl Engine {
         let mut state = self.seqs.remove(&victim).expect("victim is tracked");
         self.active.retain(|&a| a != victim);
         self.chunking.retain(|&c| c != victim);
-        if let (SeqStore::Paged { table }, EngineKv::Paged(pool)) =
+        if let (SeqStore::Paged { table }, EngineKv::Paged(pools)) =
             (&mut state.store, &mut self.kv)
         {
-            table.release_all(pool);
+            table.release_all_tiered(pools);
         }
         self.batcher.requeue_front(Request {
             id: victim,
@@ -665,11 +775,18 @@ impl Engine {
     }
 
     fn update_page_metrics(&mut self) {
-        if let EngineKv::Paged(pool) = &self.kv {
-            self.metrics.pages_used = pool.used_pages() as u64;
-            self.metrics.pages_total = pool.num_pages() as u64;
+        if let EngineKv::Paged(pools) = &self.kv {
+            self.metrics.pages_used = pools.device().used_pages() as u64;
+            self.metrics.pages_total = pools.device().num_pages() as u64;
             self.metrics.peak_pages_used =
                 self.metrics.peak_pages_used.max(self.metrics.pages_used);
+            self.metrics.host_pages_used = pools.host().used_pages() as u64;
+            self.metrics.host_pages_total = pools.host().num_pages() as u64;
+            let st = pools.stats();
+            self.metrics.pages_migrated = st.pages_moved;
+            self.metrics.migrations = st.batches;
+            self.metrics.migrated_bytes = st.bytes_moved;
+            self.metrics.pcie_modeled_s = st.modeled_s;
         }
     }
 
@@ -682,8 +799,8 @@ impl Engine {
                 }
             }
             SeqStore::Paged { table } => {
-                if let EngineKv::Paged(pool) = &mut self.kv {
-                    table.release_all(pool);
+                if let EngineKv::Paged(pools) = &mut self.kv {
+                    table.release_all_tiered(pools);
                 }
             }
         }
@@ -740,6 +857,68 @@ mod tests {
             Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
             cfg,
         )
+    }
+
+    fn host_engine_tiered(device_groups: usize, host_groups: usize) -> Engine {
+        // tiny_gqa: a block group is layers 2 × kv_heads 2 = 4 pages of
+        // 2·4·16·8 B = 1 KiB each.
+        let group_bytes = 4 * 1024;
+        let cfg = EngineConfig {
+            parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+            kv_layout: KvLayout::Paged,
+            device_kv_budget: device_groups * group_bytes,
+            host_kv_budget: host_groups * group_bytes,
+            page_size: 16,
+            ..EngineConfig::default()
+        };
+        Engine::with_backend(
+            Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn tiered_offload_matches_device_only() {
+        // 8 + 40 = 48 tokens = 3 blocks = 12 pages; the device tier
+        // holds only 2 block groups, so the third block forces a
+        // cold-page migration — with nothing younger to evict, only the
+        // migrate-before-preempt path can make room.
+        let p = GenParams { max_new_tokens: 40, eos_token: None };
+        let prompt = vec![5i32; 8];
+        let mut big = host_engine_with_layout(1, KvLayout::Paged);
+        big.submit(prompt.clone(), p).unwrap();
+        let want = big.run_until_idle().unwrap();
+        assert_eq!(big.metrics.pages_migrated, 0, "unconstrained run never migrates");
+
+        let mut tiered = host_engine_tiered(2, 4);
+        tiered.submit(prompt, p).unwrap();
+        let got = tiered.run_until_idle().unwrap();
+        assert_eq!(got[0].tokens, want[0].tokens, "offload must not change tokens");
+        assert!(
+            tiered.metrics.pages_migrated >= 4,
+            "the cold block group must have moved, migrated {}",
+            tiered.metrics.pages_migrated
+        );
+        assert_eq!(tiered.metrics.preemptions, 0, "migration covers a solo sequence");
+        assert!(tiered.metrics.migrations >= 1);
+        assert!(tiered.metrics.pcie_modeled_s > 0.0);
+        assert_eq!(
+            tiered.metrics.migrated_bytes,
+            tiered.metrics.pages_migrated * 1024
+        );
+        assert_eq!(tiered.metrics.pages_used, 0, "device tier drained at idle");
+        assert_eq!(tiered.metrics.host_pages_used, 0, "host tier drained at idle");
+        assert_eq!(tiered.metrics.host_pages_total, 16);
+    }
+
+    #[test]
+    fn submit_gate_counts_both_tiers() {
+        // device alone (2 groups) cannot hold 3 blocks, device+host can
+        let p = GenParams { max_new_tokens: 40, eos_token: None };
+        let mut no_host = host_engine_tiered(2, 0);
+        assert!(no_host.submit(vec![5; 8], p).is_err());
+        let mut tiered = host_engine_tiered(2, 4);
+        assert!(tiered.submit(vec![5; 8], p).is_ok());
     }
 
     #[test]

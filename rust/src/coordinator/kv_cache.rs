@@ -137,7 +137,9 @@ pub fn unpack_batch(
     Ok(())
 }
 
-/// Placement tier for a layer's KV cache (§4.4).
+/// Placement tier for KV memory (§4.4): a whole contiguous layer cache
+/// under the legacy [`CachePool`], or a single page/block under the
+/// tiered paged cache ([`TieredPagePool`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Tier {
     /// Device (GPU/NPU) resident.
@@ -219,6 +221,13 @@ impl CachePool {
 /// Marker for an unallocated block-table slot.
 pub const NO_PAGE: u32 = u32::MAX;
 
+/// Bytes of one KV page (K + V rows at f32) — the single source of
+/// truth for page sizing: pool budgets, migration accounting and the
+/// offload page planner all go through it.
+pub fn kv_page_bytes(page_size: usize, head_dim: usize) -> usize {
+    2 * 4 * page_size * head_dim
+}
+
 /// Why a page allocation failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PageAllocError {
@@ -278,7 +287,7 @@ impl PagePool {
     /// Size the pool for a device budget: as many pages as
     /// `budget_bytes` holds at f32 K+V rows (at least one).
     pub fn for_budget(shape: CacheShape, page_size: usize, budget_bytes: usize) -> Self {
-        let page_bytes = 2 * 4 * page_size * shape.head_dim;
+        let page_bytes = kv_page_bytes(page_size, shape.head_dim);
         let num_pages = (budget_bytes / page_bytes.max(1)).max(1);
         Self::new(page_size, shape.head_dim, num_pages)
     }
@@ -313,7 +322,7 @@ impl PagePool {
 
     /// Bytes of one page (K + V).
     pub fn page_bytes(&self) -> usize {
-        2 * 4 * self.page_size * self.head_dim
+        kv_page_bytes(self.page_size, self.head_dim)
     }
 
     /// Allocate one page (`refs = 1`).  Page contents are stale — the
@@ -369,6 +378,214 @@ impl PagePool {
     }
 }
 
+// ---------------------------------------------------------------------
+// Tiered paged KV: PcieLink + TieredPagePool
+// ---------------------------------------------------------------------
+
+/// Modeled host↔device interconnect that cold-page migration is charged
+/// to: a fixed per-transfer setup latency plus bytes over an effective
+/// bandwidth.  Batched moves (one block group = `layers × kv_heads`
+/// pages) pay the latency once, which is why the engine migrates whole
+/// blocks rather than single pages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcieLink {
+    /// Effective bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-transfer setup latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for PcieLink {
+    /// PCIe 3.0 ×16 as calibrated from the paper's Table 3 — the same
+    /// ~11.7 GB/s effective bandwidth and 22 µs setup latency that
+    /// `sim::volta::VoltaSpec` uses (see `coordinator::offload`).
+    fn default() -> Self {
+        Self { bandwidth_bps: 11.7e9, latency_s: 22e-6 }
+    }
+}
+
+impl PcieLink {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        Self { bandwidth_bps, latency_s }
+    }
+
+    /// Modeled seconds to move `bytes` as one batched transfer.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps.max(1.0)
+    }
+}
+
+/// Cumulative migration accounting of a [`TieredPagePool`].
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct MigrationStats {
+    /// Pages moved device→host.
+    pub pages_moved: u64,
+    /// Batched transfers (one per migrated block group).
+    pub batches: u64,
+    /// Bytes moved over the modeled link.
+    pub bytes_moved: u64,
+    /// Modeled link seconds charged (`PcieLink::transfer_s` per batch).
+    pub modeled_s: f64,
+}
+
+/// The two-tier paged KV cache: a device-resident [`PagePool`] that all
+/// new blocks allocate from, plus a host-resident pool that cold pages
+/// migrate to over the modeled [`PcieLink`].  Page ids are per-pool; a
+/// [`BlockTable`]'s per-entry [`Tier`] tag says which pool an id indexes.
+///
+/// A `host_pages == 0` pool degenerates to the single-tier behavior:
+/// migration always refuses and callers fall back to preemption.
+#[derive(Debug)]
+pub struct TieredPagePool {
+    device: PagePool,
+    host: PagePool,
+    link: PcieLink,
+    stats: MigrationStats,
+}
+
+impl TieredPagePool {
+    pub fn new(
+        page_size: usize,
+        head_dim: usize,
+        device_pages: usize,
+        host_pages: usize,
+        link: PcieLink,
+    ) -> Self {
+        Self {
+            device: PagePool::new(page_size, head_dim, device_pages),
+            host: PagePool::new(page_size, head_dim, host_pages),
+            link,
+            stats: MigrationStats::default(),
+        }
+    }
+
+    /// Size both tiers from byte budgets.  The device tier always holds
+    /// at least one page; `host_budget_bytes` smaller than a page means
+    /// no host tier at all.
+    pub fn for_budget(
+        shape: CacheShape,
+        page_size: usize,
+        device_budget_bytes: usize,
+        host_budget_bytes: usize,
+        link: PcieLink,
+    ) -> Self {
+        let page_bytes = kv_page_bytes(page_size, shape.head_dim);
+        let host_pages = host_budget_bytes / page_bytes.max(1);
+        Self {
+            device: PagePool::for_budget(shape, page_size, device_budget_bytes),
+            host: PagePool::new(page_size, shape.head_dim, host_pages),
+            link,
+            stats: MigrationStats::default(),
+        }
+    }
+
+    pub fn device(&self) -> &PagePool {
+        &self.device
+    }
+
+    /// The device pool — what [`BlockTable::ensure_capacity`] allocates
+    /// new blocks from (fresh rows are always written device-side).
+    pub fn device_mut(&mut self) -> &mut PagePool {
+        &mut self.device
+    }
+
+    pub fn host(&self) -> &PagePool {
+        &self.host
+    }
+
+    pub fn pool(&self, tier: Tier) -> &PagePool {
+        match tier {
+            Tier::Device => &self.device,
+            Tier::Host => &self.host,
+        }
+    }
+
+    fn pool_mut(&mut self, tier: Tier) -> &mut PagePool {
+        match tier {
+            Tier::Device => &mut self.device,
+            Tier::Host => &mut self.host,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.device.page_size()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.device.head_dim()
+    }
+
+    /// Bytes of one page (K + V), identical in both tiers.
+    pub fn page_bytes(&self) -> usize {
+        self.device.page_bytes()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.device.num_pages() + self.host.num_pages()
+    }
+
+    pub fn free_pages_total(&self) -> usize {
+        self.device.free_pages() + self.host.free_pages()
+    }
+
+    pub fn link(&self) -> PcieLink {
+        self.link
+    }
+
+    pub fn stats(&self) -> MigrationStats {
+        self.stats
+    }
+
+    /// K row store of one tier (`[num_pages, page_size, head_dim]`).
+    pub fn k_store(&self, tier: Tier) -> &[f32] {
+        self.pool(tier).k_store()
+    }
+
+    /// V row store of one tier, same shape.
+    pub fn v_store(&self, tier: Tier) -> &[f32] {
+        self.pool(tier).v_store()
+    }
+
+    /// Write one token's K/V rows into `slot` of `page` on `tier`.
+    /// Fresh blocks live device-side, but writes into already-migrated
+    /// blocks (a chunked prefill filling a cold tail) land on host.
+    pub fn write_row(&mut self, tier: Tier, page: u32, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        self.pool_mut(tier).write_row(page, slot, k_row, v_row);
+    }
+
+    /// Move one device page's rows onto a freshly allocated host page;
+    /// the device page returns to its free list.  Accounting is the
+    /// caller's ([`Self::charge_batch`]) so a multi-page block move is
+    /// charged one PCIe setup latency.
+    fn offload_page(&mut self, device_page: u32) -> Option<u32> {
+        debug_assert_eq!(
+            self.device.ref_count(device_page),
+            1,
+            "migrating a shared page would break the other holder's mapping"
+        );
+        let host_page = self.host.alloc()?;
+        let n = self.device.page_size * self.device.head_dim;
+        let src = device_page as usize * n;
+        let dst = host_page as usize * n;
+        self.host.k[dst..dst + n].copy_from_slice(&self.device.k[src..src + n]);
+        self.host.v[dst..dst + n].copy_from_slice(&self.device.v[src..src + n]);
+        self.device.release(device_page);
+        Some(host_page)
+    }
+
+    /// Charge one batched `pages`-page move to the link model.
+    fn charge_batch(&mut self, pages: usize) {
+        if pages == 0 {
+            return;
+        }
+        let bytes = pages * self.page_bytes();
+        self.stats.pages_moved += pages as u64;
+        self.stats.batches += 1;
+        self.stats.bytes_moved += bytes as u64;
+        self.stats.modeled_s += self.link.transfer_s(bytes);
+    }
+}
+
 /// A sequence's logical-block → page mapping: `[layers, kv_heads,
 /// max_blocks]` page ids, where block `b` covers token rows
 /// `[b*page_size, (b+1)*page_size)`.  Blocks allocate as a group — one
@@ -383,6 +600,9 @@ pub struct BlockTable {
     /// Allocated logical blocks (all planes).
     blocks: usize,
     table: Vec<u32>,
+    /// Per-entry placement tag (parallel to `table`).  Blocks migrate
+    /// as a group, so every plane of one block shares a tier.
+    tiers: Vec<Tier>,
 }
 
 impl BlockTable {
@@ -396,6 +616,7 @@ impl BlockTable {
             max_blocks,
             blocks: 0,
             table: vec![NO_PAGE; shape.layers * shape.kv_heads * max_blocks],
+            tiers: vec![Tier::Device; shape.layers * shape.kv_heads * max_blocks],
         }
     }
 
@@ -465,8 +686,9 @@ impl BlockTable {
             let mut it = got.into_iter();
             for l in 0..self.layers {
                 for g in 0..self.kv_heads {
-                    self.table[(l * self.kv_heads + g) * self.max_blocks + b] =
-                        it.next().expect("group sized to planes");
+                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    self.table[at] = it.next().expect("group sized to planes");
+                    self.tiers[at] = Tier::Device;
                 }
             }
             self.blocks += 1;
@@ -474,14 +696,21 @@ impl BlockTable {
         Ok(())
     }
 
-    /// The (page, in-page slot) holding token row `row` of
+    /// The (tier, page, in-page slot) holding token row `row` of
     /// (`layer`, `kv_head`).  The block must be allocated.
-    pub fn locate(&self, layer: usize, kv_head: usize, row: usize) -> (u32, usize) {
+    pub fn locate_tiered(&self, layer: usize, kv_head: usize, row: usize) -> (Tier, u32, usize) {
         let b = row / self.page_size;
         debug_assert!(b < self.blocks, "row {row} beyond allocated blocks");
-        let page = self.table[(layer * self.kv_heads + kv_head) * self.max_blocks + b];
-        debug_assert_ne!(page, NO_PAGE, "unallocated block {b}");
-        (page, row % self.page_size)
+        let at = (layer * self.kv_heads + kv_head) * self.max_blocks + b;
+        debug_assert_ne!(self.table[at], NO_PAGE, "unallocated block {b}");
+        (self.tiers[at], self.table[at], row % self.page_size)
+    }
+
+    /// The (page, in-page slot) holding token row `row` of
+    /// (`layer`, `kv_head`) — single-pool callers that never migrate.
+    pub fn locate(&self, layer: usize, kv_head: usize, row: usize) -> (u32, usize) {
+        let (_, page, slot) = self.locate_tiered(layer, kv_head, row);
+        (page, slot)
     }
 
     /// One layer's `[kv_heads, max_blocks]` page-id plane — the gather
@@ -491,14 +720,99 @@ impl BlockTable {
         &self.table[layer * n..][..n]
     }
 
-    /// Release every held page back to `pool` and reset to empty.
+    /// One layer's `[kv_heads, max_blocks]` tier-tag plane, parallel to
+    /// [`Self::layer_pages`] — selects the store each page id indexes.
+    pub fn layer_tiers(&self, layer: usize) -> &[Tier] {
+        let n = self.kv_heads * self.max_blocks;
+        &self.tiers[layer * n..][..n]
+    }
+
+    /// Tier of block `b` (uniform across planes — blocks migrate as a
+    /// group).
+    pub fn block_tier(&self, b: usize) -> Tier {
+        debug_assert!(b < self.blocks, "tier of unallocated block {b}");
+        self.tiers[b] // entry (layer 0, kv_head 0, b)
+    }
+
+    /// Device-resident blocks.
+    pub fn device_blocks(&self) -> usize {
+        (0..self.blocks).filter(|&b| self.block_tier(b) == Tier::Device).count()
+    }
+
+    /// The coldest migratable block: the lowest-index device-tier block
+    /// (lowest token positions = oldest data).  `include_tail: false`
+    /// spares the hot tail — the last allocated block, where fresh rows
+    /// usually land; `true` considers every block (the last resort when
+    /// the device tier cannot even hold two blocks of one sequence).
+    pub fn coldest_device_block(&self, include_tail: bool) -> Option<usize> {
+        let lim = if include_tail { self.blocks } else { self.blocks.saturating_sub(1) };
+        (0..lim).find(|&b| self.block_tier(b) == Tier::Device)
+    }
+
+    /// Migrate block `b` (one page per plane) from the device tier to
+    /// the host tier as one batched PCIe move.  All-or-nothing: host
+    /// capacity for the whole group is checked up front, so a failed
+    /// call changes nothing.  Returns the pages moved.
+    ///
+    /// Shared pages (ref count > 1) must not migrate — the other
+    /// holder's table would keep indexing the device store; this table
+    /// must own every page of the block.
+    pub fn migrate_block_to_host(
+        &mut self,
+        b: usize,
+        pools: &mut TieredPagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        assert!(b < self.blocks, "migrate of unallocated block {b}");
+        assert_eq!(self.block_tier(b), Tier::Device, "block {b} already host-resident");
+        debug_assert_eq!(pools.page_size(), self.page_size, "pool/table page_size");
+        let group = self.layers * self.kv_heads;
+        if pools.host().free_pages() < group {
+            return Err(PageAllocError::OutOfPages);
+        }
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                let host_page = pools
+                    .offload_page(self.table[at])
+                    .expect("host capacity checked above");
+                self.table[at] = host_page;
+                self.tiers[at] = Tier::Host;
+            }
+        }
+        pools.charge_batch(group);
+        Ok(group)
+    }
+
+    /// Release every held page back to `pool` and reset to empty — the
+    /// single-pool path; every block must still be device-resident.
     pub fn release_all(&mut self, pool: &mut PagePool) {
         for l in 0..self.layers {
             for g in 0..self.kv_heads {
                 for b in 0..self.blocks {
                     let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    debug_assert_eq!(
+                        self.tiers[at],
+                        Tier::Device,
+                        "release_all on a migrated table — use release_all_tiered"
+                    );
                     pool.release(self.table[at]);
                     self.table[at] = NO_PAGE;
+                }
+            }
+        }
+        self.blocks = 0;
+    }
+
+    /// Release every held page into its own tier's pool and reset to
+    /// empty.
+    pub fn release_all_tiered(&mut self, pools: &mut TieredPagePool) {
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                for b in 0..self.blocks {
+                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    pools.pool_mut(self.tiers[at]).release(self.table[at]);
+                    self.table[at] = NO_PAGE;
+                    self.tiers[at] = Tier::Device;
                 }
             }
         }
@@ -694,6 +1008,128 @@ mod tests {
         // the partial group was rolled back — nothing leaked
         assert_eq!(pool.used_pages(), 0);
         assert_eq!(t.blocks(), 0);
+    }
+
+    // --- tiered paged KV ----------------------------------------------
+
+    #[test]
+    fn pcie_link_batched_moves_amortize_latency() {
+        let link = PcieLink::new(10e9, 20e-6);
+        let pb = 4096usize;
+        let one = link.transfer_s(pb);
+        assert!((one - (20e-6 + 4096.0 / 10e9)).abs() < 1e-12);
+        // one batched 10-page move beats ten single-page moves
+        assert!(link.transfer_s(10 * pb) < 10.0 * one);
+    }
+
+    #[test]
+    fn migrate_block_preserves_rows_and_frees_device_pages() {
+        let sh = shape(); // layers 2, kv_heads 3, max_seq 4, head_dim 2
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        assert_eq!(t.blocks(), 2);
+        assert_eq!(t.device_blocks(), 2);
+        // distinct rows everywhere
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..4 {
+                    let base = ((l * 10 + g) * 10 + r) as f32;
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    assert_eq!(tier, Tier::Device);
+                    pools.write_row(tier, page, slot, &[base, base + 0.5], &[-base, -base - 0.5]);
+                }
+            }
+        }
+        assert_eq!(pools.device().used_pages(), 2 * group);
+
+        let moved = t.migrate_block_to_host(0, &mut pools).unwrap();
+        assert_eq!(moved, group);
+        assert_eq!(t.block_tier(0), Tier::Host);
+        assert_eq!(t.block_tier(1), Tier::Device);
+        assert_eq!(t.device_blocks(), 1);
+        assert_eq!(pools.device().used_pages(), group, "block 0 device pages freed");
+        assert_eq!(pools.host().used_pages(), group);
+
+        // every row reads back identically through its (possibly new) tier
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..4 {
+                    let base = ((l * 10 + g) * 10 + r) as f32;
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    assert_eq!(tier, if r < 2 { Tier::Host } else { Tier::Device });
+                    let at = (page as usize * 2 + slot) * sh.head_dim;
+                    assert_eq!(&pools.k_store(tier)[at..at + 2], &[base, base + 0.5]);
+                    assert_eq!(&pools.v_store(tier)[at..at + 2], &[-base, -base - 0.5]);
+                }
+            }
+        }
+
+        // accounting: one batch of `group` pages at page_bytes each
+        let st = pools.stats();
+        assert_eq!(st.pages_moved, group as u64);
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.bytes_moved, (group * pools.page_bytes()) as u64);
+        assert!(st.modeled_s > 0.0);
+
+        // release drains both tiers
+        t.release_all_tiered(&mut pools);
+        assert_eq!(pools.device().used_pages(), 0);
+        assert_eq!(pools.host().used_pages(), 0);
+        assert_eq!(t.blocks(), 0);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn migrate_refuses_without_host_capacity() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        // host tier holds less than one block group
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, group - 1, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(2, pools.device_mut()).unwrap();
+        assert_eq!(
+            t.migrate_block_to_host(0, &mut pools),
+            Err(PageAllocError::OutOfPages)
+        );
+        // nothing changed
+        assert_eq!(t.block_tier(0), Tier::Device);
+        assert_eq!(pools.host().used_pages(), 0);
+        assert_eq!(pools.stats(), MigrationStats::default());
+    }
+
+    #[test]
+    fn coldest_block_policy_spares_the_tail() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(2, pools.device_mut()).unwrap(); // one block
+        assert_eq!(t.coldest_device_block(false), None, "lone block is the hot tail");
+        assert_eq!(t.coldest_device_block(true), Some(0));
+        t.ensure_capacity(4, pools.device_mut()).unwrap(); // two blocks
+        assert_eq!(t.coldest_device_block(false), Some(0));
+        t.migrate_block_to_host(0, &mut pools).unwrap();
+        assert_eq!(t.coldest_device_block(false), None, "only the tail is left on device");
+        assert_eq!(t.coldest_device_block(true), Some(1));
+        t.release_all_tiered(&mut pools);
+    }
+
+    #[test]
+    fn tiered_for_budget_zero_host_disables_the_tier() {
+        let sh = shape();
+        let pools = TieredPagePool::for_budget(sh, 2, 64 * 1024, 0, PcieLink::default());
+        assert_eq!(pools.host().num_pages(), 0);
+        assert!(pools.device().num_pages() > 0);
+        assert_eq!(pools.total_pages(), pools.device().num_pages());
+        // page geometry identical across tiers
+        assert_eq!(pools.page_size(), 2);
+        assert_eq!(pools.head_dim(), sh.head_dim);
+        assert_eq!(pools.page_bytes(), 2 * 4 * 2 * sh.head_dim);
     }
 
     #[test]

@@ -11,14 +11,16 @@
 //!   admission of prompts longer than any bucket;
 //! * [`scheduler`] — prefill/chunked/decode policy (decode-priority +
 //!   fairness quantum; chunk continuation beats new admission);
-//! * [`kv_cache`]  — the paged KV cache (`PagePool` block allocator +
-//!   per-sequence `BlockTable`, ref-counted pages), plus the contiguous
-//!   per-sequence caches, ragged batch packing and the tiered
-//!   (device/host) capacity pool of the artifact path;
-//! * [`engine`]    — the synchronous execution core: paged decode and
-//!   chunked prefill with evict-youngest preemption over a paged-capable
-//!   backend, or ragged plane prefill/decode over the PJRT runtime;
-//!   greedy sampling either way;
+//! * [`kv_cache`]  — the two-tier paged KV cache (`TieredPagePool`:
+//!   device + host `PagePool`s behind per-sequence `BlockTable`s with
+//!   per-block tier tags, cold-block migration over a modeled
+//!   `PcieLink`), plus the contiguous per-sequence caches, ragged batch
+//!   packing and the legacy layer-granularity capacity pool of the
+//!   artifact path;
+//! * [`engine`]    — the synchronous execution core: tiered paged
+//!   decode and chunked prefill with migrate-before-preempt page
+//!   reclamation over a paged-capable backend, or ragged plane
+//!   prefill/decode over the PJRT runtime; greedy sampling either way;
 //! * [`server`]    — threaded front-end (PJRT handles stay on one
 //!   thread; clients use channels);
 //! * [`allreduce`] — the paper's tiling-AllReduce (§4.2) as a real
@@ -42,6 +44,9 @@ pub use backend::{
 };
 pub use batcher::AdmitError;
 pub use engine::{Engine, EngineConfig, KvLayout};
-pub use kv_cache::{BlockTable, CacheShape, PageAllocError, PagePool};
+pub use kv_cache::{
+    BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, Tier,
+    TieredPagePool,
+};
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::Server;

@@ -53,6 +53,24 @@ impl Scheduler {
     /// Pick the next step given queue state.  `chunking` counts
     /// sequences mid chunked-prefill (they are not in `active` yet).
     pub fn next_step(&mut self, batcher: &Batcher, active: usize, chunking: usize) -> Step {
+        self.next_step_pressured(batcher, active, chunking, false)
+    }
+
+    /// Like [`Self::next_step`], but `pressure` signals that the KV
+    /// pool cannot place a new sequence's first block: admitting would
+    /// only bounce off the allocator (or trigger a migration/preemption
+    /// storm), so while anything is draining, decode work runs instead.
+    /// Continuing a *partial* (chunked) sequence still wins — partial
+    /// sequences hold pages, and finishing them frees capacity fastest.
+    /// With nothing to drain, admission proceeds regardless (the
+    /// engine's migrate/preempt machinery is then the right tool).
+    pub fn next_step_pressured(
+        &mut self,
+        batcher: &Batcher,
+        active: usize,
+        chunking: usize,
+        pressure: bool,
+    ) -> Step {
         let has_prefill_work = batcher.waiting() > 0 || chunking > 0;
         let has_active = active > 0;
         // continuing a partial sequence beats admitting a new one
@@ -70,6 +88,10 @@ impl Scheduler {
                     Step::Decode
                 }
             }
+        };
+        let step = match step {
+            Step::Prefill if pressure && has_active => Step::Decode,
+            s => s,
         };
         match step {
             Step::Decode => self.decodes_since_prefill += 1,
@@ -181,6 +203,27 @@ mod tests {
         assert_eq!(s.next_step(&b, 1, 1), Step::Decode);
         assert_eq!(s.next_step(&b, 1, 1), Step::Chunked);
         assert_eq!(s.next_step(&b, 1, 1), Step::Decode);
+    }
+
+    #[test]
+    fn pressure_defers_admission_while_draining() {
+        // under pressure, admitting new work yields to decode — even
+        // for PrefillFirst — as long as something is draining
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(2), 3, 0, true), Step::Decode);
+        // with nothing active, admission must proceed (or nothing ever runs)
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(2), 0, 0, true), Step::Prefill);
+        // chunked continuation is not admission: it still runs — the
+        // partial sequence holds pages and finishing it frees them
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(0), 3, 1, true), Step::Chunked);
+        // once pressure lifts, the Fair quantum admits immediately
+        let mut s = Scheduler::new(Policy::Fair { quantum: 1 });
+        let b = batcher(1);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, true), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, true), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, false), Step::Prefill);
     }
 
     #[test]

@@ -15,13 +15,25 @@ pub struct EngineMetrics {
     /// Cumulative seconds inside prefill / decode execution.
     pub prefill_s: f64,
     pub decode_s: f64,
-    /// Paged KV: pages in use after the latest step / pool size /
-    /// high-water mark.  Zero on contiguous engines.
+    /// Paged KV, device tier: pages in use after the latest step /
+    /// pool size / high-water mark.  Zero on contiguous engines.
     pub pages_used: u64,
     pub pages_total: u64,
     pub peak_pages_used: u64,
-    /// Page-allocation failures (each one triggers a preemption
-    /// attempt) and sequences actually preempted back to the queue.
+    /// Paged KV, host tier (cold-page offload): pages in use after the
+    /// latest step / pool size.  Zero when no host tier is configured.
+    pub host_pages_used: u64,
+    pub host_pages_total: u64,
+    /// Cold-page migration: pages moved device→host, batched PCIe
+    /// transfers performed, bytes moved, and modeled link seconds
+    /// charged (`PcieLink::transfer_s` per batch).
+    pub pages_migrated: u64,
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    pub pcie_modeled_s: f64,
+    /// Page-allocation failures (each one triggers a migration, then a
+    /// preemption attempt) and sequences actually preempted back to
+    /// the queue.
     pub alloc_failures: u64,
     pub preemptions: u64,
 }
@@ -42,6 +54,23 @@ impl EngineMetrics {
             return 0.0;
         }
         self.peak_pages_used as f64 / self.pages_total as f64
+    }
+
+    /// Fraction of the host-tier pool in use after the latest step,
+    /// 0.0 ..= 1.0 (0.0 when the host tier is absent).
+    pub fn host_page_occupancy(&self) -> f64 {
+        if self.host_pages_total == 0 {
+            return 0.0;
+        }
+        self.host_pages_used as f64 / self.host_pages_total as f64
+    }
+
+    /// Mean pages per batched migration (0.0 before any migration).
+    pub fn mean_migration_batch(&self) -> f64 {
+        if self.migrations == 0 {
+            return 0.0;
+        }
+        self.pages_migrated as f64 / self.migrations as f64
     }
     /// Decode throughput, tokens/second of decode wall time.
     pub fn decode_tps(&self) -> f64 {
@@ -190,6 +219,25 @@ mod tests {
         let z = EngineMetrics::default();
         assert_eq!(z.page_occupancy(), 0.0);
         assert_eq!(z.peak_page_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn host_tier_and_migration_ratios() {
+        let m = EngineMetrics {
+            host_pages_used: 6,
+            host_pages_total: 24,
+            pages_migrated: 12,
+            migrations: 3,
+            migrated_bytes: 12 * 1024,
+            pcie_modeled_s: 1.5e-4,
+            ..Default::default()
+        };
+        assert!((m.host_page_occupancy() - 0.25).abs() < 1e-12);
+        assert!((m.mean_migration_batch() - 4.0).abs() < 1e-12);
+        // engines without a host tier report zero, not NaN
+        let z = EngineMetrics::default();
+        assert_eq!(z.host_page_occupancy(), 0.0);
+        assert_eq!(z.mean_migration_batch(), 0.0);
     }
 
     #[test]

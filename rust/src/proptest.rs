@@ -198,7 +198,9 @@ mod attention_props {
     };
     use crate::attention::flash::{flash_attention, FlashParams};
     use crate::attention::standard::{standard_attention, StdParams};
-    use crate::coordinator::kv_cache::{BlockTable, CacheShape, PagePool};
+    use crate::coordinator::kv_cache::{
+        BlockTable, CacheShape, PagePool, PcieLink, Tier, TieredPagePool,
+    };
     use crate::prop_ensure;
 
     /// Pick a random (heads, kv_heads) pair with kv_heads | heads.
@@ -449,6 +451,133 @@ mod attention_props {
                 out_c == out_p,
                 "paged != contig (h={h} kvh={kvh} d={d} stride={stride} \
                  page_size={page_size} threads={threads})"
+            );
+            Ok(())
+        });
+    }
+
+    /// Tiered decode gather (blocks split across the device and host
+    /// stores of a real `TieredPagePool`) is bit-identical to
+    /// device-only/contiguous decode over random migration schedules,
+    /// page sizes, GQA shapes and thread counts — including migrations
+    /// interleaved with later KV writes (the mid-decode offload case)
+    /// and writes landing on already-migrated blocks (a chunked prefill
+    /// filling a cold tail).
+    #[test]
+    fn prop_tiered_gather_equals_device_only() {
+        check(40, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let d = *rng.pick(&[4usize, 8, 16]);
+            let stride = rng.range(1, 40);
+            let nseq = rng.range(1, 6);
+            let page_size = rng.range(1, 9);
+            let threads = rng.range(1, 6);
+
+            // single-layer cache geometry: attention sees one layer plane
+            let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+            let max_blocks = stride.div_ceil(page_size);
+            let cap = nseq * kvh * max_blocks + 2;
+            let mut pools = TieredPagePool::new(page_size, d, cap, cap, PcieLink::default());
+
+            let mut qs = Vec::new();
+            let mut ks = Vec::new();
+            let mut vs = Vec::new();
+            let mut lens = Vec::new();
+            let mut tables = Vec::new();
+            for i in 0..nseq {
+                qs.push(rng.f32_vec(h * d));
+                ks.push(rng.f32_vec(kvh * stride * d));
+                vs.push(rng.f32_vec(kvh * stride * d));
+                lens.push(rng.range(0, stride + 1));
+                let mut t = BlockTable::new(cache, page_size);
+
+                // write a random prefix on-device…
+                let split = rng.range(0, lens[i] + 1);
+                let write = |t: &BlockTable, pools: &mut TieredPagePool, lo: usize, hi: usize| {
+                    for g in 0..kvh {
+                        for r in lo..hi {
+                            let (tier, page, slot) = t.locate_tiered(0, g, r);
+                            let src = g * stride * d + r * d;
+                            pools.write_row(
+                                tier,
+                                page,
+                                slot,
+                                &ks[i][src..src + d],
+                                &vs[i][src..src + d],
+                            );
+                        }
+                    }
+                };
+                t.ensure_capacity(split, pools.device_mut()).unwrap();
+                write(&t, &mut pools, 0, split);
+                // …migrate a random subset of blocks…
+                for b in 0..t.blocks() {
+                    if rng.bool() {
+                        t.migrate_block_to_host(b, &mut pools).unwrap();
+                    }
+                }
+                // …then finish writing (rows may land in host-tier
+                // blocks) and migrate a second random wave
+                t.ensure_capacity(lens[i], pools.device_mut()).unwrap();
+                write(&t, &mut pools, split, lens[i]);
+                for b in 0..t.blocks() {
+                    if t.block_tier(b) == Tier::Device && rng.bool() {
+                        t.migrate_block_to_host(b, &mut pools).unwrap();
+                    }
+                }
+                tables.push(t);
+            }
+
+            let shape = BatchShape::new(h, kvh, d, stride);
+            let n = nseq * h * d;
+            let wp = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+
+            let contig: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn::contig(&qs[i], &ks[i], &vs[i], lens[i]))
+                .collect();
+            let mut out_c = vec![0.0; n];
+            batch_decode_attention(&shape, &contig, &mut out_c, &wp);
+
+            let tiered: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn {
+                    q: &qs[i],
+                    kv: SeqKv::Tiered {
+                        k_device: pools.device().k_store(),
+                        v_device: pools.device().v_store(),
+                        k_host: pools.host().k_store(),
+                        v_host: pools.host().v_store(),
+                        pages: tables[i].layer_pages(0),
+                        tiers: tables[i].layer_tiers(0),
+                        max_blocks: tables[i].max_blocks(),
+                        page_size,
+                    },
+                    kv_len: lens[i],
+                })
+                .collect();
+            let mut out_t = vec![0.0; n];
+            batch_decode_attention(&shape, &tiered, &mut out_t, &wp);
+
+            prop_ensure!(
+                out_c == out_t,
+                "tiered != contig (h={h} kvh={kvh} d={d} stride={stride} \
+                 page_size={page_size} threads={threads})"
+            );
+
+            // migration accounting coherence: bytes are pages × page
+            // bytes, and every batch moved at least one page
+            let st = pools.stats();
+            prop_ensure!(
+                st.bytes_moved == st.pages_moved * pools.page_bytes() as u64,
+                "bytes {} != pages {} × page_bytes {}",
+                st.bytes_moved,
+                st.pages_moved,
+                pools.page_bytes()
+            );
+            prop_ensure!(
+                (st.batches == 0) == (st.pages_moved == 0),
+                "batches {} vs pages {}",
+                st.batches,
+                st.pages_moved
             );
             Ok(())
         });

@@ -1,0 +1,177 @@
+//! Integration: the two-tier paged KV cache (cold-page host offload).
+//!
+//! Runs the full engine stack over [`HostModelBackend`] (no artifacts
+//! needed) with the device page pool forced small: cold pages migrate
+//! to the host tier mid-decode over the modeled PCIe link, decode
+//! gathers across both tiers, outputs stay bit-identical to the
+//! unconstrained run, and the migration/preemption interplay always
+//! terminates with every request served.
+//!
+//! tiny_gqa geometry used throughout: layers 2 × kv_heads 2 → a block
+//! group is 4 pages; at page_size 16 / head_dim 8 one page is
+//! 2·4·16·8 = 1 KiB, so one block group is 4 KiB.
+
+use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+};
+
+const GROUP_BYTES: usize = 4 * 1024;
+
+fn tiered_engine(device_groups: usize, host_groups: usize, threads: usize) -> Engine {
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: device_groups * GROUP_BYTES,
+        host_kv_budget: host_groups * GROUP_BYTES,
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    )
+}
+
+/// The unconstrained reference: a device pool big enough that nothing
+/// ever migrates or preempts.
+fn unconstrained_engine(threads: usize) -> Engine {
+    tiered_engine(1024, 0, threads)
+}
+
+fn run(e: &mut Engine, prompts: &[Vec<i32>], p: GenParams) -> Vec<Vec<i32>> {
+    for pr in prompts {
+        e.submit(pr.clone(), p).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+/// A long prompt chunk-prefills into a device tier that cannot hold it;
+/// cold pages migrate mid-flight and the output matches the
+/// unconstrained run bit for bit.
+#[test]
+fn long_prompt_migrates_mid_decode_and_matches_unconstrained() {
+    // 60 prompt + 20 generated = 80 tokens = 5 blocks; the device tier
+    // holds 3 block groups, so at least 2 groups must offload.
+    let prompt: Vec<i32> = (0..60).map(|i| (i * 3 + 1) % 64).collect();
+    let p = GenParams { max_new_tokens: 20, eos_token: None };
+
+    let mut base = unconstrained_engine(1);
+    let want = run(&mut base, &[prompt.clone()], p);
+    assert_eq!(base.metrics.pages_migrated, 0);
+    assert_eq!(base.metrics.preemptions, 0);
+
+    let mut tiered = tiered_engine(3, 8, 1);
+    let got = run(&mut tiered, &[prompt], p);
+    assert_eq!(got, want, "cold-page offload must not change greedy tokens");
+
+    let m = &tiered.metrics;
+    assert!(
+        m.pages_migrated >= 2 * 4,
+        "5 blocks over a 3-group device tier must migrate ≥ 2 groups, migrated {}",
+        m.pages_migrated
+    );
+    assert_eq!(m.preemptions, 0, "a solo sequence is never preempted, only offloaded");
+    assert!(m.migrations >= 2, "block groups move as separate batched transfers");
+    assert_eq!(m.migrated_bytes, m.pages_migrated * 1024);
+    assert!(m.pcie_modeled_s > 0.0, "migrations must charge the modeled link");
+    // both tiers fully drained at idle
+    assert_eq!(m.pages_used, 0);
+    assert_eq!(m.host_pages_used, 0);
+    assert_eq!(m.host_pages_total, 8 * 4);
+    assert!(m.host_page_occupancy() == 0.0 && m.page_occupancy() == 0.0);
+}
+
+/// Two sequences contend for a tiny device tier backed by a small host
+/// tier: the run needs *both* migration and preemption, never
+/// livelocks, and every request's tokens match its solo unconstrained
+/// run.
+#[test]
+fn migration_preemption_interplay_terminates_with_identical_tokens() {
+    // each request: 8 prompt + 40 generated = 48 tokens = 3 groups;
+    // device holds 2 groups, host 2 groups → the pair cannot coexist,
+    // so the youngest is preempted and replayed after the oldest
+    // finishes via its own cold-block offloads.
+    let p = GenParams { max_new_tokens: 40, eos_token: None };
+    let prompts: Vec<Vec<i32>> = vec![vec![1; 8], vec![2; 8]];
+
+    let mut e = tiered_engine(2, 2, 1);
+    let got = run(&mut e, &prompts, p);
+    assert_eq!(got.len(), 2, "both requests complete despite the squeeze");
+    assert!(got.iter().all(|t| t.len() == 40));
+    let m = &e.metrics;
+    assert!(m.pages_migrated >= 4, "the oldest sequence's third block needs an offload");
+    assert!(m.preemptions >= 1, "the youngest must have been evicted at least once");
+    assert!(m.alloc_failures >= 1);
+    assert_eq!(m.pages_used, 0, "device tier drained at idle");
+    assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+
+    // preemption + replay + offload must not change any request's tokens
+    for (pr, got) in prompts.iter().zip(&got) {
+        let mut solo = unconstrained_engine(1);
+        let want = run(&mut solo, &[pr.clone()], p);
+        assert_eq!(&want[0], got, "prompt {pr:?}");
+    }
+}
+
+/// Thread count must not change tokens when decode gathers across
+/// tiers (the tiered generalization of the threads-invariance law).
+#[test]
+fn tiered_decode_is_thread_invariant() {
+    let prompts: Vec<Vec<i32>> = (0..5)
+        .map(|i| (0..(i * 7 + 3) % 24 + 1).map(|t| ((t * 5 + i) % 64) as i32).collect())
+        .collect();
+    let p = GenParams { max_new_tokens: 12, eos_token: None };
+    let mut one = tiered_engine(2, 6, 1);
+    let mut four = tiered_engine(2, 6, 4);
+    let a = run(&mut one, &prompts, p);
+    let b = run(&mut four, &prompts, p);
+    assert_eq!(a, b, "threads must not change tiered decode tokens");
+    assert_eq!(a, {
+        let mut base = unconstrained_engine(4);
+        run(&mut base, &prompts, p)
+    });
+}
+
+/// A mixed workload under sustained pressure: many requests against a
+/// small device tier, all served, host tier fully recycled between
+/// sequence completions (no host-page leak across the run).
+#[test]
+fn sustained_pressure_recycles_host_pages() {
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| (0..(i * 5 + 2) % 30 + 1).map(|t| ((t * 7 + i) % 64) as i32).collect())
+        .collect();
+    let p = GenParams { max_new_tokens: 10, eos_token: None };
+    let mut e = tiered_engine(2, 4, 1);
+    let got = run(&mut e, &prompts, p);
+    assert_eq!(got.len(), 8);
+    assert!(got.iter().all(|t| t.len() == 10));
+    assert_eq!(e.metrics.pages_used, 0);
+    assert_eq!(e.metrics.host_pages_used, 0);
+    assert_eq!(e.metrics.completed, 8);
+
+    let mut base = unconstrained_engine(1);
+    let want = run(&mut base, &prompts, p);
+    assert_eq!(got, want, "pressure must not change any request's tokens");
+}
+
+/// Requests that exceed even the combined tiers are refused up front;
+/// ones that need both tiers are admitted and complete.
+#[test]
+fn admission_counts_usable_pages_across_tiers() {
+    let mut e = tiered_engine(2, 2, 1);
+    // 4 groups usable = 64 token rows; 8 + 72 = 80 tokens won't ever fit
+    assert!(e
+        .submit(vec![1; 8], GenParams { max_new_tokens: 72, eos_token: None })
+        .is_err());
+    // 8 + 40 = 48 tokens = 3 groups > device alone (2), ≤ tiers (4): ok
+    let id = e
+        .submit(vec![1; 8], GenParams { max_new_tokens: 40, eos_token: None })
+        .unwrap();
+    let out = e.run_until_idle().unwrap();
+    assert_eq!(out[0].id, id);
+    assert_eq!(out[0].tokens.len(), 40);
+    assert!(e.metrics.pages_migrated > 0, "the third block lived on the host tier");
+}
