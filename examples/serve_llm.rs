@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             };
             let prompt: Vec<i32> =
                 (0..len).map(|j| ((i * 131 + j * 17) % 500 + 1) as i32).collect();
-            server.submit(prompt, GenParams { max_new_tokens: gen_tokens, eos_token: None })
+            server.submit(prompt, GenParams { max_new_tokens: gen_tokens, ..GenParams::default() })
         })
         .collect::<Result<_, _>>()?;
 

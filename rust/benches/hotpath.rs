@@ -9,13 +9,16 @@
 //!   * the host-model engine end-to-end (no artifacts needed)
 //!   * tiered paged KV: device-only vs cold-page host offload at
 //!     several modeled device capacities (token-parity asserted)
+//!   * shared-prefix KV pages: N requests × one system prompt, served
+//!     with `share_prefix` off vs on (token-parity asserted)
 //!   * KV-cache batch pack/unpack memcpy
 //!   * the rust CPU FlashAttention2 kernel (offload host path)
 //!   * the threaded ring AllReduce
 //!
 //! Run with `cargo bench --bench hotpath` (release profile).  Decode
-//! throughput rows are additionally written to `BENCH_decode.json`, and
-//! the device-only-vs-tiered rows to `BENCH_offload.json`, in the
+//! throughput rows are additionally written to `BENCH_decode.json`, the
+//! device-only-vs-tiered rows to `BENCH_offload.json`, and the
+//! shared-vs-unshared prefix rows to `BENCH_prefix.json`, in the
 //! invocation directory, so the perf trajectory is machine-readable
 //! across PRs.
 
@@ -231,7 +234,7 @@ fn main() {
                 engine
                     .submit(
                         vec![((n * 7 + i) % 500) as i32 + 1; 12],
-                        GenParams { max_new_tokens: 8, eos_token: None },
+                        GenParams { max_new_tokens: 8, eos_token: None, share_prefix: false },
                     )
                     .unwrap();
             }
@@ -274,7 +277,7 @@ fn main() {
         let group_bytes = 4 * 1024usize;
         let prompts: Vec<Vec<i32>> =
             (0..4).map(|i| vec![(i as i32) * 9 + 3; 24]).collect();
-        let gp = GenParams { max_new_tokens: 24, eos_token: None };
+        let gp = GenParams { max_new_tokens: 24, eos_token: None, share_prefix: false };
         let run = |device_groups: usize, host_groups: usize| {
             let cfg = EngineConfig {
                 parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
@@ -334,6 +337,79 @@ fn main() {
                 x(m.decode_tps() / base_m.decode_tps().max(1e-12)),
             ]);
         }
+    }
+
+    // --- shared-prefix KV pages: shared vs unshared -------------------
+    // N requests carrying the same 32-token system prompt, served with
+    // `share_prefix` off and on.  Tokens must be identical (parity
+    // asserted); the deltas — prompt tokens actually prefilled, peak
+    // pages, prefill/decode tok/s — are the value of prefix sharing.
+    // Rows land in BENCH_prefix.json.
+    let mut prefix_rows: Vec<(String, f64)> = Vec::new();
+    {
+        let system = vec![7i32; 32];
+        let prompts: Vec<Vec<i32>> = (0..8)
+            .map(|i| {
+                let mut p = system.clone();
+                p.extend(vec![i as i32 + 40; 6]);
+                p
+            })
+            .collect();
+        let run = |share: bool| {
+            let cfg = EngineConfig {
+                parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+                kv_layout: KvLayout::Paged,
+                page_size: 16,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::with_backend(
+                Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+                cfg,
+            );
+            let gp = GenParams { max_new_tokens: 16, eos_token: None, share_prefix: share };
+            for pr in &prompts {
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base_toks, bm) = run(false);
+        let (shared_toks, sm) = run(true);
+        assert_eq!(base_toks, shared_toks, "prefix sharing must not change tokens");
+        assert!(sm.prefix_hits > 0, "the common system prompt must hit");
+        assert!(
+            sm.prefilled_tokens < bm.prefilled_tokens,
+            "sharing must skip prefill work"
+        );
+        tp.row(&[
+            format!("prefix unshared 8×(sys32+sfx6): prefilled {} tok", bm.prefilled_tokens),
+            fmt_time(bm.prefill_s / bm.chunk_steps.max(1) as f64),
+            rate(bm.prefilled_tokens as f64, bm.prefill_s, "tok"),
+            String::from("—"),
+        ]);
+        tp.row(&[
+            format!(
+                "prefix shared   8×(sys32+sfx6): prefilled {} tok ({} hits, {} cow)",
+                sm.prefilled_tokens, sm.prefix_hits, sm.cow_splits
+            ),
+            fmt_time(sm.prefill_s / sm.chunk_steps.max(1) as f64),
+            rate(sm.prefilled_tokens as f64, sm.prefill_s, "tok"),
+            x(bm.prefill_s / sm.prefill_s.max(1e-12)),
+        ]);
+        prefix_rows.push(("unshared prefill tok/s".into(), bm.prefill_tps()));
+        prefix_rows.push((
+            format!(
+                "shared prefill tok/s (hits {}, saved {} tok, cow {}, shared pages {})",
+                sm.prefix_hits, sm.prefix_tokens_saved, sm.cow_splits, sm.shared_pages
+            ),
+            sm.prefill_tps(),
+        ));
+        prefix_rows.push(("unshared decode tok/s".into(), bm.decode_tps()));
+        prefix_rows.push(("shared decode tok/s".into(), sm.decode_tps()));
+        prefix_rows.push(("unshared peak pages".into(), bm.peak_pages_used as f64));
+        prefix_rows.push(("shared peak pages".into(), sm.peak_pages_used as f64));
     }
 
     // --- KV pack (continuous-batching memcpy boundary) ----------------
@@ -411,7 +487,7 @@ fn main() {
                 engine
                     .submit(
                         vec![((n * 7 + i) % 500) as i32 + 1; 16],
-                        GenParams { max_new_tokens: 8, eos_token: None },
+                        GenParams { max_new_tokens: 8, eos_token: None, share_prefix: false },
                     )
                     .unwrap();
             }
@@ -461,5 +537,12 @@ fn main() {
     match write_bench_json(offload_path, "offload", "tok/s", &offload_rows) {
         Ok(()) => println!("wrote {} ({} rows)", offload_path.display(), offload_rows.len()),
         Err(e) => eprintln!("BENCH_offload.json not written: {e}"),
+    }
+
+    // shared vs unshared prefix serving (token parity asserted above)
+    let prefix_path = std::path::Path::new("BENCH_prefix.json");
+    match write_bench_json(prefix_path, "prefix", "tok/s", &prefix_rows) {
+        Ok(()) => println!("wrote {} ({} rows)", prefix_path.display(), prefix_rows.len()),
+        Err(e) => eprintln!("BENCH_prefix.json not written: {e}"),
     }
 }

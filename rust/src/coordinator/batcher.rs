@@ -371,13 +371,14 @@ mod tests {
         b.push(req(1, 128)).unwrap();
         assert!(matches!(b.push(req(2, 129)), Err(AdmitError::NoBucket { .. })));
         // prompt + max_new_tokens exactly at KV capacity: admitted
-        b.push(Request::new(3, vec![1; 100], GenParams { max_new_tokens: 156, eos_token: None }))
+        let p156 = GenParams { max_new_tokens: 156, ..GenParams::default() };
+        b.push(Request::new(3, vec![1; 100], p156))
             .unwrap();
         assert!(matches!(
             b.push(Request::new(
                 4,
                 vec![1; 100],
-                GenParams { max_new_tokens: 157, eos_token: None }
+                GenParams { max_new_tokens: 157, eos_token: None, share_prefix: false }
             )),
             Err(AdmitError::ImpossibleLength { need: 257, capacity: 256 })
         ));

@@ -30,12 +30,20 @@
 //!   request goes back to the head of the waiting queue); admission is
 //!   gated on worst-case page demand across both tiers so the oldest
 //!   sequence always completes and the system cannot livelock.
+//!   Requests that opt into `share_prefix` additionally go through the
+//!   [`PrefixIndex`]: a prompt whose prefix was already prefilled
+//!   adopts the cached page run (ref-counted, copy-on-write on the
+//!   first divergent write) and chunked prefill resumes at the first
+//!   unshared token.  Shared pages are pinned to the device tier until
+//!   their ref count drops back to 1.
 //! * **Contiguous** (artifact/PJRT backends): fixed `[L,1,Nkv,S,D]`
 //!   per-sequence slabs packed into `[L,B,Nkv,S,D]` batch planes — the
 //!   AOT wire format — with the device/host `CachePool` tiering.
 //!
 //! Both layouts produce bit-identical tokens: paged attention gathers
 //! the same rows through the block table (see `attention::flash::KvView`).
+
+#![warn(missing_docs)]
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -46,7 +54,7 @@ use super::backend::{ArtifactBackend, Backend, PagedRow};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
     pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError, PcieLink,
-    SeqCache, Tier, TieredPagePool,
+    PrefixIndex, SeqCache, Tier, TieredPagePool,
 };
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
@@ -106,6 +114,7 @@ pub enum KvLayout {
 
 /// Engine configuration knobs.
 pub struct EngineConfig {
+    /// Prefill/decode scheduling policy.
     pub policy: Policy,
     /// Device KV budget in bytes: sizes the device page pool (paged
     /// layout) or drives CachePool tiering (contiguous layout).
@@ -128,6 +137,11 @@ pub struct EngineConfig {
     pub kv_layout: KvLayout,
     /// Tokens per KV page (paged layout).
     pub page_size: usize,
+    /// Cap on prefix-cache block entries (paged layout): how many
+    /// shared prompt-prefix blocks the [`PrefixIndex`] may retain for
+    /// requests that opt into `share_prefix`.  Past the cap (and under
+    /// device-page pressure) least-recently-used idle runs are evicted.
+    pub prefix_cache_entries: usize,
 }
 
 impl Default for EngineConfig {
@@ -141,6 +155,7 @@ impl Default for EngineConfig {
             parallel: ParallelConfig::default(),
             kv_layout: KvLayout::Auto,
             page_size: 16,
+            prefix_cache_entries: 256,
         }
     }
 }
@@ -151,13 +166,34 @@ enum EngineKv {
     Paged(TieredPagePool),
 }
 
-/// The engine.
+/// The serving engine: submit prompts, step the scheduler, drain
+/// responses.
+///
+/// ```
+/// use fastattn::coordinator::{
+///     Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig,
+/// };
+///
+/// let mut engine = Engine::with_backend(
+///     Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+///     EngineConfig::default(),
+/// );
+/// let id = engine
+///     .submit(vec![1, 2, 3], GenParams { max_new_tokens: 4, ..GenParams::default() })
+///     .unwrap();
+/// let done = engine.run_until_idle().unwrap();
+/// assert_eq!(done[0].id, id);
+/// assert_eq!(done[0].tokens.len(), 4);
+/// ```
 pub struct Engine {
     backend: Box<dyn Backend>,
     shape: CacheShape,
     batcher: Batcher,
     scheduler: Scheduler,
     kv: EngineKv,
+    /// Cross-sequence prompt-prefix cache (paged layout only):
+    /// content-addressed shared page runs for `share_prefix` requests.
+    prefix: Option<PrefixIndex>,
     active: Vec<RequestId>,
     /// Sequences mid chunked-prefill, oldest first.
     chunking: VecDeque<RequestId>,
@@ -167,6 +203,8 @@ pub struct Engine {
     /// Largest prefill seq bucket — the chunk size of chunked prefill.
     max_chunk: usize,
     page_size: usize,
+    /// Live serving counters (steps, tokens, pages, migrations,
+    /// prefix sharing) — see [`EngineMetrics`].
     pub metrics: EngineMetrics,
 }
 
@@ -225,12 +263,15 @@ impl Engine {
         } else {
             EngineKv::Contig(CachePool::new(shape, cfg.device_kv_budget))
         };
+        let prefix =
+            paged.then(|| PrefixIndex::new(shape, cfg.page_size, cfg.prefix_cache_entries));
         Self {
             backend,
             shape,
             batcher,
             scheduler: Scheduler::new(cfg.policy),
             kv,
+            prefix,
             active: Vec::new(),
             chunking: VecDeque::new(),
             seqs: HashMap::new(),
@@ -490,40 +531,69 @@ impl Engine {
     /// first prefill chunk.  Admission is gated on worst-case page
     /// demand (prompt + full generation budget): an admitted sequence
     /// can always finish by preempting only younger sequences, so the
-    /// oldest always completes and admission cannot livelock.
+    /// oldest always completes and admission cannot livelock.  Pages
+    /// pinned only by idle prefix-cache runs don't block admission —
+    /// they are evicted until the gate passes or nothing idle remains.
+    ///
+    /// A `share_prefix` request additionally consults the
+    /// [`PrefixIndex`]: on a hit it adopts the shared page run and its
+    /// chunked prefill resumes at the first unshared token.
     fn admit_chunked(&mut self) -> Result<bool> {
-        let EngineKv::Paged(pools) = &self.kv else {
+        let EngineKv::Paged(pools) = &mut self.kv else {
             bail!("chunked admission on a contiguous engine");
         };
-        let Some(head) = self.batcher.peek() else {
+        // pop under the max_active budget first: when no admission can
+        // happen anyway, the capacity gate below must not evict
+        // reusable prefix-cache runs for nothing.
+        let live = self.active.len() + self.chunking.len();
+        let Some(req) = self.batcher.next_request(live) else {
             return Ok(false);
         };
         let need = BlockTable::pages_needed(
             self.shape,
             self.page_size,
-            head.prompt.len() + head.params.max_new_tokens,
+            req.prompt.len() + req.params.max_new_tokens,
         );
         // same group rounding as the submit gate: a tier's partial
         // trailing group is dead capacity and must not admit anyone
         let group = self.shape.layers * self.shape.kv_heads;
-        let usable_free =
-            (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
-        if usable_free < need {
-            return Ok(false); // wait for capacity; decode keeps draining
+        loop {
+            let usable_free =
+                (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
+            if usable_free >= need {
+                break;
+            }
+            let freed = match &mut self.prefix {
+                Some(ix) => ix.evict_idle(pools.device_mut()),
+                None => 0,
+            };
+            if freed == 0 {
+                // wait for capacity; decode keeps draining.  The head
+                // request goes back where it came from (FCFS preserved).
+                self.batcher.requeue_front(req);
+                return Ok(false);
+            }
         }
-        let live = self.active.len() + self.chunking.len();
-        let Some(req) = self.batcher.next_request(live) else {
-            return Ok(false);
-        };
         let id = req.id;
+        let mut table = BlockTable::new(self.shape, self.page_size);
+        let mut shared_tokens = 0;
+        if req.params.share_prefix {
+            if let Some(ix) = &mut self.prefix {
+                shared_tokens = ix.adopt(&req.prompt, &mut table, pools.device_mut());
+            }
+        }
+        if shared_tokens > 0 {
+            self.metrics.prefix_hits += 1;
+            self.metrics.prefix_tokens_saved += shared_tokens as u64;
+        }
         let state = SeqState {
             id,
             prompt: req.prompt,
             tokens: Vec::new(),
-            store: SeqStore::Paged { table: BlockTable::new(self.shape, self.page_size) },
+            store: SeqStore::Paged { table },
             params: req.params,
             phase: Phase::Chunking,
-            prefilled: 0,
+            prefilled: shared_tokens,
             submitted_at: req.submitted_at,
             first_token_at: None,
         };
@@ -544,11 +614,11 @@ impl Engine {
             (start, (start + self.max_chunk).min(s.prompt.len()))
         };
         debug_assert!(end > start, "chunk queue holds only partial sequences");
-        if !self.ensure_pages(id, end)? {
+        if !self.ensure_writable(id, end, start)? {
             return Ok(()); // the sequence itself was preempted
         }
         let logits = {
-            let s = self.seqs.get(&id).expect("survived ensure_pages");
+            let s = self.seqs.get(&id).expect("survived ensure_writable");
             let SeqStore::Paged { table } = &s.store else {
                 bail!("chunked sequence without a block table");
             };
@@ -564,8 +634,16 @@ impl Engine {
         self.metrics.prefilled_tokens += (end - start) as u64;
         self.metrics.chunk_steps += 1;
         if end == s.prompt.len() {
-            // prompt fully cached: first generated token from the last
-            // chunk's logits
+            // prompt fully cached: publish its page run for future
+            // `share_prefix` requests before decoding mutates anything
+            if s.params.share_prefix {
+                if let (Some(ix), EngineKv::Paged(pools), SeqStore::Paged { table }) =
+                    (&mut self.prefix, &mut self.kv, &s.store)
+                {
+                    ix.register(&s.prompt, table, pools.device_mut());
+                }
+            }
+            // first generated token from the last chunk's logits
             let first = argmax(&logits) as i32;
             s.tokens.push(first);
             s.first_token_at = Some(Instant::now());
@@ -594,7 +672,7 @@ impl Engine {
                 continue; // preempted by an earlier row's allocation
             }
             let need = self.seqs[&id].pos() + 1;
-            self.ensure_pages(id, need)?;
+            self.ensure_writable(id, need, need - 1)?;
         }
         let ids: Vec<RequestId> = batch
             .seq_ids
@@ -656,36 +734,55 @@ impl Engine {
         }
     }
 
-    /// Grow `id`'s block table to hold `tokens` rows.  On device-pool
-    /// exhaustion the engine first migrates cold pages to the host tier
-    /// (§4.4 at page granularity), and only when nothing can migrate
-    /// falls back to preempting the youngest live sequence; returns
-    /// `Ok(false)` when the sequence *itself* was the youngest and got
-    /// preempted.
-    fn ensure_pages(&mut self, id: RequestId, tokens: usize) -> Result<bool> {
+    /// Make `id` ready for a write of token rows `[write_from, tokens)`:
+    /// grow its block table to hold `tokens` rows **and**
+    /// copy-on-write-split any still-shared block the write range
+    /// overlaps (a divergent write must never mutate pages a sibling
+    /// sequence or the prefix index still reads).  On device-pool
+    /// exhaustion the engine reclaims in cost order — evict idle
+    /// prefix-cache runs (no computed work lost), migrate cold pages to
+    /// the host tier (§4.4 at page granularity), and only then preempt
+    /// the youngest live sequence; returns `Ok(false)` when the
+    /// sequence *itself* was the youngest and got preempted.
+    fn ensure_writable(&mut self, id: RequestId, tokens: usize, write_from: usize) -> Result<bool> {
         loop {
             {
                 let EngineKv::Paged(pools) = &mut self.kv else {
-                    bail!("ensure_pages on a contiguous engine");
+                    bail!("ensure_writable on a contiguous engine");
                 };
                 let Some(s) = self.seqs.get_mut(&id) else {
                     return Ok(false);
                 };
                 let SeqStore::Paged { table } = &mut s.store else {
-                    bail!("ensure_pages on a contiguous sequence");
+                    bail!("ensure_writable on a contiguous sequence");
                 };
-                match table.ensure_capacity(tokens, pools.device_mut()) {
-                    Ok(()) => return Ok(true),
+                let mut res = table.ensure_capacity(tokens, pools.device_mut()).map(|()| 0);
+                if res.is_ok() {
+                    res = table.cow_unshare(write_from, tokens, pools.device_mut());
+                }
+                match res {
+                    Ok(splits) => {
+                        self.metrics.cow_splits += splits as u64;
+                        return Ok(true);
+                    }
                     Err(PageAllocError::ExceedsMaxSeq) => {
                         bail!("sequence {id} exceeds max_seq {}", self.shape.max_seq)
                     }
-                    Err(PageAllocError::OutOfPages) => {
+                    Err(_) => {
                         self.metrics.alloc_failures += 1;
                     }
                 }
             }
-            // migrate-before-preempt: each successful migration frees
-            // exactly one device block group — what one retry needs.
+            // cheapest reclamation first: idle prefix-cache runs cost
+            // nothing to drop (their KV can be recomputed by whoever
+            // misses), migration preserves computed KV, preemption
+            // recomputes it.  Each arm makes strict progress — evicting
+            // shrinks the finite index, migrating consumes finite host
+            // free pages, preempting removes a live sequence — so the
+            // loop terminates.
+            if self.evict_idle_prefix() {
+                continue;
+            }
             if self.migrate_cold_block() {
                 continue;
             }
@@ -698,6 +795,19 @@ impl Engine {
         }
     }
 
+    /// Drop one least-recently-used idle prefix-cache run, freeing its
+    /// device pages.  False when the index is absent or nothing idle
+    /// remains.
+    fn evict_idle_prefix(&mut self) -> bool {
+        let Some(ix) = &mut self.prefix else {
+            return false;
+        };
+        let EngineKv::Paged(pools) = &mut self.kv else {
+            return false;
+        };
+        ix.evict_idle(pools.device_mut()) > 0
+    }
+
     /// Move the coldest block in the system to the host tier: the
     /// lowest-index device block (oldest token positions) of the
     /// longest live sequence, as one batched PCIe move.  The hot tail
@@ -708,7 +818,7 @@ impl Engine {
     ///
     /// Termination: every migration consumes host free pages, every
     /// preemption removes a live sequence, and neither is undone within
-    /// one `ensure_pages` call — the exhaustion loop cannot cycle.
+    /// one `ensure_writable` call — the exhaustion loop cannot cycle.
     fn migrate_cold_block(&mut self) -> bool {
         let EngineKv::Paged(pools) = &mut self.kv else {
             return false;
@@ -736,7 +846,14 @@ impl Engine {
             for &(_, sid) in &order {
                 let Some(s) = self.seqs.get_mut(&sid) else { continue };
                 let SeqStore::Paged { table } = &mut s.store else { continue };
-                let Some(b) = table.coldest_device_block(include_tail) else { continue };
+                // shared blocks are pinned to the device tier until
+                // their ref count drops to 1 — a sibling's table (or
+                // the prefix index) would keep indexing the device
+                // store if their pages moved.
+                let Some(b) = table.coldest_migratable_block(include_tail, pools.device())
+                else {
+                    continue;
+                };
                 if table.migrate_block_to_host(b, pools).is_ok() {
                     return true;
                 }
@@ -787,6 +904,8 @@ impl Engine {
             self.metrics.migrations = st.batches;
             self.metrics.migrated_bytes = st.bytes_moved;
             self.metrics.pcie_modeled_s = st.modeled_s;
+            self.metrics.shared_pages =
+                self.prefix.as_ref().map_or(0, |ix| ix.pages_held() as u64);
         }
     }
 
@@ -883,7 +1002,7 @@ mod tests {
         // holds only 2 block groups, so the third block forces a
         // cold-page migration — with nothing younger to evict, only the
         // migrate-before-preempt path can make room.
-        let p = GenParams { max_new_tokens: 40, eos_token: None };
+        let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
         let prompt = vec![5i32; 8];
         let mut big = host_engine_with_layout(1, KvLayout::Paged);
         big.submit(prompt.clone(), p).unwrap();
@@ -914,7 +1033,7 @@ mod tests {
     #[test]
     fn submit_gate_counts_both_tiers() {
         // device alone (2 groups) cannot hold 3 blocks, device+host can
-        let p = GenParams { max_new_tokens: 40, eos_token: None };
+        let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
         let mut no_host = host_engine_tiered(2, 0);
         assert!(no_host.submit(vec![5; 8], p).is_err());
         let mut tiered = host_engine_tiered(2, 4);
@@ -926,7 +1045,7 @@ mod tests {
         let mut e = host_engine(1);
         assert!(e.is_paged(), "host backend defaults to the paged layout");
         let id = e
-            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, eos_token: None })
+            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, ..GenParams::default() })
             .unwrap();
         let out = e.run_until_idle().unwrap();
         assert_eq!(out.len(), 1);
@@ -942,7 +1061,7 @@ mod tests {
 
     #[test]
     fn host_backend_batched_equals_solo() {
-        let p = GenParams { max_new_tokens: 5, eos_token: None };
+        let p = GenParams { max_new_tokens: 5, eos_token: None, share_prefix: false };
         let prompts: Vec<Vec<i32>> =
             vec![vec![1, 2, 3], vec![10, 20, 30, 40, 50, 60], vec![7; 12], vec![3, 1]];
         let mut batched = host_engine(2);
@@ -964,7 +1083,7 @@ mod tests {
 
     #[test]
     fn host_backend_parallel_matches_sequential() {
-        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        let p = GenParams { max_new_tokens: 6, eos_token: None, share_prefix: false };
         let prompts: Vec<Vec<i32>> =
             vec![vec![5, 4, 3, 2, 1], vec![11; 9], vec![2, 4, 6, 8]];
         let run = |threads: usize| {
@@ -982,7 +1101,7 @@ mod tests {
     #[test]
     fn paged_engine_matches_contiguous_engine() {
         // the paged path must be token-identical to the plane path
-        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        let p = GenParams { max_new_tokens: 6, eos_token: None, share_prefix: false };
         let prompts: Vec<Vec<i32>> =
             vec![vec![1, 2, 3], vec![9; 17], vec![4, 5], vec![30, 20, 10, 5, 2, 1, 7]];
         let run = |layout: KvLayout| {
@@ -1007,12 +1126,149 @@ mod tests {
         assert!(contig.submit(vec![3; 40], GenParams::default()).is_err());
         let mut paged = host_engine_with_layout(1, KvLayout::Paged);
         let id = paged
-            .submit(vec![3; 40], GenParams { max_new_tokens: 3, eos_token: None })
+            .submit(vec![3; 40], GenParams { max_new_tokens: 3, ..GenParams::default() })
             .unwrap();
         let out = paged.run_until_idle().unwrap();
         assert_eq!(out[0].id, id);
         assert_eq!(out[0].tokens.len(), 3);
         assert!(paged.metrics.chunk_steps >= 2, "40 tokens need >1 chunk of 32");
+    }
+
+    // --- prefix sharing ----------------------------------------------
+
+    #[test]
+    fn shared_prefix_decode_matches_unshared() {
+        // four prompts with a 24-token common "system prefix": the
+        // shared run covers one 16-token block, so requests 2..4 skip
+        // that block's prefill — tokens must not change.
+        let system = vec![9i32; 24];
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|i| {
+                let mut p = system.clone();
+                p.extend(vec![i as i32 + 1; 4 + i]);
+                p
+            })
+            .collect();
+        let run = |share: bool| {
+            let mut e = host_engine(1);
+            let gp = GenParams {
+                max_new_tokens: 6,
+                eos_token: None,
+                share_prefix: share,
+            };
+            for pr in &prompts {
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base, bm) = run(false);
+        let (shared, sm) = run(true);
+        assert_eq!(base, shared, "prefix sharing must not change tokens");
+        assert_eq!(bm.prefix_hits, 0);
+        assert_eq!(bm.shared_pages, 0);
+        assert!(sm.prefix_hits >= 3, "later prompts must hit, got {}", sm.prefix_hits);
+        assert!(
+            sm.prefix_tokens_saved >= 3 * 16,
+            "one block per hit, saved {}",
+            sm.prefix_tokens_saved
+        );
+        assert!(
+            sm.prefilled_tokens < bm.prefilled_tokens,
+            "sharing must shrink prefill work"
+        );
+        assert!(sm.shared_pages > 0, "the index retains registered runs");
+    }
+
+    #[test]
+    fn cow_split_preserves_sibling_tokens() {
+        // identical prompts: the second adopts the first's run
+        // including the partially filled tail block, then diverges by
+        // recomputing the last prompt token — the copy-on-write split
+        // must leave both sequences' outputs identical to a solo run.
+        let prompt = vec![7i32; 20]; // one full 16-token block + 4-row tail
+        let solo_gp = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: false };
+        let mut solo = host_engine(1);
+        solo.submit(prompt.clone(), solo_gp).unwrap();
+        let want = solo.run_until_idle().unwrap()[0].tokens.clone();
+
+        let gp = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: true };
+        let mut e = host_engine(1);
+        e.submit(prompt.clone(), gp).unwrap();
+        e.submit(prompt.clone(), gp).unwrap();
+        let mut out = e.run_until_idle().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, want);
+        assert_eq!(out[1].tokens, want, "COW split must not corrupt either sequence");
+        assert!(e.metrics.prefix_hits >= 1);
+        assert!(e.metrics.cow_splits >= 1, "tail divergence must split a block");
+        assert!(e.metrics.prefix_tokens_saved >= 19);
+    }
+
+    #[test]
+    fn idle_prefix_runs_evict_under_page_pressure() {
+        // device tier: 4 block groups, no host tier.  A share_prefix
+        // request registers 2 groups that stay pinned after it
+        // finishes; the next request needs 3 groups, which only fit if
+        // the engine evicts idle prefix-cache runs instead of failing.
+        let mut e = host_engine_tiered(4, 0);
+        let gp = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: true };
+        e.submit(vec![3i32; 20], gp).unwrap();
+        let first = e.run_until_idle().unwrap();
+        assert_eq!(first.len(), 1);
+        assert_eq!(e.metrics.shared_pages, 8, "two registered block groups");
+
+        let gp2 = GenParams { max_new_tokens: 20, eos_token: None, share_prefix: false };
+        e.submit(vec![5i32; 20], gp2).unwrap();
+        let second = e.run_until_idle().unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].tokens.len(), 20);
+        assert!(
+            e.metrics.shared_pages < 8,
+            "admission had to evict an idle prefix run, still holds {}",
+            e.metrics.shared_pages
+        );
+        assert_eq!(e.metrics.preemptions, 0, "eviction made preemption unnecessary");
+    }
+
+    #[test]
+    fn preempted_share_prefix_request_readopts_its_run() {
+        // a preempted sequence's pages are released, but the prefix run
+        // registered for its prompt survives in the index (the sibling
+        // sequence keeps it busy) — the recompute replay adopts it and
+        // skips most of the prompt.  Device tier: 5 block groups, so
+        // the second sequence admits (worst case 3 groups vs 3 free at
+        // the first quantum) and the pair then collides while growing.
+        let mut e = host_engine_tiered(5, 0);
+        let gp = GenParams { max_new_tokens: 30, eos_token: None, share_prefix: true };
+        // identical prompts: 16 tokens + 30 generated = 46 = 3 blocks
+        e.submit(vec![4i32; 16], gp).unwrap();
+        e.submit(vec![4i32; 16], gp).unwrap();
+        let mut out = e.run_until_idle().unwrap();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.tokens.len() == 30));
+        assert!(e.metrics.preemptions >= 1, "capacity forces preemption");
+        assert!(
+            e.metrics.prefix_hits >= 2,
+            "admission and the replay both adopt, hits = {}",
+            e.metrics.prefix_hits
+        );
+        assert!(e.metrics.cow_splits >= 1, "block-aligned tail must split on write");
+
+        // parity with an unconstrained, unshared engine
+        let mut big = host_engine(1);
+        let plain = GenParams { max_new_tokens: 30, eos_token: None, share_prefix: false };
+        big.submit(vec![4i32; 16], plain).unwrap();
+        big.submit(vec![4i32; 16], plain).unwrap();
+        let mut want = big.run_until_idle().unwrap();
+        want.sort_by_key(|r| r.id);
+        for (a, b) in out.iter().zip(&want) {
+            assert_eq!(a.tokens, b.tokens, "preemption + sharing must not change tokens");
+        }
     }
 
     fn engine() -> Option<Engine> {
@@ -1028,7 +1284,7 @@ mod tests {
     fn single_request_completes() {
         let Some(mut e) = engine() else { return };
         let id = e
-            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, eos_token: None })
+            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 4, ..GenParams::default() })
             .unwrap();
         let out = e.run_until_idle().unwrap();
         assert_eq!(out.len(), 1);
@@ -1042,7 +1298,7 @@ mod tests {
     fn generation_is_deterministic() {
         let Some(mut e1) = engine() else { return };
         let Some(mut e2) = engine() else { return };
-        let p = GenParams { max_new_tokens: 6, eos_token: None };
+        let p = GenParams { max_new_tokens: 6, eos_token: None, share_prefix: false };
         e1.submit(vec![7, 8, 9], p).unwrap();
         e2.submit(vec![7, 8, 9], p).unwrap();
         let a = e1.run_until_idle().unwrap();
@@ -1054,7 +1310,7 @@ mod tests {
     fn batched_equals_solo() {
         // The continuous batcher must not change any request's output.
         let Some(mut batched) = engine() else { return };
-        let p = GenParams { max_new_tokens: 5, eos_token: None };
+        let p = GenParams { max_new_tokens: 5, eos_token: None, share_prefix: false };
         let prompts: Vec<Vec<i32>> = vec![
             vec![1, 2, 3],
             vec![10, 20, 30, 40, 50, 60],
@@ -1081,10 +1337,10 @@ mod tests {
         let Some(mut e) = engine() else { return };
         let max_seq = 160;
         assert!(e
-            .submit(vec![1; 120], GenParams { max_new_tokens: 100, eos_token: None })
+            .submit(vec![1; 120], GenParams { max_new_tokens: 100, ..GenParams::default() })
             .is_err());
         assert!(e
-            .submit(vec![1; max_seq + 1], GenParams { max_new_tokens: 1, eos_token: None })
+            .submit(vec![1; max_seq + 1], GenParams { max_new_tokens: 1, ..GenParams::default() })
             .is_err());
     }
 
@@ -1093,7 +1349,7 @@ mod tests {
         let Some(mut e) = engine() else { return };
         // run once to learn the greedy continuation, then set eos to the
         // second generated token and expect early stop.
-        e.submit(vec![3, 1, 4, 1, 5], GenParams { max_new_tokens: 6, eos_token: None })
+        e.submit(vec![3, 1, 4, 1, 5], GenParams { max_new_tokens: 6, ..GenParams::default() })
             .unwrap();
         let full = e.run_until_idle().unwrap();
         let second = full[0].tokens[1];
@@ -1101,7 +1357,7 @@ mod tests {
         let Some(mut e2) = engine() else { return };
         e2.submit(
             vec![3, 1, 4, 1, 5],
-            GenParams { max_new_tokens: 6, eos_token: Some(second) },
+            GenParams { max_new_tokens: 6, eos_token: Some(second), share_prefix: false },
         )
         .unwrap();
         let stopped = e2.run_until_idle().unwrap();
@@ -1112,7 +1368,7 @@ mod tests {
     #[test]
     fn many_requests_all_complete() {
         let Some(mut e) = engine() else { return };
-        let p = GenParams { max_new_tokens: 3, eos_token: None };
+        let p = GenParams { max_new_tokens: 3, eos_token: None, share_prefix: false };
         for i in 0..10 {
             e.submit(vec![i as i32 + 1; (i % 7) + 1], p).unwrap();
         }

@@ -17,15 +17,25 @@
 //!   block instead of a `max_seq` slab.  Attention gathers rows through
 //!   the table (`attention::flash::KvView`), bit-identically to the
 //!   contiguous layout.
+//! * **Shared** — [`PrefixIndex`] layers cross-sequence prompt-prefix
+//!   sharing on top of the paged layout: identical prompt prefixes
+//!   occupy one ref-counted physical page run, with copy-on-write
+//!   splits ([`BlockTable::cow_unshare`]) isolating divergent writes.
+
+#![warn(missing_docs)]
 
 use anyhow::{bail, Result};
 
 /// Cache geometry (from the artifact manifest).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheShape {
+    /// Transformer layers, `L`.
     pub layers: usize,
+    /// KV heads per layer, `N_kv` (GQA: `≤` query heads).
     pub kv_heads: usize,
+    /// Token capacity per sequence, `S`.
     pub max_seq: usize,
+    /// Elements per head row, `D`.
     pub head_dim: usize,
 }
 
@@ -73,8 +83,11 @@ impl CacheShape {
 /// One sequence's KV cache (K and V planes, flat f32, `[L,1,Nkv,S,D]`).
 #[derive(Debug, Clone)]
 pub struct SeqCache {
+    /// Geometry of both planes.
     pub shape: CacheShape,
+    /// K plane, flat f32.
     pub k: Vec<f32>,
+    /// V plane, flat f32.
     pub v: Vec<f32>,
 }
 
@@ -151,6 +164,7 @@ pub enum Tier {
 /// Capacity-tracking cache pool with per-tier accounting.
 #[derive(Debug)]
 pub struct CachePool {
+    /// Per-sequence cache geometry the pool hands out.
     pub shape: CacheShape,
     device_budget_bytes: usize,
     device_used_bytes: usize,
@@ -159,6 +173,7 @@ pub struct CachePool {
 }
 
 impl CachePool {
+    /// An empty pool over `device_budget_bytes` of device memory.
     pub fn new(shape: CacheShape, device_budget_bytes: usize) -> Self {
         Self {
             shape,
@@ -201,14 +216,17 @@ impl CachePool {
         self.active = self.active.saturating_sub(1);
     }
 
+    /// Live caches (both tiers).
     pub fn active(&self) -> usize {
         self.active
     }
 
+    /// Bytes currently placed on the device tier.
     pub fn device_used_bytes(&self) -> usize {
         self.device_used_bytes
     }
 
+    /// Bytes spilled to the host tier.
     pub fn host_used_bytes(&self) -> usize {
         self.host_used_bytes
     }
@@ -236,6 +254,10 @@ pub enum PageAllocError {
     OutOfPages,
     /// The sequence would exceed its `max_seq` block budget.
     ExceedsMaxSeq,
+    /// The block's pages are shared (ref count > 1): shared pages are
+    /// pinned to the device tier until the count drops to 1, because
+    /// every other holder's table would keep indexing the device store.
+    SharedPage,
 }
 
 impl std::fmt::Display for PageAllocError {
@@ -243,6 +265,7 @@ impl std::fmt::Display for PageAllocError {
         match self {
             Self::OutOfPages => write!(f, "KV page pool exhausted"),
             Self::ExceedsMaxSeq => write!(f, "sequence exceeds max_seq block budget"),
+            Self::SharedPage => write!(f, "page is shared (ref count > 1) and pinned to device"),
         }
     }
 }
@@ -255,6 +278,18 @@ impl std::error::Error for PageAllocError {}
 /// for V, and belongs to exactly one (layer, kv-head) plane of one
 /// sequence block (ownership is the [`BlockTable`]'s — the pool only
 /// tracks ref counts).  `refs == 0` pages sit on the free list.
+///
+/// ```
+/// use fastattn::coordinator::kv_cache::PagePool;
+///
+/// let mut pool = PagePool::new(16, 8, 4); // 4 pages × 16 rows × d = 8
+/// let page = pool.alloc().unwrap();
+/// pool.retain(page); // a second holder — prefix sharing
+/// pool.release(page);
+/// assert_eq!(pool.used_pages(), 1, "still referenced by one holder");
+/// pool.release(page);
+/// assert_eq!(pool.free_pages(), 4);
+/// ```
 #[derive(Debug)]
 pub struct PagePool {
     page_size: usize,
@@ -268,6 +303,7 @@ pub struct PagePool {
 }
 
 impl PagePool {
+    /// A pool of `num_pages` zeroed pages of `page_size` rows × `head_dim`.
     pub fn new(page_size: usize, head_dim: usize, num_pages: usize) -> Self {
         assert!(page_size >= 1, "page_size must be >= 1");
         assert!(head_dim >= 1, "head_dim must be >= 1");
@@ -292,22 +328,27 @@ impl PagePool {
         Self::new(page_size, shape.head_dim, num_pages)
     }
 
+    /// Token rows per page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
 
+    /// Elements per row.
     pub fn head_dim(&self) -> usize {
         self.head_dim
     }
 
+    /// Total pages in the pool.
     pub fn num_pages(&self) -> usize {
         self.refs.len()
     }
 
+    /// Pages on the free list.
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
+    /// Pages with at least one reference.
     pub fn used_pages(&self) -> usize {
         self.num_pages() - self.free_pages()
     }
@@ -354,6 +395,20 @@ impl PagePool {
     /// Reference count of a page (0 = free).
     pub fn ref_count(&self, id: u32) -> u32 {
         self.refs[id as usize]
+    }
+
+    /// Allocate a fresh page and copy `src`'s full contents into it —
+    /// the copy-on-write split primitive.  The clone starts at
+    /// `refs = 1`; `src` keeps its own count.  `None` when the pool is
+    /// exhausted.
+    pub fn clone_page(&mut self, src: u32) -> Option<u32> {
+        debug_assert!(self.refs[src as usize] > 0, "clone of free page {src}");
+        let dst = self.alloc()?;
+        let n = self.page_size * self.head_dim;
+        let (s, d) = (src as usize * n, dst as usize * n);
+        self.k.copy_within(s..s + n, d);
+        self.v.copy_within(s..s + n, d);
+        Some(dst)
     }
 
     /// The flat K row store (`[num_pages, page_size, head_dim]`) —
@@ -405,6 +460,7 @@ impl Default for PcieLink {
 }
 
 impl PcieLink {
+    /// A link with the given effective bandwidth and setup latency.
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
         Self { bandwidth_bps, latency_s }
     }
@@ -444,6 +500,8 @@ pub struct TieredPagePool {
 }
 
 impl TieredPagePool {
+    /// Device and host pools of `device_pages` / `host_pages` pages
+    /// joined by the modeled `link`.
     pub fn new(
         page_size: usize,
         head_dim: usize,
@@ -479,6 +537,7 @@ impl TieredPagePool {
         }
     }
 
+    /// The device-tier pool.
     pub fn device(&self) -> &PagePool {
         &self.device
     }
@@ -489,10 +548,12 @@ impl TieredPagePool {
         &mut self.device
     }
 
+    /// The host-tier pool (cold pages).
     pub fn host(&self) -> &PagePool {
         &self.host
     }
 
+    /// The pool backing `tier`.
     pub fn pool(&self, tier: Tier) -> &PagePool {
         match tier {
             Tier::Device => &self.device,
@@ -507,10 +568,12 @@ impl TieredPagePool {
         }
     }
 
+    /// Token rows per page, identical in both tiers.
     pub fn page_size(&self) -> usize {
         self.device.page_size()
     }
 
+    /// Elements per row, identical in both tiers.
     pub fn head_dim(&self) -> usize {
         self.device.head_dim()
     }
@@ -520,18 +583,22 @@ impl TieredPagePool {
         self.device.page_bytes()
     }
 
+    /// Pages across both tiers.
     pub fn total_pages(&self) -> usize {
         self.device.num_pages() + self.host.num_pages()
     }
 
+    /// Free pages across both tiers.
     pub fn free_pages_total(&self) -> usize {
         self.device.free_pages() + self.host.free_pages()
     }
 
+    /// The modeled host↔device interconnect.
     pub fn link(&self) -> PcieLink {
         self.link
     }
 
+    /// Cumulative migration accounting.
     pub fn stats(&self) -> MigrationStats {
         self.stats
     }
@@ -603,9 +670,16 @@ pub struct BlockTable {
     /// Per-entry placement tag (parallel to `table`).  Blocks migrate
     /// as a group, so every plane of one block shares a tier.
     tiers: Vec<Tier>,
+    /// Per-*block* sharing flag (`[max_blocks]`): `true` while block
+    /// `b` was adopted from a shared prefix run and has not been
+    /// copy-on-write-split yet.  Shared blocks are read-only for this
+    /// sequence — [`Self::cow_unshare`] must run before any write lands
+    /// in them.
+    shared: Vec<bool>,
 }
 
 impl BlockTable {
+    /// An empty table for caches of `shape` at `page_size`-row pages.
     pub fn new(shape: CacheShape, page_size: usize) -> Self {
         assert!(page_size >= 1, "page_size must be >= 1");
         let max_blocks = shape.max_seq.div_ceil(page_size);
@@ -617,7 +691,14 @@ impl BlockTable {
             blocks: 0,
             table: vec![NO_PAGE; shape.layers * shape.kv_heads * max_blocks],
             tiers: vec![Tier::Device; shape.layers * shape.kv_heads * max_blocks],
+            shared: vec![false; max_blocks],
         }
+    }
+
+    /// Flat index of plane (`l`, `g`) of block `b` inside `table` /
+    /// `tiers` (the `[layers, kv_heads, max_blocks]` layout's one rule).
+    fn plane_at(&self, l: usize, g: usize, b: usize) -> usize {
+        (l * self.kv_heads + g) * self.max_blocks + b
     }
 
     /// Pages a sequence of `tokens` tokens needs in total under `shape`.
@@ -625,22 +706,27 @@ impl BlockTable {
         shape.layers * shape.kv_heads * tokens.div_ceil(page_size.max(1))
     }
 
+    /// Transformer layers the table spans.
     pub fn layers(&self) -> usize {
         self.layers
     }
 
+    /// KV heads per layer.
     pub fn kv_heads(&self) -> usize {
         self.kv_heads
     }
 
+    /// Token rows per page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
 
+    /// Block capacity (`max_seq` rounded up to whole pages).
     pub fn max_blocks(&self) -> usize {
         self.max_blocks
     }
 
+    /// Logical blocks currently allocated (uniform across planes).
     pub fn blocks(&self) -> usize {
         self.blocks
     }
@@ -686,14 +772,140 @@ impl BlockTable {
             let mut it = got.into_iter();
             for l in 0..self.layers {
                 for g in 0..self.kv_heads {
-                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    let at = self.plane_at(l, g, b);
                     self.table[at] = it.next().expect("group sized to planes");
                     self.tiers[at] = Tier::Device;
                 }
             }
+            self.shared[b] = false;
             self.blocks += 1;
         }
         Ok(())
+    }
+
+    /// Append one block adopted from a shared prefix run: `group` pages
+    /// (plane-major `[layers * kv_heads]`, all device-resident) are
+    /// retained in `pool` and become this table's next logical block,
+    /// flagged shared — read-only until [`Self::cow_unshare`] splits it.
+    pub fn push_shared_block(&mut self, group: &[u32], pool: &mut PagePool) {
+        assert!(self.blocks < self.max_blocks, "shared block beyond max_seq budget");
+        assert_eq!(group.len(), self.layers * self.kv_heads, "group sized to planes");
+        let b = self.blocks;
+        let mut it = group.iter();
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                let at = self.plane_at(l, g, b);
+                let page = *it.next().expect("group sized to planes");
+                pool.retain(page);
+                self.table[at] = page;
+                self.tiers[at] = Tier::Device;
+            }
+        }
+        self.shared[b] = true;
+        self.blocks += 1;
+    }
+
+    /// The page group of block `b`, plane-major `[layers * kv_heads]` —
+    /// the unit the prefix index registers and adopts.
+    pub fn block_group(&self, b: usize) -> Vec<u32> {
+        assert!(b < self.blocks, "group of unallocated block {b}");
+        let mut out = Vec::with_capacity(self.layers * self.kv_heads);
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                out.push(self.table[self.plane_at(l, g, b)]);
+            }
+        }
+        out
+    }
+
+    /// True while block `b` is an unsplit adoption from a shared run.
+    pub fn block_shared(&self, b: usize) -> bool {
+        debug_assert!(b < self.blocks, "shared flag of unallocated block {b}");
+        self.shared[b]
+    }
+
+    /// Blocks currently shared (adopted and not yet split).
+    pub fn shared_blocks(&self) -> usize {
+        (0..self.blocks).filter(|&b| self.shared[b]).count()
+    }
+
+    /// True when block `b` must stay device-resident: some *other*
+    /// holder (a sibling table or the prefix index) still references
+    /// its pages, so moving them would break that holder's mapping.
+    /// Ref counts are uniform across a block's planes (every sharing
+    /// operation acts on whole groups), so the first plane's page
+    /// stands for the group.
+    pub fn block_pinned(&self, b: usize, device: &PagePool) -> bool {
+        debug_assert!(b < self.blocks, "pin check of unallocated block {b}");
+        self.block_tier(b) == Tier::Device && device.ref_count(self.table[b]) > 1
+    }
+
+    /// Copy-on-write for a write of token rows `[first_row, last_row)`:
+    /// every still-shared block the range overlaps is split — its page
+    /// group is cloned into freshly allocated device pages (old
+    /// references released) — so the write cannot mutate pages a
+    /// sibling sequence or the prefix index still reads.  A block whose
+    /// pages this table holds the only reference to is unshared without
+    /// copying.  All-or-nothing per block (a partial clone group is
+    /// rolled back before `OutOfPages` is returned).  Returns the
+    /// number of blocks actually copied.
+    pub fn cow_unshare(
+        &mut self,
+        first_row: usize,
+        last_row: usize,
+        pool: &mut PagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        if first_row >= last_row || self.blocks == 0 {
+            return Ok(0);
+        }
+        let b0 = first_row / self.page_size;
+        let b1 = ((last_row - 1) / self.page_size).min(self.blocks - 1);
+        let mut splits = 0;
+        for b in b0..=b1 {
+            if !self.shared[b] {
+                continue;
+            }
+            debug_assert_eq!(self.block_tier(b), Tier::Device, "shared blocks are device-pinned");
+            let group = self.layers * self.kv_heads;
+            let sole = (0..self.layers).all(|l| {
+                (0..self.kv_heads).all(|g| {
+                    let at = self.plane_at(l, g, b);
+                    pool.ref_count(self.table[at]) == 1
+                })
+            });
+            if sole {
+                // every other holder is gone — this table owns the
+                // pages outright; sharing ends without a copy.
+                self.shared[b] = false;
+                continue;
+            }
+            let mut got: Vec<u32> = Vec::with_capacity(group);
+            for l in 0..self.layers {
+                for g in 0..self.kv_heads {
+                    let at = self.plane_at(l, g, b);
+                    match pool.clone_page(self.table[at]) {
+                        Some(p) => got.push(p),
+                        None => {
+                            for p in got {
+                                pool.release(p);
+                            }
+                            return Err(PageAllocError::OutOfPages);
+                        }
+                    }
+                }
+            }
+            let mut it = got.into_iter();
+            for l in 0..self.layers {
+                for g in 0..self.kv_heads {
+                    let at = self.plane_at(l, g, b);
+                    pool.release(self.table[at]);
+                    self.table[at] = it.next().expect("group sized to planes");
+                }
+            }
+            self.shared[b] = false;
+            splits += 1;
+        }
+        Ok(splits)
     }
 
     /// The (tier, page, in-page slot) holding token row `row` of
@@ -701,7 +913,7 @@ impl BlockTable {
     pub fn locate_tiered(&self, layer: usize, kv_head: usize, row: usize) -> (Tier, u32, usize) {
         let b = row / self.page_size;
         debug_assert!(b < self.blocks, "row {row} beyond allocated blocks");
-        let at = (layer * self.kv_heads + kv_head) * self.max_blocks + b;
+        let at = self.plane_at(layer, kv_head, b);
         debug_assert_ne!(self.table[at], NO_PAGE, "unallocated block {b}");
         (self.tiers[at], self.table[at], row % self.page_size)
     }
@@ -749,14 +961,29 @@ impl BlockTable {
         (0..lim).find(|&b| self.block_tier(b) == Tier::Device)
     }
 
+    /// Like [`Self::coldest_device_block`], but additionally skips
+    /// blocks pinned by prefix sharing ([`Self::block_pinned`]): a page
+    /// referenced by another holder must not leave the device store.
+    pub fn coldest_migratable_block(
+        &self,
+        include_tail: bool,
+        device: &PagePool,
+    ) -> Option<usize> {
+        let lim = if include_tail { self.blocks } else { self.blocks.saturating_sub(1) };
+        (0..lim)
+            .find(|&b| self.block_tier(b) == Tier::Device && !self.block_pinned(b, device))
+    }
+
     /// Migrate block `b` (one page per plane) from the device tier to
     /// the host tier as one batched PCIe move.  All-or-nothing: host
     /// capacity for the whole group is checked up front, so a failed
     /// call changes nothing.  Returns the pages moved.
     ///
     /// Shared pages (ref count > 1) must not migrate — the other
-    /// holder's table would keep indexing the device store; this table
-    /// must own every page of the block.
+    /// holder's table (or the prefix index) would keep indexing the
+    /// device store; the call refuses with
+    /// [`PageAllocError::SharedPage`] until this table owns every page
+    /// of the block outright.
     pub fn migrate_block_to_host(
         &mut self,
         b: usize,
@@ -766,12 +993,20 @@ impl BlockTable {
         assert_eq!(self.block_tier(b), Tier::Device, "block {b} already host-resident");
         debug_assert_eq!(pools.page_size(), self.page_size, "pool/table page_size");
         let group = self.layers * self.kv_heads;
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                let at = self.plane_at(l, g, b);
+                if pools.device().ref_count(self.table[at]) > 1 {
+                    return Err(PageAllocError::SharedPage);
+                }
+            }
+        }
         if pools.host().free_pages() < group {
             return Err(PageAllocError::OutOfPages);
         }
         for l in 0..self.layers {
             for g in 0..self.kv_heads {
-                let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                let at = self.plane_at(l, g, b);
                 let host_page = pools
                     .offload_page(self.table[at])
                     .expect("host capacity checked above");
@@ -779,6 +1014,9 @@ impl BlockTable {
                 self.tiers[at] = Tier::Host;
             }
         }
+        // sole ownership was just proven — if the block was ever
+        // adopted from a shared run, sharing has ended.
+        self.shared[b] = false;
         pools.charge_batch(group);
         Ok(group)
     }
@@ -789,7 +1027,7 @@ impl BlockTable {
         for l in 0..self.layers {
             for g in 0..self.kv_heads {
                 for b in 0..self.blocks {
-                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    let at = self.plane_at(l, g, b);
                     debug_assert_eq!(
                         self.tiers[at],
                         Tier::Device,
@@ -800,6 +1038,7 @@ impl BlockTable {
                 }
             }
         }
+        self.shared.fill(false);
         self.blocks = 0;
     }
 
@@ -809,14 +1048,261 @@ impl BlockTable {
         for l in 0..self.layers {
             for g in 0..self.kv_heads {
                 for b in 0..self.blocks {
-                    let at = (l * self.kv_heads + g) * self.max_blocks + b;
+                    let at = self.plane_at(l, g, b);
                     pools.pool_mut(self.tiers[at]).release(self.table[at]);
                     self.table[at] = NO_PAGE;
                     self.tiers[at] = Tier::Device;
                 }
             }
         }
+        self.shared.fill(false);
         self.blocks = 0;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-sequence prefix sharing: PrefixIndex
+// ---------------------------------------------------------------------
+
+/// One registered block of shared prompt-prefix KV.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    /// One page per (layer, kv-head) plane, plane-major
+    /// (`[layers * kv_heads]`), all device-resident; the index holds
+    /// one reference on each so the run outlives the sequence that
+    /// prefilled it.
+    pages: Vec<u32>,
+    /// Valid token rows in the block: `page_size` for chain blocks,
+    /// `1..page_size` for a partially filled tail block.
+    rows: usize,
+    /// LRU stamp (unique; bumped on every registration and hit).
+    stamp: u64,
+}
+
+/// The cross-sequence prompt-prefix cache of a paged engine
+/// (system-prompt caching): content-addressed page runs that let a new
+/// sequence *adopt* the KV pages of a previously prefilled prompt
+/// prefix instead of recomputing them.
+///
+/// Entries are **block-granular**, keyed by the exact token prefix they
+/// cover: a chain entry's key is the prompt's first `k · page_size`
+/// tokens and its value is block `k-1`'s page group; a *tail* entry
+/// (the partially filled last block of a prompt whose length is not a
+/// page multiple) is keyed by the whole prompt.  Lookup walks the chain
+/// greedily — block `k` can only hit if blocks `0..k` hit — so two
+/// prompts share exactly the page runs of their common block-aligned
+/// prefix, plus the tail when the prompts are identical.
+///
+/// The index retains every registered page, pinning it to the device
+/// tier; [`Self::evict_idle`] drops least-recently-used runs no live
+/// sequence references when the engine needs the pages back.
+/// Divergent writes into adopted blocks are handled by
+/// [`BlockTable::cow_unshare`] — the index's copy is never mutated.
+///
+/// ```
+/// use fastattn::coordinator::kv_cache::{BlockTable, CacheShape, PagePool, PrefixIndex};
+///
+/// let shape = CacheShape { layers: 1, kv_heads: 1, max_seq: 8, head_dim: 2 };
+/// let mut pool = PagePool::new(2, shape.head_dim, 16);
+/// let mut index = PrefixIndex::new(shape, 2, 64);
+///
+/// // sequence A prefills a 4-token prompt and registers it
+/// let prompt = [7i32, 8, 9, 10];
+/// let mut a = BlockTable::new(shape, 2);
+/// a.ensure_capacity(prompt.len(), &mut pool).unwrap();
+/// assert_eq!(index.register(&prompt, &a, &mut pool), 2);
+///
+/// // sequence B with the same prompt adopts the shared run: its
+/// // prefill resumes at the last prompt token instead of token 0
+/// let mut b = BlockTable::new(shape, 2);
+/// let adopted = index.adopt(&prompt, &mut b, &mut pool);
+/// assert_eq!(adopted, prompt.len() - 1);
+/// assert_eq!(b.shared_blocks(), 2);
+///
+/// // B's first write into the shared tail block copy-on-write-splits
+/// // it, so A's pages (and the index's) are never mutated
+/// let splits = b.cow_unshare(3, 4, &mut pool).unwrap();
+/// assert_eq!(splits, 1);
+/// b.release_all(&mut pool);
+/// a.release_all(&mut pool);
+/// ```
+#[derive(Debug)]
+pub struct PrefixIndex {
+    layers: usize,
+    kv_heads: usize,
+    page_size: usize,
+    /// Cap on registered entries (LRU-evicted past it).
+    max_entries: usize,
+    entries: std::collections::HashMap<Vec<i32>, PrefixEntry>,
+    /// Monotonic LRU clock; every stamp it hands out is unique, so
+    /// eviction order is deterministic.
+    clock: u64,
+}
+
+impl PrefixIndex {
+    /// An empty index for caches of `shape` at `page_size`, holding at
+    /// most `max_entries` block entries.
+    pub fn new(shape: CacheShape, page_size: usize, max_entries: usize) -> Self {
+        assert!(page_size >= 1, "page_size must be >= 1");
+        Self {
+            layers: shape.layers,
+            kv_heads: shape.kv_heads,
+            page_size,
+            max_entries: max_entries.max(1),
+            entries: std::collections::HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Registered block entries.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Pages currently retained by the index (each pinned to device).
+    pub fn pages_held(&self) -> usize {
+        self.entries.values().map(|e| e.pages.len()).sum()
+    }
+
+    /// Register the prompt-prefix KV of a fully prefilled sequence for
+    /// future sharing: one chain entry per whole block the table owns
+    /// outright (computed here, device-resident, not itself an unsplit
+    /// adoption), plus a tail entry for a partially filled last block,
+    /// keyed by the whole prompt.  Every registered page is retained.
+    /// Returns the entries added (0 when everything was already
+    /// registered or nothing qualifies).
+    pub fn register(&mut self, prompt: &[i32], table: &BlockTable, pool: &mut PagePool) -> usize {
+        assert_eq!(table.layers(), self.layers, "table/index layers");
+        assert_eq!(table.kv_heads(), self.kv_heads, "table/index kv_heads");
+        assert_eq!(table.page_size(), self.page_size, "table/index page_size");
+        let ps = self.page_size;
+        let full = prompt.len() / ps;
+        let tail_rows = prompt.len() % ps;
+        let mut added = 0;
+        for b in 0..full.min(table.blocks()) {
+            let key = &prompt[..(b + 1) * ps];
+            if table.block_shared(b)
+                || table.block_tier(b) != Tier::Device
+                || self.entries.contains_key(key)
+                || !self.make_room(pool)
+            {
+                continue;
+            }
+            added += self.insert(key, table.block_group(b), ps, pool);
+        }
+        if tail_rows != 0 && full < table.blocks() {
+            let b = full;
+            if !table.block_shared(b)
+                && table.block_tier(b) == Tier::Device
+                && !self.entries.contains_key(prompt)
+                && self.make_room(pool)
+            {
+                added += self.insert(prompt, table.block_group(b), tail_rows, pool);
+            }
+        }
+        added
+    }
+
+    fn insert(&mut self, key: &[i32], pages: Vec<u32>, rows: usize, pool: &mut PagePool) -> usize {
+        for &p in &pages {
+            pool.retain(p);
+        }
+        self.clock += 1;
+        self.entries
+            .insert(key.to_vec(), PrefixEntry { pages, rows, stamp: self.clock });
+        1
+    }
+
+    /// Evict (at most one entry) until there is room for one more.
+    fn make_room(&mut self, pool: &mut PagePool) -> bool {
+        if self.entries.len() < self.max_entries {
+            return true;
+        }
+        self.evict_idle(pool) > 0 && self.entries.len() < self.max_entries
+    }
+
+    /// Adopt the longest registered run matching a prefix of `prompt`
+    /// into `table` (which must be empty): chain blocks first, then —
+    /// on an exact full-prompt hit — the partially filled tail block.
+    /// At most `prompt.len() - 1` tokens are adopted, so prefill always
+    /// recomputes at least the final prompt token (its logits seed the
+    /// first generated token); the recomputed rows land in adopted
+    /// blocks only after a copy-on-write split.  Returns the tokens
+    /// adopted (0 = miss).
+    pub fn adopt(&mut self, prompt: &[i32], table: &mut BlockTable, pool: &mut PagePool) -> usize {
+        assert_eq!(table.blocks(), 0, "adopt into a non-empty table");
+        assert_eq!(table.layers(), self.layers, "table/index layers");
+        assert_eq!(table.kv_heads(), self.kv_heads, "table/index kv_heads");
+        assert_eq!(table.page_size(), self.page_size, "table/index page_size");
+        let ps = self.page_size;
+        let max_tokens = prompt.len().saturating_sub(1);
+        if max_tokens == 0 {
+            return 0;
+        }
+        let full = prompt.len() / ps;
+        let mut chain = 0;
+        while chain < full && self.entries.contains_key(&prompt[..(chain + 1) * ps]) {
+            chain += 1;
+        }
+        // the tail block only helps when it contributes adoptable rows
+        let tail = chain == full
+            && prompt.len() % ps != 0
+            && chain * ps < max_tokens
+            && self.entries.contains_key(prompt);
+        if chain == 0 && !tail {
+            return 0;
+        }
+        let mut tokens = 0;
+        for b in 0..chain {
+            let (pages, rows) = self.touch(&prompt[..(b + 1) * ps]);
+            table.push_shared_block(&pages, pool);
+            tokens += rows;
+        }
+        if tail {
+            let (pages, rows) = self.touch(prompt);
+            table.push_shared_block(&pages, pool);
+            tokens += rows;
+        }
+        tokens.min(max_tokens)
+    }
+
+    /// Bump an entry's LRU stamp and clone its page group.
+    fn touch(&mut self, key: &[i32]) -> (Vec<u32>, usize) {
+        self.clock += 1;
+        let e = self.entries.get_mut(key).expect("probed key present");
+        e.stamp = self.clock;
+        (e.pages.clone(), e.rows)
+    }
+
+    /// Evict the least-recently-used *idle* entry — one whose pages no
+    /// live table references (the index holds the only reference on
+    /// each) — releasing its pages back to the free list.  Returns the
+    /// pages freed (0 when every entry is still in use).
+    pub fn evict_idle(&mut self, pool: &mut PagePool) -> usize {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pages.iter().all(|&p| pool.ref_count(p) == 1))
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| k.clone());
+        let Some(key) = victim else { return 0 };
+        let e = self.entries.remove(&key).expect("victim key present");
+        for &p in &e.pages {
+            pool.release(p);
+        }
+        e.pages.len()
+    }
+
+    /// Release every retained page and forget all entries (engine
+    /// shutdown / tests).  Pages still shared with live tables survive
+    /// under those tables' references.
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        for e in self.entries.values() {
+            for &p in &e.pages {
+                pool.release(p);
+            }
+        }
+        self.entries.clear();
     }
 }
 
@@ -1130,6 +1616,288 @@ mod tests {
         assert_eq!(pools.page_size(), 2);
         assert_eq!(pools.head_dim(), sh.head_dim);
         assert_eq!(pools.page_bytes(), 2 * 4 * 2 * sh.head_dim);
+    }
+
+    // --- prefix sharing: clone/COW/pinning/PrefixIndex ----------------
+
+    #[test]
+    fn clone_page_copies_rows_and_leaves_src() {
+        let mut pool = PagePool::new(2, 2, 4);
+        let src = pool.alloc().unwrap();
+        pool.write_row(src, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        pool.write_row(src, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        let dst = pool.clone_page(src).unwrap();
+        assert_ne!(src, dst);
+        assert_eq!(pool.ref_count(src), 1);
+        assert_eq!(pool.ref_count(dst), 1);
+        let at = |p: u32, s: usize| (p as usize * 2 + s) * 2;
+        assert_eq!(&pool.k_store()[at(dst, 0)..at(dst, 0) + 2], &[1.0, 2.0]);
+        assert_eq!(&pool.v_store()[at(dst, 1)..at(dst, 1) + 2], &[7.0, 8.0]);
+        // mutating the clone leaves the source untouched
+        pool.write_row(dst, 0, &[9.0, 9.0], &[9.0, 9.0]);
+        assert_eq!(&pool.k_store()[at(src, 0)..at(src, 0) + 2], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn push_shared_block_retains_group() {
+        let sh = shape(); // layers 2, kv_heads 3 → group 6
+        let mut pool = PagePool::new(2, sh.head_dim, 32);
+        let mut owner = BlockTable::new(sh, 2);
+        owner.ensure_capacity(2, &mut pool).unwrap();
+        assert!(!owner.block_shared(0));
+        let group = owner.block_group(0);
+        assert_eq!(group.len(), 6);
+
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&group, &mut pool);
+        assert_eq!(adopter.blocks(), 1);
+        assert!(adopter.block_shared(0));
+        assert_eq!(adopter.shared_blocks(), 1);
+        assert_eq!(adopter.block_group(0), group);
+        for &p in &group {
+            assert_eq!(pool.ref_count(p), 2);
+        }
+        // both tables resolve the same physical rows
+        assert_eq!(owner.locate(1, 2, 1), adopter.locate(1, 2, 1));
+
+        adopter.release_all(&mut pool);
+        for &p in &group {
+            assert_eq!(pool.ref_count(p), 1, "owner keeps its reference");
+        }
+        owner.release_all(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn cow_unshare_splits_without_touching_sibling() {
+        let sh = shape();
+        let mut pool = PagePool::new(2, sh.head_dim, 64);
+        let mut owner = BlockTable::new(sh, 2);
+        owner.ensure_capacity(4, &mut pool).unwrap(); // 2 blocks
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..4 {
+                    let base = ((l * 10 + g) * 10 + r) as f32;
+                    let (page, slot) = owner.locate(l, g, r);
+                    pool.write_row(page, slot, &[base, base + 0.5], &[-base, -base - 0.5]);
+                }
+            }
+        }
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&owner.block_group(0), &mut pool);
+        adopter.push_shared_block(&owner.block_group(1), &mut pool);
+
+        // a write into rows 2..4 (block 1) splits only block 1
+        let splits = adopter.cow_unshare(2, 4, &mut pool).unwrap();
+        assert_eq!(splits, 1);
+        assert!(adopter.block_shared(0));
+        assert!(!adopter.block_shared(1));
+        assert_ne!(owner.locate(0, 0, 2), adopter.locate(0, 0, 2));
+        assert_eq!(owner.locate(0, 0, 0), adopter.locate(0, 0, 0));
+
+        // the clone carried the rows; diverging leaves the owner intact
+        let (op, os) = owner.locate(1, 1, 3);
+        let (ap, asl) = adopter.locate(1, 1, 3);
+        let at = |p: u32, s: usize| (p as usize * 2 + s) * sh.head_dim;
+        assert_eq!(
+            &pool.k_store()[at(op, os)..at(op, os) + 2].to_vec(),
+            &pool.k_store()[at(ap, asl)..at(ap, asl) + 2].to_vec()
+        );
+        pool.write_row(ap, asl, &[99.0, 99.0], &[99.0, 99.0]);
+        let base = 113.0f32; // (l * 10 + g) * 10 + r at (1, 1, 3)
+        assert_eq!(
+            &pool.k_store()[at(op, os)..at(op, os) + 2],
+            &[base, base + 0.5],
+            "COW split must never mutate the sibling's pages"
+        );
+
+        // sole owner: once the sibling releases, unsharing block 0 is
+        // a flag flip, not a copy
+        owner.release_all(&mut pool);
+        let used = pool.used_pages();
+        assert_eq!(adopter.cow_unshare(0, 2, &mut pool).unwrap(), 0);
+        assert!(!adopter.block_shared(0));
+        assert_eq!(pool.used_pages(), used, "sole-owner unshare allocates nothing");
+        adopter.release_all(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn shared_blocks_pin_migration() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 4 * group, 4 * group, PcieLink::default());
+        let mut owner = BlockTable::new(sh, 2);
+        owner.ensure_capacity(4, pools.device_mut()).unwrap();
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&owner.block_group(0), pools.device_mut());
+
+        // block 0 is shared: pinned for both holders
+        assert!(owner.block_pinned(0, pools.device()));
+        assert!(!owner.block_pinned(1, pools.device()));
+        assert_eq!(
+            owner.migrate_block_to_host(0, &mut pools),
+            Err(PageAllocError::SharedPage)
+        );
+        assert_eq!(owner.coldest_device_block(true), Some(0));
+        assert_eq!(owner.coldest_migratable_block(true, pools.device()), Some(1));
+        assert_eq!(adopter.coldest_migratable_block(true, pools.device()), None);
+
+        // once the adopter lets go, the pin lifts
+        adopter.release_all_tiered(&mut pools);
+        assert!(!owner.block_pinned(0, pools.device()));
+        owner.migrate_block_to_host(0, &mut pools).unwrap();
+        owner.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    /// Index geometry for the prefix tests: single-plane cache, page
+    /// size 4.
+    fn ix_shape() -> CacheShape {
+        CacheShape { layers: 1, kv_heads: 1, max_seq: 16, head_dim: 2 }
+    }
+
+    #[test]
+    fn prefix_index_chain_and_tail_roundtrip() {
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        // register a 6-token prompt: one chain block + a 2-row tail
+        let prompt = [1i32, 2, 3, 4, 5, 6];
+        let mut owner = BlockTable::new(sh, ps);
+        owner.ensure_capacity(prompt.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&prompt, &owner, &mut pool), 2);
+        assert_eq!(ix.entries(), 2);
+        assert_eq!(ix.pages_held(), 2);
+        // double registration is a no-op
+        assert_eq!(ix.register(&prompt, &owner, &mut pool), 0);
+
+        // identical prompt: chain + tail adopt, capped at len - 1
+        let mut same = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&prompt, &mut same, &mut pool), 5);
+        assert_eq!(same.blocks(), 2);
+        assert_eq!(same.shared_blocks(), 2);
+        assert_eq!(same.locate(0, 0, 5), owner.locate(0, 0, 5));
+
+        // longer prompt sharing the block-aligned prefix: chain only
+        let longer = [1i32, 2, 3, 4, 9, 9, 9];
+        let mut ext = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&longer, &mut ext, &mut pool), 4);
+        assert_eq!(ext.blocks(), 1);
+        assert_eq!(ext.locate(0, 0, 3), owner.locate(0, 0, 3));
+
+        // divergent prompt: miss
+        let other = [8i32, 8, 8, 8, 8];
+        let mut miss = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&other, &mut miss, &mut pool), 0);
+        assert_eq!(miss.blocks(), 0);
+
+        same.release_all(&mut pool);
+        ext.release_all(&mut pool);
+        owner.release_all(&mut pool);
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_index_skips_adopted_and_cold_blocks_on_register() {
+        let sh = ix_shape();
+        let ps = 4;
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(ps, sh.head_dim, 8 * group, 8 * group, PcieLink::default());
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        let prompt = [1i32, 2, 3, 4, 5, 6, 7, 8];
+        let mut owner = BlockTable::new(sh, ps);
+        owner.ensure_capacity(prompt.len(), pools.device_mut()).unwrap();
+        assert_eq!(ix.register(&prompt, &owner, pools.device_mut()), 2);
+
+        // an adopter that extends the prompt registers only the blocks
+        // it computed itself (block 2), not the adopted shared ones
+        let longer = [1i32, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        let mut ext = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&longer, &mut ext, pools.device_mut()), 8);
+        ext.ensure_capacity(longer.len(), pools.device_mut()).unwrap();
+        assert_eq!(ix.register(&longer, &ext, pools.device_mut()), 1);
+        assert_eq!(ix.entries(), 3);
+
+        // a host-migrated block never registers
+        let cold = [9i32, 9, 9, 9, 9];
+        let mut c = BlockTable::new(sh, ps);
+        c.ensure_capacity(cold.len(), pools.device_mut()).unwrap();
+        c.migrate_block_to_host(0, &mut pools).unwrap();
+        assert_eq!(ix.register(&cold, &c, pools.device_mut()), 1, "only the device tail");
+
+        ext.release_all(pools.device_mut());
+        owner.release_all(pools.device_mut());
+        c.release_all_tiered(&mut pools);
+        ix.clear(pools.device_mut());
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn prefix_index_evicts_only_idle_lru() {
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        let a = [1i32, 2, 3, 4];
+        let mut ta = BlockTable::new(sh, ps);
+        ta.ensure_capacity(a.len(), &mut pool).unwrap();
+        ix.register(&a, &ta, &mut pool);
+        let b = [5i32, 6, 7, 8];
+        let mut tb = BlockTable::new(sh, ps);
+        tb.ensure_capacity(b.len(), &mut pool).unwrap();
+        ix.register(&b, &tb, &mut pool);
+        assert_eq!(ix.entries(), 2);
+
+        // both runs still referenced by their tables: nothing is idle
+        assert_eq!(ix.evict_idle(&mut pool), 0);
+
+        // a's table lets go → a is idle and LRU → evicted first
+        ta.release_all(&mut pool);
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        assert_eq!(ix.entries(), 1);
+        assert_eq!(ix.adopt(&a, &mut ta, &mut pool), 0, "a's run is gone");
+
+        tb.release_all(&mut pool);
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        assert_eq!(ix.evict_idle(&mut pool), 0);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_index_cap_evicts_for_room() {
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 1); // room for one entry
+        let a = [1i32, 2, 3, 4];
+        let mut ta = BlockTable::new(sh, ps);
+        ta.ensure_capacity(a.len(), &mut pool).unwrap();
+        ix.register(&a, &ta, &mut pool);
+        ta.release_all(&mut pool); // a idle
+
+        let b = [5i32, 6, 7, 8];
+        let mut tb = BlockTable::new(sh, ps);
+        tb.ensure_capacity(b.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&b, &tb, &mut pool), 1, "cap evicts the idle run");
+        assert_eq!(ix.entries(), 1);
+        // with b's run busy (tb still holds it), nothing can make room
+        let c = [9i32, 9, 9, 9];
+        let mut tc = BlockTable::new(sh, ps);
+        tc.ensure_capacity(c.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&c, &tc, &mut pool), 0, "no idle run to evict");
+
+        tb.release_all(&mut pool);
+        tc.release_all(&mut pool);
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //! * [`kv_cache`]  — the two-tier paged KV cache (`TieredPagePool`:
 //!   device + host `PagePool`s behind per-sequence `BlockTable`s with
 //!   per-block tier tags, cold-block migration over a modeled
-//!   `PcieLink`), plus the contiguous per-sequence caches, ragged batch
-//!   packing and the legacy layer-granularity capacity pool of the
-//!   artifact path;
+//!   `PcieLink`), cross-sequence prompt-prefix sharing
+//!   (`PrefixIndex`: content-addressed shared page runs with
+//!   copy-on-write block splits), plus the contiguous per-sequence
+//!   caches, ragged batch packing and the legacy layer-granularity
+//!   capacity pool of the artifact path;
 //! * [`engine`]    — the synchronous execution core: tiered paged
 //!   decode and chunked prefill with migrate-before-preempt page
 //!   reclamation over a paged-capable backend, or ragged plane
@@ -45,8 +47,8 @@ pub use backend::{
 pub use batcher::AdmitError;
 pub use engine::{Engine, EngineConfig, KvLayout};
 pub use kv_cache::{
-    BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, Tier,
-    TieredPagePool,
+    BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, PrefixIndex,
+    Tier, TieredPagePool,
 };
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::Server;

@@ -12,11 +12,26 @@ pub struct GenParams {
     pub max_new_tokens: usize,
     /// Stop early on this token id, if any.
     pub eos_token: Option<i32>,
+    /// Opt into cross-sequence prompt-prefix sharing (paged engines
+    /// only): adopt the cached KV pages of a matching prompt prefix
+    /// instead of re-prefilling it, and register this prompt's pages
+    /// for later requests.  Off by default — shared pages are pinned to
+    /// the device tier while referenced.  Tokens are unchanged either
+    /// way (sharing reuses bit-identical KV rows).
+    pub share_prefix: bool,
 }
 
 impl Default for GenParams {
     fn default() -> Self {
-        Self { max_new_tokens: 16, eos_token: None }
+        Self { max_new_tokens: 16, eos_token: None, share_prefix: false }
+    }
+}
+
+impl GenParams {
+    /// `self` with prefix sharing switched on — the request-path opt-in.
+    pub fn with_shared_prefix(mut self) -> Self {
+        self.share_prefix = true;
+        self
     }
 }
 

@@ -160,7 +160,7 @@ mod tests {
     fn serves_concurrent_clients() {
         let Some(dir) = artifact_dir() else { return };
         let server = Server::start(dir, EngineConfig::default()).unwrap();
-        let p = GenParams { max_new_tokens: 3, eos_token: None };
+        let p = GenParams { max_new_tokens: 3, eos_token: None, share_prefix: false };
         let waits: Vec<_> = (0..6)
             .map(|i| {
                 let prompt = vec![(i % 50) as i32 + 1; (i % 9) + 1];
@@ -184,7 +184,7 @@ mod tests {
         assert!(err.is_err());
         // engine still alive
         let (_, rx) = server
-            .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, eos_token: None })
+            .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, ..GenParams::default() })
             .unwrap();
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.tokens.len(), 2);

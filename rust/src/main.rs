@@ -85,7 +85,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         .map(|i| {
             let len = 3 + (i * 7) % 24;
             let prompt: Vec<i32> = (0..len).map(|j| ((i * 31 + j * 13) % 500 + 1) as i32).collect();
-            server.submit(prompt, GenParams { max_new_tokens: gen, eos_token: None })
+            server.submit(prompt, GenParams { max_new_tokens: gen, ..GenParams::default() })
         })
         .collect::<Result<_, _>>()?;
     for (id, rx) in waits {

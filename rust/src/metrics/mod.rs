@@ -17,6 +17,8 @@ pub struct EngineMetrics {
     pub decode_s: f64,
     /// Paged KV, device tier: pages in use after the latest step /
     /// pool size / high-water mark.  Zero on contiguous engines.
+    /// Pages retained by the prefix cache count as in use (at idle,
+    /// `pages_used == shared_pages`).
     pub pages_used: u64,
     pub pages_total: u64,
     pub peak_pages_used: u64,
@@ -31,11 +33,22 @@ pub struct EngineMetrics {
     pub migrations: u64,
     pub migrated_bytes: u64,
     pub pcie_modeled_s: f64,
-    /// Page-allocation failures (each one triggers a migration, then a
-    /// preemption attempt) and sequences actually preempted back to
-    /// the queue.
+    /// Page-allocation failures (each one triggers prefix-cache
+    /// eviction, then a migration, then a preemption attempt) and
+    /// sequences actually preempted back to the queue.
     pub alloc_failures: u64,
     pub preemptions: u64,
+    /// Prefix sharing (paged engines, per-request opt-in): pages
+    /// currently retained by the prefix index after the latest step.
+    pub shared_pages: u64,
+    /// Admissions that adopted a shared prompt-prefix run.
+    pub prefix_hits: u64,
+    /// Copy-on-write block splits (first divergent write into an
+    /// adopted block).
+    pub cow_splits: u64,
+    /// Prompt tokens whose prefill was skipped thanks to an adopted
+    /// prefix run.
+    pub prefix_tokens_saved: u64,
 }
 
 impl EngineMetrics {
@@ -71,6 +84,16 @@ impl EngineMetrics {
             return 0.0;
         }
         self.pages_migrated as f64 / self.migrations as f64
+    }
+
+    /// Fraction of all prefilled-or-saved prompt tokens that prefix
+    /// sharing skipped, 0.0 ..= 1.0 (0.0 with sharing unused).
+    pub fn prefix_savings(&self) -> f64 {
+        let total = self.prefilled_tokens + self.prefix_tokens_saved;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_tokens_saved as f64 / total as f64
     }
     /// Decode throughput, tokens/second of decode wall time.
     pub fn decode_tps(&self) -> f64 {
@@ -238,6 +261,21 @@ mod tests {
         let z = EngineMetrics::default();
         assert_eq!(z.host_page_occupancy(), 0.0);
         assert_eq!(z.mean_migration_batch(), 0.0);
+    }
+
+    #[test]
+    fn prefix_savings_ratio() {
+        let m = EngineMetrics {
+            prefilled_tokens: 30,
+            prefix_tokens_saved: 10,
+            prefix_hits: 2,
+            cow_splits: 1,
+            shared_pages: 8,
+            ..Default::default()
+        };
+        assert!((m.prefix_savings() - 0.25).abs() < 1e-12);
+        // engines without sharing report zero, not NaN
+        assert_eq!(EngineMetrics::default().prefix_savings(), 0.0);
     }
 
     #[test]

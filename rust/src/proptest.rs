@@ -582,4 +582,272 @@ mod attention_props {
             Ok(())
         });
     }
+
+    /// Shared-prefix gather (an adopter's table pointing at the owner's
+    /// pages through a real `PrefixIndex`, split by copy-on-write at
+    /// the divergence point) is bit-identical to fully unshared tables
+    /// over random prefix lengths, page sizes, GQA shapes and thread
+    /// counts — and neither the COW split nor the adopter's divergent
+    /// writes ever mutate the owner's pages.
+    #[test]
+    fn prop_shared_prefix_gather_equals_unshared() {
+        use crate::coordinator::kv_cache::PrefixIndex;
+        check(40, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let d = *rng.pick(&[4usize, 8, 16]);
+            let stride = rng.range(2, 40);
+            let page_size = rng.range(1, 9);
+            let threads = rng.range(1, 6);
+
+            // single-layer cache geometry: attention sees one layer plane
+            let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+            let max_blocks = stride.div_ceil(page_size);
+            let mut pool = PagePool::new(page_size, d, 4 * kvh * max_blocks + 4);
+            let mut index = PrefixIndex::new(cache, page_size, 64);
+
+            // owner sequence: prompt of la tokens, KV rows 0..la
+            let la = rng.range(1, stride + 1);
+            let owner_prompt: Vec<i32> = (0..la).map(|_| rng.below(50) as i32).collect();
+            let ks_a = rng.f32_vec(kvh * stride * d);
+            let vs_a = rng.f32_vec(kvh * stride * d);
+            let mut ta = BlockTable::new(cache, page_size);
+            ta.ensure_capacity(la, &mut pool).unwrap();
+            #[allow(clippy::too_many_arguments)]
+            let write = |t: &BlockTable,
+                         pool: &mut PagePool,
+                         ks: &[f32],
+                         vs: &[f32],
+                         lo: usize,
+                         hi: usize| {
+                    for g in 0..kvh {
+                        for r in lo..hi {
+                            let (page, slot) = t.locate(0, g, r);
+                            let src = g * stride * d + r * d;
+                            pool.write_row(page, slot, &ks[src..src + d], &vs[src..src + d]);
+                        }
+                    }
+                };
+            write(&ta, &mut pool, &ks_a, &vs_a, 0, la);
+            index.register(&owner_prompt, &ta, &mut pool);
+
+            // adopter: shares a random common prompt prefix, then
+            // diverges.  Same prefix ⇒ same KV rows, so its reference
+            // rows copy the owner's over the common range.
+            let lb = rng.range(1, stride + 1);
+            let common = rng.range(0, la.min(lb) + 1);
+            let mut adopter_prompt: Vec<i32> = owner_prompt[..common].to_vec();
+            while adopter_prompt.len() < lb {
+                adopter_prompt.push(50 + rng.below(50) as i32); // disjoint id space
+            }
+            let mut ks_b = rng.f32_vec(kvh * stride * d);
+            let mut vs_b = rng.f32_vec(kvh * stride * d);
+            for g in 0..kvh {
+                let at = g * stride * d;
+                ks_b[at..at + common * d].copy_from_slice(&ks_a[at..at + common * d]);
+                vs_b[at..at + common * d].copy_from_slice(&vs_a[at..at + common * d]);
+            }
+            let mut tb = BlockTable::new(cache, page_size);
+            let adopted = index.adopt(&adopter_prompt, &mut tb, &mut pool);
+            prop_ensure!(
+                adopted < lb.max(1),
+                "adopted {adopted} of a {lb}-token prompt (common {common})"
+            );
+
+            // snapshot the owner's physical rows before the adopter
+            // diverges
+            let snap = |t: &BlockTable, pool: &PagePool, len: usize| -> Vec<f32> {
+                let mut out = Vec::new();
+                for g in 0..kvh {
+                    for r in 0..len {
+                        let (page, slot) = t.locate(0, g, r);
+                        let at = (page as usize * page_size + slot) * d;
+                        out.extend_from_slice(&pool.k_store()[at..at + d]);
+                        out.extend_from_slice(&pool.v_store()[at..at + d]);
+                    }
+                }
+                out
+            };
+            let owner_before = snap(&ta, &pool, la);
+
+            // grow, split whatever the divergent writes overlap, write
+            tb.ensure_capacity(lb, &mut pool).unwrap();
+            tb.cow_unshare(adopted, lb, &mut pool).unwrap();
+            write(&tb, &mut pool, &ks_b, &vs_b, adopted, lb);
+
+            prop_ensure!(
+                owner_before == snap(&ta, &pool, la),
+                "COW split / divergent writes mutated the owner's pages \
+                 (la={la} lb={lb} common={common} page_size={page_size})"
+            );
+
+            // shared pair vs fully unshared pair: bit-identical attention
+            let qa = rng.f32_vec(h * d);
+            let qb = rng.f32_vec(h * d);
+            let shape = BatchShape::new(h, kvh, d, stride);
+            let wp = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+            fn paged_seq<'a>(
+                pool: &'a PagePool,
+                t: &'a BlockTable,
+                q: &'a [f32],
+                page_size: usize,
+                len: usize,
+            ) -> SeqAttn<'a> {
+                SeqAttn {
+                    q,
+                    kv: SeqKv::Paged {
+                        k_store: pool.k_store(),
+                        v_store: pool.v_store(),
+                        pages: t.layer_pages(0),
+                        max_blocks: t.max_blocks(),
+                        page_size,
+                    },
+                    kv_len: len,
+                }
+            }
+            let mut out_shared = vec![0.0; 2 * h * d];
+            batch_decode_attention(
+                &shape,
+                &[
+                    paged_seq(&pool, &ta, &qa, page_size, la),
+                    paged_seq(&pool, &tb, &qb, page_size, lb),
+                ],
+                &mut out_shared,
+                &wp,
+            );
+            let unshared = [
+                SeqAttn::contig(&qa, &ks_a, &vs_a, la),
+                SeqAttn::contig(&qb, &ks_b, &vs_b, lb),
+            ];
+            let mut out_unshared = vec![0.0; 2 * h * d];
+            batch_decode_attention(&shape, &unshared, &mut out_unshared, &wp);
+            prop_ensure!(
+                out_shared == out_unshared,
+                "shared != unshared (h={h} kvh={kvh} d={d} la={la} lb={lb} \
+                 common={common} page_size={page_size} threads={threads})"
+            );
+
+            // exact free-list accounting: every holder released ⇒ empty
+            ta.release_all(&mut pool);
+            tb.release_all(&mut pool);
+            index.clear(&mut pool);
+            prop_ensure!(
+                pool.used_pages() == 0,
+                "leaked {} pages after full release",
+                pool.used_pages()
+            );
+            Ok(())
+        });
+    }
+
+    /// Interleaved grow/register/adopt/COW/release/evict schedules over
+    /// one pool never leak or double-free: ref-count invariants hold
+    /// throughout and the free list is exactly full once every holder
+    /// lets go.  (Double-frees panic inside `PagePool::release`, so
+    /// surviving the schedule is itself the assertion.)
+    #[test]
+    fn prop_share_cow_release_schedules_never_leak() {
+        use crate::coordinator::kv_cache::PrefixIndex;
+        check(60, |rng| {
+            let kvh = rng.range(1, 4);
+            let layers = rng.range(1, 3);
+            let d = 4;
+            let max_seq = rng.range(4, 25);
+            let page_size = rng.range(1, 6);
+            let cache = CacheShape { layers, kv_heads: kvh, max_seq, head_dim: d };
+            let max_blocks = max_seq.div_ceil(page_size);
+            let total = 6 * layers * kvh * max_blocks + 8;
+            let mut pool = PagePool::new(page_size, d, total);
+            let mut index = PrefixIndex::new(cache, page_size, rng.range(1, 8));
+
+            // live tables with the prompt backing them
+            let mut live: Vec<(BlockTable, Vec<i32>)> = Vec::new();
+            for _ in 0..rng.range(8, 28) {
+                match rng.below(6) {
+                    // admit: new table; adopt if a prefix matches, then
+                    // grow + COW to the full prompt
+                    0 | 1 => {
+                        if live.len() >= 4 {
+                            continue;
+                        }
+                        let len = rng.range(1, max_seq + 1);
+                        let prompt: Vec<i32> = if rng.bool() && !live.is_empty() {
+                            // reuse a live prompt's prefix to provoke hits
+                            let src = &live[rng.range(0, live.len())].1;
+                            let take = rng.range(0, src.len() + 1).min(len);
+                            let mut p = src[..take].to_vec();
+                            while p.len() < len {
+                                p.push(rng.below(30) as i32);
+                            }
+                            p
+                        } else {
+                            (0..len).map(|_| rng.below(30) as i32).collect()
+                        };
+                        let mut t = BlockTable::new(cache, page_size);
+                        let adopted = index.adopt(&prompt, &mut t, &mut pool);
+                        if t.ensure_capacity(len, &mut pool).is_err() {
+                            t.release_all(&mut pool);
+                            continue;
+                        }
+                        if t.cow_unshare(adopted, len, &mut pool).is_err() {
+                            t.release_all(&mut pool);
+                            continue;
+                        }
+                        live.push((t, prompt));
+                    }
+                    // register a live table's prompt
+                    2 => {
+                        if let Some((t, p)) =
+                            (!live.is_empty()).then(|| &live[rng.range(0, live.len())])
+                        {
+                            index.register(p, t, &mut pool);
+                        }
+                    }
+                    // finish: release a random table
+                    3 => {
+                        if !live.is_empty() {
+                            let (mut t, _) = live.swap_remove(rng.range(0, live.len()));
+                            t.release_all(&mut pool);
+                        }
+                    }
+                    // COW a random row range of a random table
+                    4 => {
+                        if !live.is_empty() {
+                            let i = rng.range(0, live.len());
+                            let len = live[i].1.len();
+                            let lo = rng.range(0, len);
+                            let _ = live[i].0.cow_unshare(lo, len, &mut pool);
+                        }
+                    }
+                    // reclaim: evict an idle run
+                    _ => {
+                        index.evict_idle(&mut pool);
+                    }
+                }
+                // bounds that hold at every step: the pool can't track
+                // more pages than exist, and everything live tables +
+                // index reference is accounted as used
+                let table_pages: std::collections::HashSet<u32> = live
+                    .iter()
+                    .flat_map(|(t, _)| (0..t.blocks()).flat_map(|b| t.block_group(b)))
+                    .collect();
+                let (used, d_t, d_i) =
+                    (pool.used_pages(), table_pages.len(), index.pages_held());
+                prop_ensure!(
+                    used >= d_t && used >= d_i && used <= d_t + d_i,
+                    "accounting out of bounds: used={used} tables={d_t} index={d_i}"
+                );
+            }
+            for (mut t, _) in live {
+                t.release_all(&mut pool);
+            }
+            index.clear(&mut pool);
+            prop_ensure!(
+                pool.used_pages() == 0,
+                "leaked {} pages after draining the schedule",
+                pool.used_pages()
+            );
+            prop_ensure!(pool.free_pages() == pool.num_pages(), "free list incomplete");
+            Ok(())
+        });
+    }
 }

@@ -33,7 +33,7 @@ fn run_workload(threads: usize, cfg: HostModelConfig) -> Vec<(u64, Vec<i32>)> {
         let prompt: Vec<i32> = (0..len).map(|j| ((i * 37 + j * 11) % 300) as i32 + 1).collect();
         let gen = 2 + i % 5;
         ids.push(
-            e.submit(prompt, GenParams { max_new_tokens: gen, eos_token: None })
+            e.submit(prompt, GenParams { max_new_tokens: gen, ..GenParams::default() })
                 .unwrap(),
         );
     }
@@ -44,7 +44,7 @@ fn run_workload(threads: usize, cfg: HostModelConfig) -> Vec<(u64, Vec<i32>)> {
     for i in 0..4usize {
         let prompt: Vec<i32> = (0..(3 + i * 7)).map(|j| (j * 13 + i) as i32 + 2).collect();
         ids.push(
-            e.submit(prompt, GenParams { max_new_tokens: 6, eos_token: None })
+            e.submit(prompt, GenParams { max_new_tokens: 6, eos_token: None, share_prefix: false })
                 .unwrap(),
         );
     }
@@ -87,7 +87,7 @@ fn deterministic_across_runs_and_eos_respected() {
 
     // learn the greedy continuation, then stop on its second token
     let mut e = engine(4, HostModelConfig::tiny_gqa());
-    e.submit(vec![3, 1, 4, 1, 5], GenParams { max_new_tokens: 6, eos_token: None })
+    e.submit(vec![3, 1, 4, 1, 5], GenParams { max_new_tokens: 6, ..GenParams::default() })
         .unwrap();
     let full = e.run_until_idle().unwrap();
     let second = full[0].tokens[1];
@@ -95,7 +95,7 @@ fn deterministic_across_runs_and_eos_respected() {
     let mut e2 = engine(4, HostModelConfig::tiny_gqa());
     e2.submit(
         vec![3, 1, 4, 1, 5],
-        GenParams { max_new_tokens: 6, eos_token: Some(second) },
+        GenParams { max_new_tokens: 6, eos_token: Some(second), share_prefix: false },
     )
     .unwrap();
     let stopped = e2.run_until_idle().unwrap();

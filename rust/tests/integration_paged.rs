@@ -31,7 +31,7 @@ fn seq_cfg(layout: KvLayout) -> EngineConfig {
 #[test]
 fn long_prompt_completes_via_chunked_prefill() {
     let prompt: Vec<i32> = (0..50).map(|i| (i * 3 + 1) % 64).collect();
-    let p = GenParams { max_new_tokens: 6, eos_token: None };
+    let p = GenParams { max_new_tokens: 6, eos_token: None, share_prefix: false };
 
     // paged engine with the stock small buckets: must chunk
     let mut paged = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Paged));
@@ -72,7 +72,7 @@ fn long_prompt_completes_via_chunked_prefill() {
 /// identical tokens for every request, across thread counts.
 #[test]
 fn paged_vs_contiguous_under_load() {
-    let p = GenParams { max_new_tokens: 7, eos_token: None };
+    let p = GenParams { max_new_tokens: 7, eos_token: None, share_prefix: false };
     let prompts: Vec<Vec<i32>> = (0..9)
         .map(|i| (0..(i * 5 + 2) % 30 + 1).map(|t| ((t * 7 + i) % 64) as i32).collect())
         .collect();
@@ -103,7 +103,7 @@ fn pool_exhaustion_preempts_youngest_and_recovers() {
     // tiny_gqa: layers 2 × kv_heads 2 → 4 pages per 16-token block.
     // Each request spans 8 prompt + 24 generated = 32 tokens = 8 pages;
     // a 12-page pool fits one full sequence plus half of another.
-    let p = GenParams { max_new_tokens: 24, eos_token: None };
+    let p = GenParams { max_new_tokens: 24, eos_token: None, share_prefix: false };
     let prompts: Vec<Vec<i32>> = vec![vec![1; 8], vec![2; 8]];
     let cfg = EngineConfig {
         parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
@@ -151,15 +151,16 @@ fn impossible_requests_refused_up_front() {
     };
     let mut e = engine_with(HostModelConfig::tiny_gqa(), cfg);
     // 8 + 16 = 24 tokens → 2 blocks → 8 pages > 4 in the pool
-    assert!(e.submit(vec![1; 8], GenParams { max_new_tokens: 16, eos_token: None }).is_err());
+    let p16 = GenParams { max_new_tokens: 16, ..GenParams::default() };
+    assert!(e.submit(vec![1; 8], p16).is_err());
     // empty prompts and over-max_seq prompts stay refused too
     assert!(e.submit(vec![], GenParams::default()).is_err());
     assert!(e
-        .submit(vec![1; 90], GenParams { max_new_tokens: 20, eos_token: None })
+        .submit(vec![1; 90], GenParams { max_new_tokens: 20, eos_token: None, share_prefix: false })
         .is_err());
     // a request that fits the pool is accepted and completes
     let id = e
-        .submit(vec![1; 8], GenParams { max_new_tokens: 8, eos_token: None })
+        .submit(vec![1; 8], GenParams { max_new_tokens: 8, eos_token: None, share_prefix: false })
         .unwrap();
     let out = e.run_until_idle().unwrap();
     assert_eq!(out[0].id, id);
@@ -170,7 +171,7 @@ fn impossible_requests_refused_up_front() {
 #[test]
 fn occupancy_visible_during_decode() {
     let mut e = engine_with(HostModelConfig::tiny_gqa(), seq_cfg(KvLayout::Paged));
-    e.submit(vec![5; 12], GenParams { max_new_tokens: 10, eos_token: None })
+    e.submit(vec![5; 12], GenParams { max_new_tokens: 10, eos_token: None, share_prefix: false })
         .unwrap();
     // first step admits + chunk-prefills: pages must be in use
     e.step().unwrap();

@@ -1,0 +1,197 @@
+//! Integration: cross-sequence shared-prefix KV pages + copy-on-write.
+//!
+//! Runs the full engine stack over [`HostModelBackend`] (no artifacts
+//! needed) and pins the acceptance property of the prefix-sharing PR:
+//! decode output with `share_prefix` on is **bit-identical** to the
+//! unshared engine across random prefix lengths, page sizes, GQA
+//! configs and thread counts; a copy-on-write split after divergence
+//! never corrupts a sibling sequence; and sharing composes with the
+//! tiered cache's migration/preemption machinery without changing
+//! tokens.
+
+use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+};
+use fastattn::models::ModelShape;
+use fastattn::prop_ensure;
+use fastattn::proptest::check;
+
+fn engine_for(model: ModelShape, max_seq: usize, page_size: usize, threads: usize) -> Engine {
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size,
+        ..EngineConfig::default()
+    };
+    Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::for_shape(model, max_seq))),
+        cfg,
+    )
+}
+
+/// Acceptance property: shared-prefix serving is token-identical to
+/// unshared serving over random prefix lengths, page sizes, GQA
+/// configs and thread counts, and the cases collectively exercise both
+/// the block-chain hit path and the tail-block COW path.
+#[test]
+fn prop_shared_prefix_engine_parity() {
+    let mut total_hits = 0u64;
+    let mut total_cows = 0u64;
+    let mut total_saved = 0u64;
+    check(10, |rng| {
+        let (heads, kvh) = *rng.pick(&[(2u32, 1u32), (4, 2), (4, 4), (6, 2)]);
+        let model = ModelShape {
+            name: "prefix-prop",
+            params: 0,
+            layers: rng.range(1, 3) as u32,
+            heads,
+            kv_heads: kvh,
+            head_dim: *rng.pick(&[4u32, 8]),
+            ffn: 32,
+            vocab: 64,
+        };
+        let max_seq = 64;
+        let page_size = rng.range(1, 9);
+        let threads = rng.range(1, 5);
+        let max_new = rng.range(2, 7);
+
+        // prompts: a common "system" prefix + per-request suffixes,
+        // plus one exact duplicate to exercise tail-block sharing
+        let common = rng.range(2, 33);
+        let system: Vec<i32> = (0..common).map(|_| rng.below(64) as i32).collect();
+        let n = rng.range(2, 5);
+        let mut prompts: Vec<Vec<i32>> = (0..n)
+            .map(|i| {
+                let mut p = system.clone();
+                let extra = rng.range(0, 9);
+                p.extend((0..extra).map(|t| ((t * 7 + i * 13) % 64) as i32));
+                p
+            })
+            .collect();
+        prompts.push(prompts[0].clone());
+
+        let run = |share: bool| {
+            let mut e = engine_for(model, max_seq, page_size, threads);
+            for pr in &prompts {
+                let gp = GenParams {
+                    max_new_tokens: max_new,
+                    eos_token: None,
+                    share_prefix: share,
+                };
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base, bm) = run(false);
+        let (shared, sm) = run(true);
+        prop_ensure!(
+            base == shared,
+            "sharing changed tokens (heads={heads} kvh={kvh} layers={} \
+             page_size={page_size} threads={threads} common={common})",
+            model.layers
+        );
+        prop_ensure!(bm.prefix_hits == 0, "unshared engine must never hit");
+        // at idle every sequence has released its pages; whatever is
+        // still in use is exactly the prefix cache's retained runs
+        prop_ensure!(
+            sm.pages_used == sm.shared_pages,
+            "sequence pages leaked: {} used at idle vs {} prefix-cache pages",
+            sm.pages_used,
+            sm.shared_pages
+        );
+        prop_ensure!(
+            sm.prefilled_tokens + sm.prefix_tokens_saved == bm.prefilled_tokens,
+            "saved tokens must exactly offset prefill work: {} + {} != {}",
+            sm.prefilled_tokens,
+            sm.prefix_tokens_saved,
+            bm.prefilled_tokens
+        );
+        total_hits += sm.prefix_hits;
+        total_cows += sm.cow_splits;
+        total_saved += sm.prefix_tokens_saved;
+        Ok(())
+    });
+    assert!(total_hits > 0, "no case ever hit the prefix cache");
+    assert!(total_cows > 0, "no case ever exercised a COW split");
+    assert!(total_saved > 0, "sharing never skipped any prefill work");
+}
+
+/// Sharing composes with the two-tier cache: a device-constrained
+/// engine (cold blocks migrating to the host tier, preemption under
+/// pressure, shared pages pinned on device) still generates exactly
+/// the tokens of an unconstrained, unshared engine.
+#[test]
+fn sharing_survives_offload_and_preemption_pressure() {
+    // tiny_gqa geometry: a block group is layers 2 × kv_heads 2 = 4
+    // pages of 1 KiB each → 4 KiB per group.
+    let group_bytes = 4 * 1024usize;
+    let system = vec![11i32; 20];
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend(vec![i as i32 + 30; 4]);
+            p
+        })
+        .collect();
+    let gp = |share: bool| GenParams {
+        max_new_tokens: 16,
+        eos_token: None,
+        share_prefix: share,
+    };
+
+    // unconstrained, unshared reference
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        ..EngineConfig::default()
+    };
+    let mut big = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    for pr in &prompts {
+        big.submit(pr.clone(), gp(false)).unwrap();
+    }
+    let mut want = big.run_until_idle().unwrap();
+    want.sort_by_key(|r| r.id);
+
+    // constrained + shared: 4 device groups, 8 host groups
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: 4 * group_bytes,
+        host_kv_budget: 8 * group_bytes,
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    for pr in &prompts {
+        e.submit(pr.clone(), gp(true)).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), want.len());
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "sharing + offload + preemption changed request {} tokens",
+            a.id
+        );
+    }
+    let m = &e.metrics;
+    assert!(m.prefix_hits > 0, "the common prefix must have been shared");
+    assert!(m.peak_pages_used <= 16, "device budget was 4 groups = 16 pages");
+    assert_eq!(
+        m.pages_used, m.shared_pages,
+        "at idle only the prefix cache's retained runs stay resident"
+    );
+    assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+}

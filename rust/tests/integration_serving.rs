@@ -25,7 +25,7 @@ fn full_stack_serving_scenarios() {
     let mut engine = Engine::new(rt, EngineConfig::default());
 
     // --- scenario 1: mixed-length burst, all complete -----------------
-    let p3 = GenParams { max_new_tokens: 3, eos_token: None };
+    let p3 = GenParams { max_new_tokens: 3, eos_token: None, share_prefix: false };
     let mut ids = Vec::new();
     for i in 0..12usize {
         let len = 1 + (i * 11) % 120;
@@ -41,23 +41,24 @@ fn full_stack_serving_scenarios() {
     assert!(out.iter().all(|r| r.tokens.iter().all(|&t| t >= 0 && t < 512)));
 
     // --- scenario 2: determinism across a second engine pass ----------
-    let a = engine.submit(vec![9, 8, 7, 6], GenParams { max_new_tokens: 6, eos_token: None });
+    let p6 = GenParams { max_new_tokens: 6, ..GenParams::default() };
+    let a = engine.submit(vec![9, 8, 7, 6], p6);
     let out_a = engine.run_until_idle().unwrap();
-    let b = engine.submit(vec![9, 8, 7, 6], GenParams { max_new_tokens: 6, eos_token: None });
+    let b = engine.submit(vec![9, 8, 7, 6], p6);
     let out_b = engine.run_until_idle().unwrap();
     assert!(a.is_ok() && b.is_ok());
     assert_eq!(out_a[0].tokens, out_b[0].tokens, "same prompt, same greedy tokens");
 
     // --- scenario 3: interleaved submissions while decoding -----------
     let long = engine
-        .submit(vec![5; 100], GenParams { max_new_tokens: 10, eos_token: None })
+        .submit(vec![5; 100], GenParams { max_new_tokens: 10, ..GenParams::default() })
         .unwrap();
     // step a few times, then inject more work mid-flight
     for _ in 0..3 {
         engine.step().unwrap();
     }
     let late = engine
-        .submit(vec![7; 4], GenParams { max_new_tokens: 2, eos_token: None })
+        .submit(vec![7; 4], GenParams { max_new_tokens: 2, eos_token: None, share_prefix: false })
         .unwrap();
     let out = engine.run_until_idle().unwrap();
     assert_eq!(out.len(), 2);
@@ -69,7 +70,7 @@ fn full_stack_serving_scenarios() {
     assert!(engine.submit(vec![], p3).is_err());
     assert!(engine.submit(vec![1; 1000], p3).is_err());
     assert!(engine
-        .submit(vec![1; 100], GenParams { max_new_tokens: 100, eos_token: None })
+        .submit(vec![1; 100], GenParams { max_new_tokens: 100, ..GenParams::default() })
         .is_err());
     let ok = engine.submit(vec![1, 2], p3).unwrap();
     let out = engine.run_until_idle().unwrap();
@@ -90,7 +91,7 @@ fn cache_isolation_across_batch_slots() {
     let Some(dir) = artifact_dir() else { return };
     let rt = Runtime::load(dir).expect("runtime loads");
     let mut engine = Engine::new(rt, EngineConfig::default());
-    let p = GenParams { max_new_tokens: 5, eos_token: None };
+    let p = GenParams { max_new_tokens: 5, eos_token: None, share_prefix: false };
 
     // twin prompts surrounded by noise
     let twin: Vec<i32> = vec![42, 7, 99, 3];

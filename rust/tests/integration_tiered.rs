@@ -56,7 +56,7 @@ fn long_prompt_migrates_mid_decode_and_matches_unconstrained() {
     // 60 prompt + 20 generated = 80 tokens = 5 blocks; the device tier
     // holds 3 block groups, so at least 2 groups must offload.
     let prompt: Vec<i32> = (0..60).map(|i| (i * 3 + 1) % 64).collect();
-    let p = GenParams { max_new_tokens: 20, eos_token: None };
+    let p = GenParams { max_new_tokens: 20, eos_token: None, share_prefix: false };
 
     let mut base = unconstrained_engine(1);
     let want = run(&mut base, &[prompt.clone()], p);
@@ -94,7 +94,7 @@ fn migration_preemption_interplay_terminates_with_identical_tokens() {
     // device holds 2 groups, host 2 groups → the pair cannot coexist,
     // so the youngest is preempted and replayed after the oldest
     // finishes via its own cold-block offloads.
-    let p = GenParams { max_new_tokens: 40, eos_token: None };
+    let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
     let prompts: Vec<Vec<i32>> = vec![vec![1; 8], vec![2; 8]];
 
     let mut e = tiered_engine(2, 2, 1);
@@ -123,7 +123,7 @@ fn tiered_decode_is_thread_invariant() {
     let prompts: Vec<Vec<i32>> = (0..5)
         .map(|i| (0..(i * 7 + 3) % 24 + 1).map(|t| ((t * 5 + i) % 64) as i32).collect())
         .collect();
-    let p = GenParams { max_new_tokens: 12, eos_token: None };
+    let p = GenParams { max_new_tokens: 12, eos_token: None, share_prefix: false };
     let mut one = tiered_engine(2, 6, 1);
     let mut four = tiered_engine(2, 6, 4);
     let a = run(&mut one, &prompts, p);
@@ -143,7 +143,7 @@ fn sustained_pressure_recycles_host_pages() {
     let prompts: Vec<Vec<i32>> = (0..8)
         .map(|i| (0..(i * 5 + 2) % 30 + 1).map(|t| ((t * 7 + i) % 64) as i32).collect())
         .collect();
-    let p = GenParams { max_new_tokens: 10, eos_token: None };
+    let p = GenParams { max_new_tokens: 10, eos_token: None, share_prefix: false };
     let mut e = tiered_engine(2, 4, 1);
     let got = run(&mut e, &prompts, p);
     assert_eq!(got.len(), 8);
@@ -164,11 +164,11 @@ fn admission_counts_usable_pages_across_tiers() {
     let mut e = tiered_engine(2, 2, 1);
     // 4 groups usable = 64 token rows; 8 + 72 = 80 tokens won't ever fit
     assert!(e
-        .submit(vec![1; 8], GenParams { max_new_tokens: 72, eos_token: None })
+        .submit(vec![1; 8], GenParams { max_new_tokens: 72, eos_token: None, share_prefix: false })
         .is_err());
     // 8 + 40 = 48 tokens = 3 groups > device alone (2), ≤ tiers (4): ok
     let id = e
-        .submit(vec![1; 8], GenParams { max_new_tokens: 40, eos_token: None })
+        .submit(vec![1; 8], GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false })
         .unwrap();
     let out = e.run_until_idle().unwrap();
     assert_eq!(out[0].id, id);
