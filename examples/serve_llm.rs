@@ -87,6 +87,28 @@ fn main() -> anyhow::Result<()> {
         m.decode_tps(),
         m.mean_decode_batch()
     );
+    // engine-side per-request latency histograms (the SLO surface):
+    // unlike the client-side numbers above, these come straight from
+    // EngineMetrics, so any serving front-end can export them.
+    println!(
+        "engine ttft        : mean {} | p50 {} | p99 {} ({} requests)",
+        ms(m.ttft.mean_s()),
+        ms(m.ttft.quantile_s(0.5)),
+        ms(m.ttft.quantile_s(0.99)),
+        m.ttft.count()
+    );
+    println!(
+        "engine tpot        : mean {} | p50 {} | p99 {}",
+        ms(m.tpot.mean_s()),
+        ms(m.tpot.quantile_s(0.5)),
+        ms(m.tpot.quantile_s(0.99))
+    );
+    if m.preemptions > 0 {
+        println!(
+            "reclamation        : {} preemptions ({} swap-outs, {} resumes, {} tok replay avoided), {} promotions",
+            m.preemptions, m.swaps_out, m.swaps_in, m.recompute_tokens_avoided, m.promotions
+        );
+    }
     println!("serve_llm OK");
     Ok(())
 }

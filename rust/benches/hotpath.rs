@@ -9,6 +9,9 @@
 //!   * the host-model engine end-to-end (no artifacts needed)
 //!   * tiered paged KV: device-only vs cold-page host offload at
 //!     several modeled device capacities (token-parity asserted)
+//!   * KV reclamation: swap-out vs recompute preemption of the same
+//!     over-committed workload at two modeled device capacities
+//!     (token-parity asserted)
 //!   * shared-prefix KV pages: N requests × one system prompt, served
 //!     with `share_prefix` off vs on (token-parity asserted)
 //!   * KV-cache batch pack/unpack memcpy
@@ -17,8 +20,9 @@
 //!
 //! Run with `cargo bench --bench hotpath` (release profile).  Decode
 //! throughput rows are additionally written to `BENCH_decode.json`, the
-//! device-only-vs-tiered rows to `BENCH_offload.json`, and the
-//! shared-vs-unshared prefix rows to `BENCH_prefix.json`, in the
+//! device-only-vs-tiered rows to `BENCH_offload.json`, the
+//! shared-vs-unshared prefix rows to `BENCH_prefix.json`, and the
+//! swap-vs-recompute preemption rows to `BENCH_reclaim.json`, in the
 //! invocation directory, so the perf trajectory is machine-readable
 //! across PRs.
 
@@ -30,7 +34,8 @@ use fastattn::benchkit::{bench, fmt_time, rate, write_bench_json, x, Table};
 use fastattn::coordinator::allreduce::ring_all_reduce;
 use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PagePool};
 use fastattn::coordinator::{
-    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PreemptMode,
+    VictimPolicy,
 };
 use fastattn::models::{ModelShape, MISTRAL_7B, TINY_GQA};
 use fastattn::proptest::Rng;
@@ -339,6 +344,91 @@ fn main() {
         }
     }
 
+    // --- swap-out vs recompute preemption -----------------------------
+    // The reclamation decision under device pressure: the same
+    // over-committed workload served with victims recompute-preempted
+    // (prompt replay) vs swap-out-preempted (block table parked on the
+    // host tier, restored on resume).  Tokens must be identical in
+    // every configuration (parity asserted); the end-to-end tok/s
+    // delta is the replay work that swapping avoids.  Rows land in
+    // BENCH_reclaim.json.
+    let mut reclaim_rows: Vec<(String, f64)> = Vec::new();
+    {
+        // tiny_gqa geometry: 4 KiB per block group; each request spans
+        // 8 + 40 = 48 tokens = 3 groups, so 6 requests want 18 groups.
+        let group_bytes = 4 * 1024usize;
+        let prompts: Vec<Vec<i32>> = (0..6).map(|i| vec![(i as i32) * 5 + 2; 8]).collect();
+        let gp = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
+        let run = |device_groups: usize, host_groups: usize, mode: PreemptMode| {
+            let cfg = EngineConfig {
+                parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+                kv_layout: KvLayout::Paged,
+                device_kv_budget: device_groups * group_bytes,
+                host_kv_budget: host_groups * group_bytes,
+                page_size: 16,
+                preempt_mode: mode,
+                victim_policy: VictimPolicy::Youngest,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::with_backend(
+                Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+                cfg,
+            );
+            for pr in &prompts {
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base_toks, base_m) = run(32, 0, PreemptMode::Recompute);
+        assert_eq!(base_m.preemptions, 0, "unconstrained run never preempts");
+        // end-to-end generated-token throughput: replay work inflates
+        // prefill time, so decode-only tok/s would hide the cost.
+        let e2e = |m: &fastattn::metrics::EngineMetrics| {
+            m.decoded_tokens as f64 / (m.prefill_s + m.decode_s).max(1e-12)
+        };
+        reclaim_rows.push(("unconstrained dev=32 groups".into(), e2e(&base_m)));
+        for dg in [3usize, 2] {
+            let (rec_toks, rec_m) = run(dg, 4, PreemptMode::Recompute);
+            let (swap_toks, swap_m) = run(dg, 4, PreemptMode::Swap);
+            assert_eq!(base_toks, rec_toks, "recompute changed tokens at dev={dg}");
+            assert_eq!(base_toks, swap_toks, "swap-out changed tokens at dev={dg}");
+            assert!(
+                swap_m.prefilled_tokens <= rec_m.prefilled_tokens,
+                "swap-out must not replay more prefill than recompute"
+            );
+            reclaim_rows.push((
+                format!(
+                    "recompute dev={dg} groups host=4 ({} preemptions, replayed {} tok)",
+                    rec_m.preemptions,
+                    rec_m.prefilled_tokens - 48,
+                ),
+                e2e(&rec_m),
+            ));
+            reclaim_rows.push((
+                format!(
+                    "swap dev={dg} groups host=4 ({} swaps, {} promotions, avoided {} tok)",
+                    swap_m.swaps_out, swap_m.promotions, swap_m.recompute_tokens_avoided,
+                ),
+                e2e(&swap_m),
+            ));
+            tp.row(&[
+                format!("reclaim recompute dev={dg} host=4"),
+                fmt_time(rec_m.decode_s / rec_m.decode_steps.max(1) as f64),
+                rate(rec_m.decoded_tokens as f64, rec_m.prefill_s + rec_m.decode_s, "tok"),
+                String::from("—"),
+            ]);
+            tp.row(&[
+                format!("reclaim swap      dev={dg} host=4"),
+                fmt_time(swap_m.decode_s / swap_m.decode_steps.max(1) as f64),
+                rate(swap_m.decoded_tokens as f64, swap_m.prefill_s + swap_m.decode_s, "tok"),
+                x(e2e(&swap_m) / e2e(&rec_m).max(1e-12)),
+            ]);
+        }
+    }
+
     // --- shared-prefix KV pages: shared vs unshared -------------------
     // N requests carrying the same 32-token system prompt, served with
     // `share_prefix` off and on.  Tokens must be identical (parity
@@ -544,5 +634,12 @@ fn main() {
     match write_bench_json(prefix_path, "prefix", "tok/s", &prefix_rows) {
         Ok(()) => println!("wrote {} ({} rows)", prefix_path.display(), prefix_rows.len()),
         Err(e) => eprintln!("BENCH_prefix.json not written: {e}"),
+    }
+
+    // swap-out vs recompute preemption (token parity asserted above)
+    let reclaim_path = std::path::Path::new("BENCH_reclaim.json");
+    match write_bench_json(reclaim_path, "reclaim", "tok/s", &reclaim_rows) {
+        Ok(()) => println!("wrote {} ({} rows)", reclaim_path.display(), reclaim_rows.len()),
+        Err(e) => eprintln!("BENCH_reclaim.json not written: {e}"),
     }
 }

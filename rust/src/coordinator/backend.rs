@@ -965,6 +965,47 @@ mod tests {
         assert_eq!(device_only, tiered, "migration must not change decode bits");
     }
 
+    /// Decode across a swap-out/restore cycle must be bit-identical to
+    /// never having suspended: writes into a restored (promoted) block
+    /// land device-side, writes into a still-parked block land
+    /// host-side, and the gather streams the same rows either way.
+    #[test]
+    fn decode_after_suspend_resume_bit_identical() {
+        let mut be = backend(ParallelConfig::sequential());
+        let page_size = 4usize;
+        let cap = BlockTable::pages_needed(be.cache, page_size, be.cache.max_seq);
+        let toks: Vec<i32> = (0..20).map(|i| (i * 11 + 2) % 64).collect();
+
+        let run = |be: &mut HostModelBackend, cycle: u8| -> Vec<f32> {
+            let mut pools =
+                TieredPagePool::new(page_size, be.cache.head_dim, cap, cap, PcieLink::default());
+            let mut table = BlockTable::new(be.cache, page_size);
+            table.ensure_capacity(toks.len(), pools.device_mut()).unwrap();
+            be.prefill_chunk(&toks, 0, &table, &mut pools).unwrap();
+            match cycle {
+                0 => {}
+                1 => {
+                    // park the whole table, decode against the host store
+                    table.suspend_to_host(&mut pools).unwrap();
+                }
+                _ => {
+                    // park and fully restore: back on device
+                    table.suspend_to_host(&mut pools).unwrap();
+                    table.resume_from_host(&mut pools).unwrap();
+                    assert_eq!(table.host_blocks(), 0);
+                }
+            }
+            table.ensure_capacity(toks.len() + 1, pools.device_mut()).unwrap();
+            let rows = [PagedRow { table: &table, token: 9, pos: toks.len() }];
+            be.decode_paged(&rows, &mut pools).unwrap()
+        };
+        let never = run(&mut be, 0);
+        let parked = run(&mut be, 1);
+        let restored = run(&mut be, 2);
+        assert_eq!(never, parked, "decode from the host store must match device bits");
+        assert_eq!(never, restored, "a swap round trip must be invisible to decode");
+    }
+
     #[test]
     fn paged_rejects_bad_geometry() {
         let mut be = backend(ParallelConfig::sequential());

@@ -120,9 +120,14 @@ impl Batcher {
         Ok(())
     }
 
-    /// Put a preempted request back at the head of the line — it was
-    /// admitted before everything still waiting, so FCFS order is
-    /// preserved.
+    /// Put a **recompute**-preempted request back at the head of the
+    /// line — it was admitted before everything still waiting, so FCFS
+    /// order is preserved and its prompt replays from scratch.
+    ///
+    /// **Swap**-preempted sequences never re-enter this queue: their
+    /// KV is parked on the host tier and the engine resumes them
+    /// directly (`Step::Resume`, which outranks new admissions), so
+    /// the batcher only ever sees work that actually needs prefill.
     pub fn requeue_front(&mut self, req: Request) {
         self.waiting.push_front(req);
     }
@@ -138,7 +143,10 @@ impl Batcher {
 
     /// Pop the head-of-line request for chunked (paged) admission — one
     /// sequence at a time; `None` when the active-capacity budget is
-    /// full.
+    /// full.  `active_now` counts every live sequence the engine
+    /// tracks, including swap-out-suspended ones — suspended sequences
+    /// still hold KV and will resume, so they keep their `max_active`
+    /// slot.
     pub fn next_request(&mut self, active_now: usize) -> Option<Request> {
         if self.cfg.max_active.saturating_sub(active_now) == 0 {
             return None;

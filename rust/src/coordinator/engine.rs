@@ -22,14 +22,25 @@
 //!   stores when blocks have been offloaded; prompts longer than any
 //!   prefill bucket are admitted and **chunk-prefilled** (`max_chunk`
 //!   tokens per step, interleaved with decodes by the scheduler's
-//!   `Chunked` step).  On device-page exhaustion the engine first
-//!   **migrates cold blocks to the host tier** (§4.4 at page
-//!   granularity — oldest positions of the longest sequence, one
-//!   batched move over the modeled [`PcieLink`]) and only then falls
-//!   back to preempting the youngest sequence (recompute-style: its
-//!   request goes back to the head of the waiting queue); admission is
-//!   gated on worst-case page demand across both tiers so the oldest
-//!   sequence always completes and the system cannot livelock.
+//!   `Chunked` step).  On device-page exhaustion the engine runs the
+//!   **four-rung reclamation ladder** (policy in
+//!   [`super::reclaim`]): evict idle prefix-cache runs, **migrate cold
+//!   blocks to the host tier** (§4.4 at page granularity — coldest
+//!   blocks of the longest sequences, batched across sequences into
+//!   one move over the modeled [`PcieLink`]), **swap out** a victim
+//!   (its whole block table parks on the host tier and resumes —
+//!   before any new admission — with its KV intact), and only as the
+//!   last resort **recompute-preempt** it (request back to the head of
+//!   the waiting queue).  The victim is chosen by the pluggable
+//!   [`ReclaimPolicy`](super::reclaim::ReclaimPolicy) in
+//!   [`EngineConfig::victim_policy`], and swap-vs-recompute is a
+//!   per-victim cost decision (pages over the link twice vs prompt
+//!   replay).  When device pressure clears, the hottest host blocks
+//!   promote back so long-lived sequences recover full device gather
+//!   speed.  Admission is gated on worst-case page demand across both
+//!   tiers — and the oldest live sequence is never victimized unless
+//!   alone — so the oldest sequence always completes and the system
+//!   cannot livelock.
 //!   Requests that opt into `share_prefix` additionally go through the
 //!   [`PrefixIndex`]: a prompt whose prefix was already prefilled
 //!   adopts the cached page run (ref-counted, copy-on-write on the
@@ -53,8 +64,11 @@ use anyhow::{bail, Context, Result};
 use super::backend::{ArtifactBackend, Backend, PagedRow};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
-    pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError, PcieLink,
-    PrefixIndex, SeqCache, Tier, TieredPagePool,
+    kv_page_bytes, pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError,
+    PcieLink, PrefixIndex, SeqCache, Tier, TieredPagePool,
+};
+use super::reclaim::{
+    PreemptMode, ReclaimDecision, Reclaimer, RecomputeVsSwap, VictimCandidate, VictimPolicy,
 };
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
@@ -120,9 +134,10 @@ pub struct EngineConfig {
     /// layout) or drives CachePool tiering (contiguous layout).
     pub device_kv_budget: usize,
     /// Host-tier KV budget in bytes (paged layout): capacity for cold
-    /// pages migrated off-device (§4.4 at page granularity).  `0`
-    /// disables the host tier — page exhaustion then falls straight
-    /// through to evict-youngest preemption.
+    /// pages migrated off-device (§4.4 at page granularity) and for
+    /// swap-out-suspended block tables.  `0` disables the host tier —
+    /// page exhaustion then falls straight through to recompute
+    /// preemption.
     pub host_kv_budget: usize,
     /// Modeled host↔device link that cold-page migrations are charged
     /// to (`EngineMetrics::pcie_modeled_s`).
@@ -142,6 +157,22 @@ pub struct EngineConfig {
     /// requests that opt into `share_prefix`.  Past the cap (and under
     /// device-page pressure) least-recently-used idle runs are evicted.
     pub prefix_cache_entries: usize,
+    /// Victim-selection policy when the reclamation ladder must
+    /// preempt: FCFS-compatible evict-youngest (the default), fewest
+    /// pages lost, or closest to done.  Whatever the policy, the
+    /// oldest live sequence is never offered unless it is alone, so
+    /// the no-livelock induction holds.
+    pub victim_policy: VictimPolicy,
+    /// How a victim's pages are reclaimed: a per-victim
+    /// recompute-vs-swap cost decision (the default), forced swap-out
+    /// (host-tier save/restore), or forced recompute (the pre-swap
+    /// behavior; also what `host_kv_budget: 0` degenerates to).
+    pub preempt_mode: PreemptMode,
+    /// Promote the hottest host-resident blocks back to the device
+    /// tier when pressure clears (one block group per step, and only
+    /// with two groups of slack).  Placement only — tokens are
+    /// bit-identical wherever rows live.
+    pub promote: bool,
 }
 
 impl Default for EngineConfig {
@@ -156,6 +187,9 @@ impl Default for EngineConfig {
             kv_layout: KvLayout::Auto,
             page_size: 16,
             prefix_cache_entries: 256,
+            victim_policy: VictimPolicy::Youngest,
+            preempt_mode: PreemptMode::Auto,
+            promote: true,
         }
     }
 }
@@ -197,12 +231,23 @@ pub struct Engine {
     active: Vec<RequestId>,
     /// Sequences mid chunked-prefill, oldest first.
     chunking: VecDeque<RequestId>,
+    /// Swap-out-suspended sequences, ascending id (oldest resumes
+    /// first, before any new admission).
+    suspended: Vec<RequestId>,
     seqs: HashMap<RequestId, SeqState>,
     finished: Vec<Response>,
     next_id: RequestId,
     /// Largest prefill seq bucket — the chunk size of chunked prefill.
     max_chunk: usize,
     page_size: usize,
+    /// Victim selection + recompute-vs-swap cost model (the policy
+    /// half of the reclamation ladder — see [`super::reclaim`]).
+    reclaim: Reclaimer,
+    /// Promote hot host blocks when device pressure clears.
+    promote: bool,
+    /// Monotonic clock stamped onto block tables at every attention
+    /// pass — ranks host blocks by heat for promotion.
+    gather_clock: u64,
     /// Live serving counters (steps, tokens, pages, migrations,
     /// prefix sharing) — see [`EngineMetrics`].
     pub metrics: EngineMetrics,
@@ -265,6 +310,18 @@ impl Engine {
         };
         let prefix =
             paged.then(|| PrefixIndex::new(shape, cfg.page_size, cfg.prefix_cache_entries));
+        let reclaim = Reclaimer::new(
+            cfg.victim_policy,
+            cfg.preempt_mode,
+            RecomputeVsSwap::new(
+                cfg.pcie,
+                kv_page_bytes(cfg.page_size, shape.head_dim),
+                shape.layers,
+                m.n_heads,
+                shape.head_dim,
+                shape.max_seq / 2,
+            ),
+        );
         Self {
             backend,
             shape,
@@ -274,11 +331,15 @@ impl Engine {
             prefix,
             active: Vec::new(),
             chunking: VecDeque::new(),
+            suspended: Vec::new(),
             seqs: HashMap::new(),
             finished: Vec::new(),
             next_id: 1,
             max_chunk,
             page_size: cfg.page_size,
+            reclaim,
+            promote: cfg.promote,
+            gather_clock: 0,
             metrics: EngineMetrics::default(),
         }
     }
@@ -341,11 +402,17 @@ impl Engine {
         self.chunking.len()
     }
 
+    /// Sequences swap-out-suspended (KV parked on the host tier).
+    pub fn suspended_count(&self) -> usize {
+        self.suspended.len()
+    }
+
     /// Run one scheduling step.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
         // memory pressure: the device tier cannot place even one block
-        // group, so admitting a new sequence would only bounce off the
-        // allocator — prefer draining work that frees pages.
+        // group, so admitting (or resuming) a sequence would only
+        // bounce off the allocator — prefer draining work that frees
+        // pages.
         let pressure = match &self.kv {
             EngineKv::Paged(pools) => {
                 let group = self.shape.layers * self.shape.kv_heads;
@@ -353,13 +420,15 @@ impl Engine {
             }
             EngineKv::Contig(_) => false,
         };
-        match self.scheduler.next_step_pressured(
+        let step = self.scheduler.next_step_pressured(
             &self.batcher,
             self.active.len(),
             self.chunking.len(),
+            self.suspended.len(),
             pressure,
-        ) {
-            Step::Idle => Ok(false),
+        );
+        match step {
+            Step::Idle => return Ok(false),
             Step::Prefill => {
                 let admitted = if self.is_paged() {
                     self.admit_chunked()?
@@ -375,7 +444,6 @@ impl Engine {
                         self.run_decode(batch)?;
                     }
                 }
-                Ok(true)
             }
             Step::Chunked => {
                 if let Some(&id) = self.chunking.front() {
@@ -383,15 +451,16 @@ impl Engine {
                 } else if let Some(batch) = self.batcher.next_decode(&self.active) {
                     self.run_decode(batch)?;
                 }
-                Ok(true)
             }
+            Step::Resume => self.resume_suspended()?,
             Step::Decode => {
                 if let Some(batch) = self.batcher.next_decode(&self.active) {
                     self.run_decode(batch)?;
                 }
-                Ok(true)
             }
         }
+        self.maybe_promote();
+        Ok(true)
     }
 
     /// Drive until every submitted request completes; drain responses.
@@ -544,8 +613,9 @@ impl Engine {
         };
         // pop under the max_active budget first: when no admission can
         // happen anyway, the capacity gate below must not evict
-        // reusable prefix-cache runs for nothing.
-        let live = self.active.len() + self.chunking.len();
+        // reusable prefix-cache runs for nothing.  Suspended sequences
+        // keep their slot — they hold KV and will resume.
+        let live = self.active.len() + self.chunking.len() + self.suspended.len();
         let Some(req) = self.batcher.next_request(live) else {
             return Ok(false);
         };
@@ -629,7 +699,12 @@ impl Engine {
                 .prefill_chunk(&s.prompt[start..end], start, table, pools)
                 .with_context(|| format!("prefill chunk {start}..{end} of seq {id}"))?
         };
+        self.gather_clock += 1;
+        let clock = self.gather_clock;
         let s = self.seqs.get_mut(&id).expect("survived backend step");
+        if let SeqStore::Paged { table } = &mut s.store {
+            table.mark_gathered(clock);
+        }
         s.prefilled = end;
         self.metrics.prefilled_tokens += (end - start) as u64;
         self.metrics.chunk_steps += 1;
@@ -666,10 +741,10 @@ impl Engine {
     fn run_decode_paged(&mut self, batch: DecodeBatch) -> Result<()> {
         let t0 = Instant::now();
         // grow each table for the row it writes this step; allocation
-        // failure preempts the youngest sequence instead of panicking.
+        // failure runs the reclamation ladder instead of panicking.
         for id in batch.seq_ids.iter().copied() {
-            if !self.seqs.contains_key(&id) {
-                continue; // preempted by an earlier row's allocation
+            if !self.steppable(id) {
+                continue; // preempted or swapped by an earlier row's allocation
             }
             let need = self.seqs[&id].pos() + 1;
             self.ensure_writable(id, need, need - 1)?;
@@ -678,7 +753,7 @@ impl Engine {
             .seq_ids
             .iter()
             .copied()
-            .filter(|id| self.seqs.contains_key(id))
+            .filter(|&id| self.steppable(id))
             .collect();
         if ids.is_empty() {
             return Ok(());
@@ -703,9 +778,16 @@ impl Engine {
         };
         let vocab = self.backend.model().vocab;
 
+        // every row's whole history just streamed through attention —
+        // stamp its blocks for the promotion heat ranking
+        self.gather_clock += 1;
+        let clock = self.gather_clock;
         let mut done: Vec<RequestId> = Vec::new();
         for (i, id) in ids.iter().enumerate() {
             let s = self.seqs.get_mut(id).unwrap();
+            if let SeqStore::Paged { table } = &mut s.store {
+                table.mark_gathered(clock);
+            }
             let next = argmax(&logits[i * vocab..][..vocab]) as i32;
             s.tokens.push(next);
             self.metrics.decoded_tokens += 1;
@@ -734,16 +816,25 @@ impl Engine {
         }
     }
 
+    /// True when `id` is tracked and not swap-out-suspended — i.e. the
+    /// engine may run a step for it right now.
+    fn steppable(&self, id: RequestId) -> bool {
+        self.seqs.get(&id).is_some_and(|s| s.phase != Phase::Suspended)
+    }
+
     /// Make `id` ready for a write of token rows `[write_from, tokens)`:
     /// grow its block table to hold `tokens` rows **and**
     /// copy-on-write-split any still-shared block the write range
     /// overlaps (a divergent write must never mutate pages a sibling
     /// sequence or the prefix index still reads).  On device-pool
-    /// exhaustion the engine reclaims in cost order — evict idle
-    /// prefix-cache runs (no computed work lost), migrate cold pages to
-    /// the host tier (§4.4 at page granularity), and only then preempt
-    /// the youngest live sequence; returns `Ok(false)` when the
-    /// sequence *itself* was the youngest and got preempted.
+    /// exhaustion the engine runs the four-rung reclamation ladder in
+    /// cost order — evict idle prefix-cache runs (no computed work
+    /// lost), migrate cold pages to the host tier (§4.4 at page
+    /// granularity, batched across sequences), swap out a victim
+    /// (pages parked, resumed later), or recompute-preempt it (pages
+    /// freed, prompt replayed) — with the victim chosen by the
+    /// configured [`ReclaimPolicy`](super::reclaim::ReclaimPolicy);
+    /// returns `Ok(false)` when the sequence *itself* was the victim.
     fn ensure_writable(&mut self, id: RequestId, tokens: usize, write_from: usize) -> Result<bool> {
         loop {
             {
@@ -753,6 +844,9 @@ impl Engine {
                 let Some(s) = self.seqs.get_mut(&id) else {
                     return Ok(false);
                 };
+                if s.phase == Phase::Suspended {
+                    return Ok(false); // swapped out by an earlier reclamation
+                }
                 let SeqStore::Paged { table } = &mut s.store else {
                     bail!("ensure_writable on a contiguous sequence");
                 };
@@ -775,22 +869,41 @@ impl Engine {
             }
             // cheapest reclamation first: idle prefix-cache runs cost
             // nothing to drop (their KV can be recomputed by whoever
-            // misses), migration preserves computed KV, preemption
-            // recomputes it.  Each arm makes strict progress — evicting
-            // shrinks the finite index, migrating consumes finite host
-            // free pages, preempting removes a live sequence — so the
-            // loop terminates.
+            // misses), migration preserves computed KV on the slower
+            // tier, swap-out preserves it at two link transfers, and
+            // recompute throws it away.  Each rung makes strict
+            // progress — evicting shrinks the finite index, migrating
+            // and swapping consume finite host free pages, preempting
+            // removes a live sequence — so the loop terminates.
+            //
+            // One ordering subtlety: when the live sequences are
+            // *over-committed* (their combined worst-case growth cannot
+            // fit the free pages of both tiers), some victim must
+            // eventually be preempted no matter how much is migrated —
+            // and every migration eats the host space a swap-out would
+            // need.  So under over-commitment the engine migrates only
+            // while the host tier retains room to park the largest
+            // victim afterwards, and otherwise preempts *now*, while
+            // the swap is still feasible (the "swap reservations are
+            // gated like migrations" invariant).  Worst-case demand is
+            // a loose bound for early-EOS workloads, so the
+            // reservation check — not over-commitment alone — decides:
+            // with an ample host tier the engine keeps every sequence
+            // live exactly as the pre-swap ladder did.
             if self.evict_idle_prefix() {
                 continue;
             }
-            if self.migrate_cold_block() {
+            let live = self.active.len() + self.chunking.len();
+            let migrate_first = live <= 1
+                || !self.overcommitted()
+                || self.migration_preserves_swap_reservation();
+            if migrate_first && self.migrate_cold_blocks() {
                 continue;
             }
-            let Some(victim) = self.preempt_youngest() else {
-                bail!("KV page pool exhausted with nothing to preempt");
-            };
-            if victim == id {
-                return Ok(false);
+            match self.preempt_victim()? {
+                Some(victim) if victim == id => return Ok(false),
+                Some(_) => {}
+                None => bail!("KV page pool exhausted with nothing to preempt"),
             }
         }
     }
@@ -808,18 +921,46 @@ impl Engine {
         ix.evict_idle(pools.device_mut()) > 0
     }
 
-    /// Move the coldest block in the system to the host tier: the
-    /// lowest-index device block (oldest token positions) of the
-    /// longest live sequence, as one batched PCIe move.  The hot tail
-    /// block of each sequence is spared unless nothing else qualifies
-    /// (a device tier too small for two blocks).  Returns false when
-    /// the host tier is absent/full or no device block exists — the
-    /// caller falls back to preemption.
+    /// True when the host tier could still park the largest live
+    /// victim's device pages even after another folded migration —
+    /// migrating then cannot strand the swap rung, so the ladder
+    /// prefers it (migration keeps every sequence live, and worst-case
+    /// over-commitment may never materialize for early-EOS workloads).
+    fn migration_preserves_swap_reservation(&self) -> bool {
+        let EngineKv::Paged(pools) = &self.kv else {
+            return true;
+        };
+        let group = self.shape.layers * self.shape.kv_heads;
+        let reserve = self
+            .active
+            .iter()
+            .chain(self.chunking.iter())
+            .map(|id| match &self.seqs[id].store {
+                SeqStore::Paged { table } => table.device_blocks() * group,
+                SeqStore::Contig { .. } => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        pools.host().free_pages() >= reserve + Self::MIGRATION_FOLD * group
+    }
+
+    /// Rung 2: move cold blocks to the host tier — the lowest-index
+    /// device block (oldest token positions) of the longest live
+    /// sequence, plus (under multi-sequence pressure) the coldest
+    /// block of the next-longest sequence, all folded into **one**
+    /// batched PCIe move so the link setup latency is paid once.  The
+    /// hot tail block of each sequence is spared unless nothing else
+    /// qualifies (a device tier too small for two blocks), and blocks
+    /// pinned by sharing are judged by their *current* ref count — an
+    /// idle prefix run evicted earlier in the ladder unpins its blocks
+    /// immediately, stale `shared` flags notwithstanding.  Returns
+    /// false when the host tier is absent/full or no migratable device
+    /// block exists — the caller falls back to swap/preemption.
     ///
     /// Termination: every migration consumes host free pages, every
     /// preemption removes a live sequence, and neither is undone within
     /// one `ensure_writable` call — the exhaustion loop cannot cycle.
-    fn migrate_cold_block(&mut self) -> bool {
+    fn migrate_cold_blocks(&mut self) -> bool {
         let EngineKv::Paged(pools) = &mut self.kv else {
             return false;
         };
@@ -828,7 +969,8 @@ impl Engine {
             return false;
         }
         // longest cached sequence first; deterministic id tie-break
-        // (active/chunking vectors, not HashMap order).
+        // (active/chunking vectors, not HashMap order).  Suspended
+        // sequences hold no device blocks and are not scanned.
         let mut order: Vec<(usize, RequestId)> = self
             .active
             .iter()
@@ -843,7 +985,12 @@ impl Engine {
             .collect();
         order.sort_by_key(|&(blocks, sid)| (std::cmp::Reverse(blocks), sid));
         for include_tail in [false, true] {
+            let mut folded = 0;
+            pools.begin_batched_transfer();
             for &(_, sid) in &order {
+                if folded == Self::MIGRATION_FOLD || pools.host().free_pages() < group {
+                    break;
+                }
                 let Some(s) = self.seqs.get_mut(&sid) else { continue };
                 let SeqStore::Paged { table } = &mut s.store else { continue };
                 // shared blocks are pinned to the device tier until
@@ -855,24 +1002,160 @@ impl Engine {
                     continue;
                 };
                 if table.migrate_block_to_host(b, pools).is_ok() {
-                    return true;
+                    folded += 1;
                 }
+            }
+            pools.commit_batched_transfer();
+            if folded > 0 {
+                return true;
             }
         }
         false
     }
 
-    /// Evict the youngest live sequence (recompute-style preemption):
-    /// free its pages and put its request back at the head of the
-    /// waiting queue.  Request ids are monotonic, so max(id) is the
-    /// most recently admitted sequence.
-    fn preempt_youngest(&mut self) -> Option<RequestId> {
-        let victim = self
+    /// Block groups (one per sequence) folded into a single batched
+    /// migration transfer: the group the failed allocation needs plus
+    /// one prefetched from the next-coldest sequence — amortizing the
+    /// link setup latency without over-draining the device tier.
+    const MIGRATION_FOLD: usize = 2;
+
+    /// True when the live sequences (suspended included — they resume
+    /// and keep growing) cannot all reach their worst-case page demand
+    /// within the usable free pages of both tiers.  Over-commitment
+    /// means some victim must eventually be preempted; detecting it
+    /// early lets the ladder swap the victim out while the host tier
+    /// still has room, instead of recomputing it after migrations have
+    /// consumed that room.  The per-request admission gate bounds each
+    /// sequence individually, so over-commitment only arises from
+    /// sequences growing *concurrently* — exactly the case cascaded
+    /// preemption exists for.
+    fn overcommitted(&self) -> bool {
+        let EngineKv::Paged(pools) = &self.kv else {
+            return false;
+        };
+        let group = self.shape.layers * self.shape.kv_heads;
+        let mut future = 0usize;
+        for id in self
+            .active
+            .iter()
+            .chain(self.chunking.iter())
+            .chain(self.suspended.iter())
+        {
+            let s = &self.seqs[id];
+            let total = BlockTable::pages_needed(
+                self.shape,
+                self.page_size,
+                s.prompt.len() + s.params.max_new_tokens,
+            );
+            let held = match &s.store {
+                SeqStore::Paged { table } => table.pages_held(),
+                SeqStore::Contig { .. } => 0,
+            };
+            future += total.saturating_sub(held);
+        }
+        let usable_free =
+            (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
+        future > usable_free
+    }
+
+    /// Rungs 3–4: choose a victim via the configured
+    /// [`ReclaimPolicy`](super::reclaim::ReclaimPolicy) and reclaim its
+    /// pages — swap-out (table parked on the host tier, resumed before
+    /// any new admission) or recompute (pages freed, request back at
+    /// the head of the waiting queue), per the per-victim
+    /// [`RecomputeVsSwap`] decision.  The oldest live sequence is
+    /// never offered unless it is alone — that exclusion is what keeps
+    /// the no-livelock induction independent of the policy.  Returns
+    /// the victim id, or `None` with nothing to preempt.
+    fn preempt_victim(&mut self) -> Result<Option<RequestId>> {
+        let mut ids: Vec<RequestId> = self
             .active
             .iter()
             .chain(self.chunking.iter())
             .copied()
-            .max()?;
+            .collect();
+        if ids.is_empty() {
+            return Ok(None);
+        }
+        ids.sort_unstable();
+        if ids.len() > 1 {
+            ids.remove(0); // the oldest is protected
+        }
+        let group = self.shape.layers * self.shape.kv_heads;
+        let (decision, victim) = {
+            let EngineKv::Paged(pools) = &self.kv else {
+                bail!("preemption on a contiguous engine");
+            };
+            let candidates: Vec<VictimCandidate> = ids
+                .iter()
+                .map(|&sid| {
+                    let s = &self.seqs[&sid];
+                    let (pages_held, device_pages, swappable) = match &s.store {
+                        SeqStore::Paged { table } => (
+                            table.pages_held(),
+                            table.device_blocks() * group,
+                            table.suspendable_pages(pools).is_some(),
+                        ),
+                        SeqStore::Contig { .. } => (0, 0, false),
+                    };
+                    VictimCandidate {
+                        id: sid,
+                        pages_held,
+                        device_pages,
+                        tokens_cached: s.prefilled + s.tokens.len(),
+                        tokens_remaining: (s.prompt.len() - s.prefilled)
+                            + s.params.max_new_tokens.saturating_sub(s.tokens.len()),
+                        swappable,
+                    }
+                })
+                .collect();
+            let victim = *self.reclaim.select(&candidates);
+            let decision = self.reclaim.decide(&victim, pools.host().free_pages());
+            (decision, victim.id)
+        };
+        match decision {
+            ReclaimDecision::Swap => self.swap_out(victim),
+            ReclaimDecision::Recompute => self.preempt_recompute(victim),
+        }
+        Ok(Some(victim))
+    }
+
+    /// Rung 3: park `victim`'s whole block table on the host tier as
+    /// one batched transfer and mark it [`Phase::Suspended`]; the
+    /// scheduler resumes it (with its KV intact) before any new
+    /// admission.  Falls back to recompute preemption if the transfer
+    /// refuses — the cost decision pre-checked feasibility, so this is
+    /// purely defensive.
+    fn swap_out(&mut self, victim: RequestId) {
+        let parked = match (&mut self.kv, self.seqs.get_mut(&victim)) {
+            (EngineKv::Paged(pools), Some(s)) => match &mut s.store {
+                SeqStore::Paged { table } => table.suspend_to_host(pools).is_ok(),
+                SeqStore::Contig { .. } => false,
+            },
+            _ => false,
+        };
+        if !parked {
+            self.preempt_recompute(victim);
+            return;
+        }
+        let s = self.seqs.get_mut(&victim).expect("victim is tracked");
+        s.phase = Phase::Suspended;
+        self.active.retain(|&a| a != victim);
+        self.chunking.retain(|&c| c != victim);
+        let at = self
+            .suspended
+            .binary_search(&victim)
+            .expect_err("victim cannot already be suspended");
+        self.suspended.insert(at, victim);
+        self.metrics.preemptions += 1;
+        self.metrics.swaps_out += 1;
+        self.update_page_metrics();
+    }
+
+    /// Rung 4: recompute-style preemption — free `victim`'s pages and
+    /// put its request back at the head of the waiting queue (FCFS
+    /// preserved: it was admitted before everything still waiting).
+    fn preempt_recompute(&mut self, victim: RequestId) {
         let mut state = self.seqs.remove(&victim).expect("victim is tracked");
         self.active.retain(|&a| a != victim);
         self.chunking.retain(|&c| c != victim);
@@ -888,7 +1171,95 @@ impl Engine {
             submitted_at: state.submitted_at,
         });
         self.metrics.preemptions += 1;
-        Some(victim)
+    }
+
+    /// Resume the oldest suspended sequence: restore its table to the
+    /// device tier when there is room for all of it plus one block
+    /// group of headroom (so the restore cannot immediately re-trigger
+    /// the pressure that suspended it), then put it back on its run
+    /// queue.  With no device room the sequence still resumes — decode
+    /// gathers its rows from the host store bit-identically and the
+    /// promotion pass brings blocks back as capacity appears.
+    fn resume_suspended(&mut self) -> Result<()> {
+        if self.suspended.is_empty() {
+            return Ok(());
+        }
+        let id = self.suspended.remove(0);
+        let group = self.shape.layers * self.shape.kv_heads;
+        {
+            let EngineKv::Paged(pools) = &mut self.kv else {
+                bail!("suspended sequence on a contiguous engine");
+            };
+            let s = self.seqs.get_mut(&id).context("suspended seq missing")?;
+            let SeqStore::Paged { table } = &mut s.store else {
+                bail!("suspended sequence without a block table");
+            };
+            let host_pages = table.host_blocks() * group;
+            if host_pages > 0 && pools.device().free_pages() >= host_pages + group {
+                let _ = table.resume_from_host(pools);
+            }
+        }
+        let s = self.seqs.get_mut(&id).expect("resumed seq tracked");
+        self.metrics.swaps_in += 1;
+        self.metrics.recompute_tokens_avoided += (s.prefilled + s.tokens.len()) as u64;
+        if s.tokens.is_empty() {
+            s.phase = Phase::Chunking;
+            self.chunking.push_back(id);
+        } else {
+            s.phase = Phase::Decoding;
+            self.active.push(id);
+        }
+        self.update_page_metrics();
+        Ok(())
+    }
+
+    /// Host→device promotion: when the device tier has at least two
+    /// block groups of slack, move the hottest (most-recently-gathered)
+    /// host block of any *running* sequence back so long-lived
+    /// sequences recover full device gather speed (suspended tables
+    /// stay parked — promoting them would undo the swap they just paid
+    /// for).  One block group per engine step — promotion must never
+    /// cause the pressure it relieves, and the one-group headroom left
+    /// behind keeps the next allocation from immediately re-migrating.
+    /// Placement only: tokens are bit-identical wherever rows live.
+    fn maybe_promote(&mut self) {
+        if !self.promote {
+            return;
+        }
+        let promoted = {
+            let EngineKv::Paged(pools) = &mut self.kv else { return };
+            let group = self.shape.layers * self.shape.kv_heads;
+            if pools.device().free_pages() < 2 * group {
+                return;
+            }
+            // hottest host block across every *running* table.
+            // Suspended sequences are skipped: their whole table was
+            // just paid for to park host-side, they take no steps, and
+            // nothing in the ladder could reclaim device pages handed
+            // to them — restoring a parked table is `resume_from_host`'s
+            // job at resume time.  Ties resolved by (stamp, id, block)
+            // so HashMap iteration order cannot leak into placement.
+            let mut best: Option<(u64, RequestId, usize)> = None;
+            for (&sid, s) in &self.seqs {
+                if s.phase == Phase::Suspended {
+                    continue;
+                }
+                let SeqStore::Paged { table } = &s.store else { continue };
+                if let Some((stamp, b)) = table.hottest_host_block() {
+                    let cand = (stamp, sid, b);
+                    if best.map_or(true, |x| cand > x) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            let Some((_, sid, b)) = best else { return };
+            let Some(s) = self.seqs.get_mut(&sid) else { return };
+            let SeqStore::Paged { table } = &mut s.store else { return };
+            table.promote_block_to_device(b, pools).is_ok()
+        };
+        if promoted {
+            self.update_page_metrics();
+        }
     }
 
     fn update_page_metrics(&mut self) {
@@ -904,6 +1275,9 @@ impl Engine {
             self.metrics.migrations = st.batches;
             self.metrics.migrated_bytes = st.bytes_moved;
             self.metrics.pcie_modeled_s = st.modeled_s;
+            self.metrics.promotions = st.promotions;
+            self.metrics.promoted_pages = st.pages_promoted;
+            self.metrics.grouped_transfers = st.grouped_transfers;
             self.metrics.shared_pages =
                 self.prefix.as_ref().map_or(0, |ix| ix.pages_held() as u64);
         }
@@ -929,13 +1303,21 @@ impl Engine {
             .first_token_at
             .map(|t| (t - state.submitted_at).as_secs_f64())
             .unwrap_or(0.0);
+        let total = (now - state.submitted_at).as_secs_f64();
         self.metrics.completed += 1;
+        self.metrics.ttft.record(ttft);
+        if state.tokens.len() > 1 && total > ttft {
+            // time-per-output-token over the generation phase
+            self.metrics
+                .tpot
+                .record((total - ttft) / (state.tokens.len() - 1) as f64);
+        }
         self.finished.push(Response {
             id: state.id,
             prompt_len: state.prompt.len(),
             tokens: state.tokens,
             ttft_s: ttft,
-            total_s: (now - state.submitted_at).as_secs_f64(),
+            total_s: total,
         });
     }
 }
@@ -979,6 +1361,15 @@ mod tests {
     }
 
     fn host_engine_tiered(device_groups: usize, host_groups: usize) -> Engine {
+        host_engine_reclaim(device_groups, host_groups, PreemptMode::Auto, VictimPolicy::Youngest)
+    }
+
+    fn host_engine_reclaim(
+        device_groups: usize,
+        host_groups: usize,
+        preempt_mode: PreemptMode,
+        victim_policy: VictimPolicy,
+    ) -> Engine {
         // tiny_gqa: a block group is layers 2 × kv_heads 2 = 4 pages of
         // 2·4·16·8 B = 1 KiB each.
         let group_bytes = 4 * 1024;
@@ -988,6 +1379,8 @@ mod tests {
             device_kv_budget: device_groups * group_bytes,
             host_kv_budget: host_groups * group_bytes,
             page_size: 16,
+            preempt_mode,
+            victim_policy,
             ..EngineConfig::default()
         };
         Engine::with_backend(
@@ -1269,6 +1662,181 @@ mod tests {
         for (a, b) in out.iter().zip(&want) {
             assert_eq!(a.tokens, b.tokens, "preemption + sharing must not change tokens");
         }
+    }
+
+    // --- reclamation: swap-out, resume, promotion, victim policies ----
+
+    #[test]
+    fn swap_out_preserves_tokens_and_avoids_replay() {
+        // two 48-token sequences over a 2+2-group cache cannot coexist
+        // (future demand 4 groups > 2 usable free at the collision), so
+        // the ladder preempts the youngest while the host tier still
+        // has room — in Swap mode its table parks and resumes, so *no
+        // prompt token is ever prefilled twice*.
+        let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
+        let prompts = [vec![1i32; 8], vec![2i32; 8]];
+
+        let mut base = host_engine_with_layout(1, KvLayout::Paged);
+        for pr in &prompts {
+            base.submit(pr.clone(), p).unwrap();
+        }
+        let mut want = base.run_until_idle().unwrap();
+        want.sort_by_key(|r| r.id);
+
+        let mut e = host_engine_reclaim(2, 2, PreemptMode::Swap, VictimPolicy::Youngest);
+        for pr in &prompts {
+            e.submit(pr.clone(), p).unwrap();
+        }
+        let mut got = e.run_until_idle().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 2);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.tokens, b.tokens, "swap-out must not change request {} tokens", a.id);
+        }
+        let m = &e.metrics;
+        assert!(m.swaps_out >= 1, "the squeeze must swap the youngest out");
+        assert_eq!(m.swaps_in, m.swaps_out, "every swap resumed");
+        assert!(m.swaps_out <= m.preemptions);
+        assert!(m.recompute_tokens_avoided > 0);
+        assert!(
+            m.promotions >= 1,
+            "the swap-in restore must promote the parked table back"
+        );
+        assert_eq!(
+            m.prefilled_tokens, 16,
+            "swap-out preserves cached KV: no prompt token prefills twice"
+        );
+        assert_eq!(m.pages_used, 0, "device tier drained at idle");
+        assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+
+        // the same squeeze in Recompute mode replays the victim's
+        // prompt — strictly more prefill work, identical tokens
+        let mut r = host_engine_reclaim(2, 2, PreemptMode::Recompute, VictimPolicy::Youngest);
+        for pr in &prompts {
+            r.submit(pr.clone(), p).unwrap();
+        }
+        let mut rec = r.run_until_idle().unwrap();
+        rec.sort_by_key(|x| x.id);
+        for (a, b) in rec.iter().zip(&want) {
+            assert_eq!(a.tokens, b.tokens, "recompute must not change request {} tokens", a.id);
+        }
+        assert_eq!(r.metrics.swaps_out, 0);
+        assert!(r.metrics.preemptions >= 1);
+        assert!(
+            r.metrics.prefilled_tokens > e.metrics.prefilled_tokens,
+            "recompute replays prefill work that swap-out avoids: {} !> {}",
+            r.metrics.prefilled_tokens,
+            e.metrics.prefilled_tokens
+        );
+    }
+
+    #[test]
+    fn swap_infeasible_without_host_tier_falls_back_to_recompute() {
+        // no host tier: even forced Swap mode must degrade to the
+        // recompute path (swap reservations are gated like migrations)
+        let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
+        let mut e = host_engine_reclaim(5, 0, PreemptMode::Swap, VictimPolicy::Youngest);
+        e.submit(vec![1; 8], p).unwrap();
+        e.submit(vec![2; 8], p).unwrap();
+        let out = e.run_until_idle().unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.tokens.len() == 40));
+        assert!(e.metrics.preemptions >= 1);
+        assert_eq!(e.metrics.swaps_out, 0, "nothing can park on an absent host tier");
+        assert_eq!(e.metrics.swaps_in, 0);
+    }
+
+    #[test]
+    fn victim_policies_all_terminate_with_identical_tokens() {
+        let p = GenParams { max_new_tokens: 24, eos_token: None, share_prefix: false };
+        let prompts = [vec![3i32; 8], vec![4i32; 20], vec![5i32; 4]];
+        let mut base = host_engine_with_layout(1, KvLayout::Paged);
+        for pr in &prompts {
+            base.submit(pr.clone(), p).unwrap();
+        }
+        let mut want = base.run_until_idle().unwrap();
+        want.sort_by_key(|r| r.id);
+
+        for policy in
+            [VictimPolicy::Youngest, VictimPolicy::FewestPagesLost, VictimPolicy::ClosestToDone]
+        {
+            let mut e = host_engine_reclaim(2, 3, PreemptMode::Auto, policy);
+            for pr in &prompts {
+                e.submit(pr.clone(), p).unwrap();
+            }
+            let mut got = e.run_until_idle().unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), want.len(), "{policy:?} lost a request");
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.tokens, b.tokens, "{policy:?} changed request {} tokens", a.id);
+            }
+            assert_eq!(e.metrics.pages_used, 0, "{policy:?} leaked device pages");
+            assert_eq!(e.metrics.host_pages_used, 0, "{policy:?} leaked host pages");
+        }
+    }
+
+    #[test]
+    fn promotion_recovers_device_residency_and_folds_migrations() {
+        // two 48-token sequences (20-token prompts = 2 blocks up
+        // front, 3 blocks total each) over a 4+4-group cache: both
+        // prompts prefill onto the device (4 groups, full), so the
+        // first third-block allocation migrates BOTH sequences' cold
+        // blocks in ONE folded transfer; when the older sequence
+        // finishes, the freed device groups promote the survivor's
+        // hottest host block back.
+        let p = GenParams { max_new_tokens: 28, eos_token: None, share_prefix: false };
+        let prompts = [vec![7i32; 20], vec![9i32; 20]];
+        let mut base = host_engine_with_layout(1, KvLayout::Paged);
+        for pr in &prompts {
+            base.submit(pr.clone(), p).unwrap();
+        }
+        let mut want = base.run_until_idle().unwrap();
+        want.sort_by_key(|r| r.id);
+
+        let mut e = host_engine_tiered(4, 4);
+        for pr in &prompts {
+            e.submit(pr.clone(), p).unwrap();
+        }
+        let mut got = e.run_until_idle().unwrap();
+        got.sort_by_key(|r| r.id);
+        for (x, y) in got.iter().zip(&want) {
+            assert_eq!(x.tokens, y.tokens, "promotion must not change request {} tokens", x.id);
+        }
+        let m = &e.metrics;
+        assert!(
+            m.pages_migrated >= 8,
+            "both sequences' cold blocks must migrate, moved {}",
+            m.pages_migrated
+        );
+        assert!(
+            m.grouped_transfers >= 1,
+            "the two cold groups must fold into one link transfer"
+        );
+        assert!(m.promotions >= 1, "freed device groups must pull hot blocks back");
+        assert!(m.promoted_pages >= 4);
+        assert_eq!(m.preemptions, 0, "migration + promotion cover this workload");
+        assert_eq!(m.pages_used, 0);
+        assert_eq!(m.host_pages_used, 0);
+    }
+
+    #[test]
+    fn suspended_sequence_resumes_before_new_admissions() {
+        // A, B, C in FCFS order over a 2+2-group cache: C's admission
+        // defers on capacity, B swaps out under the squeeze, and B must
+        // come back and finish before C is admitted.
+        let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
+        let mut e = host_engine_reclaim(2, 2, PreemptMode::Swap, VictimPolicy::Youngest);
+        let ida = e.submit(vec![1; 8], p).unwrap();
+        let idb = e.submit(vec![2; 8], p).unwrap();
+        let idc = e.submit(vec![3; 8], p).unwrap();
+        let out = e.run_until_idle().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.tokens.len() == 40));
+        // completion order == finish-push order: A, then the resumed
+        // B, then the late-admitted C
+        let order: Vec<_> = out.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![ida, idb, idc], "resume must outrank new admission");
+        assert!(e.metrics.swaps_out >= 1, "B was parked, not replayed");
     }
 
     fn engine() -> Option<Engine> {

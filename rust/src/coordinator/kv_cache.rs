@@ -471,17 +471,44 @@ impl PcieLink {
     }
 }
 
-/// Cumulative migration accounting of a [`TieredPagePool`].
+/// Cumulative migration accounting of a [`TieredPagePool`], both
+/// directions: cold-page offload and swap-out run device→host,
+/// promotion and swap-in restore run host→device.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct MigrationStats {
     /// Pages moved device→host.
     pub pages_moved: u64,
-    /// Batched transfers (one per migrated block group).
+    /// Batched device→host transfers (one link charge each).
     pub batches: u64,
-    /// Bytes moved over the modeled link.
+    /// Bytes moved device→host over the modeled link.
     pub bytes_moved: u64,
-    /// Modeled link seconds charged (`PcieLink::transfer_s` per batch).
+    /// Modeled link seconds charged (`PcieLink::transfer_s` per batched
+    /// transfer, both directions).
     pub modeled_s: f64,
+    /// Pages moved host→device (promotion / swap-in restore).
+    pub pages_promoted: u64,
+    /// Batched host→device transfers (one link charge each).
+    pub promotions: u64,
+    /// Bytes moved host→device over the modeled link.
+    pub promoted_bytes: u64,
+    /// Transfers (either direction) that folded two or more block
+    /// groups — possibly from several sequences — into one link charge
+    /// (the cross-sequence batching that amortizes setup latency).
+    pub grouped_transfers: u64,
+}
+
+/// Page moves accumulated between [`TieredPagePool::begin_batched_transfer`]
+/// and [`TieredPagePool::commit_batched_transfer`], per direction, so a
+/// multi-block (even multi-sequence) move pays the link setup latency
+/// once.
+#[derive(Debug, Default, Clone, Copy)]
+struct PendingTransfer {
+    /// Device→host pages and the block-group charges folded in.
+    out_pages: usize,
+    out_groups: usize,
+    /// Host→device pages and the block-group charges folded in.
+    in_pages: usize,
+    in_groups: usize,
 }
 
 /// The two-tier paged KV cache: a device-resident [`PagePool`] that all
@@ -497,6 +524,9 @@ pub struct TieredPagePool {
     host: PagePool,
     link: PcieLink,
     stats: MigrationStats,
+    /// `Some` while a batched transfer is open: per-page charges fold
+    /// into it instead of paying their own link setup latency.
+    pending: Option<PendingTransfer>,
 }
 
 impl TieredPagePool {
@@ -514,6 +544,7 @@ impl TieredPagePool {
             host: PagePool::new(page_size, head_dim, host_pages),
             link,
             stats: MigrationStats::default(),
+            pending: None,
         }
     }
 
@@ -534,6 +565,7 @@ impl TieredPagePool {
             host: PagePool::new(page_size, shape.head_dim, host_pages),
             link,
             stats: MigrationStats::default(),
+            pending: None,
         }
     }
 
@@ -640,16 +672,98 @@ impl TieredPagePool {
         Some(host_page)
     }
 
-    /// Charge one batched `pages`-page move to the link model.
+    /// Move one host page's rows onto a freshly allocated device page
+    /// (the reverse of [`Self::offload_page`]): promotion and swap-in
+    /// restore.  The host page returns to its free list.  Accounting is
+    /// the caller's ([`Self::charge_promotion`]).
+    fn promote_page(&mut self, host_page: u32) -> Option<u32> {
+        debug_assert_eq!(
+            self.host.ref_count(host_page),
+            1,
+            "host pages are never shared — promotion expects a sole holder"
+        );
+        let device_page = self.device.alloc()?;
+        let n = self.device.page_size * self.device.head_dim;
+        let src = host_page as usize * n;
+        let dst = device_page as usize * n;
+        self.device.k[dst..dst + n].copy_from_slice(&self.host.k[src..src + n]);
+        self.device.v[dst..dst + n].copy_from_slice(&self.host.v[src..src + n]);
+        self.host.release(host_page);
+        Some(device_page)
+    }
+
+    /// Open a batched transfer: until [`Self::commit_batched_transfer`],
+    /// per-block charges (either direction) accumulate instead of each
+    /// paying the link setup latency — one multi-block move, possibly
+    /// spanning several sequences, is then charged as one transfer per
+    /// direction.
+    pub fn begin_batched_transfer(&mut self) {
+        debug_assert!(self.pending.is_none(), "nested batched transfer");
+        self.pending = Some(PendingTransfer::default());
+    }
+
+    /// Close the open batched transfer and charge everything
+    /// accumulated since [`Self::begin_batched_transfer`] as one link
+    /// transfer per direction.  A no-op when nothing is open or nothing
+    /// moved.
+    pub fn commit_batched_transfer(&mut self) {
+        let Some(p) = self.pending.take() else { return };
+        if p.out_pages > 0 {
+            self.charge_out(p.out_pages, p.out_groups);
+        }
+        if p.in_pages > 0 {
+            self.charge_in(p.in_pages, p.in_groups);
+        }
+    }
+
+    /// Charge one batched `pages`-page device→host move to the link
+    /// model, or fold it into the open batched transfer.
     fn charge_batch(&mut self, pages: usize) {
         if pages == 0 {
             return;
         }
+        if let Some(p) = &mut self.pending {
+            p.out_pages += pages;
+            p.out_groups += 1;
+            return;
+        }
+        self.charge_out(pages, 1);
+    }
+
+    /// Charge one batched `pages`-page host→device move to the link
+    /// model, or fold it into the open batched transfer.
+    fn charge_promotion(&mut self, pages: usize) {
+        if pages == 0 {
+            return;
+        }
+        if let Some(p) = &mut self.pending {
+            p.in_pages += pages;
+            p.in_groups += 1;
+            return;
+        }
+        self.charge_in(pages, 1);
+    }
+
+    fn charge_out(&mut self, pages: usize, groups: usize) {
         let bytes = pages * self.page_bytes();
         self.stats.pages_moved += pages as u64;
         self.stats.batches += 1;
         self.stats.bytes_moved += bytes as u64;
         self.stats.modeled_s += self.link.transfer_s(bytes);
+        if groups >= 2 {
+            self.stats.grouped_transfers += 1;
+        }
+    }
+
+    fn charge_in(&mut self, pages: usize, groups: usize) {
+        let bytes = pages * self.page_bytes();
+        self.stats.pages_promoted += pages as u64;
+        self.stats.promotions += 1;
+        self.stats.promoted_bytes += bytes as u64;
+        self.stats.modeled_s += self.link.transfer_s(bytes);
+        if groups >= 2 {
+            self.stats.grouped_transfers += 1;
+        }
     }
 }
 
@@ -676,6 +790,11 @@ pub struct BlockTable {
     /// sequence — [`Self::cow_unshare`] must run before any write lands
     /// in them.
     shared: Vec<bool>,
+    /// Per-block last-gather stamp (`[max_blocks]`): the engine's
+    /// monotonic gather clock at the most recent attention pass that
+    /// streamed the block's rows.  Host→device promotion uses it to
+    /// pick the hottest (most-recently-gathered) host blocks first.
+    stamps: Vec<u64>,
 }
 
 impl BlockTable {
@@ -692,6 +811,7 @@ impl BlockTable {
             table: vec![NO_PAGE; shape.layers * shape.kv_heads * max_blocks],
             tiers: vec![Tier::Device; shape.layers * shape.kv_heads * max_blocks],
             shared: vec![false; max_blocks],
+            stamps: vec![0; max_blocks],
         }
     }
 
@@ -778,6 +898,7 @@ impl BlockTable {
                 }
             }
             self.shared[b] = false;
+            self.stamps[b] = 0;
             self.blocks += 1;
         }
         Ok(())
@@ -802,6 +923,7 @@ impl BlockTable {
             }
         }
         self.shared[b] = true;
+        self.stamps[b] = 0;
         self.blocks += 1;
     }
 
@@ -951,6 +1073,29 @@ impl BlockTable {
         (0..self.blocks).filter(|&b| self.block_tier(b) == Tier::Device).count()
     }
 
+    /// Host-resident blocks.
+    pub fn host_blocks(&self) -> usize {
+        (0..self.blocks).filter(|&b| self.block_tier(b) == Tier::Host).count()
+    }
+
+    /// Stamp every allocated block as gathered at `clock` — called by
+    /// the engine after an attention pass streamed this sequence's rows
+    /// (decode reads the whole history, so all blocks heat together).
+    pub fn mark_gathered(&mut self, clock: u64) {
+        self.stamps[..self.blocks].fill(clock);
+    }
+
+    /// The hottest host-resident block — the one with the highest
+    /// last-gather stamp, ties broken toward the highest block index
+    /// (later token positions) — or `None` with nothing host-resident.
+    /// Returns `(stamp, block)` so callers can rank across sequences.
+    pub fn hottest_host_block(&self) -> Option<(u64, usize)> {
+        (0..self.blocks)
+            .filter(|&b| self.block_tier(b) == Tier::Host)
+            .map(|b| (self.stamps[b], b))
+            .max()
+    }
+
     /// The coldest migratable block: the lowest-index device-tier block
     /// (lowest token positions = oldest data).  `include_tail: false`
     /// spares the hot tail — the last allocated block, where fresh rows
@@ -1021,6 +1166,119 @@ impl BlockTable {
         Ok(group)
     }
 
+    /// Migrate block `b` from the host tier back to the device tier
+    /// (promotion / swap-in restore), one page per plane, charged as
+    /// one batched move.  All-or-nothing: device capacity for the whole
+    /// group is checked up front.  Returns the pages moved.
+    pub fn promote_block_to_device(
+        &mut self,
+        b: usize,
+        pools: &mut TieredPagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        assert!(b < self.blocks, "promote of unallocated block {b}");
+        assert_eq!(self.block_tier(b), Tier::Host, "block {b} already device-resident");
+        debug_assert_eq!(pools.page_size(), self.page_size, "pool/table page_size");
+        let group = self.layers * self.kv_heads;
+        if pools.device().free_pages() < group {
+            return Err(PageAllocError::OutOfPages);
+        }
+        for l in 0..self.layers {
+            for g in 0..self.kv_heads {
+                let at = self.plane_at(l, g, b);
+                let device_page = pools
+                    .promote_page(self.table[at])
+                    .expect("device capacity checked above");
+                self.table[at] = device_page;
+                self.tiers[at] = Tier::Device;
+            }
+        }
+        pools.charge_promotion(group);
+        Ok(group)
+    }
+
+    /// Device pages this table could park on the host tier, or `None`
+    /// when any device block's pages are shared (ref count > 1) — a
+    /// sibling table or the prefix index would keep indexing the device
+    /// store, so the sequence is not swappable.
+    pub fn suspendable_pages(&self, pools: &TieredPagePool) -> Option<usize> {
+        let group = self.layers * self.kv_heads;
+        let mut pages = 0;
+        for b in 0..self.blocks {
+            if self.block_tier(b) != Tier::Device {
+                continue;
+            }
+            for l in 0..self.layers {
+                for g in 0..self.kv_heads {
+                    let at = self.plane_at(l, g, b);
+                    if pools.device().ref_count(self.table[at]) > 1 {
+                        return None;
+                    }
+                }
+            }
+            pages += group;
+        }
+        Some(pages)
+    }
+
+    /// Park the whole table on the host tier (swap-out preemption):
+    /// every device-resident block migrates to host as **one** batched
+    /// link transfer, so a suspended sequence's KV survives preemption
+    /// instead of being recomputed.  All-or-nothing: shared pages
+    /// ([`PageAllocError::SharedPage`]) and insufficient host capacity
+    /// ([`PageAllocError::OutOfPages`]) are detected up front and the
+    /// table is left untouched.  Returns the pages moved.
+    pub fn suspend_to_host(
+        &mut self,
+        pools: &mut TieredPagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        let Some(pages) = self.suspendable_pages(pools) else {
+            return Err(PageAllocError::SharedPage);
+        };
+        if pages == 0 {
+            return Ok(0);
+        }
+        if pools.host().free_pages() < pages {
+            return Err(PageAllocError::OutOfPages);
+        }
+        pools.begin_batched_transfer();
+        for b in 0..self.blocks {
+            if self.block_tier(b) == Tier::Device {
+                self.migrate_block_to_host(b, pools)
+                    .expect("sharing and capacity checked above");
+            }
+        }
+        pools.commit_batched_transfer();
+        Ok(pages)
+    }
+
+    /// Bring a suspended table fully back to the device tier (swap-in
+    /// restore): every host-resident block promotes as **one** batched
+    /// link transfer.  All-or-nothing on device capacity; a failed call
+    /// changes nothing and the sequence keeps gathering from the host
+    /// store until capacity appears.  Returns the pages moved.
+    pub fn resume_from_host(
+        &mut self,
+        pools: &mut TieredPagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        let group = self.layers * self.kv_heads;
+        let pages = self.host_blocks() * group;
+        if pages == 0 {
+            return Ok(0);
+        }
+        if pools.device().free_pages() < pages {
+            return Err(PageAllocError::OutOfPages);
+        }
+        pools.begin_batched_transfer();
+        for b in 0..self.blocks {
+            if self.block_tier(b) == Tier::Host {
+                self.promote_block_to_device(b, pools)
+                    .expect("device capacity checked above");
+            }
+        }
+        pools.commit_batched_transfer();
+        Ok(pages)
+    }
+
     /// Release every held page back to `pool` and reset to empty — the
     /// single-pool path; every block must still be device-resident.
     pub fn release_all(&mut self, pool: &mut PagePool) {
@@ -1039,6 +1297,7 @@ impl BlockTable {
             }
         }
         self.shared.fill(false);
+        self.stamps.fill(0);
         self.blocks = 0;
     }
 
@@ -1056,6 +1315,7 @@ impl BlockTable {
             }
         }
         self.shared.fill(false);
+        self.stamps.fill(0);
         self.blocks = 0;
     }
 }
@@ -1602,6 +1862,177 @@ mod tests {
         t.migrate_block_to_host(0, &mut pools).unwrap();
         assert_eq!(t.coldest_device_block(false), None, "only the tail is left on device");
         assert_eq!(t.coldest_device_block(true), Some(1));
+        t.release_all_tiered(&mut pools);
+    }
+
+    /// Write a distinct row pattern into every (layer, head, row) slot.
+    fn fill_rows(t: &BlockTable, pools: &mut TieredPagePool, sh: CacheShape, rows: usize) {
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..rows {
+                    let base = ((l * 10 + g) * 10 + r) as f32;
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    pools.write_row(tier, page, slot, &[base, base + 0.5], &[-base, -base - 0.5]);
+                }
+            }
+        }
+    }
+
+    /// Every row reads back the `fill_rows` pattern through its tier.
+    fn check_rows(t: &BlockTable, pools: &TieredPagePool, sh: CacheShape, rows: usize) {
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..rows {
+                    let base = ((l * 10 + g) * 10 + r) as f32;
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    let at = (page as usize * 2 + slot) * sh.head_dim;
+                    assert_eq!(&pools.k_store(tier)[at..at + 2], &[base, base + 0.5]);
+                    assert_eq!(&pools.v_store(tier)[at..at + 2], &[-base, -base - 0.5]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn promote_block_restores_rows_and_charges_link() {
+        let sh = shape(); // layers 2, kv_heads 3, max_seq 4, head_dim 2
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        fill_rows(&t, &mut pools, sh, 4);
+
+        t.migrate_block_to_host(0, &mut pools).unwrap();
+        assert_eq!(t.host_blocks(), 1);
+        let moved = t.promote_block_to_device(0, &mut pools).unwrap();
+        assert_eq!(moved, group);
+        assert_eq!(t.block_tier(0), Tier::Device);
+        assert_eq!(t.host_blocks(), 0);
+        assert_eq!(pools.host().used_pages(), 0, "host pages recycled on promotion");
+        check_rows(&t, &pools, sh, 4);
+
+        let st = pools.stats();
+        assert_eq!(st.pages_moved, group as u64);
+        assert_eq!(st.pages_promoted, group as u64);
+        assert_eq!(st.promotions, 1);
+        assert_eq!(st.promoted_bytes, (group * pools.page_bytes()) as u64);
+        assert_eq!(st.grouped_transfers, 0, "single-group moves are not grouped");
+        t.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn suspend_resume_roundtrip_is_one_batched_transfer_each_way() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 4 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap(); // 2 blocks
+        fill_rows(&t, &mut pools, sh, 4);
+
+        let parked = t.suspend_to_host(&mut pools).unwrap();
+        assert_eq!(parked, 2 * group);
+        assert_eq!(t.device_blocks(), 0);
+        assert_eq!(t.host_blocks(), 2);
+        assert_eq!(pools.device().used_pages(), 0, "swap-out frees the device tier");
+        check_rows(&t, &pools, sh, 4);
+        let st = pools.stats();
+        assert_eq!(st.batches, 1, "both blocks fold into one outbound transfer");
+        assert_eq!(st.pages_moved, 2 * group as u64);
+        assert_eq!(st.grouped_transfers, 1, "a 2-group move is a grouped transfer");
+        // one transfer of 2 groups beats two transfers of 1 group
+        let link = pools.link();
+        let gb = group * pools.page_bytes();
+        assert!(st.modeled_s < 2.0 * link.transfer_s(gb));
+        assert!((st.modeled_s - link.transfer_s(2 * gb)).abs() < 1e-12);
+
+        let restored = t.resume_from_host(&mut pools).unwrap();
+        assert_eq!(restored, 2 * group);
+        assert_eq!(t.host_blocks(), 0);
+        assert_eq!(pools.host().used_pages(), 0);
+        check_rows(&t, &pools, sh, 4);
+        let st = pools.stats();
+        assert_eq!(st.promotions, 1, "both blocks fold into one inbound transfer");
+        assert_eq!(st.pages_promoted, 2 * group as u64);
+        assert_eq!(st.grouped_transfers, 2);
+        t.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn suspend_refuses_shared_pages_and_tight_host_tiers() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        // host holds only one group — a two-block suspend must refuse
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 4 * group, group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        assert_eq!(t.suspend_to_host(&mut pools), Err(PageAllocError::OutOfPages));
+        assert_eq!(t.device_blocks(), 2, "failed suspend changes nothing");
+        assert_eq!(pools.stats(), MigrationStats::default());
+
+        // a shared block makes the table unswappable outright
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&t.block_group(0), pools.device_mut());
+        assert_eq!(t.suspendable_pages(&pools), None);
+        assert_eq!(t.suspend_to_host(&mut pools), Err(PageAllocError::SharedPage));
+        adopter.release_all_tiered(&mut pools);
+        assert_eq!(t.suspendable_pages(&pools), Some(2 * group));
+        t.release_all_tiered(&mut pools);
+    }
+
+    #[test]
+    fn stale_shared_flag_does_not_block_migration_after_release() {
+        // Regression: a block adopted from a prefix run keeps its
+        // `shared` flag after every other holder (sibling table or
+        // index entry) releases — the reclamation scan must judge
+        // migratability by the *current* ref count, not the stale flag,
+        // so an eviction mid-ladder immediately unpins its candidates.
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 4 * group, 4 * group, PcieLink::default());
+        let mut owner = BlockTable::new(sh, 2);
+        owner.ensure_capacity(2, pools.device_mut()).unwrap();
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&owner.block_group(0), pools.device_mut());
+        assert!(adopter.block_shared(0));
+        assert_eq!(adopter.coldest_migratable_block(true, pools.device()), None);
+
+        // the other holder lets go (e.g. an idle prefix run evicted in
+        // the reclamation loop): the flag is stale but the pin is gone
+        owner.release_all_tiered(&mut pools);
+        assert!(adopter.block_shared(0), "flag not yet recomputed");
+        assert_eq!(
+            adopter.coldest_migratable_block(true, pools.device()),
+            Some(0),
+            "refcount-based recheck must see the unpinned block"
+        );
+        assert_eq!(adopter.migrate_block_to_host(0, &mut pools), Ok(group));
+        assert!(!adopter.block_shared(0), "migration proves sole ownership");
+        adopter.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn gather_stamps_rank_host_blocks_by_heat() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        assert_eq!(t.hottest_host_block(), None, "nothing host-resident yet");
+        t.mark_gathered(7);
+        t.migrate_block_to_host(0, &mut pools).unwrap();
+        t.migrate_block_to_host(1, &mut pools).unwrap();
+        // equal stamps: the higher block index (later tokens) wins
+        assert_eq!(t.hottest_host_block(), Some((7, 1)));
+        t.promote_block_to_device(1, &mut pools).unwrap();
+        assert_eq!(t.hottest_host_block(), Some((7, 0)));
         t.release_all_tiered(&mut pools);
     }
 

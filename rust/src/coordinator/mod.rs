@@ -19,9 +19,15 @@
 //!   copy-on-write block splits), plus the contiguous per-sequence
 //!   caches, ragged batch packing and the legacy layer-granularity
 //!   capacity pool of the artifact path;
+//! * [`reclaim`]   — the KV reclamation policy module: pluggable
+//!   victim selection ([`reclaim::ReclaimPolicy`]: youngest /
+//!   fewest-pages-lost / closest-to-done) and the per-victim
+//!   recompute-vs-swap cost model that decides whether a preempted
+//!   sequence's pages are parked on the host tier or replayed;
 //! * [`engine`]    — the synchronous execution core: tiered paged
-//!   decode and chunked prefill with migrate-before-preempt page
-//!   reclamation over a paged-capable backend, or ragged plane
+//!   decode and chunked prefill with a four-rung reclamation ladder
+//!   (evict idle prefix runs → migrate cold blocks → swap out →
+//!   recompute) over a paged-capable backend, or ragged plane
 //!   prefill/decode over the PJRT runtime; greedy sampling either way;
 //! * [`server`]    — threaded front-end (PJRT handles stay on one
 //!   thread; clients use channels);
@@ -37,6 +43,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
 pub mod offload;
+pub mod reclaim;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -50,5 +57,6 @@ pub use kv_cache::{
     BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, PrefixIndex,
     Tier, TieredPagePool,
 };
+pub use reclaim::{PreemptMode, ReclaimPolicy, RecomputeVsSwap, VictimPolicy};
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::Server;

@@ -158,6 +158,32 @@ pub fn pcie_link(spec: &VoltaSpec) -> PcieLink {
     PcieLink::new(spec.pcie_bw, spec.pcie_latency_s)
 }
 
+/// Modeled seconds to replay **one** token of a preempted sequence's
+/// cached KV: one measured host decode-attention step at `typical_kv`
+/// cached rows, per layer.  This is the prompt-replay FLOPs side of
+/// the recompute-vs-swap decision
+/// ([`crate::coordinator::reclaim::RecomputeVsSwap`]): the engine
+/// weighs `tokens × this` against shipping the victim's pages over the
+/// PCIe link twice.  Deterministic within a run
+/// ([`measured_cpu_attention`] caches per geometry).
+pub fn replay_token_cost_s(
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    typical_kv: usize,
+) -> f64 {
+    layers.max(1) as f64
+        * measured_cpu_attention(heads.max(1), typical_kv.max(1), head_dim.max(1))
+}
+
+/// Modeled seconds to replay `tokens` cached tokens of a preempted
+/// sequence (chunked prefill of its prompt plus re-decode of its
+/// generated tokens), using the mean KV length `tokens / 2` as the
+/// per-step attention span.
+pub fn replay_cost_s(layers: usize, heads: usize, head_dim: usize, tokens: usize) -> f64 {
+    tokens as f64 * replay_token_cost_s(layers, heads, head_dim, (tokens / 2).max(1))
+}
+
 /// Page-granularity placement for the tiered paged KV cache — the §4.4
 /// cache accounting redone at the `PagePool` unit instead of whole
 /// layers: how many blocks of a `seq`-token sequence fit under the
@@ -328,6 +354,18 @@ mod tests {
         let a = measured_cpu_attention(3, 1024, 64);
         let b = measured_cpu_attention(3, 1024, 64);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn replay_cost_scales_with_tokens_and_layers() {
+        let a = replay_cost_s(2, 4, 8, 16);
+        let b = replay_cost_s(2, 4, 8, 64);
+        assert!(a > 0.0);
+        assert!(b > a, "more cached tokens cost more to replay: {b} !> {a}");
+        let deep = replay_token_cost_s(4, 4, 8, 32);
+        let shallow = replay_token_cost_s(2, 4, 8, 32);
+        assert!((deep - 2.0 * shallow).abs() < 1e-12, "per-token cost is linear in layers");
+        assert_eq!(replay_cost_s(2, 4, 8, 0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! KV reclamation policy: victim selection and the recompute-vs-swap
+//! cost model behind the engine's four-rung reclamation ladder.
+//!
+//! The engine owns the *mechanism* of reclaiming KV pages (evicting
+//! idle prefix runs, migrating cold blocks, swapping a victim's table
+//! to the host tier, recompute-preempting); this module owns the
+//! *policy*: which live sequence pays when the device tier is
+//! exhausted, and whether its pages are parked on the host tier
+//! (save/restore over the modeled PCIe link) or dropped and recomputed
+//! (prompt replay).  Keeping the policy pluggable behind
+//! [`ReclaimPolicy`] is what lets `EngineConfig` trade FCFS purity
+//! (evict-youngest) against pages lost or time-to-completion without
+//! touching the engine's state machine.
+//!
+//! The ladder the engine executes, cheapest rung first:
+//!
+//! 1. **evict** an idle prefix-cache run — loses nothing computed;
+//! 2. **migrate** cold blocks to the host tier — preserves computed KV
+//!    on the slower store (batched across sequences to amortize the
+//!    link setup latency);
+//! 3. **swap out** the victim — its whole block table parks on the
+//!    host tier and restores on resume, at 2× the PCIe cost of its
+//!    device pages;
+//! 4. **recompute** the victim — pages freed outright, its request
+//!    replays from the head of the queue, at the prompt-replay cost
+//!    modeled by [`crate::coordinator::offload::replay_cost_s`].
+//!
+//! Rungs 3 and 4 are the [`RecomputeVsSwap`] decision, taken per
+//! victim: swap wins exactly when moving the victim's device pages
+//! over the link (out and back) is cheaper than replaying its cached
+//! tokens — vLLM's swap policy, FlashInfer's block-table save/restore.
+//! Whichever wins, tokens are bit-identical: swap relocates rows, and
+//! greedy replay regenerates them (pinned by the reclamation property
+//! tests).
+
+#![warn(missing_docs)]
+
+use super::kv_cache::PcieLink;
+use super::offload::replay_token_cost_s;
+use super::request::RequestId;
+
+/// What the engine knows about one preemption candidate when the
+/// device tier is exhausted.  The engine never offers the oldest live
+/// sequence (unless it is alone) — that exclusion, not the policy, is
+/// what preserves the no-livelock admission induction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VictimCandidate {
+    /// The candidate's request id (monotonic: larger = younger).
+    pub id: RequestId,
+    /// Pages the candidate holds across both tiers — what preempting
+    /// it frees.
+    pub pages_held: usize,
+    /// Device-resident pages — what a swap-out must move.
+    pub device_pages: usize,
+    /// Tokens whose KV is cached (prefilled prompt + generated) — what
+    /// a recompute must replay.
+    pub tokens_cached: usize,
+    /// Tokens still to produce (remaining prompt prefill + remaining
+    /// generation budget) — distance from completion.
+    pub tokens_remaining: usize,
+    /// Whether every device page is solely owned (ref count 1): shared
+    /// pages pin their holder to the device tier, so the candidate
+    /// cannot be swapped, only recomputed.
+    pub swappable: bool,
+}
+
+/// A pluggable victim-selection policy over preemption candidates.
+pub trait ReclaimPolicy {
+    /// The policy's display name (metrics / bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Pick the victim.  `candidates` is never empty; the choice must
+    /// be deterministic (ties broken on `id`).
+    fn select<'a>(&self, candidates: &'a [VictimCandidate]) -> &'a VictimCandidate;
+}
+
+/// FCFS-compatible evict-youngest: the most recently admitted sequence
+/// pays, so requeueing it at the head of the line reconstructs the
+/// original admission order exactly.
+pub struct YoungestVictim;
+
+impl ReclaimPolicy for YoungestVictim {
+    fn name(&self) -> &'static str {
+        "youngest"
+    }
+
+    fn select<'a>(&self, candidates: &'a [VictimCandidate]) -> &'a VictimCandidate {
+        candidates
+            .iter()
+            .max_by_key(|c| c.id)
+            .expect("candidates never empty")
+    }
+}
+
+/// Minimize work thrown away: the candidate holding the fewest pages
+/// loses (ties: youngest).  Best when sequences differ wildly in
+/// length — preempting a 2-block sequence costs far less than a
+/// 20-block one, whichever was admitted first.
+pub struct FewestPagesLost;
+
+impl ReclaimPolicy for FewestPagesLost {
+    fn name(&self) -> &'static str {
+        "fewest-pages-lost"
+    }
+
+    fn select<'a>(&self, candidates: &'a [VictimCandidate]) -> &'a VictimCandidate {
+        candidates
+            .iter()
+            .min_by_key(|c| (c.pages_held, std::cmp::Reverse(c.id)))
+            .expect("candidates never empty")
+    }
+}
+
+/// Minimize latency damage: the candidate closest to completion pays
+/// (ties: youngest) — it will re-enter and finish soonest, so the tail
+/// latency of the whole batch moves least.
+pub struct ClosestToDone;
+
+impl ReclaimPolicy for ClosestToDone {
+    fn name(&self) -> &'static str {
+        "closest-to-done"
+    }
+
+    fn select<'a>(&self, candidates: &'a [VictimCandidate]) -> &'a VictimCandidate {
+        candidates
+            .iter()
+            .min_by_key(|c| (c.tokens_remaining, std::cmp::Reverse(c.id)))
+            .expect("candidates never empty")
+    }
+}
+
+/// Config-level victim-policy selector (`EngineConfig::victim_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Evict-youngest (FCFS-compatible; the default).
+    Youngest,
+    /// Fewest pages lost.
+    FewestPagesLost,
+    /// Closest to completion.
+    ClosestToDone,
+}
+
+impl VictimPolicy {
+    /// Instantiate the policy object.
+    pub fn policy(self) -> Box<dyn ReclaimPolicy> {
+        match self {
+            Self::Youngest => Box::new(YoungestVictim),
+            Self::FewestPagesLost => Box::new(FewestPagesLost),
+            Self::ClosestToDone => Box::new(ClosestToDone),
+        }
+    }
+}
+
+/// How a chosen victim's pages are reclaimed
+/// (`EngineConfig::preempt_mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Per-victim [`RecomputeVsSwap`] cost decision (the default).
+    Auto,
+    /// Always swap out when feasible (fall back to recompute when the
+    /// victim is unswappable or the host tier cannot hold it).
+    Swap,
+    /// Always recompute (the pre-swap behavior; also what a
+    /// `host_kv_budget: 0` engine degenerates to).
+    Recompute,
+}
+
+/// The reclamation chosen for one victim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReclaimDecision {
+    /// Park the victim's block table on the host tier; restore on
+    /// resume.
+    Swap,
+    /// Free the victim's pages; replay its request from the queue head.
+    Recompute,
+}
+
+/// The recompute-vs-swap cost model: modeled seconds to swap a
+/// victim's device pages out and back over the PCIe link, against
+/// modeled seconds to replay its cached tokens (the §4.4 cost bridge —
+/// see [`crate::coordinator::offload::replay_cost_s`]).
+#[derive(Debug)]
+pub struct RecomputeVsSwap {
+    link: PcieLink,
+    page_bytes: usize,
+    /// Replay geometry: (layers, heads, head_dim, typical KV length).
+    replay_geometry: (usize, usize, usize, usize),
+    /// Lazily measured per-token replay cost — deferred so engines
+    /// that never preempt never pay the measurement.
+    replay_token_s: Option<f64>,
+}
+
+impl RecomputeVsSwap {
+    /// A cost model over `link` for pages of `page_bytes`, replaying on
+    /// a model of the given geometry.
+    pub fn new(
+        link: PcieLink,
+        page_bytes: usize,
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        typical_kv: usize,
+    ) -> Self {
+        Self {
+            link,
+            page_bytes,
+            replay_geometry: (layers, heads, head_dim, typical_kv.max(1)),
+            replay_token_s: None,
+        }
+    }
+
+    /// A cost model with a fixed per-token replay cost (tests and
+    /// simulations — no measurement).
+    pub fn with_replay_token_s(link: PcieLink, page_bytes: usize, replay_token_s: f64) -> Self {
+        Self {
+            link,
+            page_bytes,
+            replay_geometry: (1, 1, 1, 1),
+            replay_token_s: Some(replay_token_s),
+        }
+    }
+
+    /// Modeled seconds to swap `device_pages` out now and back on
+    /// resume (two batched transfers).
+    pub fn swap_cost_s(&self, device_pages: usize) -> f64 {
+        2.0 * self.link.transfer_s(device_pages * self.page_bytes)
+    }
+
+    /// Modeled seconds to replay `tokens` cached tokens.
+    pub fn recompute_cost_s(&mut self, tokens: usize) -> f64 {
+        tokens as f64 * self.replay_token_s()
+    }
+
+    fn replay_token_s(&mut self) -> f64 {
+        *self.replay_token_s.get_or_insert_with(|| {
+            let (layers, heads, head_dim, kv) = self.replay_geometry;
+            replay_token_cost_s(layers, heads, head_dim, kv)
+        })
+    }
+}
+
+/// The engine's reclamation policy bundle: victim selection + the
+/// per-victim recompute-vs-swap decision.
+pub struct Reclaimer {
+    policy: Box<dyn ReclaimPolicy>,
+    mode: PreemptMode,
+    cost: RecomputeVsSwap,
+}
+
+impl Reclaimer {
+    /// Bundle a victim policy, a preemption mode and a cost model.
+    pub fn new(policy: VictimPolicy, mode: PreemptMode, cost: RecomputeVsSwap) -> Self {
+        Self { policy: policy.policy(), mode, cost }
+    }
+
+    /// The active victim policy's name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Pick the victim among `candidates` (never empty).
+    pub fn select<'a>(&self, candidates: &'a [VictimCandidate]) -> &'a VictimCandidate {
+        self.policy.select(candidates)
+    }
+
+    /// Decide how the chosen victim's pages are reclaimed.  Swap is
+    /// feasible only when the victim is swappable (no shared pages),
+    /// actually holds device pages, and the host tier can take them —
+    /// the same gating migrations obey, so swap reservations can never
+    /// strand the ladder.
+    pub fn decide(&mut self, victim: &VictimCandidate, host_free_pages: usize) -> ReclaimDecision {
+        let feasible = victim.swappable
+            && victim.device_pages > 0
+            && host_free_pages >= victim.device_pages;
+        match self.mode {
+            PreemptMode::Recompute => ReclaimDecision::Recompute,
+            PreemptMode::Swap if feasible => ReclaimDecision::Swap,
+            PreemptMode::Swap => ReclaimDecision::Recompute,
+            PreemptMode::Auto => {
+                if feasible
+                    && self.cost.swap_cost_s(victim.device_pages)
+                        < self.cost.recompute_cost_s(victim.tokens_cached)
+                {
+                    ReclaimDecision::Swap
+                } else {
+                    ReclaimDecision::Recompute
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(
+        id: RequestId,
+        pages_held: usize,
+        device_pages: usize,
+        tokens_cached: usize,
+        tokens_remaining: usize,
+        swappable: bool,
+    ) -> VictimCandidate {
+        VictimCandidate { id, pages_held, device_pages, tokens_cached, tokens_remaining, swappable }
+    }
+
+    #[test]
+    fn policies_rank_candidates_as_documented() {
+        let cands = vec![
+            cand(2, 12, 12, 40, 30, true), // oldest offered, biggest, far from done
+            cand(3, 4, 4, 10, 2, true),    // smallest, nearly done
+            cand(5, 8, 8, 20, 10, true),   // youngest
+        ];
+        assert_eq!(YoungestVictim.select(&cands).id, 5);
+        assert_eq!(FewestPagesLost.select(&cands).id, 3);
+        assert_eq!(ClosestToDone.select(&cands).id, 3);
+
+        // ties break toward the youngest for the scored policies
+        let tied = vec![cand(2, 4, 4, 10, 5, true), cand(7, 4, 4, 12, 5, true)];
+        assert_eq!(FewestPagesLost.select(&tied).id, 7);
+        assert_eq!(ClosestToDone.select(&tied).id, 7);
+
+        // config enum wires the same objects
+        assert_eq!(VictimPolicy::Youngest.policy().select(&cands).id, 5);
+        assert_eq!(VictimPolicy::FewestPagesLost.policy().select(&cands).id, 3);
+        assert_eq!(VictimPolicy::ClosestToDone.policy().select(&cands).id, 3);
+    }
+
+    #[test]
+    fn auto_mode_swaps_exactly_when_link_beats_replay() {
+        // 1 KiB pages over a 1 GB/s, 10 µs link; replay 1 ms per token:
+        // swapping 4 pages costs 2·(10 µs + 4 KiB/1e9) ≈ 28 µs — far
+        // cheaper than replaying 20 tokens (20 ms).
+        let link = PcieLink::new(1e9, 10e-6);
+        let mut r = Reclaimer::new(
+            VictimPolicy::Youngest,
+            PreemptMode::Auto,
+            RecomputeVsSwap::with_replay_token_s(link, 1024, 1e-3),
+        );
+        let long = cand(4, 4, 4, 20, 10, true);
+        assert_eq!(r.decide(&long, 100), ReclaimDecision::Swap);
+
+        // a 1-token cache (1 ms replay) against a slow link where the
+        // same 4 pages cost 2·(10 ms + …) > 20 ms: recompute wins
+        let slow = PcieLink::new(1e3, 10e-3);
+        let mut r = Reclaimer::new(
+            VictimPolicy::Youngest,
+            PreemptMode::Auto,
+            RecomputeVsSwap::with_replay_token_s(slow, 1024, 1e-3),
+        );
+        let short = cand(4, 4, 4, 1, 10, true);
+        assert_eq!(r.decide(&short, 100), ReclaimDecision::Recompute);
+    }
+
+    #[test]
+    fn swap_gated_like_migrations() {
+        let link = PcieLink::new(1e9, 10e-6);
+        let mk = |mode| {
+            Reclaimer::new(
+                VictimPolicy::Youngest,
+                mode,
+                RecomputeVsSwap::with_replay_token_s(link, 1024, 1.0),
+            )
+        };
+        // unswappable (shared pages) → recompute even in Swap mode
+        let pinned = cand(4, 4, 4, 20, 10, false);
+        assert_eq!(mk(PreemptMode::Swap).decide(&pinned, 100), ReclaimDecision::Recompute);
+        // host tier too small for the victim's device pages → recompute
+        let big = cand(4, 8, 8, 20, 10, true);
+        assert_eq!(mk(PreemptMode::Swap).decide(&big, 7), ReclaimDecision::Recompute);
+        assert_eq!(mk(PreemptMode::Swap).decide(&big, 8), ReclaimDecision::Swap);
+        // nothing device-resident → swapping frees nothing → recompute
+        let hostbound = cand(4, 8, 0, 20, 10, true);
+        assert_eq!(mk(PreemptMode::Swap).decide(&hostbound, 100), ReclaimDecision::Recompute);
+        // forced recompute ignores feasibility
+        assert_eq!(mk(PreemptMode::Recompute).decide(&big, 100), ReclaimDecision::Recompute);
+    }
+
+    #[test]
+    fn swap_cost_scales_with_pages_and_amortizes_latency() {
+        let link = PcieLink::new(1e9, 10e-6);
+        let c = RecomputeVsSwap::with_replay_token_s(link, 1024, 1e-3);
+        let one = c.swap_cost_s(1);
+        let eight = c.swap_cost_s(8);
+        assert!(eight > one);
+        // one batched 8-page round trip beats eight 1-page round trips
+        assert!(eight < 8.0 * one);
+        // out + back: exactly two transfers
+        assert!((one - 2.0 * link.transfer_s(1024)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn measured_replay_cost_is_lazy_and_cached() {
+        let link = PcieLink::default();
+        let mut c = RecomputeVsSwap::new(link, 1024, 2, 4, 8, 32);
+        let a = c.recompute_cost_s(10);
+        let b = c.recompute_cost_s(10);
+        assert!(a > 0.0);
+        assert_eq!(a.to_bits(), b.to_bits(), "per-token cost measured once");
+        assert!(c.recompute_cost_s(20) > a);
+    }
+}

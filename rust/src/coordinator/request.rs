@@ -63,6 +63,12 @@ pub enum Phase {
     Chunking,
     /// Prefilled; generating tokens.
     Decoding,
+    /// Swap-out preempted: the sequence's whole block table is parked
+    /// on the host tier and it takes no steps until the scheduler
+    /// resumes it (before any new admission) — its cached KV survives,
+    /// so resume continues exactly where it stopped instead of
+    /// replaying the prompt.
+    Suspended,
     /// Done (budget exhausted or EOS).
     Finished,
 }

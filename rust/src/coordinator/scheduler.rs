@@ -7,9 +7,13 @@
 //! mid chunked-prefill add a third kind: [`Step::Chunked`] continues
 //! the oldest partially-prefilled sequence, and takes priority over
 //! admitting new work (partial sequences hold KV pages — finishing them
-//! frees capacity fastest).  Under `Fair`, chunks share the prefill
-//! quantum, so long prompts interleave with decodes instead of
-//! monopolizing the engine.
+//! frees capacity fastest).  Swap-out preemption adds a fourth:
+//! [`Step::Resume`] brings a suspended sequence (KV parked on the host
+//! tier) back **before any new admission** — a suspended sequence was
+//! admitted earlier than everything still waiting, so resuming first
+//! preserves FCFS age order and keeps the no-livelock induction intact.
+//! Under `Fair`, chunks and resumes share the prefill quantum, so long
+//! prompts interleave with decodes instead of monopolizing the engine.
 
 use super::batcher::Batcher;
 
@@ -21,6 +25,9 @@ pub enum Step {
     Prefill,
     /// Continue a partially-prefilled (chunked) sequence.
     Chunked,
+    /// Resume a swap-out-suspended sequence (before new admissions).
+    Resume,
+    /// Advance running sequences by one token.
     Decode,
     /// Nothing to do.
     Idle,
@@ -53,28 +60,41 @@ impl Scheduler {
     /// Pick the next step given queue state.  `chunking` counts
     /// sequences mid chunked-prefill (they are not in `active` yet).
     pub fn next_step(&mut self, batcher: &Batcher, active: usize, chunking: usize) -> Step {
-        self.next_step_pressured(batcher, active, chunking, false)
+        self.next_step_pressured(batcher, active, chunking, 0, false)
     }
 
-    /// Like [`Self::next_step`], but `pressure` signals that the KV
-    /// pool cannot place a new sequence's first block: admitting would
-    /// only bounce off the allocator (or trigger a migration/preemption
+    /// Like [`Self::next_step`], but aware of swap-out preemption and
+    /// memory pressure.  `suspended` counts swap-out-suspended
+    /// sequences: they take the admission slot (as [`Step::Resume`])
+    /// before any *new* request is admitted.  `pressure` signals that
+    /// the KV pool cannot place a new sequence's first block: admitting
+    /// — or resuming, which is gated identically because a resumed
+    /// sequence immediately competes for device pages — would only
+    /// bounce off the allocator (or trigger a migration/preemption
     /// storm), so while anything is draining, decode work runs instead.
     /// Continuing a *partial* (chunked) sequence still wins — partial
     /// sequences hold pages, and finishing them frees capacity fastest.
-    /// With nothing to drain, admission proceeds regardless (the
-    /// engine's migrate/preempt machinery is then the right tool).
+    /// With nothing to drain, admission/resume proceeds regardless (the
+    /// engine's migrate/swap/preempt machinery is then the right tool).
     pub fn next_step_pressured(
         &mut self,
         batcher: &Batcher,
         active: usize,
         chunking: usize,
+        suspended: usize,
         pressure: bool,
     ) -> Step {
-        let has_prefill_work = batcher.waiting() > 0 || chunking > 0;
+        let has_prefill_work = batcher.waiting() > 0 || chunking > 0 || suspended > 0;
         let has_active = active > 0;
-        // continuing a partial sequence beats admitting a new one
-        let prefill_kind = if chunking > 0 { Step::Chunked } else { Step::Prefill };
+        // continuing a partial sequence beats resuming a suspended one
+        // beats admitting a new one
+        let prefill_kind = if chunking > 0 {
+            Step::Chunked
+        } else if suspended > 0 {
+            Step::Resume
+        } else {
+            Step::Prefill
+        };
         let step = match (has_prefill_work, has_active, self.policy) {
             (false, false, _) => Step::Idle,
             (true, false, _) => prefill_kind,
@@ -90,12 +110,12 @@ impl Scheduler {
             }
         };
         let step = match step {
-            Step::Prefill if pressure && has_active => Step::Decode,
+            Step::Prefill | Step::Resume if pressure && has_active => Step::Decode,
             s => s,
         };
         match step {
             Step::Decode => self.decodes_since_prefill += 1,
-            Step::Prefill | Step::Chunked => self.decodes_since_prefill = 0,
+            Step::Prefill | Step::Chunked | Step::Resume => self.decodes_since_prefill = 0,
             Step::Idle => {}
         }
         step
@@ -210,20 +230,20 @@ mod tests {
         // under pressure, admitting new work yields to decode — even
         // for PrefillFirst — as long as something is draining
         let mut s = Scheduler::new(Policy::PrefillFirst);
-        assert_eq!(s.next_step_pressured(&batcher(2), 3, 0, true), Step::Decode);
+        assert_eq!(s.next_step_pressured(&batcher(2), 3, 0, 0, true), Step::Decode);
         // with nothing active, admission must proceed (or nothing ever runs)
         let mut s = Scheduler::new(Policy::PrefillFirst);
-        assert_eq!(s.next_step_pressured(&batcher(2), 0, 0, true), Step::Prefill);
+        assert_eq!(s.next_step_pressured(&batcher(2), 0, 0, 0, true), Step::Prefill);
         // chunked continuation is not admission: it still runs — the
         // partial sequence holds pages and finishing it frees them
         let mut s = Scheduler::new(Policy::PrefillFirst);
-        assert_eq!(s.next_step_pressured(&batcher(0), 3, 1, true), Step::Chunked);
+        assert_eq!(s.next_step_pressured(&batcher(0), 3, 1, 0, true), Step::Chunked);
         // once pressure lifts, the Fair quantum admits immediately
         let mut s = Scheduler::new(Policy::Fair { quantum: 1 });
         let b = batcher(1);
-        assert_eq!(s.next_step_pressured(&b, 1, 0, true), Step::Decode);
-        assert_eq!(s.next_step_pressured(&b, 1, 0, true), Step::Decode);
-        assert_eq!(s.next_step_pressured(&b, 1, 0, false), Step::Prefill);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 0, true), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 0, true), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 0, false), Step::Prefill);
     }
 
     #[test]
@@ -231,5 +251,104 @@ mod tests {
         let mut s = Scheduler::new(Policy::DecodeFirst);
         assert_eq!(s.next_step(&batcher(0), 1, 1), Step::Decode);
         assert_eq!(s.next_step(&batcher(0), 0, 1), Step::Chunked);
+    }
+
+    // --- swap-out suspension: Step::Resume ----------------------------
+
+    #[test]
+    fn resume_takes_the_admission_slot_before_new_requests() {
+        // a suspended sequence was admitted before everything still
+        // waiting — it must come back first
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(3), 1, 0, 2, false), Step::Resume);
+        // …but a partial (chunked) sequence still beats it: it holds
+        // pages and finishing it frees capacity fastest
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(3), 1, 1, 2, false), Step::Chunked);
+        // with nothing else in the system, a lone suspended sequence
+        // still resumes (never strands)
+        let mut s = Scheduler::new(Policy::Fair { quantum: 4 });
+        assert_eq!(s.next_step_pressured(&batcher(0), 0, 0, 1, false), Step::Resume);
+    }
+
+    #[test]
+    fn resume_is_pressure_gated_like_admission() {
+        // under pressure with active work draining, resume defers — a
+        // resumed sequence immediately competes for device pages
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(0), 2, 0, 1, true), Step::Decode);
+        // with nothing draining, resume proceeds regardless
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_pressured(&batcher(0), 0, 0, 1, true), Step::Resume);
+    }
+
+    #[test]
+    fn fair_quantum_schedules_resumes() {
+        // a suspended sequence shares the prefill quantum and resets it
+        let mut s = Scheduler::new(Policy::Fair { quantum: 2 });
+        let b = batcher(0);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 1, false), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 1, false), Step::Decode);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 1, false), Step::Resume);
+        assert_eq!(s.next_step_pressured(&b, 1, 0, 1, false), Step::Decode);
+    }
+
+    // --- next_step_pressured edge cases (previously only covered
+    // indirectly through the engine integration tests) ----------------
+
+    #[test]
+    fn all_running_drain_under_pressure_never_idles() {
+        // nothing waiting, nothing chunked, pressure on: the only legal
+        // answer is Decode until the actives drain to zero…
+        let mut s = Scheduler::new(Policy::Fair { quantum: 1 });
+        let b = batcher(0);
+        for active in (1..=4).rev() {
+            assert_eq!(s.next_step_pressured(&b, active, 0, 0, true), Step::Decode);
+        }
+        // …and with everything drained the system goes idle, pressure
+        // notwithstanding
+        assert_eq!(s.next_step_pressured(&b, 0, 0, 0, true), Step::Idle);
+    }
+
+    #[test]
+    fn chunked_only_queue_runs_chunks_under_any_policy_and_pressure() {
+        // only partial sequences exist: every policy must continue them
+        // (they are the only work), pressure on or off
+        for policy in [Policy::PrefillFirst, Policy::DecodeFirst, Policy::Fair { quantum: 1 }] {
+            for pressure in [false, true] {
+                let mut s = Scheduler::new(policy);
+                assert_eq!(
+                    s.next_step_pressured(&batcher(0), 0, 3, 0, pressure),
+                    Step::Chunked,
+                    "{policy:?} pressure={pressure}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pressure_flapping_preserves_the_fair_quantum() {
+        // pressure toggling on and off between calls must not corrupt
+        // the anti-starvation counter: deferred prefills count as
+        // decodes, and the first unpressured slot past the quantum
+        // admits immediately.
+        let mut s = Scheduler::new(Policy::Fair { quantum: 2 });
+        let b = batcher(2);
+        let pressure = [true, false, true, true, false, false, true, false];
+        let mut admitted = 0;
+        let mut since_admit = 0;
+        for &p in &pressure {
+            match s.next_step_pressured(&b, 2, 0, 0, p) {
+                Step::Prefill => {
+                    assert!(!p, "admission never fires under pressure with actives");
+                    admitted += 1;
+                    since_admit = 0;
+                }
+                Step::Decode => since_admit += 1,
+                other => panic!("unexpected step {other:?}"),
+            }
+            assert!(since_admit <= 4, "pressure flapping must not starve admission");
+        }
+        assert!(admitted >= 2, "unpressured quantum slots must admit, got {admitted}");
     }
 }

@@ -33,11 +33,28 @@ pub struct EngineMetrics {
     pub migrations: u64,
     pub migrated_bytes: u64,
     pub pcie_modeled_s: f64,
-    /// Page-allocation failures (each one triggers prefix-cache
-    /// eviction, then a migration, then a preemption attempt) and
-    /// sequences actually preempted back to the queue.
+    /// Cold pages promoted back host→device when pressure cleared:
+    /// batched transfers performed and pages moved (includes swap-in
+    /// restores).
+    pub promotions: u64,
+    pub promoted_pages: u64,
+    /// Link transfers (either direction) that folded two or more block
+    /// groups — possibly from several sequences — into one modeled
+    /// PCIe charge.
+    pub grouped_transfers: u64,
+    /// Page-allocation failures (each one runs the reclamation ladder:
+    /// prefix-cache eviction, then migration, then swap-out or
+    /// recompute preemption) and sequences actually preempted — by
+    /// either mechanism; `swaps_out` counts the swap subset.
     pub alloc_failures: u64,
     pub preemptions: u64,
+    /// Swap-out preemptions (block table parked on the host tier) and
+    /// the matching resumes.
+    pub swaps_out: u64,
+    pub swaps_in: u64,
+    /// Cached tokens (prefilled prompt + generated) that swap-out
+    /// preserved — work a recompute preemption would have replayed.
+    pub recompute_tokens_avoided: u64,
     /// Prefix sharing (paged engines, per-request opt-in): pages
     /// currently retained by the prefix index after the latest step.
     pub shared_pages: u64,
@@ -49,6 +66,13 @@ pub struct EngineMetrics {
     /// Prompt tokens whose prefill was skipped thanks to an adopted
     /// prefix run.
     pub prefix_tokens_saved: u64,
+    /// Per-request time-to-first-token histogram (seconds from
+    /// submission to the first generated token).
+    pub ttft: LatencyHistogram,
+    /// Per-request time-per-output-token histogram (seconds per
+    /// generated token over the decode phase) — groundwork for
+    /// scheduler latency SLOs.
+    pub tpot: LatencyHistogram,
 }
 
 impl EngineMetrics {
@@ -261,6 +285,35 @@ mod tests {
         let z = EngineMetrics::default();
         assert_eq!(z.host_page_occupancy(), 0.0);
         assert_eq!(z.mean_migration_batch(), 0.0);
+    }
+
+    #[test]
+    fn reclaim_counters_and_latency_histograms() {
+        let mut m = EngineMetrics {
+            preemptions: 5,
+            swaps_out: 3,
+            swaps_in: 3,
+            recompute_tokens_avoided: 120,
+            promotions: 2,
+            promoted_pages: 8,
+            grouped_transfers: 1,
+            ..Default::default()
+        };
+        assert!(m.swaps_out <= m.preemptions, "swaps are a preemption subset");
+        m.ttft.record(0.010);
+        m.ttft.record(0.020);
+        m.tpot.record(0.002);
+        assert_eq!(m.ttft.count(), 2);
+        assert_eq!(m.tpot.count(), 1);
+        assert!(m.ttft.quantile_s(0.5) > 0.0);
+        // cloned metrics carry the histograms (the server snapshot path)
+        let snap = m.clone();
+        assert_eq!(snap.ttft.count(), 2);
+        assert!((snap.tpot.mean_s() - 0.002).abs() < 1e-9);
+        // a fresh engine reports empty histograms, not NaNs
+        let z = EngineMetrics::default();
+        assert_eq!(z.ttft.count(), 0);
+        assert_eq!(z.tpot.quantile_s(0.99), 0.0);
     }
 
     #[test]

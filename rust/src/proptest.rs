@@ -583,6 +583,187 @@ mod attention_props {
         });
     }
 
+    /// Swap-out/restore and promotion are pure placement: over random
+    /// schedules of per-block migrations, whole-table suspends, full
+    /// restores and single-block promotions — interleaved with KV
+    /// writes, across page sizes, GQA shapes and thread counts — the
+    /// tiered gather stays bit-identical to contiguous decode, and the
+    /// two-direction transfer accounting stays coherent (bytes = pages
+    /// × page_bytes per direction, batches iff pages, no page leaked
+    /// across either tier).
+    #[test]
+    fn prop_suspend_resume_promote_gather_bit_identical() {
+        check(40, |rng| {
+            let (h, kvh) = gqa_pair(rng);
+            let d = *rng.pick(&[4usize, 8]);
+            let stride = rng.range(1, 33);
+            let nseq = rng.range(1, 5);
+            let page_size = rng.range(1, 9);
+            let threads = rng.range(1, 5);
+
+            let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+            let max_blocks = stride.div_ceil(page_size);
+            let cap = nseq * kvh * max_blocks + 2;
+            let mut pools = TieredPagePool::new(page_size, d, cap, cap, PcieLink::default());
+
+            let mut qs = Vec::new();
+            let mut ks = Vec::new();
+            let mut vs = Vec::new();
+            let mut lens = Vec::new();
+            let mut tables = Vec::new();
+            for i in 0..nseq {
+                qs.push(rng.f32_vec(h * d));
+                ks.push(rng.f32_vec(kvh * stride * d));
+                vs.push(rng.f32_vec(kvh * stride * d));
+                lens.push(rng.range(0, stride + 1));
+                let mut t = BlockTable::new(cache, page_size);
+
+                // write a random prefix on-device…
+                let split = rng.range(0, lens[i] + 1);
+                let write = |t: &BlockTable, pools: &mut TieredPagePool, lo: usize, hi: usize| {
+                    for g in 0..kvh {
+                        for r in lo..hi {
+                            let (tier, page, slot) = t.locate_tiered(0, g, r);
+                            let src = g * stride * d + r * d;
+                            pools.write_row(
+                                tier,
+                                page,
+                                slot,
+                                &ks[i][src..src + d],
+                                &vs[i][src..src + d],
+                            );
+                        }
+                    }
+                };
+                t.ensure_capacity(split, pools.device_mut()).unwrap();
+                write(&t, &mut pools, 0, split);
+                // …run a random placement schedule: single-block
+                // migrations, a whole-table suspend (possibly restored
+                // right away), single-block promotions…
+                t.mark_gathered(i as u64 + 1);
+                match rng.below(4) {
+                    0 => {
+                        for b in 0..t.blocks() {
+                            if rng.bool() {
+                                t.migrate_block_to_host(b, &mut pools).unwrap();
+                            }
+                        }
+                    }
+                    1 => {
+                        t.suspend_to_host(&mut pools).unwrap();
+                        prop_ensure!(
+                            t.blocks() == 0 || t.device_blocks() == 0,
+                            "suspend must park every device block"
+                        );
+                        if rng.bool() {
+                            t.resume_from_host(&mut pools).unwrap();
+                            prop_ensure!(t.host_blocks() == 0, "restore must be total");
+                        }
+                    }
+                    2 => {
+                        t.suspend_to_host(&mut pools).unwrap();
+                        // promote a random subset back, hottest-first
+                        // API: promotion order must not matter
+                        while let Some((_, b)) = t.hottest_host_block() {
+                            if rng.bool() {
+                                t.promote_block_to_device(b, &mut pools).unwrap();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                // …then finish writing (rows may land in parked
+                // blocks) and maybe suspend once more
+                t.ensure_capacity(lens[i], pools.device_mut()).unwrap();
+                write(&t, &mut pools, split, lens[i]);
+                if rng.bool() {
+                    t.suspend_to_host(&mut pools).unwrap();
+                }
+                tables.push(t);
+            }
+
+            let shape = BatchShape::new(h, kvh, d, stride);
+            let n = nseq * h * d;
+            let wp = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+
+            let contig: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn::contig(&qs[i], &ks[i], &vs[i], lens[i]))
+                .collect();
+            let mut out_c = vec![0.0; n];
+            batch_decode_attention(&shape, &contig, &mut out_c, &wp);
+
+            let tiered: Vec<SeqAttn<'_>> = (0..nseq)
+                .map(|i| SeqAttn {
+                    q: &qs[i],
+                    kv: SeqKv::Tiered {
+                        k_device: pools.device().k_store(),
+                        v_device: pools.device().v_store(),
+                        k_host: pools.host().k_store(),
+                        v_host: pools.host().v_store(),
+                        pages: tables[i].layer_pages(0),
+                        tiers: tables[i].layer_tiers(0),
+                        max_blocks: tables[i].max_blocks(),
+                        page_size,
+                    },
+                    kv_len: lens[i],
+                })
+                .collect();
+            let mut out_t = vec![0.0; n];
+            batch_decode_attention(&shape, &tiered, &mut out_t, &wp);
+
+            prop_ensure!(
+                out_c == out_t,
+                "suspend/restore/promote changed gather bits (h={h} kvh={kvh} d={d} \
+                 stride={stride} page_size={page_size} threads={threads})"
+            );
+
+            // two-direction accounting coherence
+            let st = pools.stats();
+            prop_ensure!(
+                st.bytes_moved == st.pages_moved * pools.page_bytes() as u64,
+                "out bytes {} != pages {} × page_bytes",
+                st.bytes_moved,
+                st.pages_moved
+            );
+            prop_ensure!(
+                st.promoted_bytes == st.pages_promoted * pools.page_bytes() as u64,
+                "in bytes {} != pages {} × page_bytes",
+                st.promoted_bytes,
+                st.pages_promoted
+            );
+            prop_ensure!(
+                (st.batches == 0) == (st.pages_moved == 0),
+                "out batches {} vs pages {}",
+                st.batches,
+                st.pages_moved
+            );
+            prop_ensure!(
+                (st.promotions == 0) == (st.pages_promoted == 0),
+                "in batches {} vs pages {}",
+                st.promotions,
+                st.pages_promoted
+            );
+            prop_ensure!(
+                st.pages_promoted <= st.pages_moved,
+                "cannot promote pages that never migrated"
+            );
+
+            // full drain: no page leaked on either tier
+            for mut t in tables {
+                t.release_all_tiered(&mut pools);
+            }
+            prop_ensure!(
+                pools.free_pages_total() == pools.total_pages(),
+                "page leak: {} free of {}",
+                pools.free_pages_total(),
+                pools.total_pages()
+            );
+            Ok(())
+        });
+    }
+
     /// Shared-prefix gather (an adopter's table pointing at the owner's
     /// pages through a real `PrefixIndex`, split by copy-on-write at
     /// the divergence point) is bit-identical to fully unshared tables
