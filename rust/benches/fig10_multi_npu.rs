@@ -1,5 +1,14 @@
 //! Regenerates the paper experiment — see fastattn::reports for the
-//! workload, parameters, and paper-vs-measured comparison logic.
+//! workload, parameters, and paper-vs-measured comparison logic —
+//! then runs the multi-device serving sweep (sharded engine + paper
+//! shapes, token parity asserted) and writes `BENCH_multi.json`.
 fn main() {
     fastattn::reports::npu::fig10_multi_npu().print();
+    println!();
+    fastattn::reports::multi::multi_table().print();
+    let path = std::path::Path::new("BENCH_multi.json");
+    match fastattn::reports::multi::write_bench_multi(path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nBENCH_multi.json not written: {e}"),
+    }
 }

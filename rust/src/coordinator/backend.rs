@@ -127,12 +127,93 @@ pub trait Backend {
     ) -> Result<Vec<f32>> {
         bail!("backend does not support chunked prefill")
     }
+
+    /// Simulated devices the backend shards KV heads across.  `1` for
+    /// single-device backends; the engine builds one page pool and one
+    /// block table per shard and drives every paged step through the
+    /// `*_sharded` entry points below.
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    /// Cumulative modeled tiling-AllReduce accounting for the sharded
+    /// combine (see [`AllReduceStats`]); single-device backends report
+    /// zeros.  The engine copies this into
+    /// [`EngineMetrics`](crate::metrics::EngineMetrics) after each
+    /// paged step, alongside `pcie_modeled_s`.
+    fn comm_stats(&self) -> AllReduceStats {
+        AllReduceStats::default()
+    }
+
+    /// One decode step over per-shard paged KV: `rows[i].tables[s]`
+    /// pairs with `pools[s]`.  The default covers single-device
+    /// backends by delegating to [`Backend::decode_paged`]; sharded
+    /// backends override it to run per-shard attention and combine the
+    /// head slices with the tiling-AllReduce schedule.
+    fn decode_paged_sharded(
+        &mut self,
+        rows: &[ShardedRow<'_>],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<f32>> {
+        if pools.len() != 1 {
+            bail!("backend cannot execute across {} KV shards", pools.len());
+        }
+        let prows: Vec<PagedRow<'_>> = rows
+            .iter()
+            .map(|r| PagedRow { table: &r.tables[0], token: r.token, pos: r.pos })
+            .collect();
+        self.decode_paged(&prows, &mut pools[0])
+    }
+
+    /// Chunked prefill over per-shard paged KV (`tables[s]` pairs with
+    /// `pools[s]`); default delegates to [`Backend::prefill_chunk`] for
+    /// the single-shard case.
+    fn prefill_chunk_sharded(
+        &mut self,
+        tokens: &[i32],
+        start_pos: usize,
+        tables: &[BlockTable],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<f32>> {
+        if pools.len() != 1 || tables.len() != 1 {
+            bail!("backend cannot execute across {} KV shards", pools.len());
+        }
+        self.prefill_chunk(tokens, start_pos, &tables[0], &mut pools[0])
+    }
+}
+
+/// Cumulative modeled timing/volume of the per-tile B-allreduce combine
+/// a sharded backend performs (accounting only — the numerics go
+/// through the real in-process ring; see `coordinator::sharded`).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct AllReduceStats {
+    /// B-allreduce operations issued (one per tile per layer step).
+    pub tiles: u64,
+    /// Activation bytes combined across shards.
+    pub bytes: u64,
+    /// Total modeled communication seconds (as if serialized).
+    pub modeled_s: f64,
+    /// Communication seconds hidden under the next tile's compute.
+    pub hidden_s: f64,
+    /// Modeled makespan of the executed (overlapped or serial) schedule.
+    pub makespan_s: f64,
+    /// Modeled makespan of the serial baseline over the same workload —
+    /// `serial_makespan_s / makespan_s` is the tiling-AllReduce speedup.
+    pub serial_makespan_s: f64,
 }
 
 /// One paged decode row: the sequence behind `table` feeds `token` at
 /// cache position `pos`.
 pub struct PagedRow<'a> {
     pub table: &'a BlockTable,
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// One sharded paged decode row: `tables[s]` is the sequence's block
+/// table on shard `s` and pairs with `pools[s]` of the sharded call.
+pub struct ShardedRow<'a> {
+    pub tables: &'a [BlockTable],
     pub token: i32,
     pub pos: usize,
 }
@@ -296,13 +377,15 @@ impl HostModelConfig {
 }
 
 /// Per-layer projection weights, row-major `[fan_in, fan_out]`.
-struct LayerWeights {
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
-    wo: Vec<f32>,
-    w1: Vec<f32>,
-    w2: Vec<f32>,
+/// Crate-visible so the sharded backend can run per-shard column slices
+/// of the same projections (see `coordinator::sharded`).
+pub(crate) struct LayerWeights {
+    pub(crate) wq: Vec<f32>,
+    pub(crate) wk: Vec<f32>,
+    pub(crate) wv: Vec<f32>,
+    pub(crate) wo: Vec<f32>,
+    pub(crate) w1: Vec<f32>,
+    pub(crate) w2: Vec<f32>,
 }
 
 /// A deterministic tiny transformer running decode attention through the
@@ -318,7 +401,7 @@ pub struct HostModelBackend {
 }
 
 /// `out[j] = Σ_i x[i] · w[i * cols + j]` (row-major mat-vec).
-fn matvec(x: &[f32], w: &[f32], out: &mut [f32]) {
+pub(crate) fn matvec(x: &[f32], w: &[f32], out: &mut [f32]) {
     let cols = out.len();
     debug_assert_eq!(w.len(), x.len() * cols);
     out.fill(0.0);
@@ -331,7 +414,7 @@ fn matvec(x: &[f32], w: &[f32], out: &mut [f32]) {
 }
 
 /// RMS-normalize into a fresh vector (parameter-free).
-fn rmsnorm(x: &[f32]) -> Vec<f32> {
+pub(crate) fn rmsnorm(x: &[f32]) -> Vec<f32> {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len().max(1) as f32;
     let inv = 1.0 / (ms + 1e-6).sqrt();
     x.iter().map(|v| v * inv).collect()
@@ -398,20 +481,36 @@ impl HostModelBackend {
         Self { cfg, info, cache, embed, layers: layer_weights, pool: WorkPool::new(par) }
     }
 
-    fn d_model(&self) -> usize {
+    pub(crate) fn d_model(&self) -> usize {
         self.info.d_model
+    }
+
+    /// The per-layer projection weights (for the sharded backend's
+    /// column-sliced execution of the same model).
+    pub(crate) fn layer_weights(&self) -> &[LayerWeights] {
+        &self.layers
+    }
+
+    /// The backend's batched-attention work pool.
+    pub(crate) fn work_pool(&self) -> &WorkPool {
+        &self.pool
+    }
+
+    /// The full (unsharded) cache geometry this model was built for.
+    pub(crate) fn cache_shape(&self) -> CacheShape {
+        self.cache
     }
 
     /// Embedding row of a token (ids folded into the vocab — prompts are
     /// synthetic and may exceed it).
-    fn embed_row(&self, token: i32) -> Vec<f32> {
+    pub(crate) fn embed_row(&self, token: i32) -> Vec<f32> {
         let v = self.info.vocab;
         let t = (token.rem_euclid(v as i32)) as usize;
         self.embed[t * self.d_model()..][..self.d_model()].to_vec()
     }
 
     /// Tied unembedding: `logits[v] = rmsnorm(x) · embed[v]`.
-    fn logits_row(&self, x: &[f32], out: &mut [f32]) {
+    pub(crate) fn logits_row(&self, x: &[f32], out: &mut [f32]) {
         let d = self.d_model();
         let h = rmsnorm(x);
         for (v, o) in out.iter_mut().enumerate() {

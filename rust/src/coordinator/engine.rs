@@ -61,11 +61,11 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{ArtifactBackend, Backend, PagedRow};
+use super::backend::{ArtifactBackend, Backend, ShardedRow};
 use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
     kv_page_bytes, pack_batch, unpack_batch, BlockTable, CachePool, CacheShape, PageAllocError,
-    PcieLink, PrefixIndex, SeqCache, Tier, TieredPagePool,
+    PcieLink, PrefixIndex, SeqCache, ShardedTable, Tier, TieredPagePool,
 };
 use super::reclaim::{
     PreemptMode, ReclaimDecision, Reclaimer, RecomputeVsSwap, VictimCandidate, VictimPolicy,
@@ -80,8 +80,9 @@ use crate::runtime::Runtime;
 enum SeqStore {
     /// A contiguous `[L,1,Nkv,S,D]` slab in the tiered cache pool.
     Contig { cache: SeqCache, tier: Tier },
-    /// Pages named by a block table in the engine's page pool.
-    Paged { table: BlockTable },
+    /// Per-shard block tables (one per simulated device, mirrored in
+    /// lockstep) naming pages in the engine's per-shard page pools.
+    Paged { table: ShardedTable },
 }
 
 /// A live sequence.
@@ -197,7 +198,10 @@ impl Default for EngineConfig {
 /// The engine's KV backing.
 enum EngineKv {
     Contig(CachePool),
-    Paged(TieredPagePool),
+    /// One tiered pool per shard (a single pool on single-device
+    /// backends).  Shards mirror page occupancy in lockstep, so
+    /// capacity gates consult `pools[0]` and ladder ops run on all.
+    Paged(Vec<TieredPagePool>),
 }
 
 /// The serving engine: submit prompts, step the scheduler, drain
@@ -222,6 +226,12 @@ enum EngineKv {
 pub struct Engine {
     backend: Box<dyn Backend>,
     shape: CacheShape,
+    /// Per-shard cache shape: `shape` with `kv_heads / n_shards`.
+    /// Equal to `shape` on single-device backends.
+    shard_shape: CacheShape,
+    /// Simulated tensor-parallel devices behind the backend (1 =
+    /// single device).
+    n_shards: usize,
     batcher: Batcher,
     scheduler: Scheduler,
     kv: EngineKv,
@@ -263,6 +273,7 @@ impl Engine {
     /// Build an engine over any execution backend.
     pub fn with_backend(mut backend: Box<dyn Backend>, cfg: EngineConfig) -> Self {
         backend.set_parallel(cfg.parallel);
+        let n_shards = backend.shard_count().max(1);
         let m = backend.model();
         let shape = CacheShape {
             layers: m.n_layers,
@@ -270,6 +281,13 @@ impl Engine {
             max_seq: m.max_seq,
             head_dim: m.head_dim,
         };
+        assert_eq!(
+            shape.kv_heads % n_shards,
+            0,
+            "{} kv heads not divisible across {n_shards} shards",
+            shape.kv_heads
+        );
+        let shard_shape = CacheShape { kv_heads: shape.kv_heads / n_shards, ..shape };
         let paged = match cfg.kv_layout {
             KvLayout::Auto => backend.supports_paged(),
             KvLayout::Contiguous => false,
@@ -297,34 +315,48 @@ impl Engine {
             max_seq_tokens: shape.max_seq,
             allow_chunked: paged,
         });
+        // one pool per shard, each sized to its device's full budget
+        // (per-device memory: adding shards adds capacity, it does not
+        // split one budget); `shard_shape` keeps per-shard page demand
+        // and block-group size consistent with the sharded KV heads.
         let kv = if paged {
-            EngineKv::Paged(TieredPagePool::for_budget(
-                shape,
-                cfg.page_size,
-                cfg.device_kv_budget,
-                cfg.host_kv_budget,
-                cfg.pcie,
-            ))
+            EngineKv::Paged(
+                (0..n_shards)
+                    .map(|_| {
+                        TieredPagePool::for_budget(
+                            shard_shape,
+                            cfg.page_size,
+                            cfg.device_kv_budget,
+                            cfg.host_kv_budget,
+                            cfg.pcie,
+                        )
+                    })
+                    .collect(),
+            )
         } else {
             EngineKv::Contig(CachePool::new(shape, cfg.device_kv_budget))
         };
-        let prefix =
-            paged.then(|| PrefixIndex::new(shape, cfg.page_size, cfg.prefix_cache_entries));
+        // prefix sharing stays single-device: shared runs live in one
+        // pool and the sharded path never adopts them.
+        let prefix = (paged && n_shards == 1)
+            .then(|| PrefixIndex::new(shard_shape, cfg.page_size, cfg.prefix_cache_entries));
         let reclaim = Reclaimer::new(
             cfg.victim_policy,
             cfg.preempt_mode,
             RecomputeVsSwap::new(
                 cfg.pcie,
-                kv_page_bytes(cfg.page_size, shape.head_dim),
-                shape.layers,
-                m.n_heads,
-                shape.head_dim,
-                shape.max_seq / 2,
+                kv_page_bytes(cfg.page_size, shard_shape.head_dim),
+                shard_shape.layers,
+                m.n_heads / n_shards,
+                shard_shape.head_dim,
+                shard_shape.max_seq / 2,
             ),
         );
         Self {
             backend,
             shape,
+            shard_shape,
+            n_shards,
             batcher,
             scheduler: Scheduler::new(cfg.policy),
             kv,
@@ -355,27 +387,29 @@ impl Engine {
     /// trailing partial group is dead capacity.  This is what makes the
     /// no-livelock induction go through — the oldest sequence alone can
     /// always grow to `usable_pages` by migrating its own cold blocks.
-    fn usable_pages(&self, pools: &TieredPagePool) -> usize {
-        let group = self.shape.layers * self.shape.kv_heads;
-        (pools.device().num_pages() / group + pools.host().num_pages() / group) * group
+    fn usable_pages(&self, pool: &TieredPagePool) -> usize {
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+        (pool.device().num_pages() / group + pool.host().num_pages() / group) * group
     }
 
     /// Submit a prompt; returns its request id.
     pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams) -> Result<RequestId> {
         if let EngineKv::Paged(pools) = &self.kv {
-            let group = self.shape.layers * self.shape.kv_heads;
-            if pools.device().num_pages() < group {
+            let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+            if pools[0].device().num_pages() < group {
                 bail!(
                     "device page pool holds {} pages but one block group needs {group}",
-                    pools.device().num_pages()
+                    pools[0].device().num_pages()
                 );
             }
+            // shards mirror occupancy, so shard 0's per-shard demand
+            // and capacity gate admission for the whole group
             let need = BlockTable::pages_needed(
-                self.shape,
+                self.shard_shape,
                 self.page_size,
                 prompt.len() + params.max_new_tokens,
             );
-            let usable = self.usable_pages(pools);
+            let usable = self.usable_pages(&pools[0]);
             if need > usable {
                 bail!(
                     "request needs {need} KV pages ({} tokens), tiers hold only {usable} usable",
@@ -415,8 +449,8 @@ impl Engine {
         // pages.
         let pressure = match &self.kv {
             EngineKv::Paged(pools) => {
-                let group = self.shape.layers * self.shape.kv_heads;
-                pools.device().free_pages() < group
+                let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+                pools[0].device().free_pages() < group
             }
             EngineKv::Contig(_) => false,
         };
@@ -620,21 +654,23 @@ impl Engine {
             return Ok(false);
         };
         let need = BlockTable::pages_needed(
-            self.shape,
+            self.shard_shape,
             self.page_size,
             req.prompt.len() + req.params.max_new_tokens,
         );
         // same group rounding as the submit gate: a tier's partial
-        // trailing group is dead capacity and must not admit anyone
-        let group = self.shape.layers * self.shape.kv_heads;
+        // trailing group is dead capacity and must not admit anyone.
+        // Shard 0 stands for all shards — occupancy mirrors.
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
         loop {
-            let usable_free =
-                (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
+            let usable_free = (pools[0].device().free_pages() / group
+                + pools[0].host().free_pages() / group)
+                * group;
             if usable_free >= need {
                 break;
             }
             let freed = match &mut self.prefix {
-                Some(ix) => ix.evict_idle(pools.device_mut()),
+                Some(ix) => ix.evict_idle(pools[0].device_mut()),
                 None => 0,
             };
             if freed == 0 {
@@ -645,11 +681,13 @@ impl Engine {
             }
         }
         let id = req.id;
-        let mut table = BlockTable::new(self.shape, self.page_size);
+        let mut table = ShardedTable::new(self.shard_shape, self.n_shards, self.page_size);
         let mut shared_tokens = 0;
         if req.params.share_prefix {
+            // the index exists only on single-device engines, where
+            // the primary table is the whole sequence
             if let Some(ix) = &mut self.prefix {
-                shared_tokens = ix.adopt(&req.prompt, &mut table, pools.device_mut());
+                shared_tokens = ix.adopt(&req.prompt, table.primary_mut(), pools[0].device_mut());
             }
         }
         if shared_tokens > 0 {
@@ -696,7 +734,7 @@ impl Engine {
                 bail!("chunked sequence without a page pool");
             };
             self.backend
-                .prefill_chunk(&s.prompt[start..end], start, table, pools)
+                .prefill_chunk_sharded(&s.prompt[start..end], start, table.tables(), pools)
                 .with_context(|| format!("prefill chunk {start}..{end} of seq {id}"))?
         };
         self.gather_clock += 1;
@@ -715,7 +753,7 @@ impl Engine {
                 if let (Some(ix), EngineKv::Paged(pools), SeqStore::Paged { table }) =
                     (&mut self.prefix, &mut self.kv, &s.store)
                 {
-                    ix.register(&s.prompt, table, pools.device_mut());
+                    ix.register(&s.prompt, table.primary(), pools[0].device_mut());
                 }
             }
             // first generated token from the last chunk's logits
@@ -759,21 +797,21 @@ impl Engine {
             return Ok(());
         }
         let logits = {
-            let rows: Vec<PagedRow<'_>> = ids
+            let rows: Vec<ShardedRow<'_>> = ids
                 .iter()
                 .map(|id| {
                     let s = &self.seqs[id];
                     let SeqStore::Paged { table } = &s.store else {
                         unreachable!("paged engine tracks paged sequences");
                     };
-                    PagedRow { table, token: s.last_token(), pos: s.pos() }
+                    ShardedRow { tables: table.tables(), token: s.last_token(), pos: s.pos() }
                 })
                 .collect();
             let EngineKv::Paged(pools) = &mut self.kv else {
                 bail!("paged decode on a contiguous engine");
             };
             self.backend
-                .decode_paged(&rows, pools)
+                .decode_paged_sharded(&rows, pools)
                 .with_context(|| format!("paged decode step b{}", ids.len()))?
         };
         let vocab = self.backend.model().vocab;
@@ -850,9 +888,9 @@ impl Engine {
                 let SeqStore::Paged { table } = &mut s.store else {
                     bail!("ensure_writable on a contiguous sequence");
                 };
-                let mut res = table.ensure_capacity(tokens, pools.device_mut()).map(|()| 0);
+                let mut res = table.ensure_capacity(tokens, pools.as_mut_slice()).map(|()| 0);
                 if res.is_ok() {
-                    res = table.cow_unshare(write_from, tokens, pools.device_mut());
+                    res = table.cow_unshare(write_from, tokens, pools.as_mut_slice());
                 }
                 match res {
                     Ok(splits) => {
@@ -918,7 +956,7 @@ impl Engine {
         let EngineKv::Paged(pools) = &mut self.kv else {
             return false;
         };
-        ix.evict_idle(pools.device_mut()) > 0
+        ix.evict_idle(pools[0].device_mut()) > 0
     }
 
     /// True when the host tier could still park the largest live
@@ -930,7 +968,7 @@ impl Engine {
         let EngineKv::Paged(pools) = &self.kv else {
             return true;
         };
-        let group = self.shape.layers * self.shape.kv_heads;
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
         let reserve = self
             .active
             .iter()
@@ -941,7 +979,7 @@ impl Engine {
             })
             .max()
             .unwrap_or(0);
-        pools.host().free_pages() >= reserve + Self::MIGRATION_FOLD * group
+        pools[0].host().free_pages() >= reserve + Self::MIGRATION_FOLD * group
     }
 
     /// Rung 2: move cold blocks to the host tier — the lowest-index
@@ -964,8 +1002,8 @@ impl Engine {
         let EngineKv::Paged(pools) = &mut self.kv else {
             return false;
         };
-        let group = self.shape.layers * self.shape.kv_heads;
-        if pools.host().free_pages() < group {
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+        if pools[0].host().free_pages() < group {
             return false;
         }
         // longest cached sequence first; deterministic id tie-break
@@ -986,9 +1024,11 @@ impl Engine {
         order.sort_by_key(|&(blocks, sid)| (std::cmp::Reverse(blocks), sid));
         for include_tail in [false, true] {
             let mut folded = 0;
-            pools.begin_batched_transfer();
+            for p in pools.iter_mut() {
+                p.begin_batched_transfer();
+            }
             for &(_, sid) in &order {
-                if folded == Self::MIGRATION_FOLD || pools.host().free_pages() < group {
+                if folded == Self::MIGRATION_FOLD || pools[0].host().free_pages() < group {
                     break;
                 }
                 let Some(s) = self.seqs.get_mut(&sid) else { continue };
@@ -997,15 +1037,17 @@ impl Engine {
                 // their ref count drops to 1 — a sibling's table (or
                 // the prefix index) would keep indexing the device
                 // store if their pages moved.
-                let Some(b) = table.coldest_migratable_block(include_tail, pools.device())
+                let Some(b) = table.coldest_migratable_block(include_tail, pools.as_slice())
                 else {
                     continue;
                 };
-                if table.migrate_block_to_host(b, pools).is_ok() {
+                if table.migrate_block_to_host(b, pools.as_mut_slice()).is_ok() {
                     folded += 1;
                 }
             }
-            pools.commit_batched_transfer();
+            for p in pools.iter_mut() {
+                p.commit_batched_transfer();
+            }
             if folded > 0 {
                 return true;
             }
@@ -1033,7 +1075,7 @@ impl Engine {
         let EngineKv::Paged(pools) = &self.kv else {
             return false;
         };
-        let group = self.shape.layers * self.shape.kv_heads;
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
         let mut future = 0usize;
         for id in self
             .active
@@ -1043,7 +1085,7 @@ impl Engine {
         {
             let s = &self.seqs[id];
             let total = BlockTable::pages_needed(
-                self.shape,
+                self.shard_shape,
                 self.page_size,
                 s.prompt.len() + s.params.max_new_tokens,
             );
@@ -1053,8 +1095,9 @@ impl Engine {
             };
             future += total.saturating_sub(held);
         }
-        let usable_free =
-            (pools.device().free_pages() / group + pools.host().free_pages() / group) * group;
+        let usable_free = (pools[0].device().free_pages() / group
+            + pools[0].host().free_pages() / group)
+            * group;
         future > usable_free
     }
 
@@ -1081,7 +1124,7 @@ impl Engine {
         if ids.len() > 1 {
             ids.remove(0); // the oldest is protected
         }
-        let group = self.shape.layers * self.shape.kv_heads;
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
         let (decision, victim) = {
             let EngineKv::Paged(pools) = &self.kv else {
                 bail!("preemption on a contiguous engine");
@@ -1110,7 +1153,7 @@ impl Engine {
                 })
                 .collect();
             let victim = *self.reclaim.select(&candidates);
-            let decision = self.reclaim.decide(&victim, pools.host().free_pages());
+            let decision = self.reclaim.decide(&victim, pools[0].host().free_pages());
             (decision, victim.id)
         };
         match decision {
@@ -1185,7 +1228,7 @@ impl Engine {
             return Ok(());
         }
         let id = self.suspended.remove(0);
-        let group = self.shape.layers * self.shape.kv_heads;
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
         {
             let EngineKv::Paged(pools) = &mut self.kv else {
                 bail!("suspended sequence on a contiguous engine");
@@ -1195,7 +1238,7 @@ impl Engine {
                 bail!("suspended sequence without a block table");
             };
             let host_pages = table.host_blocks() * group;
-            if host_pages > 0 && pools.device().free_pages() >= host_pages + group {
+            if host_pages > 0 && pools[0].device().free_pages() >= host_pages + group {
                 let _ = table.resume_from_host(pools);
             }
         }
@@ -1228,8 +1271,8 @@ impl Engine {
         }
         let promoted = {
             let EngineKv::Paged(pools) = &mut self.kv else { return };
-            let group = self.shape.layers * self.shape.kv_heads;
-            if pools.device().free_pages() < 2 * group {
+            let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+            if pools[0].device().free_pages() < 2 * group {
                 return;
             }
             // hottest host block across every *running* table.
@@ -1255,7 +1298,7 @@ impl Engine {
             let Some((_, sid, b)) = best else { return };
             let Some(s) = self.seqs.get_mut(&sid) else { return };
             let SeqStore::Paged { table } = &mut s.store else { return };
-            table.promote_block_to_device(b, pools).is_ok()
+            table.promote_block_to_device(b, pools.as_mut_slice()).is_ok()
         };
         if promoted {
             self.update_page_metrics();
@@ -1264,23 +1307,38 @@ impl Engine {
 
     fn update_page_metrics(&mut self) {
         if let EngineKv::Paged(pools) = &self.kv {
-            self.metrics.pages_used = pools.device().used_pages() as u64;
-            self.metrics.pages_total = pools.device().num_pages() as u64;
+            // page and migration counters sum across the shard pools
+            // (a single pool on single-device engines)
+            self.metrics.pages_used =
+                pools.iter().map(|p| p.device().used_pages() as u64).sum();
+            self.metrics.pages_total =
+                pools.iter().map(|p| p.device().num_pages() as u64).sum();
             self.metrics.peak_pages_used =
                 self.metrics.peak_pages_used.max(self.metrics.pages_used);
-            self.metrics.host_pages_used = pools.host().used_pages() as u64;
-            self.metrics.host_pages_total = pools.host().num_pages() as u64;
-            let st = pools.stats();
-            self.metrics.pages_migrated = st.pages_moved;
-            self.metrics.migrations = st.batches;
-            self.metrics.migrated_bytes = st.bytes_moved;
-            self.metrics.pcie_modeled_s = st.modeled_s;
-            self.metrics.promotions = st.promotions;
-            self.metrics.promoted_pages = st.pages_promoted;
-            self.metrics.grouped_transfers = st.grouped_transfers;
+            self.metrics.host_pages_used =
+                pools.iter().map(|p| p.host().used_pages() as u64).sum();
+            self.metrics.host_pages_total =
+                pools.iter().map(|p| p.host().num_pages() as u64).sum();
+            self.metrics.pages_migrated = pools.iter().map(|p| p.stats().pages_moved).sum();
+            self.metrics.migrations = pools.iter().map(|p| p.stats().batches).sum();
+            self.metrics.migrated_bytes = pools.iter().map(|p| p.stats().bytes_moved).sum();
+            self.metrics.pcie_modeled_s = pools.iter().map(|p| p.stats().modeled_s).sum();
+            self.metrics.promotions = pools.iter().map(|p| p.stats().promotions).sum();
+            self.metrics.promoted_pages = pools.iter().map(|p| p.stats().pages_promoted).sum();
+            self.metrics.grouped_transfers =
+                pools.iter().map(|p| p.stats().grouped_transfers).sum();
             self.metrics.shared_pages =
                 self.prefix.as_ref().map_or(0, |ix| ix.pages_held() as u64);
         }
+        // tensor-parallel combine accounting (zero on single-device
+        // backends, which keep the default AllReduceStats)
+        let c = self.backend.comm_stats();
+        self.metrics.allreduce_tiles = c.tiles;
+        self.metrics.allreduce_bytes = c.bytes;
+        self.metrics.allreduce_modeled_s = c.modeled_s;
+        self.metrics.allreduce_hidden_s = c.hidden_s;
+        self.metrics.allreduce_makespan_s = c.makespan_s;
+        self.metrics.allreduce_serial_s = c.serial_makespan_s;
     }
 
     fn finish(&mut self, mut state: SeqState) {

@@ -1321,6 +1321,236 @@ impl BlockTable {
 }
 
 // ---------------------------------------------------------------------
+// Tensor-parallel KV: ShardedTable
+// ---------------------------------------------------------------------
+
+/// One sequence's block tables across N tensor-parallel KV shards,
+/// mutated in lockstep: every capacity/migration/swap operation runs on
+/// all shards, so a sequence's pages migrate, swap out and resume on
+/// every simulated device together — the cross-shard reclamation
+/// invariant the engine's four-rung ladder relies on.
+///
+/// Shard `s`'s table pairs with `pools[s]` of the engine's per-shard
+/// [`TieredPagePool`]s.  All shards see the same geometry (the *shard*
+/// cache shape: `kv_heads / n_shards` heads) and the same operation
+/// sequence, so their page occupancy is always identical; shard 0 is
+/// the *primary* whose state answers every read (block counts,
+/// victim-selection inputs, coldest/hottest block choices).  A mirrored
+/// operation failing on a non-primary shard after succeeding on the
+/// primary would mean the shards diverged — that is a bug, and the
+/// mirror panics rather than limping on with inconsistent KV.
+#[derive(Debug)]
+pub struct ShardedTable {
+    tables: Vec<BlockTable>,
+}
+
+impl ShardedTable {
+    /// Empty tables on `n_shards` shards, each of the per-shard
+    /// geometry `shard_shape` (`kv_heads` already divided by the shard
+    /// count).
+    pub fn new(shard_shape: CacheShape, n_shards: usize, page_size: usize) -> Self {
+        assert!(n_shards >= 1, "at least one shard");
+        Self {
+            tables: (0..n_shards).map(|_| BlockTable::new(shard_shape, page_size)).collect(),
+        }
+    }
+
+    /// Number of KV shards.
+    pub fn n_shards(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Shard 0's table — the authority for reads and the only shard the
+    /// single-device prefix index ever sees.
+    pub fn primary(&self) -> &BlockTable {
+        &self.tables[0]
+    }
+
+    /// Mutable access to shard 0's table (prefix adoption; `n == 1`).
+    pub fn primary_mut(&mut self) -> &mut BlockTable {
+        &mut self.tables[0]
+    }
+
+    /// All shards' tables, index-aligned with the engine's pools — what
+    /// the sharded backend reads per shard.
+    pub fn tables(&self) -> &[BlockTable] {
+        &self.tables
+    }
+
+    /// Logical blocks currently allocated (identical on every shard).
+    pub fn blocks(&self) -> usize {
+        self.primary().blocks()
+    }
+
+    /// Token rows the allocated blocks can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        self.primary().capacity_tokens()
+    }
+
+    /// Pages held **per shard** (the engine's budgets and victim
+    /// accounting are per-device, so per-shard counts are the right
+    /// unit — each shard's pool sees exactly this many pages).
+    pub fn pages_held(&self) -> usize {
+        self.primary().pages_held()
+    }
+
+    /// Device-resident blocks (identical on every shard).
+    pub fn device_blocks(&self) -> usize {
+        self.primary().device_blocks()
+    }
+
+    /// Host-resident blocks (identical on every shard).
+    pub fn host_blocks(&self) -> usize {
+        self.primary().host_blocks()
+    }
+
+    /// The hottest host-resident block, from the primary (stamps are
+    /// mirrored, so every shard would agree).
+    pub fn hottest_host_block(&self) -> Option<(u64, usize)> {
+        self.primary().hottest_host_block()
+    }
+
+    /// Stamp every allocated block as gathered at `clock`, on all
+    /// shards.
+    pub fn mark_gathered(&mut self, clock: u64) {
+        for t in &mut self.tables {
+            t.mark_gathered(clock);
+        }
+    }
+
+    /// Grow every shard's table until `tokens` rows fit, allocating
+    /// from each shard's own device pool.  Per-shard growth is
+    /// idempotent, so a partial failure (only possible if the pools
+    /// were asymmetric) leaves already-grown shards ahead; the engine's
+    /// reclamation ladder frees pages on **all** shards and retries,
+    /// which tops up exactly the shards that fell short.
+    pub fn ensure_capacity(
+        &mut self,
+        tokens: usize,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<(), PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()) {
+            t.ensure_capacity(tokens, p.device_mut())?;
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write split of `[first_row, last_row)` on every shard.
+    /// Returns the primary's split count (sharing only exists under
+    /// `n == 1`, where primary == the only shard; mirrored shards
+    /// without shared blocks split nothing and return 0).
+    pub fn cow_unshare(
+        &mut self,
+        first_row: usize,
+        last_row: usize,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let mut primary_splits = 0;
+        for (s, (t, p)) in self.tables.iter_mut().zip(pools.iter_mut()).enumerate() {
+            let splits = t.cow_unshare(first_row, last_row, p.device_mut())?;
+            if s == 0 {
+                primary_splits = splits;
+            }
+        }
+        Ok(primary_splits)
+    }
+
+    /// The coldest migratable block, judged on the primary shard
+    /// against `pools[0]` (occupancy and pins mirror, so the choice is
+    /// valid on every shard).
+    pub fn coldest_migratable_block(
+        &self,
+        include_tail: bool,
+        pools: &[TieredPagePool],
+    ) -> Option<usize> {
+        self.primary().coldest_migratable_block(include_tail, pools[0].device())
+    }
+
+    /// Migrate block `b` to the host tier on every shard.  The primary
+    /// decides feasibility (`?`); mirrored shards cannot fail after it
+    /// succeeded unless the shards diverged, which panics.  Returns the
+    /// primary's pages moved (per shard).
+    pub fn migrate_block_to_host(
+        &mut self,
+        b: usize,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let pages = self.tables[0].migrate_block_to_host(b, &mut pools[0])?;
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()).skip(1) {
+            t.migrate_block_to_host(b, p)
+                .expect("mirrored shard diverged on cold-block migration");
+        }
+        Ok(pages)
+    }
+
+    /// Promote block `b` back to the device tier on every shard (same
+    /// primary-decides contract as migration).  Returns the primary's
+    /// pages moved (per shard).
+    pub fn promote_block_to_device(
+        &mut self,
+        b: usize,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let pages = self.tables[0].promote_block_to_device(b, &mut pools[0])?;
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()).skip(1) {
+            t.promote_block_to_device(b, p)
+                .expect("mirrored shard diverged on block promotion");
+        }
+        Ok(pages)
+    }
+
+    /// Device pages the primary shard could park on its host tier
+    /// (`None` = pinned by sharing); per-shard counts mirror, so this
+    /// answers swappability for the whole group.
+    pub fn suspendable_pages(&self, pools: &[TieredPagePool]) -> Option<usize> {
+        self.primary().suspendable_pages(&pools[0])
+    }
+
+    /// Swap the whole sequence out on every shard (one batched link
+    /// transfer per shard).  Primary decides feasibility; a mirrored
+    /// shard failing afterwards panics.  Returns the primary's pages
+    /// moved (per shard).
+    pub fn suspend_to_host(
+        &mut self,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let pages = self.tables[0].suspend_to_host(&mut pools[0])?;
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()).skip(1) {
+            t.suspend_to_host(p).expect("mirrored shard diverged on swap-out");
+        }
+        Ok(pages)
+    }
+
+    /// Restore a suspended sequence to the device tier on every shard.
+    /// Primary decides feasibility; a mirrored shard failing afterwards
+    /// panics.  Returns the primary's pages moved (per shard).
+    pub fn resume_from_host(
+        &mut self,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let pages = self.tables[0].resume_from_host(&mut pools[0])?;
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()).skip(1) {
+            t.resume_from_host(p).expect("mirrored shard diverged on swap-in");
+        }
+        Ok(pages)
+    }
+
+    /// Release every shard's pages into its own pool and reset empty.
+    pub fn release_all_tiered(&mut self, pools: &mut [TieredPagePool]) {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()) {
+            t.release_all_tiered(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Cross-sequence prefix sharing: PrefixIndex
 // ---------------------------------------------------------------------
 
@@ -2341,5 +2571,54 @@ mod tests {
         let pool = PagePool::for_budget(sh, 2, 6 * 2 * 4 * 2 * sh.head_dim);
         assert_eq!(pool.num_pages(), 6);
         assert_eq!(pool.page_bytes(), 2 * 4 * 2 * sh.head_dim);
+    }
+
+    #[test]
+    fn sharded_table_mirrors_ladder_ops_across_shards() {
+        // two shards, symmetric pools: every capacity/migrate/swap op
+        // must leave identical occupancy on both shards' pools.
+        let sh = shape(); // per-shard geometry
+        let group = sh.layers * sh.kv_heads;
+        let mut pools: Vec<TieredPagePool> = (0..2)
+            .map(|_| TieredPagePool::new(2, sh.head_dim, 4 * group, 4 * group, PcieLink::default()))
+            .collect();
+        let mut st = ShardedTable::new(sh, 2, 2);
+        assert_eq!(st.n_shards(), 2);
+
+        st.ensure_capacity(4, &mut pools).unwrap();
+        assert_eq!(st.blocks(), 2);
+        assert_eq!(st.capacity_tokens(), 4);
+        assert_eq!(st.pages_held(), 2 * group, "per-shard page count");
+        assert_eq!(pools[0].device().used_pages(), pools[1].device().used_pages());
+
+        // cold-block migration mirrors
+        let b = st.coldest_migratable_block(false, &pools).unwrap();
+        assert_eq!(st.migrate_block_to_host(b, &mut pools).unwrap(), group);
+        assert_eq!(st.host_blocks(), 1);
+        for p in &pools {
+            assert_eq!(p.host().used_pages(), group);
+            assert_eq!(p.stats().pages_moved, group as u64, "each shard charges its own link");
+        }
+
+        // swap-out / swap-in round trip mirrors
+        let parked = st.suspend_to_host(&mut pools).unwrap();
+        assert_eq!(parked, group, "one device block left to park per shard");
+        assert_eq!(st.device_blocks(), 0);
+        assert_eq!(st.suspendable_pages(&pools), Some(0));
+        assert_eq!(st.resume_from_host(&mut pools).unwrap(), 2 * group);
+        assert_eq!(st.host_blocks(), 0);
+        for p in &pools {
+            assert_eq!(p.host().used_pages(), 0);
+            assert_eq!(p.device().used_pages(), 2 * group);
+        }
+
+        // promotion surface: nothing host-resident → no hottest block
+        assert_eq!(st.hottest_host_block(), None);
+        st.mark_gathered(7);
+
+        st.release_all_tiered(&mut pools);
+        for p in &pools {
+            assert_eq!(p.free_pages_total(), p.total_pages());
+        }
     }
 }

@@ -33,6 +33,10 @@
 //!   thread; clients use channels);
 //! * [`allreduce`] — the paper's tiling-AllReduce (§4.2) as a real
 //!   multi-worker ring with per-block overlap;
+//! * [`sharded`]   — the tensor-parallel serving backend: N per-device
+//!   host models sharded by KV head over per-shard page pools, partial
+//!   attention outputs combined per tile through the ring with modeled
+//!   tiling-AllReduce timing;
 //! * [`offload`]   — the CPU–GPU cooperative strategy (§4.4): eq. 15–20
 //!   planner + classical-vs-cooperative executor with a *measured* host
 //!   FlashAttention2 path.
@@ -47,15 +51,18 @@ pub mod reclaim;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod sharded;
 
 pub use backend::{
-    ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig, PagedRow, StepOut,
+    AllReduceStats, ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig,
+    PagedRow, ShardedRow, StepOut,
 };
+pub use sharded::{ShardedBackend, ShardedConfig};
 pub use batcher::AdmitError;
 pub use engine::{Engine, EngineConfig, KvLayout};
 pub use kv_cache::{
     BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, PrefixIndex,
-    Tier, TieredPagePool,
+    ShardedTable, Tier, TieredPagePool,
 };
 pub use reclaim::{PreemptMode, ReclaimPolicy, RecomputeVsSwap, VictimPolicy};
 pub use request::{GenParams, Request, RequestId, Response};

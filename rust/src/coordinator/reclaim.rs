@@ -179,6 +179,13 @@ pub enum ReclaimDecision {
 /// victim's device pages out and back over the PCIe link, against
 /// modeled seconds to replay its cached tokens (the §4.4 cost bridge —
 /// see [`crate::coordinator::offload::replay_cost_s`]).
+///
+/// On a tensor-parallel engine the accounting is **per primary
+/// shard**: the engine hands this model per-shard `page_bytes` and
+/// `heads / n_shards`, and feeds it per-shard candidate page counts.
+/// Every shard swaps (or replays) in lockstep over its own link, so
+/// both sides of the comparison scale by the shard count and the
+/// decision is shard-invariant — one shard's ratio decides for all.
 #[derive(Debug)]
 pub struct RecomputeVsSwap {
     link: PcieLink,

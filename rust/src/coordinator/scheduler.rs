@@ -14,6 +14,11 @@
 //! preserves FCFS age order and keeps the no-livelock induction intact.
 //! Under `Fair`, chunks and resumes share the prefill quantum, so long
 //! prompts interleave with decodes instead of monopolizing the engine.
+//!
+//! The policy is layout- and topology-agnostic: on a tensor-parallel
+//! engine every shard mirrors page occupancy in lockstep, so the
+//! pressure signal read off shard 0 speaks for the whole device group
+//! and the schedule needs no per-shard awareness.
 
 use super::batcher::Batcher;
 

@@ -1,0 +1,739 @@
+//! Tensor-parallel sharded serving backend (§4.2's multi-NPU path).
+//!
+//! [`ShardedBackend`] composes N per-device [`HostModelBackend`]s with
+//! the KV heads sharded across simulated devices: shard `s` owns query
+//! heads `[s·H/N, (s+1)·H/N)` and KV heads `[s·Nkv/N, (s+1)·Nkv/N)`
+//! (FlashAttention-2-style head partitioning — GQA groups never split,
+//! because `N | Nkv` is required).  Every shard executes decode/prefill
+//! attention over its own head slice through the existing batched paged
+//! path against its own [`TieredPagePool`], and the per-shard partial
+//! attention outputs are combined with the paper's tiling-AllReduce
+//! schedule:
+//!
+//! * **numerics** go through the real in-process ring
+//!   ([`ring_all_reduce`]): each shard contributes a zero-padded
+//!   full-width activation tile whose support is its own head slice, so
+//!   the reduction is an exact concatenation — sharded decode is
+//!   bit-identical to the single-device engine, token for token;
+//! * **timing** is charged to the modeled ring ([`RingSpec`]): one
+//!   B-allreduce per tile of `tile_rows` decode rows, overlapped with
+//!   the next tile's compute via [`overlapped_schedule`] (or serialized
+//!   when [`ShardedConfig::overlap`] is off), accumulated into
+//!   [`AllReduceStats`] which the engine surfaces as
+//!   `allreduce_modeled_s` / `allreduce_hidden_s` alongside
+//!   `pcie_modeled_s`.
+//!
+//! Weights are fully replicated (each shard holds the same
+//! deterministic model and *uses* only its head columns); the
+//! projections before and after attention are computed once on the
+//! primary shard, exactly as a single device would, which is what makes
+//! the bit-identity property testable rather than approximate.
+
+use anyhow::{bail, Result};
+
+use crate::attention::batch::{
+    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv,
+};
+use crate::coordinator::allreduce::{ranks_bit_identical, ring_all_reduce};
+use crate::coordinator::backend::{
+    matvec, rmsnorm, AllReduceStats, Backend, BucketGrid, HostModelBackend, HostModelConfig,
+    ModelInfo, PagedRow, ShardedRow, StepOut,
+};
+use crate::coordinator::kv_cache::{BlockTable, TieredPagePool};
+use crate::sim::collective::{
+    overlapped_schedule, serial_schedule, AllReduceBlock, RingSpec,
+};
+
+/// How a [`ShardedBackend`] splits and combines work across shards.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedConfig {
+    /// Simulated devices (tensor-parallel degree).  Must divide the
+    /// model's KV head count.
+    pub shards: usize,
+    /// Modeled interconnect; `n` is overridden to `shards`.
+    pub ring: RingSpec,
+    /// Decode rows per B-allreduce tile (≥ 1): each tile's combine
+    /// overlaps the next tile's attention compute.
+    pub tile_rows: usize,
+    /// Modeled per-row attention compute seconds feeding the overlap
+    /// schedule (the in-process math is microseconds — the model is
+    /// what carries device-scale timing).
+    pub modeled_row_compute_s: f64,
+    /// `true`: tiling-AllReduce (per-tile combine overlapped with the
+    /// next tile, the real ring running on a spawned channel thread);
+    /// `false`: serial baseline (all tiles computed, then one combine).
+    pub overlap: bool,
+}
+
+impl ShardedConfig {
+    /// Tiling-AllReduce defaults for `shards` devices.
+    pub fn for_shards(shards: usize) -> Self {
+        Self {
+            shards: shards.max(1),
+            ring: RingSpec::default(),
+            tile_rows: 4,
+            modeled_row_compute_s: 50e-6,
+            overlap: true,
+        }
+    }
+
+    /// The serial-combine ablation of the same geometry.
+    pub fn serial(shards: usize) -> Self {
+        Self { overlap: false, ..Self::for_shards(shards) }
+    }
+}
+
+/// N per-device host models sharded by KV head, combined per tile with
+/// the tiling-AllReduce schedule.  See the module docs.
+pub struct ShardedBackend {
+    shards: Vec<HostModelBackend>,
+    scfg: ShardedConfig,
+    comm: AllReduceStats,
+}
+
+impl ShardedBackend {
+    /// Build `scfg.shards` replicas of the host model.  Fails when the
+    /// shard count does not divide the model's KV heads (a GQA group
+    /// must never straddle devices).
+    pub fn new(cfg: HostModelConfig, scfg: ShardedConfig) -> Result<Self> {
+        let n = scfg.shards.max(1);
+        let kvh = cfg.model.kv_heads as usize;
+        if kvh % n != 0 {
+            bail!("{n} shards do not divide {kvh} kv heads");
+        }
+        let scfg = ShardedConfig {
+            shards: n,
+            ring: RingSpec { n: n as u64, ..scfg.ring },
+            tile_rows: scfg.tile_rows.max(1),
+            ..scfg
+        };
+        let shards: Vec<HostModelBackend> =
+            (0..n).map(|_| HostModelBackend::new(cfg.clone())).collect();
+        Ok(Self { shards, scfg, comm: AllReduceStats::default() })
+    }
+
+    /// The sharding/overlap configuration in effect.
+    pub fn config(&self) -> &ShardedConfig {
+        &self.scfg
+    }
+
+    /// Per-shard table/pool geometry must match the *shard* slice of
+    /// the model (`kv_heads / shards` heads), or the row stores would
+    /// be indexed with the wrong stride.
+    fn check_shard_table(&self, t: &BlockTable, pools: &TieredPagePool, what: &str) -> Result<()> {
+        let cache = self.shards[0].cache_shape();
+        let kvh_l = cache.kv_heads / self.shards.len();
+        if t.layers() != cache.layers || t.kv_heads() != kvh_l {
+            bail!(
+                "{what}: shard table is [{} layers, {} kv_heads], shard wants [{}, {kvh_l}]",
+                t.layers(),
+                t.kv_heads(),
+                cache.layers
+            );
+        }
+        if t.page_size() != pools.page_size() {
+            bail!(
+                "{what}: table page_size {} != pool page_size {}",
+                t.page_size(),
+                pools.page_size()
+            );
+        }
+        if pools.head_dim() != cache.head_dim {
+            bail!(
+                "{what}: pool head_dim {} != model head_dim {}",
+                pools.head_dim(),
+                cache.head_dim
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One token step for `rows = [(token, pos)]` across all shards:
+/// projections once (replicated math, identical to a single device),
+/// KV writes and attention per shard over its head slice, per-tile ring
+/// combine, output projection + MLP once.  Returns final hidden states
+/// aligned with `rows`.
+///
+/// `row_tables[ri][s]` is row `ri`'s block table on shard `s`, paired
+/// with `pools[s]`.  `overlap` selects the combine schedule charged to
+/// `comm` (prefill always charges serial — tokens are sequential, so
+/// there is no next tile to hide communication under).
+fn forward_sharded(
+    shards: &[HostModelBackend],
+    scfg: &ShardedConfig,
+    comm: &mut AllReduceStats,
+    rows: &[(i32, usize)],
+    row_tables: &[&[BlockTable]],
+    pools: &mut [TieredPagePool],
+    overlap: bool,
+) -> Vec<Vec<f32>> {
+    let n = shards.len();
+    let primary = &shards[0];
+    let info = primary.model();
+    let cache = primary.cache_shape();
+    let d = primary.d_model();
+    let (heads, kvh, hd) = (info.n_heads, info.n_kv_heads, info.head_dim);
+    let (heads_l, kvh_l) = (heads / n, kvh / n);
+    let (qdim, kvdim, hdim_l) = (heads * hd, kvh * hd, heads_l * hd);
+    let bshape_l = BatchShape::new(heads_l, kvh_l, hd, cache.max_seq);
+    let weights = primary.layer_weights();
+    let ring = scfg.ring;
+    let tile_rows = scfg.tile_rows.max(1);
+
+    let mut xs: Vec<Vec<f32>> = rows.iter().map(|&(tok, _)| primary.embed_row(tok)).collect();
+    let mut qbuf = vec![0.0f32; rows.len() * qdim];
+    let mut attn = vec![0.0f32; rows.len() * qdim];
+    let mut krow = vec![0.0f32; kvdim];
+    let mut vrow = vec![0.0f32; kvdim];
+    let mut proj = vec![0.0f32; d.max(info.d_ff)];
+
+    for (l, w) in weights.iter().enumerate() {
+        // ---- projections (once) + per-shard KV writes ----------------
+        for (ri, &(_, pos)) in rows.iter().enumerate() {
+            let h = rmsnorm(&xs[ri]);
+            matvec(&h, &w.wq, &mut qbuf[ri * qdim..][..qdim]);
+            matvec(&h, &w.wk, &mut krow);
+            matvec(&h, &w.wv, &mut vrow);
+            for (s, pool) in pools.iter_mut().enumerate() {
+                for g_local in 0..kvh_l {
+                    let g = s * kvh_l + g_local;
+                    let (tier, page, in_page) =
+                        row_tables[ri][s].locate_tiered(l, g_local, pos);
+                    pool.write_row(
+                        tier,
+                        page,
+                        in_page,
+                        &krow[g * hd..][..hd],
+                        &vrow[g * hd..][..hd],
+                    );
+                }
+            }
+        }
+
+        // ---- per-shard attention, tiled, combined via the ring -------
+        // At most one combine is in flight (the interconnect channel is
+        // serial); its thread runs while the next tile's attention
+        // computes — the overlap the timing model charges for.
+        let mut pending: Option<(
+            Vec<usize>,
+            std::thread::JoinHandle<Vec<Vec<f32>>>,
+        )> = None;
+        let mut layer_blocks: Vec<AllReduceBlock> = Vec::new();
+        let mut tile_start = 0usize;
+        while tile_start < rows.len() {
+            let tile_end = (tile_start + tile_rows).min(rows.len());
+            let tile: Vec<usize> = (tile_start..tile_end).collect();
+            let tile_len = tile.len();
+
+            // each shard's partial outputs, zero-padded to full width
+            // with support on its own head slice — the ring sum is an
+            // exact concatenation (x + 0.0 is exact)
+            let mut shard_vecs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for s in 0..n {
+                let pool = &pools[s];
+                let host_empty = pool.host().num_pages() == 0;
+                let seqs: Vec<SeqAttn<'_>> = tile
+                    .iter()
+                    .map(|&ri| {
+                        let t = &row_tables[ri][s];
+                        let pos = rows[ri].1;
+                        SeqAttn {
+                            q: &qbuf[ri * qdim + s * hdim_l..][..hdim_l],
+                            kv: if host_empty {
+                                SeqKv::Paged {
+                                    k_store: pool.device().k_store(),
+                                    v_store: pool.device().v_store(),
+                                    pages: t.layer_pages(l),
+                                    max_blocks: t.max_blocks(),
+                                    page_size: t.page_size(),
+                                }
+                            } else {
+                                SeqKv::Tiered {
+                                    k_device: pool.device().k_store(),
+                                    v_device: pool.device().v_store(),
+                                    k_host: pool.host().k_store(),
+                                    v_host: pool.host().v_store(),
+                                    pages: t.layer_pages(l),
+                                    tiers: t.layer_tiers(l),
+                                    max_blocks: t.max_blocks(),
+                                    page_size: t.page_size(),
+                                }
+                            },
+                            kv_len: pos + 1,
+                        }
+                    })
+                    .collect();
+                let mut part = vec![0.0f32; tile_len * hdim_l];
+                batch_decode_attention(&bshape_l, &seqs, &mut part, shards[s].work_pool());
+                let mut padded = vec![0.0f32; tile_len * qdim];
+                for k in 0..tile_len {
+                    padded[k * qdim + s * hdim_l..][..hdim_l]
+                        .copy_from_slice(&part[k * hdim_l..][..hdim_l]);
+                }
+                shard_vecs.push(padded);
+            }
+
+            if n == 1 {
+                // single device: the "slice" is the whole row
+                for (k, &ri) in tile.iter().enumerate() {
+                    attn[ri * qdim..][..qdim]
+                        .copy_from_slice(&shard_vecs[0][k * qdim..][..qdim]);
+                }
+            } else {
+                layer_blocks.push(AllReduceBlock {
+                    compute_s: tile_len as f64 * scfg.modeled_row_compute_s,
+                    bytes: (tile_len * qdim * 4) as u64,
+                });
+                if overlap {
+                    // stitch the previous tile's combine, then launch
+                    // this tile's on the channel thread
+                    if let Some((prows, handle)) = pending.take() {
+                        stitch(&prows, handle, &mut attn, qdim);
+                    }
+                    pending =
+                        Some((tile, std::thread::spawn(move || ring_all_reduce(shard_vecs))));
+                } else {
+                    let reduced = ring_all_reduce(shard_vecs);
+                    assert!(
+                        ranks_bit_identical(&reduced),
+                        "allreduce ranks diverged (layer {l})"
+                    );
+                    for (k, &ri) in tile.iter().enumerate() {
+                        attn[ri * qdim..][..qdim]
+                            .copy_from_slice(&reduced[0][k * qdim..][..qdim]);
+                    }
+                }
+            }
+            tile_start = tile_end;
+        }
+        if let Some((prows, handle)) = pending.take() {
+            stitch(&prows, handle, &mut attn, qdim);
+        }
+
+        // ---- modeled comm accounting for this layer ------------------
+        if n > 1 && !layer_blocks.is_empty() {
+            let total_bytes: u64 = layer_blocks.iter().map(|b| b.bytes).sum();
+            let serial_t = serial_schedule(&ring, &layer_blocks);
+            comm.tiles += layer_blocks.len() as u64;
+            comm.bytes += total_bytes;
+            comm.serial_makespan_s += serial_t;
+            if overlap {
+                let r = overlapped_schedule(&ring, &layer_blocks);
+                comm.modeled_s += r.total_comm_s;
+                comm.hidden_s += r.hidden_comm_s;
+                comm.makespan_s += r.makespan_s;
+            } else {
+                comm.modeled_s += ring.allreduce(total_bytes);
+                comm.makespan_s += serial_t;
+            }
+        }
+
+        // ---- output projection + MLP (once, replicated) --------------
+        for (ri, x) in xs.iter_mut().enumerate() {
+            matvec(&attn[ri * qdim..][..qdim], &w.wo, &mut proj[..d]);
+            for (xi, &p) in x.iter_mut().zip(&proj[..d]) {
+                *xi += p;
+            }
+            let h = rmsnorm(x);
+            matvec(&h, &w.w1, &mut proj[..info.d_ff]);
+            for p in &mut proj[..info.d_ff] {
+                *p = p.max(0.0); // ReLU
+            }
+            let mlp = proj[..info.d_ff].to_vec();
+            matvec(&mlp, &w.w2, &mut proj[..d]);
+            for (xi, &p) in x.iter_mut().zip(&proj[..d]) {
+                *xi += p;
+            }
+        }
+    }
+    xs
+}
+
+/// Join a tile's in-flight combine and scatter rank 0's reduced rows
+/// back into the full-width attention buffer, asserting every rank
+/// agreed bit-for-bit first (the rank-agreement contract of the ring).
+fn stitch(
+    tile: &[usize],
+    handle: std::thread::JoinHandle<Vec<Vec<f32>>>,
+    attn: &mut [f32],
+    qdim: usize,
+) {
+    let reduced = handle.join().expect("allreduce channel thread");
+    assert!(ranks_bit_identical(&reduced), "allreduce ranks diverged");
+    for (k, &ri) in tile.iter().enumerate() {
+        attn[ri * qdim..][..qdim].copy_from_slice(&reduced[0][k * qdim..][..qdim]);
+    }
+}
+
+impl Backend for ShardedBackend {
+    fn model(&self) -> &ModelInfo {
+        self.shards[0].model()
+    }
+
+    fn buckets(&self) -> BucketGrid {
+        self.shards[0].buckets()
+    }
+
+    fn set_parallel(&mut self, cfg: ParallelConfig) {
+        for s in &mut self.shards {
+            s.set_parallel(cfg);
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        seq: usize,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<StepOut> {
+        // plane execution is inherently single-device; shard 0 holds
+        // the full replicated model
+        self.shards[0].prefill(batch, seq, tokens, lengths)
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        k_plane: Vec<f32>,
+        v_plane: Vec<f32>,
+        pos: &[i32],
+    ) -> Result<StepOut> {
+        self.shards[0].decode(batch, tokens, k_plane, v_plane, pos)
+    }
+
+    fn supports_paged(&self) -> bool {
+        true
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn comm_stats(&self) -> AllReduceStats {
+        self.comm
+    }
+
+    fn decode_paged(
+        &mut self,
+        rows: &[PagedRow<'_>],
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        if self.shards.len() != 1 {
+            bail!("sharded backend needs the per-shard paged entry points");
+        }
+        self.shards[0].decode_paged(rows, pools)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        start_pos: usize,
+        table: &BlockTable,
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        if self.shards.len() != 1 {
+            bail!("sharded backend needs the per-shard paged entry points");
+        }
+        self.shards[0].prefill_chunk(tokens, start_pos, table, pools)
+    }
+
+    fn decode_paged_sharded(
+        &mut self,
+        rows: &[ShardedRow<'_>],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<f32>> {
+        let n = self.shards.len();
+        if pools.len() != n {
+            bail!("decode_paged_sharded: {} pools for {n} shards", pools.len());
+        }
+        let cache = self.shards[0].cache_shape();
+        for (i, r) in rows.iter().enumerate() {
+            if r.tables.len() != n {
+                bail!("decode_paged_sharded row {i}: {} tables for {n} shards", r.tables.len());
+            }
+            for (s, t) in r.tables.iter().enumerate() {
+                self.check_shard_table(t, &pools[s], "decode_paged_sharded")?;
+                if t.capacity_tokens() <= r.pos {
+                    bail!(
+                        "decode_paged_sharded row {i} shard {s}: table holds {} tokens, \
+                         row {} needs capacity first",
+                        t.capacity_tokens(),
+                        r.pos
+                    );
+                }
+            }
+            if r.pos >= cache.max_seq {
+                bail!(
+                    "decode_paged_sharded row {i}: pos {} out of cache range {}",
+                    r.pos,
+                    cache.max_seq
+                );
+            }
+        }
+        let frows: Vec<(i32, usize)> = rows.iter().map(|r| (r.token, r.pos)).collect();
+        let row_tables: Vec<&[BlockTable]> = rows.iter().map(|r| r.tables).collect();
+        let overlap = self.scfg.overlap;
+        let xs = forward_sharded(
+            &self.shards,
+            &self.scfg,
+            &mut self.comm,
+            &frows,
+            &row_tables,
+            pools,
+            overlap,
+        );
+
+        let vocab = self.shards[0].model().vocab;
+        let mut logits = vec![0.0f32; rows.len() * vocab];
+        for (i, x) in xs.iter().enumerate() {
+            self.shards[0].logits_row(x, &mut logits[i * vocab..][..vocab]);
+        }
+        Ok(logits)
+    }
+
+    fn prefill_chunk_sharded(
+        &mut self,
+        tokens: &[i32],
+        start_pos: usize,
+        tables: &[BlockTable],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<f32>> {
+        let n = self.shards.len();
+        if tokens.is_empty() {
+            bail!("prefill_chunk_sharded: empty chunk");
+        }
+        if pools.len() != n || tables.len() != n {
+            bail!(
+                "prefill_chunk_sharded: {} tables / {} pools for {n} shards",
+                tables.len(),
+                pools.len()
+            );
+        }
+        let cache = self.shards[0].cache_shape();
+        let end = start_pos + tokens.len();
+        if end > cache.max_seq {
+            bail!("prefill_chunk_sharded: positions ..{end} exceed max_seq {}", cache.max_seq);
+        }
+        for (s, t) in tables.iter().enumerate() {
+            self.check_shard_table(t, &pools[s], "prefill_chunk_sharded")?;
+            if t.capacity_tokens() < end {
+                bail!(
+                    "prefill_chunk_sharded shard {s}: table holds {} tokens, chunk ends at {end}",
+                    t.capacity_tokens()
+                );
+            }
+        }
+        let row_tables = [tables];
+        let mut last: Vec<f32> = Vec::new();
+        for (t, &tok) in tokens.iter().enumerate() {
+            // tokens are strictly sequential — token t+1's attention
+            // reads token t's KV at every layer — so each step is one
+            // tile and its combine is charged serial (nothing to hide
+            // it under)
+            debug_assert_eq!(
+                crate::attention::mask::chunk_row_visible(start_pos, t),
+                start_pos + t + 1,
+            );
+            let xs = forward_sharded(
+                &self.shards,
+                &self.scfg,
+                &mut self.comm,
+                &[(tok, start_pos + t)],
+                &row_tables,
+                pools,
+                false,
+            );
+            last = xs.into_iter().next().expect("one row per step");
+        }
+        let mut logits = vec![0.0f32; self.shards[0].model().vocab];
+        self.shards[0].logits_row(&last, &mut logits);
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::{CacheShape, PcieLink};
+    use crate::models::ModelShape;
+
+    /// A GQA shape whose 4 KV heads split across 1, 2 or 4 shards.
+    fn shard_cfg() -> HostModelConfig {
+        HostModelConfig {
+            model: ModelShape {
+                name: "host-shard-test",
+                params: 0,
+                layers: 2,
+                heads: 8,
+                kv_heads: 4,
+                head_dim: 4,
+                ffn: 32,
+                vocab: 32,
+            },
+            max_seq: 64,
+            ..HostModelConfig::tiny_gqa()
+        }
+    }
+
+    /// Per-shard pools + tables sized for `seqs` sequences of up to
+    /// `max_seq` tokens each.
+    fn shard_kv(
+        be: &ShardedBackend,
+        seqs: usize,
+    ) -> (Vec<TieredPagePool>, Vec<Vec<BlockTable>>) {
+        let n = be.shard_count();
+        let cache = be.shards[0].cache_shape();
+        let shard_shape = CacheShape { kv_heads: cache.kv_heads / n, ..cache };
+        let page_size = 4;
+        let cap = seqs * BlockTable::pages_needed(shard_shape, page_size, cache.max_seq);
+        let pools: Vec<TieredPagePool> = (0..n)
+            .map(|_| TieredPagePool::new(page_size, cache.head_dim, cap, cap, PcieLink::default()))
+            .collect();
+        let tables: Vec<Vec<BlockTable>> = (0..seqs)
+            .map(|_| (0..n).map(|_| BlockTable::new(shard_shape, page_size)).collect())
+            .collect();
+        (pools, tables)
+    }
+
+    /// Drive `steps` greedy decode steps for `prompts` through a
+    /// sharded backend, returning every step's logits.
+    fn run_sharded(cfg: &HostModelConfig, scfg: ShardedConfig, prompts: &[Vec<i32>], steps: usize) -> (Vec<Vec<f32>>, AllReduceStats) {
+        let mut be = ShardedBackend::new(cfg.clone(), scfg).unwrap();
+        let n = be.shard_count();
+        let (mut pools, mut tables) = shard_kv(&be, prompts.len());
+        let mut lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let mut next: Vec<i32> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            for (t, p2) in tables[i].iter_mut().zip(pools.iter_mut()) {
+                t.ensure_capacity(p.len(), p2.device_mut()).unwrap();
+            }
+            let logits = be
+                .prefill_chunk_sharded(p, 0, &tables[i], &mut pools)
+                .unwrap();
+            next.push(argmax(&logits));
+        }
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            for i in 0..prompts.len() {
+                for (t, p2) in tables[i].iter_mut().zip(pools.iter_mut()) {
+                    t.ensure_capacity(lens[i] + 1, p2.device_mut()).unwrap();
+                }
+            }
+            let rows: Vec<ShardedRow<'_>> = (0..prompts.len())
+                .map(|i| ShardedRow { tables: &tables[i], token: next[i], pos: lens[i] })
+                .collect();
+            let logits = be.decode_paged_sharded(&rows, &mut pools).unwrap();
+            let vocab = be.model().vocab;
+            for i in 0..prompts.len() {
+                next[i] = argmax(&logits[i * vocab..][..vocab]);
+                lens[i] += 1;
+            }
+            out.push(logits);
+        }
+        assert_eq!(n, be.shard_count());
+        (out, be.comm_stats())
+    }
+
+    fn argmax(xs: &[f32]) -> i32 {
+        let mut best = 0;
+        for (i, &v) in xs.iter().enumerate() {
+            if v > xs[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    #[test]
+    fn rejects_bad_shard_geometry() {
+        let cfg = shard_cfg(); // 4 kv heads
+        assert!(ShardedBackend::new(cfg.clone(), ShardedConfig::for_shards(3)).is_err());
+        assert!(ShardedBackend::new(cfg.clone(), ShardedConfig::for_shards(8)).is_err());
+        assert!(ShardedBackend::new(cfg, ShardedConfig::for_shards(4)).is_ok());
+    }
+
+    #[test]
+    fn sharded_decode_bit_identical_across_shard_counts() {
+        let cfg = shard_cfg();
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|i| (0..7 + i).map(|t| (t * 5 + i as i32 + 1) % 32).collect()).collect();
+        let (base, stats1) = run_sharded(&cfg, ShardedConfig::for_shards(1), &prompts, 6);
+        assert_eq!(stats1, AllReduceStats::default(), "single device models no allreduce");
+        for n in [2usize, 4] {
+            for overlap in [true, false] {
+                let scfg = if overlap {
+                    ShardedConfig::for_shards(n)
+                } else {
+                    ShardedConfig::serial(n)
+                };
+                let scfg = ShardedConfig { tile_rows: 2, ..scfg };
+                let (got, stats) = run_sharded(&cfg, scfg, &prompts, 6);
+                assert_eq!(base, got, "{n} shards (overlap={overlap}) diverged from 1 device");
+                assert!(stats.modeled_s > 0.0, "{n} shards must charge comm time");
+                assert!(stats.bytes > 0 && stats.tiles > 0);
+                assert!(
+                    stats.serial_makespan_s >= stats.makespan_s - 1e-12,
+                    "overlap can only help: serial {} < makespan {}",
+                    stats.serial_makespan_s,
+                    stats.makespan_s
+                );
+                if overlap {
+                    assert!(stats.hidden_s > 0.0, "multi-tile decode must hide some comm");
+                } else {
+                    assert_eq!(stats.hidden_s, 0.0, "serial combine hides nothing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_beats_serial_on_batched_decode() {
+        // 8 decode rows × tile_rows 2 → 4 tiles per layer: the tiled
+        // schedule must strictly beat the serial one (deterministic
+        // model arithmetic, not wall clock).
+        let cfg = shard_cfg();
+        let prompts: Vec<Vec<i32>> = (0..8).map(|i| vec![1 + i as i32, 2, 3, 4, 5]).collect();
+        let scfg = ShardedConfig { tile_rows: 2, ..ShardedConfig::for_shards(2) };
+        let (_, stats) = run_sharded(&cfg, scfg, &prompts, 4);
+        assert!(
+            stats.makespan_s < stats.serial_makespan_s,
+            "tiled {} !< serial {}",
+            stats.makespan_s,
+            stats.serial_makespan_s
+        );
+        let speedup = stats.serial_makespan_s / stats.makespan_s;
+        assert!(speedup > 1.0, "tiling-AllReduce speedup {speedup} must exceed 1.0");
+    }
+
+    #[test]
+    fn sharded_single_shard_matches_host_backend() {
+        // n = 1 through the sharded entry points is the host backend
+        let cfg = shard_cfg();
+        let mut host = HostModelBackend::new(cfg.clone());
+        let mut be = ShardedBackend::new(cfg.clone(), ShardedConfig::for_shards(1)).unwrap();
+        let cache = host.cache_shape();
+        let page_size = 4;
+        let cap = BlockTable::pages_needed(cache, page_size, cache.max_seq);
+        let mut hpool =
+            TieredPagePool::new(page_size, cache.head_dim, cap, cap, PcieLink::default());
+        let mut htab = BlockTable::new(cache, page_size);
+        let toks = [3i32, 9, 17, 25, 2];
+        htab.ensure_capacity(toks.len() + 1, hpool.device_mut()).unwrap();
+        let hl = host.prefill_chunk(&toks, 0, &htab, &mut hpool).unwrap();
+
+        let (mut pools, mut tables) = shard_kv(&be, 1);
+        tables[0][0].ensure_capacity(toks.len() + 1, pools[0].device_mut()).unwrap();
+        let sl = be.prefill_chunk_sharded(&toks, 0, &tables[0], &mut pools).unwrap();
+        assert_eq!(hl, sl);
+
+        let hrow = [PagedRow { table: &htab, token: 7, pos: toks.len() }];
+        let hd = host.decode_paged(&hrow, &mut hpool).unwrap();
+        let srow = [ShardedRow { tables: &tables[0], token: 7, pos: toks.len() }];
+        let sd = be.decode_paged_sharded(&srow, &mut pools).unwrap();
+        assert_eq!(hd, sd);
+        assert_eq!(be.comm_stats(), AllReduceStats::default());
+    }
+}

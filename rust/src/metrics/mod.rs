@@ -66,6 +66,21 @@ pub struct EngineMetrics {
     /// Prompt tokens whose prefill was skipped thanks to an adopted
     /// prefix run.
     pub prefix_tokens_saved: u64,
+    /// Tensor-parallel combine (sharded backends only; zero on
+    /// single-device engines): B-allreduce tiles issued and activation
+    /// bytes combined across shards.
+    pub allreduce_tiles: u64,
+    pub allreduce_bytes: u64,
+    /// Modeled AllReduce communication seconds (as if serialized) and
+    /// the subset hidden under the next tile's compute by the
+    /// tiling-AllReduce overlap — the multi-device counterpart of
+    /// `pcie_modeled_s`.
+    pub allreduce_modeled_s: f64,
+    pub allreduce_hidden_s: f64,
+    /// Modeled makespan of the executed combine schedule and of the
+    /// serial (monolithic-AllReduce) baseline over the same workload.
+    pub allreduce_makespan_s: f64,
+    pub allreduce_serial_s: f64,
     /// Per-request time-to-first-token histogram (seconds from
     /// submission to the first generated token).
     pub ttft: LatencyHistogram,
@@ -141,6 +156,24 @@ impl EngineMetrics {
             return 0.0;
         }
         self.decoded_tokens as f64 / self.decode_steps as f64
+    }
+
+    /// Fraction of modeled AllReduce seconds hidden under compute,
+    /// 0.0 ..= 1.0 (0.0 on single-device engines).
+    pub fn allreduce_hidden_frac(&self) -> f64 {
+        if self.allreduce_modeled_s <= 0.0 {
+            return 0.0;
+        }
+        (self.allreduce_hidden_s / self.allreduce_modeled_s).clamp(0.0, 1.0)
+    }
+
+    /// Tiling-AllReduce speedup over the serial combine on the same
+    /// workload (`serial / makespan`; 1.0 on single-device engines).
+    pub fn allreduce_overlap_speedup(&self) -> f64 {
+        if self.allreduce_makespan_s <= 0.0 {
+            return 1.0;
+        }
+        self.allreduce_serial_s / self.allreduce_makespan_s
     }
 }
 
@@ -314,6 +347,25 @@ mod tests {
         let z = EngineMetrics::default();
         assert_eq!(z.ttft.count(), 0);
         assert_eq!(z.tpot.quantile_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn allreduce_ratios() {
+        let m = EngineMetrics {
+            allreduce_tiles: 8,
+            allreduce_bytes: 1 << 20,
+            allreduce_modeled_s: 4e-3,
+            allreduce_hidden_s: 3e-3,
+            allreduce_makespan_s: 5e-3,
+            allreduce_serial_s: 6e-3,
+            ..Default::default()
+        };
+        assert!((m.allreduce_hidden_frac() - 0.75).abs() < 1e-12);
+        assert!((m.allreduce_overlap_speedup() - 1.2).abs() < 1e-12);
+        // single-device engines report identity, not NaN
+        let z = EngineMetrics::default();
+        assert_eq!(z.allreduce_hidden_frac(), 0.0);
+        assert_eq!(z.allreduce_overlap_speedup(), 1.0);
     }
 
     #[test]

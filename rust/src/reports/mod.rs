@@ -7,6 +7,7 @@
 //! subcommand are thin wrappers over these.
 
 pub mod allreduce;
+pub mod multi;
 pub mod npu;
 pub mod volta;
 

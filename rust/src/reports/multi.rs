@@ -1,0 +1,237 @@
+//! Multi-device serving sweep behind `BENCH_multi.json`.
+//!
+//! Two layers of evidence for the §4.2 tiling-AllReduce claim at
+//! system scale, shared by the `fig10_multi_npu`,
+//! `fig16_allreduce_tokens` and `fig17_allreduce_ablation` bench
+//! binaries:
+//!
+//! 1. an end-to-end **sharded-engine** sweep (shard count × decode
+//!    batch, tiled vs serial combine) in which every run's tokens are
+//!    asserted identical to the single-device engine before any timing
+//!    is reported, and
+//! 2. the calibrated **PanGu-38B 8×910B** modeled points (batch × seq,
+//!    the Fig 16/17 grid) where the tiled schedule must beat the
+//!    serial one outright.
+//!
+//! All values are modeled serial/tiled speedups (unit `x`), so one
+//! JSON file stays machine-diffable across PRs.
+
+use std::path::Path;
+
+use crate::attention::batch::ParallelConfig;
+use crate::benchkit::{fmt_time, write_bench_json, x, Table};
+use crate::coordinator::scheduler::Policy;
+use crate::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, ShardedBackend,
+    ShardedConfig,
+};
+use crate::metrics::EngineMetrics;
+use crate::models::ModelShape;
+use crate::reports::allreduce::pangu38_layer_compute_and_bytes;
+use crate::sim::collective::{best_block_count, make_blocks, serial_schedule, RingSpec};
+
+/// Eight KV heads so the sweep divides across 2/4/8 shards.
+fn sweep_model() -> HostModelConfig {
+    HostModelConfig {
+        model: ModelShape {
+            name: "host-multi-sweep",
+            params: 0,
+            layers: 2,
+            heads: 8,
+            kv_heads: 8,
+            head_dim: 4,
+            ffn: 32,
+            vocab: 32,
+        },
+        max_seq: 64,
+        ..HostModelConfig::tiny_gqa()
+    }
+}
+
+fn ecfg() -> EngineConfig {
+    EngineConfig {
+        // admit the whole batch before decoding so decode steps carry
+        // the full row count (= combine tiles per layer)
+        policy: Policy::PrefillFirst,
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 16,
+        ..EngineConfig::default()
+    }
+}
+
+fn prompts(batch: usize) -> Vec<Vec<i32>> {
+    (0..batch).map(|i| (0..6).map(|t| (t * 3 + i as i32 + 1) % 32).collect()).collect()
+}
+
+fn run(mut e: Engine, batch: usize) -> (Vec<Vec<i32>>, EngineMetrics) {
+    let p = GenParams { max_new_tokens: 12, eos_token: None, share_prefix: false };
+    for pr in prompts(batch) {
+        e.submit(pr, p).expect("submit");
+    }
+    let mut out = e.run_until_idle().expect("run_until_idle");
+    out.sort_by_key(|r| r.id);
+    (out.into_iter().map(|r| r.tokens).collect(), e.metrics.clone())
+}
+
+/// One sweep point: engine-modeled combine times for a shard count ×
+/// decode batch, tokens already checked against the single-device run.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPoint {
+    /// Simulated devices the KV heads were split across.
+    pub shards: usize,
+    /// Concurrent sequences (decode rows per step).
+    pub batch: usize,
+    /// Modeled makespan of the serial (monolithic-AllReduce) schedule.
+    pub serial_s: f64,
+    /// Modeled makespan of the tiled, overlapped schedule.
+    pub tiled_s: f64,
+    /// Fraction of the tiled run's comm hidden under compute.
+    pub hidden_frac: f64,
+}
+
+impl ShardPoint {
+    /// Serial-vs-tiled modeled speedup (1.0 when nothing is combined).
+    pub fn speedup(&self) -> f64 {
+        if self.tiled_s <= 0.0 { 1.0 } else { self.serial_s / self.tiled_s }
+    }
+}
+
+/// Run the sharded engine across shards × batch in both combine modes,
+/// assert token parity with the single-device engine, and return the
+/// modeled combine times.
+pub fn engine_sweep() -> Vec<ShardPoint> {
+    let cfg = sweep_model();
+    let mut out = Vec::new();
+    for batch in [2usize, 8] {
+        let (want, _) =
+            run(Engine::with_backend(Box::new(HostModelBackend::new(cfg.clone())), ecfg()), batch);
+        for shards in [2usize, 4, 8] {
+            let mk = |sc: ShardedConfig| {
+                Engine::with_backend(
+                    Box::new(ShardedBackend::new(cfg.clone(), sc).expect("shard geometry")),
+                    ecfg(),
+                )
+            };
+            let tiled = ShardedConfig { tile_rows: 2, ..ShardedConfig::for_shards(shards) };
+            let serial = ShardedConfig { tile_rows: 2, ..ShardedConfig::serial(shards) };
+            let (tokens, tm) = run(mk(tiled), batch);
+            assert_eq!(tokens, want, "{shards}-shard tiled run diverged at batch {batch}");
+            let (tokens, sm) = run(mk(serial), batch);
+            assert_eq!(tokens, want, "{shards}-shard serial run diverged at batch {batch}");
+            // both modes combined the same activations; serial runs at
+            // its own baseline makespan
+            assert_eq!(sm.allreduce_bytes, tm.allreduce_bytes);
+            assert!(
+                tm.allreduce_serial_s >= tm.allreduce_makespan_s - 1e-12,
+                "overlap can only help"
+            );
+            out.push(ShardPoint {
+                shards,
+                batch,
+                serial_s: tm.allreduce_serial_s,
+                tiled_s: tm.allreduce_makespan_s,
+                hidden_frac: tm.allreduce_hidden_frac(),
+            });
+        }
+    }
+    out
+}
+
+/// Calibrated PanGu-38B 8×910B point (Fig 16/17 shapes): modeled
+/// serial and tiled layer makespans plus the chosen block count.
+pub fn paper_point(b: u64, s: u64) -> (f64, f64, usize) {
+    let ring = RingSpec::default();
+    let (compute, bytes) = pangu38_layer_compute_and_bytes(b, s);
+    let serial = serial_schedule(&ring, &make_blocks(bytes, compute, 1, 1.0));
+    let (nb, over) = best_block_count(&ring, bytes, compute);
+    (serial, over, nb)
+}
+
+/// Rows for `BENCH_multi.json` (unit `x`: modeled serial/tiled
+/// speedup).  Engine rows have token parity asserted; paper-scale rows
+/// must beat serial outright.
+pub fn bench_rows() -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for p in engine_sweep() {
+        rows.push((format!("engine/shards{}/batch{}", p.shards, p.batch), p.speedup()));
+    }
+    for b in [1u64, 4, 16] {
+        for s in [2048u64, 8192, 32768] {
+            let (serial, over, _) = paper_point(b, s);
+            let sp = serial / over;
+            assert!(sp > 1.0, "pangu38 b={b} s={s}: tiled {sp:.3}x must beat serial");
+            rows.push((format!("pangu38/b{b}/s{}k", s / 1024), sp));
+        }
+    }
+    rows
+}
+
+/// Human-readable view of the same sweep (printed by the bench
+/// binaries before they write the JSON).
+pub fn multi_table() -> Table {
+    let mut t = Table::new(
+        "multi-device serving — serial vs tiling-AllReduce (engine runs token-parity-checked)",
+        &["point", "serial", "tiled", "speedup", "hidden/blocks"],
+    );
+    for p in engine_sweep() {
+        t.row(&[
+            format!("engine {}sh b{}", p.shards, p.batch),
+            fmt_time(p.serial_s),
+            fmt_time(p.tiled_s),
+            x(p.speedup()),
+            format!("{:.0}%", p.hidden_frac * 100.0),
+        ]);
+    }
+    for (b, s) in [(1u64, 8192u64), (4, 8192), (16, 32768)] {
+        let (serial, over, nb) = paper_point(b, s);
+        t.row(&[
+            format!("pangu38 b{b} s{}K", s / 1024),
+            fmt_time(serial),
+            fmt_time(over),
+            x(serial / over),
+            format!("{nb} blocks"),
+        ]);
+    }
+    t
+}
+
+/// Write `BENCH_multi.json` at `path`.
+pub fn write_bench_multi(path: &Path) -> std::io::Result<()> {
+    write_bench_json(path, "multi", "x", &bench_rows())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_sweep_parity_and_overlap() {
+        let pts = engine_sweep(); // token parity asserted inside
+        assert_eq!(pts.len(), 6);
+        for p in &pts {
+            assert!(p.serial_s > 0.0 && p.tiled_s > 0.0, "{p:?} modeled no comm");
+            assert!(p.speedup() >= 1.0 - 1e-12, "{p:?} slower than serial");
+        }
+        // 8 decode rows at tile_rows 2 = 4 tiles per layer: overlap
+        // must strictly win and hide real communication
+        let p = pts.iter().find(|p| p.batch == 8 && p.shards == 4).unwrap();
+        assert!(p.speedup() > 1.0, "batch-8 tiling speedup {:.3} must beat 1.0", p.speedup());
+        assert!(p.hidden_frac > 0.0);
+    }
+
+    #[test]
+    fn bench_rows_all_at_least_serial() {
+        let rows = bench_rows(); // paper-scale > 1.0 asserted inside
+        assert_eq!(rows.len(), 6 + 9);
+        for (label, sp) in &rows {
+            assert!(*sp >= 1.0 - 1e-12, "{label}: {sp}");
+            assert!(sp.is_finite());
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        multi_table().print();
+    }
+}

@@ -42,7 +42,9 @@ impl RingSpec {
 
     /// Ring AllReduce latency for `bytes` (reduce-scatter + all-gather).
     pub fn allreduce(&self, bytes: u64) -> f64 {
-        if self.n <= 1 {
+        if self.n <= 1 || bytes == 0 {
+            // `eff_bw(0)` is 0 and would make the traffic term 0/0 = NaN;
+            // an empty message costs nothing (no hops are taken for it).
             return 0.0;
         }
         let steps = 2 * (self.n - 1);
@@ -116,13 +118,21 @@ pub fn make_blocks(
         return vec![AllReduceBlock { compute_s, bytes: total_bytes }];
     }
     let rest = (1.0 - first_frac) / (n_blocks - 1) as f64;
+    let mut assigned = 0u64;
     (0..n_blocks)
         .map(|i| {
             let frac = if i == 0 { first_frac } else { rest };
-            AllReduceBlock {
-                compute_s: compute_s * frac,
-                bytes: (total_bytes as f64 * frac) as u64,
-            }
+            // Truncating every block would lose up to `n_blocks - 1`
+            // bytes, silently undercounting tiled communication vs the
+            // serial baseline — the last block takes the remainder so
+            // the split always conserves `total_bytes`.
+            let bytes = if i == n_blocks - 1 {
+                total_bytes - assigned
+            } else {
+                ((total_bytes as f64 * frac) as u64).min(total_bytes - assigned)
+            };
+            assigned += bytes;
+            AllReduceBlock { compute_s: compute_s * frac, bytes }
         })
         .collect()
 }
@@ -207,6 +217,55 @@ mod tests {
         let (_, best) = best_block_count(&r, total_bytes, compute);
         let many = overlapped_schedule(&r, &make_blocks(total_bytes, compute, 256, 1.0 / 256.0));
         assert!(many.makespan_s > best * 0.999);
+    }
+
+    #[test]
+    fn allreduce_zero_bytes_is_zero_not_nan() {
+        // eff_bw(0) == 0: the traffic term used to be 0/0 = NaN, and a
+        // small first_frac plus rounding can produce a 0-byte first
+        // block, poisoning every best_block_count comparison (NaN
+        // never orders below the incumbent).
+        let r = ring();
+        let t = r.allreduce(0);
+        assert_eq!(t, 0.0, "zero-byte allreduce must cost nothing, got {t}");
+        // a schedule containing a zero-byte block stays finite
+        let blocks = [
+            AllReduceBlock { compute_s: 1e-4, bytes: 0 },
+            AllReduceBlock { compute_s: 1e-4, bytes: 1 << 20 },
+        ];
+        let res = overlapped_schedule(&r, &blocks);
+        assert!(res.makespan_s.is_finite());
+        assert!(res.total_comm_s.is_finite());
+        // and best_block_count still returns a finite optimum even when
+        // first_frac rounding yields an empty first block
+        let (_, best) = best_block_count(&r, 7, 1e-3);
+        assert!(best.is_finite());
+    }
+
+    #[test]
+    fn make_blocks_conserves_bytes() {
+        // sum(blocks.bytes) == total_bytes over random splits — the
+        // per-block truncation used to lose up to n_blocks-1 bytes.
+        let mut rng = crate::proptest::Rng::new(0xB10C_B10C);
+        for _ in 0..200 {
+            let total = rng.below(1 << 24) + 1;
+            let n_blocks = rng.range(1, 33);
+            let first_frac = if n_blocks == 1 {
+                1.0
+            } else {
+                // include the pathological tiny-first-block corner
+                0.5 / n_blocks as f64 * (rng.below(4) + 1) as f64 / 2.0
+            };
+            let blocks = make_blocks(total, 1e-3, n_blocks, first_frac);
+            assert_eq!(blocks.len(), n_blocks);
+            let sum: u64 = blocks.iter().map(|b| b.bytes).sum();
+            assert_eq!(
+                sum, total,
+                "split of {total} into {n_blocks} blocks (first_frac {first_frac}) lost bytes"
+            );
+            let comp: f64 = blocks.iter().map(|b| b.compute_s).sum();
+            assert!((comp - 1e-3).abs() < 1e-9, "compute shares must sum to the layer time");
+        }
     }
 
     #[test]
