@@ -6,6 +6,9 @@
 //!   * batched parallel decode attention (GQA), single-thread vs
 //!     parallel vs **paged** (block-table gather): per-batch latency,
 //!     decode tok/s, speedup
+//!   * paged-gather throughput: per-row scalar gather vs blocked
+//!     page-run walking vs int8 pages with fused dequantization
+//!     (f32 bit-identity and int8 tolerance asserted)
 //!   * the host-model engine end-to-end (no artifacts needed)
 //!   * tiered paged KV: device-only vs cold-page host offload at
 //!     several modeled device capacities (token-parity asserted)
@@ -29,10 +32,12 @@
 use fastattn::attention::batch::{
     batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
-use fastattn::attention::flash::{flash_attention, FlashParams};
+use fastattn::attention::flash::{
+    flash_attention, flash_attention_view, flash_attention_view_rowwise, FlashParams, KvView,
+};
 use fastattn::benchkit::{bench, fmt_time, rate, write_bench_json, x, Table};
 use fastattn::coordinator::allreduce::ring_all_reduce;
-use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PagePool};
+use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PageCodec, PagePool};
 use fastattn::coordinator::{
     Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PreemptMode,
     VictimPolicy,
@@ -217,6 +222,98 @@ fn main() {
                 format!("{} b={nseq} kv={kv} paged ps={page_size} threads={threads}", m.name),
                 sp.events_per_s(nseq as f64),
             ));
+        }
+    }
+
+    // --- gather throughput: scalar rowwise vs blocked vs int8 fused ---
+    // The codec tentpole measured in isolation: the same paged KV
+    // walked (a) row-at-a-time through `KvView::row` — the pre-blocking
+    // gather with its per-row page-index division and bounds checks —
+    // (b) in page-contiguous runs (blocked f32; bit-identity asserted),
+    // and (c) blocked with dequantization fused over int8 pages (~4×
+    // fewer bytes through memory; tolerance asserted).  Rows land in
+    // BENCH_decode.json as gathered KV rows per second.
+    {
+        let (heads, d, page_size) = (8usize, 128usize, 16usize);
+        for kv in [512usize, 2048] {
+            let cache = CacheShape { layers: 1, kv_heads: 1, max_seq: kv, head_dim: d };
+            let mut rng = Rng::new(kv as u64);
+            let rows_k: Vec<Vec<f32>> = (0..kv).map(|_| rng.f32_vec(d)).collect();
+            let rows_v: Vec<Vec<f32>> = (0..kv).map(|_| rng.f32_vec(d)).collect();
+            let q = rng.f32_vec(heads * d);
+            let fill = |codec: PageCodec| {
+                let mut pool = PagePool::with_codec(
+                    page_size,
+                    d,
+                    BlockTable::pages_needed(cache, page_size, kv),
+                    codec,
+                );
+                let mut t = BlockTable::new(cache, page_size);
+                t.ensure_capacity(kv, &mut pool).expect("pool sized for kv");
+                for r in 0..kv {
+                    let (page, slot) = t.locate(0, 0, r);
+                    pool.write_row(page, slot, &rows_k[r], &rows_v[r]);
+                }
+                (pool, t)
+            };
+            let (fpool, ftab) = fill(PageCodec::F32);
+            let (qpool, qtab) = fill(PageCodec::Int8);
+            let kf = KvView::Paged { store: fpool.k_store(), pages: ftab.layer_pages(0), page_size };
+            let vf = KvView::Paged { store: fpool.v_store(), pages: ftab.layer_pages(0), page_size };
+            let kq = KvView::PagedI8 {
+                store: qpool.k_quant_store(),
+                pages: qtab.layer_pages(0),
+                page_size,
+            };
+            let vq = KvView::PagedI8 {
+                store: qpool.v_quant_store(),
+                pages: qtab.layer_pages(0),
+                page_size,
+            };
+            let p = FlashParams::decode_gqa(heads, 1, kv, d);
+            let mut out = vec![0.0f32; heads * d];
+
+            let sr = bench(2, 12, || {
+                flash_attention_view_rowwise(&q, &kf, &vf, &mut out, &p)
+            });
+            let rowwise_out = out.clone();
+            let sb = bench(2, 12, || flash_attention_view(&q, &kf, &vf, &mut out, &p));
+            assert_eq!(rowwise_out, out, "blocked f32 gather must be bit-identical at kv={kv}");
+            let si = bench(2, 12, || flash_attention_view(&q, &kq, &vq, &mut out, &p));
+            let err = out
+                .iter()
+                .zip(&rowwise_out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 0.05, "int8 fused gather out of tolerance at kv={kv}: {err}");
+            assert!(err > 0.0, "int8 fused gather suspiciously identical at kv={kv}");
+
+            // every query head walks the single KV plane once per call
+            let rows = (heads * kv) as f64;
+            tp.row(&[
+                format!("gather scalar f32 rowwise kv={kv}"),
+                fmt_time(sr.mean_s),
+                rate(rows, sr.mean_s, "row"),
+                String::from("—"),
+            ]);
+            tp.row(&[
+                format!("gather blocked f32 kv={kv}"),
+                fmt_time(sb.mean_s),
+                rate(rows, sb.mean_s, "row"),
+                x(sr.mean_s / sb.mean_s),
+            ]);
+            tp.row(&[
+                format!("gather int8 fused kv={kv}"),
+                fmt_time(si.mean_s),
+                rate(rows, si.mean_s, "row"),
+                x(sr.mean_s / si.mean_s),
+            ]);
+            json_rows.push((
+                format!("gather scalar f32 rowwise kv={kv}"),
+                sr.events_per_s(rows),
+            ));
+            json_rows.push((format!("gather blocked f32 kv={kv}"), sb.events_per_s(rows)));
+            json_rows.push((format!("gather int8 fused kv={kv}"), si.events_per_s(rows)));
         }
     }
 

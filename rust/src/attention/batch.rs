@@ -25,7 +25,7 @@
 //! between `threads = 1` (the sequential fallback, equivalent to the
 //! seed's per-sequence loop) and any `threads = N`.
 
-use crate::coordinator::kv_cache::Tier;
+use crate::coordinator::kv_cache::{QuantStore, Tier};
 
 use super::flash::{flash_attention_view, FlashParams, KvView};
 
@@ -242,6 +242,27 @@ pub enum SeqKv<'a> {
         max_blocks: usize,
         page_size: usize,
     },
+    /// `Paged` over int8 stores with per-row scale side-channels (the
+    /// [`PageCodec::Int8`](crate::coordinator::kv_cache::PageCodec)
+    /// pool layout) — rows dequantize fused inside the kernel.
+    PagedI8 {
+        k: QuantStore<'a>,
+        v: QuantStore<'a>,
+        pages: &'a [u32],
+        max_blocks: usize,
+        page_size: usize,
+    },
+    /// `Tiered` over int8 stores, one [`QuantStore`] per tier and side.
+    TieredI8 {
+        k_device: QuantStore<'a>,
+        v_device: QuantStore<'a>,
+        k_host: QuantStore<'a>,
+        v_host: QuantStore<'a>,
+        pages: &'a [u32],
+        tiers: &'a [Tier],
+        max_blocks: usize,
+        page_size: usize,
+    },
 }
 
 impl<'a> SeqKv<'a> {
@@ -284,6 +305,42 @@ impl<'a> SeqKv<'a> {
                         page_size,
                     },
                     KvView::Tiered {
+                        device_store: v_device,
+                        host_store: v_host,
+                        pages: p,
+                        tiers: t,
+                        page_size,
+                    },
+                )
+            }
+            SeqKv::PagedI8 { k, v, pages, max_blocks, page_size } => {
+                let p = &pages[g * max_blocks..][..max_blocks];
+                (
+                    KvView::PagedI8 { store: k, pages: p, page_size },
+                    KvView::PagedI8 { store: v, pages: p, page_size },
+                )
+            }
+            SeqKv::TieredI8 {
+                k_device,
+                v_device,
+                k_host,
+                v_host,
+                pages,
+                tiers,
+                max_blocks,
+                page_size,
+            } => {
+                let p = &pages[g * max_blocks..][..max_blocks];
+                let t = &tiers[g * max_blocks..][..max_blocks];
+                (
+                    KvView::TieredI8 {
+                        device_store: k_device,
+                        host_store: k_host,
+                        pages: p,
+                        tiers: t,
+                        page_size,
+                    },
+                    KvView::TieredI8 {
                         device_store: v_device,
                         host_store: v_host,
                         pages: p,
@@ -377,6 +434,61 @@ pub fn batch_decode_attention(
                         let store_len = match t {
                             Tier::Device => k_device.len(),
                             Tier::Host => k_host.len(),
+                        };
+                        let end = (p as usize + 1) * page_size * d;
+                        assert!(end <= store_len, "seq {i} page {p} out of {t:?} store");
+                    }
+                }
+            }
+            SeqKv::PagedI8 { k, v, pages, max_blocks, page_size } => {
+                assert!(page_size >= 1, "seq {i} page_size");
+                assert_eq!(pages.len(), kvh * max_blocks, "seq {i} page table shape");
+                assert_eq!(k.q.len(), v.q.len(), "seq {i} store shapes");
+                assert_eq!(k.q.len(), k.scales.len() * d, "seq {i} k scale side-channel");
+                assert_eq!(v.q.len(), v.scales.len() * d, "seq {i} v scale side-channel");
+                let used = s.kv_len.div_ceil(page_size);
+                assert!(used <= max_blocks, "seq {i} kv_len beyond page table");
+                for g in 0..kvh {
+                    for &p in &pages[g * max_blocks..][..used] {
+                        let end = (p as usize + 1) * page_size * d;
+                        assert!(end <= k.q.len(), "seq {i} page {p} out of store");
+                    }
+                }
+            }
+            SeqKv::TieredI8 {
+                k_device,
+                v_device,
+                k_host,
+                v_host,
+                pages,
+                tiers,
+                max_blocks,
+                page_size,
+            } => {
+                assert!(page_size >= 1, "seq {i} page_size");
+                assert_eq!(pages.len(), kvh * max_blocks, "seq {i} page table shape");
+                assert_eq!(tiers.len(), pages.len(), "seq {i} tier tags shape");
+                assert_eq!(k_device.q.len(), v_device.q.len(), "seq {i} device store shapes");
+                assert_eq!(k_host.q.len(), v_host.q.len(), "seq {i} host store shapes");
+                assert_eq!(
+                    k_device.q.len(),
+                    k_device.scales.len() * d,
+                    "seq {i} device scale side-channel"
+                );
+                assert_eq!(
+                    k_host.q.len(),
+                    k_host.scales.len() * d,
+                    "seq {i} host scale side-channel"
+                );
+                let used = s.kv_len.div_ceil(page_size);
+                assert!(used <= max_blocks, "seq {i} kv_len beyond page table");
+                for g in 0..kvh {
+                    let ps = &pages[g * max_blocks..][..used];
+                    let ts = &tiers[g * max_blocks..][..used];
+                    for (&p, &t) in ps.iter().zip(ts) {
+                        let store_len = match t {
+                            Tier::Device => k_device.q.len(),
+                            Tier::Host => k_host.q.len(),
                         };
                         let end = (p as usize + 1) * page_size * d;
                         assert!(end <= store_len, "seq {i} page {p} out of {t:?} store");
@@ -686,6 +798,110 @@ mod tests {
             batch_decode_attention(&b.shape, &tiered, &mut out_t, &pool);
             assert_eq!(out_c, out_t, "threads={threads}");
         }
+    }
+
+    /// The same rows quantized once and gathered through the two int8
+    /// layouts must agree bit-for-bit (single-store vs tiered with
+    /// migrated blocks), and stay within quantization tolerance of the
+    /// exact f32 batch decode.
+    #[test]
+    fn int8_tiered_gather_matches_int8_paged_and_f32_within_tol() {
+        use crate::coordinator::kv_cache::{
+            BlockTable, CacheShape, PageCodec, PagePool, PcieLink, TieredPagePool,
+        };
+        let mut rng = Rng::new(23);
+        let b = Batch::random(&mut rng, 4, 6, 3, 8, 26);
+        let (kvh, d, stride) = (3usize, 8usize, 26usize);
+        let page_size = 4;
+        let cache = CacheShape { layers: 1, kv_heads: kvh, max_seq: stride, head_dim: d };
+        let max_blocks = stride.div_ceil(page_size);
+
+        // (a) single-store int8 pool
+        let mut pool =
+            PagePool::with_codec(page_size, d, 4 * kvh * max_blocks, PageCodec::Int8);
+        let mut ptables = Vec::new();
+        for i in 0..4 {
+            let mut t = BlockTable::new(cache, page_size);
+            t.ensure_capacity(b.lens[i], &mut pool).unwrap();
+            for g in 0..kvh {
+                for r in 0..b.lens[i] {
+                    let (page, slot) = t.locate(0, g, r);
+                    let src = g * stride * d + r * d;
+                    pool.write_row(page, slot, &b.k[i][src..src + d], &b.v[i][src..src + d]);
+                }
+            }
+            ptables.push(t);
+        }
+        let paged: Vec<SeqAttn<'_>> = (0..4)
+            .map(|i| SeqAttn {
+                q: &b.q[i],
+                kv: SeqKv::PagedI8 {
+                    k: pool.k_quant_store(),
+                    v: pool.v_quant_store(),
+                    pages: ptables[i].layer_pages(0),
+                    max_blocks: ptables[i].max_blocks(),
+                    page_size,
+                },
+                kv_len: b.lens[i],
+            })
+            .collect();
+
+        // (b) tiered int8 pools, alternate blocks migrated to host
+        let mut pools = TieredPagePool::new_with_codec(
+            page_size,
+            d,
+            4 * kvh * max_blocks,
+            4 * kvh * max_blocks,
+            PcieLink::default(),
+            PageCodec::Int8,
+        );
+        let mut tables = Vec::new();
+        for i in 0..4 {
+            let mut t = BlockTable::new(cache, page_size);
+            t.ensure_capacity(b.lens[i], pools.device_mut()).unwrap();
+            for g in 0..kvh {
+                for r in 0..b.lens[i] {
+                    let (tier, page, slot) = t.locate_tiered(0, g, r);
+                    let src = g * stride * d + r * d;
+                    pools.write_row(tier, page, slot, &b.k[i][src..src + d], &b.v[i][src..src + d]);
+                }
+            }
+            for blk in (0..t.blocks()).step_by(2) {
+                t.migrate_block_to_host(blk, &mut pools).unwrap();
+            }
+            tables.push(t);
+        }
+        let tiered: Vec<SeqAttn<'_>> = (0..4)
+            .map(|i| SeqAttn {
+                q: &b.q[i],
+                kv: SeqKv::TieredI8 {
+                    k_device: pools.device().k_quant_store(),
+                    v_device: pools.device().v_quant_store(),
+                    k_host: pools.host().k_quant_store(),
+                    v_host: pools.host().v_quant_store(),
+                    pages: tables[i].layer_pages(0),
+                    tiers: tables[i].layer_tiers(0),
+                    max_blocks: tables[i].max_blocks(),
+                    page_size,
+                },
+                kv_len: b.lens[i],
+            })
+            .collect();
+
+        let n = 4 * 6 * 8;
+        let wp = WorkPool::new(ParallelConfig { threads: 4, min_work_per_thread: 0 });
+        let mut out_p = vec![0.0; n];
+        batch_decode_attention(&b.shape, &paged, &mut out_p, &wp);
+        let mut out_t = vec![0.0; n];
+        batch_decode_attention(&b.shape, &tiered, &mut out_t, &wp);
+        assert_eq!(out_p, out_t, "tiered int8 must be bit-identical to paged int8");
+
+        let contig = b.seqs();
+        let mut out_c = vec![0.0; n];
+        batch_decode_attention(&b.shape, &contig, &mut out_c, &wp);
+        let err =
+            out_c.iter().zip(&out_p).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 0.05, "int8 batch decode err {err} out of tolerance");
     }
 
     #[test]

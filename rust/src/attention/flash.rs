@@ -79,18 +79,43 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
     (s0 + s1) + (s2 + s3) + rest
 }
 
-use crate::coordinator::kv_cache::Tier;
+/// [`dot4`] against an int8 row: `Σ a[t] · b[t] as f32`.  The caller
+/// folds the row scale into the product afterwards, so dequantization
+/// costs one multiply per row instead of one per element.
+#[inline]
+fn dot4_i8(a: &[f32], b: &[i8]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i] as f32;
+        s1 += a[i + 1] * b[i + 1] as f32;
+        s2 += a[i + 2] * b[i + 2] as f32;
+        s3 += a[i + 3] * b[i + 3] as f32;
+    }
+    let mut rest = 0.0f32;
+    for i in chunks * 4..n {
+        rest += a[i] * b[i] as f32;
+    }
+    (s0 + s1) + (s2 + s3) + rest
+}
+
+use crate::coordinator::kv_cache::{QuantStore, Tier};
 
 /// A row source for K or V: a contiguous `[rows, head_dim]` slice, rows
 /// gathered through a page table (the paged KV cache's block-table
 /// layout — see `coordinator::kv_cache`), or rows gathered across the
 /// *two* stores of the tiered cache (device + host), with a per-block
-/// tier tag selecting the store.
+/// tier tag selecting the store.  The `*I8` variants are the same two
+/// paged layouts over int8 stores with per-row scale side-channels
+/// ([`QuantStore`]) — dequantization is fused into the kernel loops.
 ///
-/// The kernel reads rows one at a time through [`KvView::row`], so all
-/// three layouts stream the exact same values in the exact same order —
-/// paged and tiered attention are **bit-identical** to contiguous
-/// attention by construction.
+/// The kernel walks page-contiguous runs through [`KvView::run_at`],
+/// streaming the exact same values in the exact same order for every
+/// f32 layout — paged and tiered attention are **bit-identical** to
+/// contiguous attention by construction (pinned by
+/// `prop_blocked_equals_rowwise`).
 #[derive(Debug, Clone, Copy)]
 pub enum KvView<'a> {
     /// Contiguous `[rows, head_dim]` row-major.
@@ -113,10 +138,39 @@ pub enum KvView<'a> {
         tiers: &'a [Tier],
         page_size: usize,
     },
+    /// `Paged` over an int8 store: rows dequantize in the kernel as
+    /// `q[t] as f32 * scales[row]`.
+    PagedI8 {
+        store: QuantStore<'a>,
+        pages: &'a [u32],
+        page_size: usize,
+    },
+    /// `Tiered` over int8 stores, one [`QuantStore`] per tier.
+    TieredI8 {
+        device_store: QuantStore<'a>,
+        host_store: QuantStore<'a>,
+        pages: &'a [u32],
+        tiers: &'a [Tier],
+        page_size: usize,
+    },
+}
+
+/// One page-contiguous run of rows handed out by [`KvView::run_at`]:
+/// raw f32 rows, or int8 rows with their per-row scales (dequantized
+/// in-loop by the kernel, never materialized).
+#[derive(Debug, Clone, Copy)]
+pub enum KvRun<'a> {
+    /// `len × head_dim` contiguous f32 elements.
+    F32(&'a [f32]),
+    /// `len × head_dim` contiguous i8 elements + `len` per-row scales.
+    I8 { q: &'a [i8], scales: &'a [f32] },
 }
 
 impl<'a> KvView<'a> {
-    /// Row `r` as a `head_dim`-length slice.
+    /// Row `r` as a `head_dim`-length f32 slice — the scalar gather the
+    /// pre-blocked kernel used ([`flash_attention_view_rowwise`] keeps
+    /// it alive as the bench baseline).  Panics for the int8 variants,
+    /// whose rows only exist fused inside the kernel.
     #[inline(always)]
     pub fn row(&self, r: usize, d: usize) -> &'a [f32] {
         match *self {
@@ -133,17 +187,89 @@ impl<'a> KvView<'a> {
                 };
                 &store[(pages[b] as usize * page_size + r % page_size) * d..][..d]
             }
+            KvView::PagedI8 { .. } | KvView::TieredI8 { .. } => {
+                panic!("int8 views have no f32 rows — walk them with run_at")
+            }
         }
     }
 
-    /// Rows this view can address (an upper bound for `Paged`/`Tiered`,
-    /// whose tail pages may be unallocated sentinels — callers bound
-    /// reads by their own `kv_len`).
+    /// The longest page-contiguous run starting at row `r`, capped at
+    /// `max_rows` rows.  Returns the run and its row count (≥ 1): the
+    /// per-row page-index division, tier dispatch and bounds checks are
+    /// paid once per run instead of once per row, and the kernel loops
+    /// stream the returned slice directly.
+    #[inline(always)]
+    pub fn run_at(&self, r: usize, max_rows: usize, d: usize) -> (KvRun<'a>, usize) {
+        debug_assert!(max_rows >= 1, "empty run request");
+        match *self {
+            KvView::Contig(s) => {
+                let n = max_rows.min(s.len() / d.max(1) - r);
+                (KvRun::F32(&s[r * d..][..n * d]), n)
+            }
+            KvView::Paged { store, pages, page_size } => {
+                let (b, slot) = (r / page_size, r % page_size);
+                let n = max_rows.min(page_size - slot);
+                let at = (pages[b] as usize * page_size + slot) * d;
+                (KvRun::F32(&store[at..][..n * d]), n)
+            }
+            KvView::Tiered { device_store, host_store, pages, tiers, page_size } => {
+                debug_assert_eq!(pages.len(), tiers.len(), "tiered pages/tiers skew");
+                let (b, slot) = (r / page_size, r % page_size);
+                let n = max_rows.min(page_size - slot);
+                let store = match tiers[b] {
+                    Tier::Device => device_store,
+                    Tier::Host => host_store,
+                };
+                let at = (pages[b] as usize * page_size + slot) * d;
+                (KvRun::F32(&store[at..][..n * d]), n)
+            }
+            KvView::PagedI8 { store, pages, page_size } => {
+                let (b, slot) = (r / page_size, r % page_size);
+                let n = max_rows.min(page_size - slot);
+                let row = pages[b] as usize * page_size + slot;
+                (
+                    KvRun::I8 {
+                        q: &store.q[row * d..][..n * d],
+                        scales: &store.scales[row..][..n],
+                    },
+                    n,
+                )
+            }
+            KvView::TieredI8 { device_store, host_store, pages, tiers, page_size } => {
+                debug_assert_eq!(pages.len(), tiers.len(), "tiered pages/tiers skew");
+                let (b, slot) = (r / page_size, r % page_size);
+                let n = max_rows.min(page_size - slot);
+                let store = match tiers[b] {
+                    Tier::Device => device_store,
+                    Tier::Host => host_store,
+                };
+                let row = pages[b] as usize * page_size + slot;
+                (
+                    KvRun::I8 {
+                        q: &store.q[row * d..][..n * d],
+                        scales: &store.scales[row..][..n],
+                    },
+                    n,
+                )
+            }
+        }
+    }
+
+    /// Rows this view can address (an upper bound for the paged
+    /// layouts, whose tail pages may be unallocated sentinels — callers
+    /// bound reads by their own `kv_len`).
     pub fn addressable_rows(&self, d: usize) -> usize {
         match *self {
             KvView::Contig(s) => s.len() / d.max(1),
-            KvView::Paged { pages, page_size, .. } => pages.len() * page_size,
-            KvView::Tiered { pages, tiers, page_size, .. } => {
+            KvView::Paged { pages, page_size, .. }
+            | KvView::PagedI8 { pages, page_size, .. } => pages.len() * page_size,
+            KvView::Tiered { pages, tiers, page_size, .. }
+            | KvView::TieredI8 { pages, tiers, page_size, .. } => {
+                debug_assert_eq!(
+                    pages.len(),
+                    tiers.len(),
+                    "tiered view pages/tiers lengths must agree"
+                );
                 pages.len().min(tiers.len()) * page_size
             }
         }
@@ -197,6 +323,14 @@ impl HeadGeom {
 }
 
 /// The single-head FlashAttention2 loop over one pair of K/V views.
+///
+/// The inner loops walk page-contiguous runs ([`KvView::run_at`]):
+/// page-index division, tier dispatch and bounds checks are hoisted
+/// out of the per-row loop, and each run streams straight through the
+/// online-softmax accumulator.  The per-row arithmetic (op order
+/// included) is exactly the pre-blocked kernel's, so every f32 layout
+/// stays bit-identical to [`flash_head_rowwise`]; int8 runs dequantize
+/// in-loop with one fused scale multiply per row.
 fn flash_head(
     qh: &[f32],
     k: &KvView<'_>,
@@ -229,8 +363,22 @@ fn flash_head(
             for i in 0..nq {
                 let qi = &qh[(q0 + i) * d..][..d];
                 let srow = &mut scores[i * bkv..][..nk];
-                for (j, sc) in srow.iter_mut().enumerate() {
-                    *sc = dot4(qi, k.row(k0 + j, d)) * scale;
+                let mut j = 0;
+                while j < nk {
+                    let (run, n) = k.run_at(k0 + j, nk - j, d);
+                    match run {
+                        KvRun::F32(rows) => {
+                            for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
+                                *sc = dot4(qi, &rows[jj * d..][..d]) * scale;
+                            }
+                        }
+                        KvRun::I8 { q, scales } => {
+                            for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
+                                *sc = dot4_i8(qi, &q[jj * d..][..d]) * (scales[jj] * scale);
+                            }
+                        }
+                    }
+                    j += n;
                 }
             }
 
@@ -238,6 +386,112 @@ fn flash_head(
             for i in 0..nq {
                 let limit = row_limit(i);
                 // columns of this tile visible to row i
+                let vis = limit.saturating_sub(k0).min(nk);
+                if vis == 0 {
+                    continue;
+                }
+                let srow = &mut scores[i * bkv..][..nk];
+                let mut blk_max = f32::NEG_INFINITY;
+                for &sc in &srow[..vis] {
+                    if sc > blk_max {
+                        blk_max = sc;
+                    }
+                }
+                let m_new = m[i].max(blk_max);
+                let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
+                let arow = &mut acc[i * d..][..d];
+                if alpha != 1.0 {
+                    for a in arow.iter_mut() {
+                        *a *= alpha;
+                    }
+                }
+                let mut psum = 0.0f32;
+                let mut j = 0;
+                while j < vis {
+                    let (run, n) = v.run_at(k0 + j, vis - j, d);
+                    match run {
+                        KvRun::F32(rows) => {
+                            for jj in 0..n {
+                                let pij = (srow[j + jj] - m_new).exp();
+                                psum += pij;
+                                let vj = &rows[jj * d..][..d];
+                                for t in 0..d {
+                                    arow[t] += pij * vj[t];
+                                }
+                            }
+                        }
+                        KvRun::I8 { q, scales } => {
+                            for jj in 0..n {
+                                let pij = (srow[j + jj] - m_new).exp();
+                                psum += pij;
+                                let w = pij * scales[jj];
+                                let vj = &q[jj * d..][..d];
+                                for t in 0..d {
+                                    arow[t] += w * vj[t] as f32;
+                                }
+                            }
+                        }
+                    }
+                    j += n;
+                }
+                l[i] = l[i] * alpha + psum;
+                m[i] = m_new;
+            }
+            k0 += nk;
+        }
+
+        // --- final normalize ---------------------------------------
+        for i in 0..nq {
+            let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
+            let orow = &mut oh[(q0 + i) * d..][..d];
+            let arow = &acc[i * d..][..d];
+            for t in 0..d {
+                orow[t] = arow[t] * inv;
+            }
+        }
+        q0 += nq;
+    }
+}
+
+/// The pre-blocked single-head loop: one [`KvView::row`] call (page
+/// division + bounds check) per row.  Kept as the scalar-gather
+/// baseline that `benches/hotpath.rs` and the bit-identity property
+/// measure the blocked kernel against.  F32 layouts only.
+fn flash_head_rowwise(
+    qh: &[f32],
+    k: &KvView<'_>,
+    v: &KvView<'_>,
+    oh: &mut [f32],
+    g: HeadGeom,
+    s: &mut FlashScratch,
+) {
+    let HeadGeom { sq, skv, d, causal, bq, bkv, scale } = g;
+    let (scores, m, l, acc) = (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc);
+
+    let mut q0 = 0;
+    while q0 < sq {
+        let nq = bq.min(sq - q0);
+        m[..nq].fill(f32::NEG_INFINITY);
+        l[..nq].fill(0.0);
+        acc[..nq * d].fill(0.0);
+
+        let row_limit = |i: usize| -> usize {
+            if causal { q0 + i + 1 + skv - sq } else { skv }
+        };
+        let block_cols = if causal { row_limit(nq - 1).min(skv) } else { skv };
+
+        let mut k0 = 0;
+        while k0 < block_cols {
+            let nk = bkv.min(block_cols - k0);
+            for i in 0..nq {
+                let qi = &qh[(q0 + i) * d..][..d];
+                let srow = &mut scores[i * bkv..][..nk];
+                for (j, sc) in srow.iter_mut().enumerate() {
+                    *sc = dot4(qi, k.row(k0 + j, d)) * scale;
+                }
+            }
+            for i in 0..nq {
+                let limit = row_limit(i);
                 let vis = limit.saturating_sub(k0).min(nk);
                 if vis == 0 {
                     continue;
@@ -272,7 +526,6 @@ fn flash_head(
             k0 += nk;
         }
 
-        // --- final normalize ---------------------------------------
         for i in 0..nq {
             let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
             let orow = &mut oh[(q0 + i) * d..][..d];
@@ -335,6 +588,33 @@ pub fn flash_attention_view(
         let qh = &q[head * sq * d..][..sq * d];
         let oh = &mut out[head * sq * d..][..sq * d];
         flash_head(qh, k, v, oh, geom, &mut scratch);
+    }
+}
+
+/// [`flash_attention_view`] through the pre-blocked per-row gather
+/// ([`KvView::row`] once per KV row) — the scalar baseline the blocked
+/// kernel is benched and bit-compared against.  F32 views only (int8
+/// views panic: they have no materialized f32 rows).
+pub fn flash_attention_view_rowwise(
+    q: &[f32],
+    k: &KvView<'_>,
+    v: &KvView<'_>,
+    out: &mut [f32],
+    p: &FlashParams,
+) {
+    let (h, sq, skv, d) = (p.heads, p.seq_q, p.seq_kv, p.head_dim);
+    assert_eq!(p.kv_heads, 1, "flash_attention_view_rowwise is single-KV-head");
+    assert_eq!(q.len(), h * sq * d, "q shape");
+    assert_eq!(out.len(), h * sq * d, "out shape");
+    assert!(k.addressable_rows(d) >= skv, "k view shorter than seq_kv");
+    assert!(v.addressable_rows(d) >= skv, "v view shorter than seq_kv");
+    let geom = HeadGeom::of(p);
+    let mut scratch = FlashScratch::new(geom.bq, geom.bkv, d);
+
+    for head in 0..h {
+        let qh = &q[head * sq * d..][..sq * d];
+        let oh = &mut out[head * sq * d..][..sq * d];
+        flash_head_rowwise(qh, k, v, oh, geom, &mut scratch);
     }
 }
 
@@ -633,6 +913,117 @@ mod tests {
             },
         );
         assert_eq!(gqa, mha, "GQA must be bit-identical to expanded MHA");
+    }
+
+    /// Property: the blocked run-walking kernel is bit-identical to the
+    /// pre-blocked per-row gather on paged f32 views — the f32-codec
+    /// "nothing changed" pin for this PR's inner-loop rewrite.
+    #[test]
+    fn prop_blocked_equals_rowwise() {
+        check(32, |rng| {
+            let h = rng.range(1, 3);
+            let skv = rng.range(1, 40);
+            let d = *rng.pick(&[4usize, 8, 16]);
+            let page_size = *rng.pick(&[1usize, 3, 4, 7]);
+            let bkv = rng.range(1, 17);
+            let mut r = crate::proptest::Rng::new(rng.next_u64());
+            let q = r.f32_vec(h * d);
+            let k = r.f32_vec(skv * d);
+            let v = r.f32_vec(skv * d);
+            // scatter into a reverse-permuted paged store
+            let nblocks = skv.div_ceil(page_size);
+            let npages = nblocks + 1;
+            let pages: Vec<u32> = (0..nblocks).map(|b| (npages - 1 - b) as u32).collect();
+            let mut kstore = vec![0.0f32; npages * page_size * d];
+            let mut vstore = vec![0.0f32; npages * page_size * d];
+            for rr in 0..skv {
+                let p = pages[rr / page_size] as usize;
+                let at = (p * page_size + rr % page_size) * d;
+                kstore[at..at + d].copy_from_slice(&k[rr * d..][..d]);
+                vstore[at..at + d].copy_from_slice(&v[rr * d..][..d]);
+            }
+            let p = FlashParams {
+                heads: h,
+                kv_heads: 1,
+                seq_q: 1,
+                seq_kv: skv,
+                head_dim: d,
+                causal: false,
+                block_q: 1,
+                block_kv: bkv,
+                scale: 1.0 / (d as f32).sqrt(),
+            };
+            let kview = KvView::Paged { store: &kstore, pages: &pages, page_size };
+            let vview = KvView::Paged { store: &vstore, pages: &pages, page_size };
+            let mut blocked = vec![0.0; h * d];
+            flash_attention_view(&q, &kview, &vview, &mut blocked, &p);
+            let mut rowwise = vec![0.0; h * d];
+            flash_attention_view_rowwise(&q, &kview, &vview, &mut rowwise, &p);
+            prop_ensure!(
+                blocked == rowwise,
+                "blocked gather changed bits: skv={skv} ps={page_size} bkv={bkv} d={d}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Int8 pages gathered through the fused-dequant kernel stay within
+    /// quantization tolerance of the f32 kernel on the same rows.
+    #[test]
+    fn int8_view_within_tolerance() {
+        use crate::coordinator::kv_cache::{PageCodec, PagePool};
+        let (h, skv, d, page_size) = (3usize, 37usize, 16usize, 4usize);
+        let mut rng = crate::proptest::Rng::new(9);
+        let q = rng.f32_vec(h * d);
+        let k = rng.f32_vec(skv * d);
+        let v = rng.f32_vec(skv * d);
+        let nblocks = skv.div_ceil(page_size);
+        let mut pool = PagePool::with_codec(page_size, d, nblocks, PageCodec::Int8);
+        let pages: Vec<u32> = (0..nblocks).map(|_| pool.alloc().unwrap()).collect();
+        for r in 0..skv {
+            pool.write_row(pages[r / page_size], r % page_size, &k[r * d..][..d], &v[r * d..][..d]);
+        }
+        let p = FlashParams {
+            heads: h,
+            kv_heads: 1,
+            seq_q: 1,
+            seq_kv: skv,
+            head_dim: d,
+            causal: false,
+            block_q: 1,
+            block_kv: 7,
+            scale: 1.0 / (d as f32).sqrt(),
+        };
+        let mut exact = vec![0.0; h * d];
+        flash_attention(&q, &k, &v, &mut exact, &p);
+        let kview = KvView::PagedI8 { store: pool.k_quant_store(), pages: &pages, page_size };
+        let vview = KvView::PagedI8 { store: pool.v_quant_store(), pages: &pages, page_size };
+        assert_eq!(kview.addressable_rows(d), nblocks * page_size);
+        let mut quant = vec![0.0; h * d];
+        flash_attention_view(&q, &kview, &vview, &mut quant, &p);
+        let err = max_err(&quant, &exact);
+        assert!(err < 0.05, "int8 fused gather err {err} out of tolerance");
+        assert!(err > 0.0, "int8 output suspiciously exact — dequant path not exercised?");
+    }
+
+    /// A tiered view whose `pages`/`tiers` lengths disagree must be
+    /// caught by the debug assertion (codec-typed views can't silently
+    /// skew the addressable range).
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "pages/tiers lengths must agree")]
+    fn tiered_pages_tiers_skew_is_caught() {
+        let store = [0.0f32; 16];
+        let pages = [0u32, 1];
+        let tiers = [Tier::Device]; // one entry short
+        let view = KvView::Tiered {
+            device_store: &store,
+            host_store: &store,
+            pages: &pages,
+            tiers: &tiers,
+            page_size: 2,
+        };
+        let _ = view.addressable_rows(2);
     }
 
     /// Property: output rows are convex combinations of V rows — within

@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::attention::batch::{
     batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
-use crate::coordinator::kv_cache::{BlockTable, CacheShape, TieredPagePool};
+use crate::coordinator::kv_cache::{BlockTable, CacheShape, PageCodec, TieredPagePool};
 use crate::models::ModelShape;
 use crate::proptest::Rng;
 use crate::runtime::{HostTensor, Manifest, Runtime};
@@ -596,21 +596,23 @@ impl HostModelBackend {
                         // be host-resident — keep the single-store
                         // gather (no per-row tier dispatch) on that
                         // default path; both stream identical rows.
+                        // The pool codec picks the f32 or fused-int8
+                        // view — writes already encoded through it.
                         let host_empty = pools.host().num_pages() == 0;
+                        let codec = pools.codec();
                         rows.iter()
                             .enumerate()
                             .map(|(ri, &(_, _, pos))| SeqAttn {
                                 q: &qbuf[ri * qdim..][..qdim],
-                                kv: if host_empty {
-                                    SeqKv::Paged {
+                                kv: match (codec, host_empty) {
+                                    (PageCodec::F32, true) => SeqKv::Paged {
                                         k_store: pools.device().k_store(),
                                         v_store: pools.device().v_store(),
                                         pages: tables[ri].layer_pages(l),
                                         max_blocks: tables[ri].max_blocks(),
                                         page_size: tables[ri].page_size(),
-                                    }
-                                } else {
-                                    SeqKv::Tiered {
+                                    },
+                                    (PageCodec::F32, false) => SeqKv::Tiered {
                                         k_device: pools.device().k_store(),
                                         v_device: pools.device().v_store(),
                                         k_host: pools.host().k_store(),
@@ -619,7 +621,24 @@ impl HostModelBackend {
                                         tiers: tables[ri].layer_tiers(l),
                                         max_blocks: tables[ri].max_blocks(),
                                         page_size: tables[ri].page_size(),
-                                    }
+                                    },
+                                    (PageCodec::Int8, true) => SeqKv::PagedI8 {
+                                        k: pools.device().k_quant_store(),
+                                        v: pools.device().v_quant_store(),
+                                        pages: tables[ri].layer_pages(l),
+                                        max_blocks: tables[ri].max_blocks(),
+                                        page_size: tables[ri].page_size(),
+                                    },
+                                    (PageCodec::Int8, false) => SeqKv::TieredI8 {
+                                        k_device: pools.device().k_quant_store(),
+                                        v_device: pools.device().v_quant_store(),
+                                        k_host: pools.host().k_quant_store(),
+                                        v_host: pools.host().v_quant_store(),
+                                        pages: tables[ri].layer_pages(l),
+                                        tiers: tables[ri].layer_tiers(l),
+                                        max_blocks: tables[ri].max_blocks(),
+                                        page_size: tables[ri].page_size(),
+                                    },
                                 },
                                 kv_len: pos + 1,
                             })

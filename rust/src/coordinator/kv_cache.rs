@@ -239,11 +239,74 @@ impl CachePool {
 /// Marker for an unallocated block-table slot.
 pub const NO_PAGE: u32 = u32::MAX;
 
-/// Bytes of one KV page (K + V rows at f32) — the single source of
-/// truth for page sizing: pool budgets, migration accounting and the
+/// How KV rows are encoded inside a page — the page pool's element
+/// codec.  Both tiers of a [`TieredPagePool`] share one codec (pages
+/// migrate by memcpy, never transcoding), and the gather kernels select
+/// the matching fused path from the view variant
+/// (`attention::flash::KvView`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PageCodec {
+    /// 4-byte floats — bit-identical to the pre-codec layout.
+    #[default]
+    F32,
+    /// Symmetric per-row int8: each K/V row stores `head_dim` bytes
+    /// plus one f32 scale (`max|x| / 127`), quartering the row payload
+    /// at large `head_dim`.  Dequantization is fused into the gather —
+    /// a decoded f32 row is never materialized.
+    Int8,
+}
+
+impl PageCodec {
+    /// Bytes of one encoded K or V row, scale side-channel included.
+    pub fn row_bytes(self, head_dim: usize) -> usize {
+        match self {
+            PageCodec::F32 => 4 * head_dim,
+            PageCodec::Int8 => head_dim + 4,
+        }
+    }
+}
+
+/// Bytes of one KV page (K + V rows) under `codec` — the single source
+/// of truth for page sizing: pool budgets, migration accounting and the
 /// offload page planner all go through it.
+pub fn kv_page_bytes_codec(page_size: usize, head_dim: usize, codec: PageCodec) -> usize {
+    2 * page_size * codec.row_bytes(head_dim)
+}
+
+/// Bytes of one f32 KV page — [`kv_page_bytes_codec`] at
+/// [`PageCodec::F32`], kept as the legacy spelling.
 pub fn kv_page_bytes(page_size: usize, head_dim: usize) -> usize {
-    2 * 4 * page_size * head_dim
+    kv_page_bytes_codec(page_size, head_dim, PageCodec::F32)
+}
+
+/// One int8 row store with its per-row scale side-channel: `q` is
+/// `[num_pages, page_size, head_dim]` flat i8 and `scales` is
+/// `[num_pages, page_size]` — one f32 per encoded row.  Row `r` of page
+/// `p` decodes as `q[(p*page_size + r)*head_dim + t] as f32 *
+/// scales[p*page_size + r]`.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantStore<'a> {
+    /// Quantized rows, `[num_pages, page_size, head_dim]` flat.
+    pub q: &'a [i8],
+    /// Per-row dequantization scales, `[num_pages, page_size]` flat.
+    pub scales: &'a [f32],
+}
+
+/// Symmetric per-row int8 quantization: `scale = max|x| / 127` (1.0 for
+/// an all-zero row), `q = round(x / scale)` clamped to ±127.  Returns
+/// the scale; worst-case dequantization error is `scale / 2 =
+/// max|x| / 254` per element.
+pub fn quantize_row_i8(row: &[f32], q: &mut [i8]) -> f32 {
+    let mut max_abs = 0.0f32;
+    for &x in row {
+        max_abs = max_abs.max(x.abs());
+    }
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (qi, &x) in q.iter_mut().zip(row) {
+        *qi = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
 }
 
 /// Why a page allocation failed.
@@ -294,26 +357,58 @@ impl std::error::Error for PageAllocError {}
 pub struct PagePool {
     page_size: usize,
     head_dim: usize,
-    /// `[num_pages, page_size, head_dim]` flat K rows.
+    codec: PageCodec,
+    /// `[num_pages, page_size, head_dim]` flat K rows (`F32` codec;
+    /// empty under `Int8`).
     k: Vec<f32>,
     /// Same shape, V rows.
     v: Vec<f32>,
+    /// `[num_pages, page_size, head_dim]` flat int8 K rows (`Int8`
+    /// codec; empty under `F32`).
+    kq: Vec<i8>,
+    /// Same shape, int8 V rows.
+    vq: Vec<i8>,
+    /// `[num_pages, page_size]` per-row K scales (`Int8` codec).
+    k_scale: Vec<f32>,
+    /// Same shape, V scales.
+    v_scale: Vec<f32>,
     refs: Vec<u32>,
     free: Vec<u32>,
 }
 
 impl PagePool {
-    /// A pool of `num_pages` zeroed pages of `page_size` rows × `head_dim`.
+    /// A pool of `num_pages` zeroed f32 pages of `page_size` rows ×
+    /// `head_dim` — [`Self::with_codec`] at [`PageCodec::F32`].
     pub fn new(page_size: usize, head_dim: usize, num_pages: usize) -> Self {
+        Self::with_codec(page_size, head_dim, num_pages, PageCodec::F32)
+    }
+
+    /// A pool of `num_pages` zeroed pages encoded with `codec`.
+    pub fn with_codec(
+        page_size: usize,
+        head_dim: usize,
+        num_pages: usize,
+        codec: PageCodec,
+    ) -> Self {
         assert!(page_size >= 1, "page_size must be >= 1");
         assert!(head_dim >= 1, "head_dim must be >= 1");
         assert!(num_pages <= NO_PAGE as usize, "num_pages overflows page id space");
         let elems = num_pages * page_size * head_dim;
+        let rows = num_pages * page_size;
+        let (f32_elems, i8_elems, scale_elems) = match codec {
+            PageCodec::F32 => (elems, 0, 0),
+            PageCodec::Int8 => (0, elems, rows),
+        };
         Self {
             page_size,
             head_dim,
-            k: vec![0.0; elems],
-            v: vec![0.0; elems],
+            codec,
+            k: vec![0.0; f32_elems],
+            v: vec![0.0; f32_elems],
+            kq: vec![0; i8_elems],
+            vq: vec![0; i8_elems],
+            k_scale: vec![1.0; scale_elems],
+            v_scale: vec![1.0; scale_elems],
             refs: vec![0; num_pages],
             // LIFO free list, lowest ids on top.
             free: (0..num_pages as u32).rev().collect(),
@@ -323,9 +418,25 @@ impl PagePool {
     /// Size the pool for a device budget: as many pages as
     /// `budget_bytes` holds at f32 K+V rows (at least one).
     pub fn for_budget(shape: CacheShape, page_size: usize, budget_bytes: usize) -> Self {
-        let page_bytes = kv_page_bytes(page_size, shape.head_dim);
+        Self::for_budget_codec(shape, page_size, budget_bytes, PageCodec::F32)
+    }
+
+    /// Size the pool for a device budget under `codec`: the smaller
+    /// int8 pages mean the same byte budget holds ~4× the tokens.
+    pub fn for_budget_codec(
+        shape: CacheShape,
+        page_size: usize,
+        budget_bytes: usize,
+        codec: PageCodec,
+    ) -> Self {
+        let page_bytes = kv_page_bytes_codec(page_size, shape.head_dim, codec);
         let num_pages = (budget_bytes / page_bytes.max(1)).max(1);
-        Self::new(page_size, shape.head_dim, num_pages)
+        Self::with_codec(page_size, shape.head_dim, num_pages, codec)
+    }
+
+    /// The pool's element codec.
+    pub fn codec(&self) -> PageCodec {
+        self.codec
     }
 
     /// Token rows per page.
@@ -361,9 +472,9 @@ impl PagePool {
         self.used_pages() as f64 / self.num_pages() as f64
     }
 
-    /// Bytes of one page (K + V).
+    /// Bytes of one page (K + V, scale side-channel included).
     pub fn page_bytes(&self) -> usize {
-        kv_page_bytes(self.page_size, self.head_dim)
+        kv_page_bytes_codec(self.page_size, self.head_dim, self.codec)
     }
 
     /// Allocate one page (`refs = 1`).  Page contents are stale — the
@@ -406,13 +517,26 @@ impl PagePool {
         let dst = self.alloc()?;
         let n = self.page_size * self.head_dim;
         let (s, d) = (src as usize * n, dst as usize * n);
-        self.k.copy_within(s..s + n, d);
-        self.v.copy_within(s..s + n, d);
+        match self.codec {
+            PageCodec::F32 => {
+                self.k.copy_within(s..s + n, d);
+                self.v.copy_within(s..s + n, d);
+            }
+            PageCodec::Int8 => {
+                self.kq.copy_within(s..s + n, d);
+                self.vq.copy_within(s..s + n, d);
+                let m = self.page_size;
+                let (ss, sd) = (src as usize * m, dst as usize * m);
+                self.k_scale.copy_within(ss..ss + m, sd);
+                self.v_scale.copy_within(ss..ss + m, sd);
+            }
+        }
         Some(dst)
     }
 
     /// The flat K row store (`[num_pages, page_size, head_dim]`) —
-    /// what `KvView::Paged` gathers from.
+    /// what `KvView::Paged` gathers from.  Empty under the `Int8`
+    /// codec; int8 pools gather through [`Self::k_quant_store`].
     pub fn k_store(&self) -> &[f32] {
         &self.k
     }
@@ -422,14 +546,65 @@ impl PagePool {
         &self.v
     }
 
-    /// Write one token's K and V rows into `slot` of `page`.
+    /// The int8 K row store with its scale side-channel — what
+    /// `KvView::PagedI8` gathers from.  Empty under the `F32` codec.
+    pub fn k_quant_store(&self) -> QuantStore<'_> {
+        QuantStore { q: &self.kq, scales: &self.k_scale }
+    }
+
+    /// The int8 V row store with its scale side-channel, same shape.
+    pub fn v_quant_store(&self) -> QuantStore<'_> {
+        QuantStore { q: &self.vq, scales: &self.v_scale }
+    }
+
+    /// Write one token's K and V rows into `slot` of `page`, encoding
+    /// through the pool codec (quantize-on-append for `Int8`).
     pub fn write_row(&mut self, page: u32, slot: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(slot < self.page_size, "slot {slot} out of page");
         debug_assert!(self.refs[page as usize] > 0, "write to free page {page}");
         let d = self.head_dim;
-        let at = (page as usize * self.page_size + slot) * d;
-        self.k[at..at + d].copy_from_slice(&k_row[..d]);
-        self.v[at..at + d].copy_from_slice(&v_row[..d]);
+        let row = page as usize * self.page_size + slot;
+        let at = row * d;
+        match self.codec {
+            PageCodec::F32 => {
+                self.k[at..at + d].copy_from_slice(&k_row[..d]);
+                self.v[at..at + d].copy_from_slice(&v_row[..d]);
+            }
+            PageCodec::Int8 => {
+                self.k_scale[row] = quantize_row_i8(&k_row[..d], &mut self.kq[at..at + d]);
+                self.v_scale[row] = quantize_row_i8(&v_row[..d], &mut self.vq[at..at + d]);
+            }
+        }
+    }
+
+    /// Decode one K row back to f32 — a test/diagnostic path (the hot
+    /// gather streams the stores directly through `KvView`).
+    pub fn k_row_f32(&self, page: u32, slot: usize) -> Vec<f32> {
+        self.row_f32(&self.k, &self.kq, &self.k_scale, page, slot)
+    }
+
+    /// Decode one V row back to f32, same contract.
+    pub fn v_row_f32(&self, page: u32, slot: usize) -> Vec<f32> {
+        self.row_f32(&self.v, &self.vq, &self.v_scale, page, slot)
+    }
+
+    fn row_f32(
+        &self,
+        f: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        page: u32,
+        slot: usize,
+    ) -> Vec<f32> {
+        let d = self.head_dim;
+        let row = page as usize * self.page_size + slot;
+        match self.codec {
+            PageCodec::F32 => f[row * d..][..d].to_vec(),
+            PageCodec::Int8 => {
+                let s = scales[row];
+                q[row * d..][..d].iter().map(|&x| x as f32 * s).collect()
+            }
+        }
     }
 }
 
@@ -539,9 +714,23 @@ impl TieredPagePool {
         host_pages: usize,
         link: PcieLink,
     ) -> Self {
+        Self::new_with_codec(page_size, head_dim, device_pages, host_pages, link, PageCodec::F32)
+    }
+
+    /// Device and host pools sharing one page `codec` — migration moves
+    /// encoded bytes verbatim, so the host tier inherits the int8
+    /// compression for free (every swap/offload moves ~4× fewer bytes).
+    pub fn new_with_codec(
+        page_size: usize,
+        head_dim: usize,
+        device_pages: usize,
+        host_pages: usize,
+        link: PcieLink,
+        codec: PageCodec,
+    ) -> Self {
         Self {
-            device: PagePool::new(page_size, head_dim, device_pages),
-            host: PagePool::new(page_size, head_dim, host_pages),
+            device: PagePool::with_codec(page_size, head_dim, device_pages, codec),
+            host: PagePool::with_codec(page_size, head_dim, host_pages, codec),
             link,
             stats: MigrationStats::default(),
             pending: None,
@@ -558,15 +747,35 @@ impl TieredPagePool {
         host_budget_bytes: usize,
         link: PcieLink,
     ) -> Self {
-        let page_bytes = kv_page_bytes(page_size, shape.head_dim);
-        let host_pages = host_budget_bytes / page_bytes.max(1);
-        Self {
-            device: PagePool::for_budget(shape, page_size, device_budget_bytes),
-            host: PagePool::new(page_size, shape.head_dim, host_pages),
+        Self::for_budget_codec(
+            shape,
+            page_size,
+            device_budget_bytes,
+            host_budget_bytes,
             link,
-            stats: MigrationStats::default(),
-            pending: None,
-        }
+            PageCodec::F32,
+        )
+    }
+
+    /// [`Self::for_budget`] with an explicit page codec: the same byte
+    /// budgets hold ~4× the pages under [`PageCodec::Int8`].
+    pub fn for_budget_codec(
+        shape: CacheShape,
+        page_size: usize,
+        device_budget_bytes: usize,
+        host_budget_bytes: usize,
+        link: PcieLink,
+        codec: PageCodec,
+    ) -> Self {
+        let page_bytes = kv_page_bytes_codec(page_size, shape.head_dim, codec);
+        let device_pages = (device_budget_bytes / page_bytes.max(1)).max(1);
+        let host_pages = host_budget_bytes / page_bytes.max(1);
+        Self::new_with_codec(page_size, shape.head_dim, device_pages, host_pages, link, codec)
+    }
+
+    /// The element codec shared by both tiers.
+    pub fn codec(&self) -> PageCodec {
+        self.device.codec
     }
 
     /// The device-tier pool.
@@ -645,6 +854,16 @@ impl TieredPagePool {
         self.pool(tier).v_store()
     }
 
+    /// Int8 K row store + scales of one tier (`Int8` codec).
+    pub fn k_quant_store(&self, tier: Tier) -> QuantStore<'_> {
+        self.pool(tier).k_quant_store()
+    }
+
+    /// Int8 V row store + scales of one tier, same shape.
+    pub fn v_quant_store(&self, tier: Tier) -> QuantStore<'_> {
+        self.pool(tier).v_quant_store()
+    }
+
     /// Write one token's K/V rows into `slot` of `page` on `tier`.
     /// Fresh blocks live device-side, but writes into already-migrated
     /// blocks (a chunked prefill filling a cold tail) land on host.
@@ -666,8 +885,22 @@ impl TieredPagePool {
         let n = self.device.page_size * self.device.head_dim;
         let src = device_page as usize * n;
         let dst = host_page as usize * n;
-        self.host.k[dst..dst + n].copy_from_slice(&self.device.k[src..src + n]);
-        self.host.v[dst..dst + n].copy_from_slice(&self.device.v[src..src + n]);
+        match self.device.codec {
+            PageCodec::F32 => {
+                self.host.k[dst..dst + n].copy_from_slice(&self.device.k[src..src + n]);
+                self.host.v[dst..dst + n].copy_from_slice(&self.device.v[src..src + n]);
+            }
+            PageCodec::Int8 => {
+                self.host.kq[dst..dst + n].copy_from_slice(&self.device.kq[src..src + n]);
+                self.host.vq[dst..dst + n].copy_from_slice(&self.device.vq[src..src + n]);
+                let m = self.device.page_size;
+                let (ss, sd) = (device_page as usize * m, host_page as usize * m);
+                self.host.k_scale[sd..sd + m]
+                    .copy_from_slice(&self.device.k_scale[ss..ss + m]);
+                self.host.v_scale[sd..sd + m]
+                    .copy_from_slice(&self.device.v_scale[ss..ss + m]);
+            }
+        }
         self.device.release(device_page);
         Some(host_page)
     }
@@ -686,8 +919,22 @@ impl TieredPagePool {
         let n = self.device.page_size * self.device.head_dim;
         let src = host_page as usize * n;
         let dst = device_page as usize * n;
-        self.device.k[dst..dst + n].copy_from_slice(&self.host.k[src..src + n]);
-        self.device.v[dst..dst + n].copy_from_slice(&self.host.v[src..src + n]);
+        match self.device.codec {
+            PageCodec::F32 => {
+                self.device.k[dst..dst + n].copy_from_slice(&self.host.k[src..src + n]);
+                self.device.v[dst..dst + n].copy_from_slice(&self.host.v[src..src + n]);
+            }
+            PageCodec::Int8 => {
+                self.device.kq[dst..dst + n].copy_from_slice(&self.host.kq[src..src + n]);
+                self.device.vq[dst..dst + n].copy_from_slice(&self.host.vq[src..src + n]);
+                let m = self.device.page_size;
+                let (ss, sd) = (host_page as usize * m, device_page as usize * m);
+                self.device.k_scale[sd..sd + m]
+                    .copy_from_slice(&self.host.k_scale[ss..ss + m]);
+                self.device.v_scale[sd..sd + m]
+                    .copy_from_slice(&self.host.v_scale[ss..ss + m]);
+            }
+        }
         self.host.release(host_page);
         Some(device_page)
     }
@@ -2619,6 +2866,169 @@ mod tests {
         st.release_all_tiered(&mut pools);
         for p in &pools {
             assert_eq!(p.free_pages_total(), p.total_pages());
+        }
+    }
+
+    // --- page codec ---------------------------------------------------
+
+    #[test]
+    fn codec_row_and_page_bytes() {
+        assert_eq!(PageCodec::F32.row_bytes(64), 256);
+        assert_eq!(PageCodec::Int8.row_bytes(64), 68);
+        assert_eq!(kv_page_bytes(16, 64), kv_page_bytes_codec(16, 64, PageCodec::F32));
+        // int8 pages approach 4× smaller as head_dim grows
+        assert!(kv_page_bytes_codec(16, 64, PageCodec::Int8) * 3 < kv_page_bytes(16, 64));
+    }
+
+    #[test]
+    fn prop_quantize_roundtrip_within_half_scale() {
+        use crate::proptest::check;
+        check(200, |rng| {
+            let d = rng.range(1, 96);
+            // mix of magnitudes so scales vary case to case
+            let amp = *rng.pick(&[1e-3f32, 1.0, 37.5, 2048.0]);
+            let row: Vec<f32> = rng.f32_vec(d).iter().map(|x| x * amp).collect();
+            let mut q = vec![0i8; d];
+            let scale = quantize_row_i8(&row, &mut q);
+            let max_abs = row.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            crate::prop_ensure!(scale > 0.0, "scale must stay positive, got {scale}");
+            for (x, &qi) in row.iter().zip(&q) {
+                let err = (x - qi as f32 * scale).abs();
+                // symmetric rounding: worst case half a quantization
+                // step, i.e. scale/2 = max|x|/254
+                let bound = max_abs / 254.0 + max_abs * 1e-6 + f32::EPSILON;
+                crate::prop_ensure!(
+                    err <= bound,
+                    "d={d} amp={amp}: err {err} > bound {bound} (x={x}, q={qi}, scale={scale})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_zero_row_is_exact() {
+        let row = [0.0f32; 8];
+        let mut q = [7i8; 8];
+        let scale = quantize_row_i8(&row, &mut q);
+        assert_eq!(scale, 1.0, "all-zero rows take the neutral scale");
+        assert!(q.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn prop_int8_pool_accounting_no_leak() {
+        use crate::proptest::check;
+        check(60, |rng| {
+            let page_size = rng.range(1, 6);
+            let head_dim = rng.range(1, 17);
+            let num_pages = rng.range(2, 10);
+            let mut pool = PagePool::with_codec(page_size, head_dim, num_pages, PageCodec::Int8);
+            // random alloc / clone / release walk, tracking live handles
+            // (clones alias pages, so count every handle separately)
+            let mut live: Vec<u32> = Vec::new();
+            for _ in 0..rng.range(10, 60) {
+                match rng.range(0, 3) {
+                    0 => {
+                        if let Some(p) = pool.alloc() {
+                            let k = rng.f32_vec(head_dim);
+                            let v = rng.f32_vec(head_dim);
+                            pool.write_row(p, rng.range(0, page_size), &k, &v);
+                            live.push(p);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let src = live[rng.range(0, live.len())];
+                            if let Some(c) = pool.clone_page(src) {
+                                live.push(c);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.range(0, live.len());
+                            pool.release(live.swap_remove(i));
+                        }
+                    }
+                }
+                crate::prop_ensure!(
+                    pool.used_pages() + pool.free_pages() == pool.num_pages(),
+                    "page accounting must always balance"
+                );
+            }
+            for p in live.drain(..) {
+                pool.release(p);
+            }
+            crate::prop_ensure!(
+                pool.free_pages() == num_pages,
+                "all pages must return to the free list: {} of {num_pages}",
+                pool.free_pages()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_int8_pool_rows_decode_within_tolerance() {
+        use crate::proptest::check;
+        check(60, |rng| {
+            let page_size = rng.range(1, 8);
+            let head_dim = rng.range(1, 33);
+            let mut pool = PagePool::with_codec(page_size, head_dim, 2, PageCodec::Int8);
+            let page = pool.alloc().unwrap();
+            for slot in 0..page_size {
+                let k = rng.f32_vec(head_dim);
+                let v = rng.f32_vec(head_dim);
+                pool.write_row(page, slot, &k, &v);
+                let (kd, vd) = (pool.k_row_f32(page, slot), pool.v_row_f32(page, slot));
+                let kmax = k.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let vmax = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                for t in 0..head_dim {
+                    crate::prop_ensure!(
+                        (k[t] - kd[t]).abs() <= kmax / 254.0 + 1e-6,
+                        "k slot {slot} elem {t}: {} vs {}",
+                        k[t],
+                        kd[t]
+                    );
+                    crate::prop_ensure!(
+                        (v[t] - vd[t]).abs() <= vmax / 254.0 + 1e-6,
+                        "v slot {slot} elem {t}: {} vs {}",
+                        v[t],
+                        vd[t]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_offload_promote_roundtrip_preserves_rows() {
+        // device→host→device migration must move quantized bytes and
+        // scales together: decoded rows are bit-identical afterwards.
+        let (page_size, head_dim) = (4, 8);
+        let mut pools =
+            TieredPagePool::new_with_codec(page_size, head_dim, 2, 2, PcieLink::default(), PageCodec::Int8);
+        assert_eq!(pools.codec(), PageCodec::Int8);
+        let mut rng = crate::proptest::Rng::new(11);
+        let page = pools.device_mut().alloc().unwrap();
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..page_size).map(|_| (rng.f32_vec(head_dim), rng.f32_vec(head_dim))).collect();
+        for (slot, (k, v)) in rows.iter().enumerate() {
+            pools.write_row(Tier::Device, page, slot, k, v);
+        }
+        let before: Vec<(Vec<f32>, Vec<f32>)> = (0..page_size)
+            .map(|s| (pools.device().k_row_f32(page, s), pools.device().v_row_f32(page, s)))
+            .collect();
+        let hp = pools.offload_page(page).unwrap();
+        for (s, (k, v)) in before.iter().enumerate() {
+            assert_eq!(&pools.host().k_row_f32(hp, s), k, "host K slot {s}");
+            assert_eq!(&pools.host().v_row_f32(hp, s), v, "host V slot {s}");
+        }
+        let dp = pools.promote_page(hp).unwrap();
+        for (s, (k, v)) in before.iter().enumerate() {
+            assert_eq!(&pools.device().k_row_f32(dp, s), k, "promoted K slot {s}");
+            assert_eq!(&pools.device().v_row_f32(dp, s), v, "promoted V slot {s}");
         }
     }
 }

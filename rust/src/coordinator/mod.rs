@@ -61,8 +61,8 @@ pub use sharded::{ShardedBackend, ShardedConfig};
 pub use batcher::AdmitError;
 pub use engine::{Engine, EngineConfig, KvLayout};
 pub use kv_cache::{
-    BlockTable, CacheShape, MigrationStats, PageAllocError, PagePool, PcieLink, PrefixIndex,
-    ShardedTable, Tier, TieredPagePool,
+    BlockTable, CacheShape, MigrationStats, PageAllocError, PageCodec, PagePool, PcieLink,
+    PrefixIndex, QuantStore, ShardedTable, Tier, TieredPagePool,
 };
 pub use reclaim::{PreemptMode, ReclaimPolicy, RecomputeVsSwap, VictimPolicy};
 pub use request::{GenParams, Request, RequestId, Response};

@@ -39,7 +39,7 @@ use crate::coordinator::backend::{
     matvec, rmsnorm, AllReduceStats, Backend, BucketGrid, HostModelBackend, HostModelConfig,
     ModelInfo, PagedRow, ShardedRow, StepOut,
 };
-use crate::coordinator::kv_cache::{BlockTable, TieredPagePool};
+use crate::coordinator::kv_cache::{BlockTable, PageCodec, TieredPagePool};
 use crate::sim::collective::{
     overlapped_schedule, serial_schedule, AllReduceBlock, RingSpec,
 };
@@ -233,6 +233,7 @@ fn forward_sharded(
             for s in 0..n {
                 let pool = &pools[s];
                 let host_empty = pool.host().num_pages() == 0;
+                let codec = pool.codec();
                 let seqs: Vec<SeqAttn<'_>> = tile
                     .iter()
                     .map(|&ri| {
@@ -240,16 +241,15 @@ fn forward_sharded(
                         let pos = rows[ri].1;
                         SeqAttn {
                             q: &qbuf[ri * qdim + s * hdim_l..][..hdim_l],
-                            kv: if host_empty {
-                                SeqKv::Paged {
+                            kv: match (codec, host_empty) {
+                                (PageCodec::F32, true) => SeqKv::Paged {
                                     k_store: pool.device().k_store(),
                                     v_store: pool.device().v_store(),
                                     pages: t.layer_pages(l),
                                     max_blocks: t.max_blocks(),
                                     page_size: t.page_size(),
-                                }
-                            } else {
-                                SeqKv::Tiered {
+                                },
+                                (PageCodec::F32, false) => SeqKv::Tiered {
                                     k_device: pool.device().k_store(),
                                     v_device: pool.device().v_store(),
                                     k_host: pool.host().k_store(),
@@ -258,7 +258,24 @@ fn forward_sharded(
                                     tiers: t.layer_tiers(l),
                                     max_blocks: t.max_blocks(),
                                     page_size: t.page_size(),
-                                }
+                                },
+                                (PageCodec::Int8, true) => SeqKv::PagedI8 {
+                                    k: pool.device().k_quant_store(),
+                                    v: pool.device().v_quant_store(),
+                                    pages: t.layer_pages(l),
+                                    max_blocks: t.max_blocks(),
+                                    page_size: t.page_size(),
+                                },
+                                (PageCodec::Int8, false) => SeqKv::TieredI8 {
+                                    k_device: pool.device().k_quant_store(),
+                                    v_device: pool.device().v_quant_store(),
+                                    k_host: pool.host().k_quant_store(),
+                                    v_host: pool.host().v_quant_store(),
+                                    pages: t.layer_pages(l),
+                                    tiers: t.layer_tiers(l),
+                                    max_blocks: t.max_blocks(),
+                                    page_size: t.page_size(),
+                                },
                             },
                             kv_len: pos + 1,
                         }

@@ -66,6 +66,13 @@ pub struct EngineMetrics {
     /// Prompt tokens whose prefill was skipped thanks to an adopted
     /// prefix run.
     pub prefix_tokens_saved: u64,
+    /// Analytic KV gather bandwidth (paged engines): bytes of on-page
+    /// K/V streamed through attention at the pool's
+    /// [`PageCodec`](crate::coordinator::PageCodec) row encoding —
+    /// int8 pools report ~4× fewer bytes than f32 for the same tokens.
+    pub kv_bytes_gathered: u64,
+    /// KV rows dequantized inside the fused gather (zero on f32 pools).
+    pub dequant_rows: u64,
     /// Tensor-parallel combine (sharded backends only; zero on
     /// single-device engines): B-allreduce tiles issued and activation
     /// bytes combined across shards.

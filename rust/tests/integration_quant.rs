@@ -1,0 +1,235 @@
+//! Integration: int8 KV pages through the full serving stack.
+//!
+//! Runs the engine over [`HostModelBackend`] / [`ShardedBackend`] with
+//! `EngineConfig::kv_codec = PageCodec::Int8` — rows quantize on append
+//! (per-row scale side-channel) and dequantize fused inside the paged
+//! attention gather — and pins the acceptance property: **quantized
+//! serving produces exactly the f32 engine's greedy tokens** across
+//! tiered offload, swap-out/resume preemption, shared-prefix
+//! copy-on-write, and tensor-parallel sharding {1, 2, 4}.
+//!
+//! Budgets are sized in *block groups of the engine's own codec* so the
+//! f32 and int8 runs see the same page-pressure dynamics: tiny_gqa is
+//! layers 2 × kv_heads 2 = 4 pages per group; at page_size 16 /
+//! head_dim 8 a page is 1 KiB (f32) or 384 B (int8).
+
+use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::kv_cache::kv_page_bytes_codec;
+use fastattn::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PageCodec,
+    PreemptMode, ShardedBackend, ShardedConfig,
+};
+use fastattn::models::ModelShape;
+
+/// Bytes of one tiny_gqa block group (4 pages) at `codec`.
+fn group_bytes(codec: PageCodec) -> usize {
+    4 * kv_page_bytes_codec(16, 8, codec)
+}
+
+fn engine(codec: PageCodec, device_groups: usize, host_groups: usize, threads: usize) -> Engine {
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: device_groups * group_bytes(codec),
+        host_kv_budget: host_groups * group_bytes(codec),
+        page_size: 16,
+        kv_codec: codec,
+        ..EngineConfig::default()
+    };
+    Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    )
+}
+
+fn run(e: &mut Engine, prompts: &[Vec<i32>], p: GenParams) -> Vec<Vec<i32>> {
+    for pr in prompts {
+        e.submit(pr.clone(), p).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    (0..4)
+        .map(|i| (0..(i * 7 + 9)).map(|t| ((t * 5 + i * 3 + 1) % 64) as i32).collect())
+        .collect()
+}
+
+/// The base acceptance property: int8 pages serve exactly the f32
+/// engine's greedy tokens (unconstrained, so codec is the only delta),
+/// across thread counts, and the bandwidth counters record the ~4×
+/// byte reduction exactly.
+#[test]
+fn int8_engine_matches_f32_tokens_and_counts_bytes() {
+    let p = GenParams { max_new_tokens: 12, eos_token: None, share_prefix: false };
+    let mut f = engine(PageCodec::F32, 1024, 0, 1);
+    let want = run(&mut f, &prompts(), p);
+
+    for threads in [1usize, 4] {
+        let mut q = engine(PageCodec::Int8, 1024, 0, threads);
+        let got = run(&mut q, &prompts(), p);
+        assert_eq!(got, want, "int8 serving changed greedy tokens (threads={threads})");
+
+        let (fm, qm) = (&f.metrics, &q.metrics);
+        // identical tokens → identical gathered-row counts, so the
+        // byte counters sit in the exact codec ratio: f32 rows are
+        // 4·head_dim = 32 B, int8 rows head_dim + 4 = 12 B.
+        assert!(qm.kv_bytes_gathered > 0 && fm.kv_bytes_gathered > 0);
+        assert_eq!(
+            qm.kv_bytes_gathered * 8,
+            fm.kv_bytes_gathered * 3,
+            "int8 gather bytes must be 12/32 of f32's"
+        );
+        assert!(qm.dequant_rows > 0, "int8 decode must count fused dequants");
+        assert_eq!(fm.dequant_rows, 0, "f32 pools never dequantize");
+    }
+}
+
+/// Tiered offload under device pressure: cold int8 pages migrate to the
+/// host tier (compressed for free — 384 B each, not 1 KiB), decode
+/// gathers across both tiers, tokens unchanged.
+#[test]
+fn int8_tiered_offload_matches_unconstrained() {
+    // 60 prompt + 20 generated = 80 tokens = 5 block groups; a 3-group
+    // device tier forces ≥ 2 groups to offload mid-flight.
+    let prompt: Vec<i32> = (0..60).map(|i| (i * 3 + 1) % 64).collect();
+    let p = GenParams { max_new_tokens: 20, eos_token: None, share_prefix: false };
+
+    let mut base = engine(PageCodec::Int8, 1024, 0, 1);
+    let want = run(&mut base, &[prompt.clone()], p);
+    assert_eq!(base.metrics.pages_migrated, 0);
+
+    // the f32 engine agrees before any pressure is applied
+    let mut f = engine(PageCodec::F32, 1024, 0, 1);
+    assert_eq!(run(&mut f, &[prompt.clone()], p), want);
+
+    let mut tiered = engine(PageCodec::Int8, 3, 8, 1);
+    let got = run(&mut tiered, &[prompt], p);
+    assert_eq!(got, want, "int8 cold-page offload must not change greedy tokens");
+    let m = &tiered.metrics;
+    assert!(m.pages_migrated >= 8, "≥ 2 block groups must spill, migrated {}", m.pages_migrated);
+    assert_eq!(
+        m.migrated_bytes,
+        m.pages_migrated * kv_page_bytes_codec(16, 8, PageCodec::Int8) as u64,
+        "migration accounting must charge int8 page bytes"
+    );
+    assert!(m.pcie_modeled_s > 0.0);
+    assert_eq!(m.pages_used, 0, "device tier drained at idle");
+    assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+}
+
+/// Swap-out preemption and resume with quantized pages: the parked
+/// block table round-trips through the host tier encoded, and every
+/// request's tokens match its solo f32 run.
+#[test]
+fn int8_swap_resume_matches_f32() {
+    // each request: 8 prompt + 40 generated = 48 tokens = 3 groups;
+    // 3 live requests against device 2 + host 2 groups (the proven
+    // squeeze of tests/integration_reclaim.rs) forces swap-outs.
+    let p = GenParams { max_new_tokens: 40, eos_token: None, share_prefix: false };
+    let prompts: Vec<Vec<i32>> = vec![vec![1; 8], vec![2; 8], vec![3; 8]];
+
+    let mk = |codec| {
+        let cfg = EngineConfig {
+            parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+            kv_layout: KvLayout::Paged,
+            device_kv_budget: 2 * group_bytes(codec),
+            host_kv_budget: 2 * group_bytes(codec),
+            page_size: 16,
+            preempt_mode: PreemptMode::Swap,
+            kv_codec: codec,
+            ..EngineConfig::default()
+        };
+        Engine::with_backend(
+            Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+            cfg,
+        )
+    };
+    let mut q = mk(PageCodec::Int8);
+    let got = run(&mut q, &prompts, p);
+    assert!(q.metrics.swaps_out >= 1, "the squeeze must swap at least once");
+    assert_eq!(q.metrics.swaps_in, q.metrics.swaps_out, "every parked table resumes");
+
+    for (pr, got) in prompts.iter().zip(&got) {
+        let mut solo = engine(PageCodec::F32, 1024, 0, 1);
+        let want = run(&mut solo, &[pr.clone()], p);
+        assert_eq!(&want[0], got, "swap/resume drifted from f32 for prompt {pr:?}");
+    }
+}
+
+/// Shared-prefix pages with copy-on-write splits under the int8 codec:
+/// adopting requests reuse quantized prefix pages, diverge via CoW, and
+/// tokens match both the unshared int8 run and the f32 reference.
+#[test]
+fn int8_shared_prefix_cow_matches_f32() {
+    let system = vec![7i32; 32];
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut pr = system.clone();
+            pr.extend(vec![i as i32 + 40; 3]);
+            pr
+        })
+        .collect();
+    let run_with = |codec, share| {
+        let mut e = engine(codec, 1024, 0, 1);
+        let p = GenParams { max_new_tokens: 16, eos_token: None, share_prefix: share };
+        let toks = run(&mut e, &prompts, p);
+        (toks, e.metrics.clone())
+    };
+    let (f32_toks, _) = run_with(PageCodec::F32, false);
+    let (unshared, _) = run_with(PageCodec::Int8, false);
+    let (shared, sm) = run_with(PageCodec::Int8, true);
+    assert_eq!(unshared, f32_toks, "int8 serving changed greedy tokens");
+    assert_eq!(shared, f32_toks, "int8 prefix sharing changed greedy tokens");
+    assert!(sm.prefix_hits > 0, "the common system prompt must hit");
+    assert!(sm.prefix_tokens_saved > 0, "adopters must skip shared prefill");
+}
+
+/// Tensor-parallel shards {1, 2, 4} over per-shard int8 pools: token
+/// streams identical to the single-device f32 engine.
+#[test]
+fn int8_sharded_engine_matches_f32_across_shards() {
+    let host = HostModelConfig {
+        model: ModelShape {
+            name: "host-quant-it",
+            params: 0,
+            layers: 2,
+            heads: 8,
+            kv_heads: 8,
+            head_dim: 4,
+            ffn: 32,
+            vocab: 32,
+        },
+        max_seq: 64,
+        ..HostModelConfig::tiny_gqa()
+    };
+    let p = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: false };
+    let prompts: Vec<Vec<i32>> = vec![
+        (0..5).map(|t| (t * 7 + 3) % 32).collect(),
+        (0..12).map(|t| (t * 3 + 1) % 32).collect(),
+        (0..19).map(|t| (t * 11 + 5) % 32).collect(),
+    ];
+    let ecfg = |codec| EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 16,
+        kv_codec: codec,
+        ..EngineConfig::default()
+    };
+    let mut f = Engine::with_backend(
+        Box::new(HostModelBackend::new(host.clone())),
+        ecfg(PageCodec::F32),
+    );
+    let want = run(&mut f, &prompts, p);
+    for shards in [1usize, 2, 4] {
+        let mut e = Engine::with_backend(
+            Box::new(ShardedBackend::new(host.clone(), ShardedConfig::for_shards(shards)).unwrap()),
+            ecfg(PageCodec::Int8),
+        );
+        let got = run(&mut e, &prompts, p);
+        assert_eq!(got, want, "int8 sharded serving drifted at {shards} shards");
+        assert!(e.metrics.dequant_rows > 0, "sharded decode must hit the int8 gather");
+    }
+}
