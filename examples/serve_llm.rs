@@ -52,8 +52,9 @@ fn main() -> anyhow::Result<()> {
     let mut ttft = LatencyHistogram::default();
     let mut total = LatencyHistogram::default();
     let mut generated = 0usize;
-    for (id, rx) in waits {
-        let r = rx.recv()?;
+    for stream in waits {
+        let id = stream.id();
+        let r = stream.wait()?;
         assert_eq!(r.id, id);
         assert_eq!(r.tokens.len(), gen_tokens, "req {id} under-generated");
         ttft.record(r.ttft_s);

@@ -1,0 +1,221 @@
+//! Open-loop serving benchmark for the continuous-batching request
+//! plane: Poisson arrivals (deterministic LCG, no external RNG) with
+//! mixed prompt/generation lengths are pushed through the threaded
+//! [`Server`] front-end over the host model, with one collector thread
+//! per request consuming its token stream.
+//!
+//! Two admission policies serve the identical trace:
+//!
+//!   * **token-budget** — the default continuous-batching plane
+//!     (`max_batch_prefill_tokens = 0` → one `max_chunk` of packed
+//!     chunk rows per prefill step);
+//!   * **bucket** — `max_batch_prefill_tokens = 1`, which degenerates
+//!     to the old one-sequence-per-prefill-step bucket admission.
+//!
+//! For each policy the bench reports goodput-under-SLO: generated
+//! tok/s counting only requests whose TTFT and TPOT met the target,
+//! over a grid of SLO targets from strict to unbounded.  Rows land in
+//! `BENCH_serving.json`.  Streamed-vs-final token parity is asserted
+//! for every request of every run — the bench doubles as an end-to-end
+//! check of the streaming no-hang contract under concurrency.
+//!
+//! `FASTATTN_SMOKE=1` (and debug builds) shrink the trace for CI.
+
+use std::time::Duration;
+
+use fastattn::benchkit::{rate, write_bench_json, Table};
+use fastattn::coordinator::{
+    EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, Response, Server,
+    ServerConfig, StreamEvent,
+};
+
+/// Deterministic 64-bit LCG (`Date`-free, seed-stable across runs).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform in (0, 1].
+    fn uniform(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+
+    /// Exponential inter-arrival with the given mean (Poisson process).
+    fn exp(&mut self, mean_s: f64) -> f64 {
+        -self.uniform().ln() * mean_s
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+}
+
+/// One request of the open-loop trace.
+struct Arrival {
+    delay: Duration,
+    prompt: Vec<i32>,
+    gen: usize,
+}
+
+/// The Poisson trace: same seed → same arrivals for every policy.
+fn trace(n: usize, mean_interarrival_s: f64) -> Vec<Arrival> {
+    let mut rng = Lcg(0x5eed_5e12_11a6);
+    (0..n)
+        .map(|_| {
+            let delay = Duration::from_secs_f64(rng.exp(mean_interarrival_s));
+            let len = rng.range(4, 40);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.range(1, 60) as i32).collect();
+            let gen = rng.range(4, 16);
+            Arrival { delay, prompt, gen }
+        })
+        .collect()
+}
+
+/// Serve the trace through a fresh threaded server; returns the
+/// completed responses and the wall-clock seconds of the whole run.
+/// Panics if any stream hangs, errors, or diverges from its final
+/// response — the parity/no-hang gate.
+fn serve_trace(arrivals: &[Arrival], prefill_budget: usize) -> (Vec<Response>, f64) {
+    let cfg = EngineConfig {
+        kv_layout: KvLayout::Paged,
+        max_batch_prefill_tokens: prefill_budget,
+        ..EngineConfig::default()
+    };
+    let server = Server::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+        ServerConfig::default(),
+    );
+    let t0 = std::time::Instant::now();
+    let mut collectors = Vec::new();
+    for a in arrivals {
+        // open loop: arrivals do not wait for service
+        std::thread::sleep(a.delay);
+        let stream = server
+            .submit(
+                a.prompt.clone(),
+                GenParams { max_new_tokens: a.gen, eos_token: None, share_prefix: false },
+            )
+            .expect("trace request admitted");
+        collectors.push(std::thread::spawn(move || {
+            let mut streamed = Vec::new();
+            loop {
+                match stream.recv_timeout(Duration::from_secs(120)) {
+                    Some(StreamEvent::Token { index, token }) => {
+                        assert_eq!(index, streamed.len(), "stream skipped an index");
+                        streamed.push(token);
+                    }
+                    Some(StreamEvent::Done(resp)) => {
+                        assert_eq!(
+                            streamed, resp.tokens,
+                            "streamed tokens diverged from the final response"
+                        );
+                        return resp;
+                    }
+                    Some(StreamEvent::Error(e)) => panic!("typed error mid-bench: {e}"),
+                    None => panic!("stream hung — no-hang contract broken"),
+                }
+            }
+        }));
+    }
+    let responses: Vec<Response> =
+        collectors.into_iter().map(|c| c.join().expect("collector panicked")).collect();
+    (responses, t0.elapsed().as_secs_f64())
+}
+
+/// Generated tok/s counting only requests that met both SLO targets.
+fn goodput(responses: &[Response], wall_s: f64, ttft_slo_s: f64, tpot_slo_s: f64) -> f64 {
+    let good: usize = responses
+        .iter()
+        .filter(|r| {
+            let tpot = if r.tokens.len() > 1 {
+                (r.total_s - r.ttft_s) / (r.tokens.len() - 1) as f64
+            } else {
+                0.0
+            };
+            r.ttft_s <= ttft_slo_s && tpot <= tpot_slo_s
+        })
+        .map(|r| r.tokens.len())
+        .sum();
+    good as f64 / wall_s.max(1e-12)
+}
+
+fn main() {
+    let smoke = std::env::var("FASTATTN_SMOKE").is_ok() || cfg!(debug_assertions);
+    let (n, mean_gap_s) = if smoke { (16, 0.4e-3) } else { (64, 0.4e-3) };
+    let arrivals = trace(n, mean_gap_s);
+    let total_prompt: usize = arrivals.iter().map(|a| a.prompt.len()).sum();
+    let total_gen: usize = arrivals.iter().map(|a| a.gen).sum();
+    println!(
+        "open-loop trace: {n} requests, Poisson mean gap {:.1} µs, \
+         {total_prompt} prompt + {total_gen} generated tokens",
+        mean_gap_s * 1e6
+    );
+
+    // (label, ttft SLO, tpot SLO) — strict to unbounded
+    let slos: &[(&str, f64, f64)] = &[
+        ("strict  ttft≤2ms tpot≤200µs", 2e-3, 200e-6),
+        ("medium  ttft≤10ms tpot≤1ms", 10e-3, 1e-3),
+        ("loose   ttft≤100ms tpot≤10ms", 100e-3, 10e-3),
+        ("unbounded", f64::INFINITY, f64::INFINITY),
+    ];
+
+    let mut table = Table::new(
+        "open-loop serving: goodput under SLO (generated tok/s of SLO-meeting requests)",
+        &["admission", "SLO target", "goodput", "met"],
+    );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut by_policy: Vec<(&str, Vec<f64>)> = Vec::new();
+    for (policy, budget) in [("token-budget", 0usize), ("bucket", 1usize)] {
+        let (responses, wall_s) = serve_trace(&arrivals, budget);
+        assert_eq!(responses.len(), n, "{policy}: every request must complete");
+        let mut curve = Vec::new();
+        for &(label, ttft, tpot) in slos {
+            let g = goodput(&responses, wall_s, ttft, tpot);
+            let met = responses
+                .iter()
+                .filter(|r| {
+                    let tpot_r = if r.tokens.len() > 1 {
+                        (r.total_s - r.ttft_s) / (r.tokens.len() - 1) as f64
+                    } else {
+                        0.0
+                    };
+                    r.ttft_s <= ttft && tpot_r <= tpot
+                })
+                .count();
+            table.row(&[
+                policy.into(),
+                label.into(),
+                rate(g * wall_s.max(1e-12), wall_s.max(1e-12), "tok"),
+                format!("{met}/{n}"),
+            ]);
+            rows.push((format!("{policy} {label}"), g));
+            curve.push(g);
+        }
+        by_policy.push((policy, curve));
+    }
+    table.print();
+
+    // Packed token-budget admission must not lose to bucket admission
+    // where the SLO cannot mask scheduling noise (the unbounded row
+    // counts every completed token).  A small tolerance absorbs
+    // wall-clock jitter of the tiny-model runs.
+    let tb = by_policy[0].1.last().copied().unwrap_or(0.0);
+    let bucket = by_policy[1].1.last().copied().unwrap_or(0.0);
+    assert!(
+        tb >= bucket * 0.7,
+        "token-budget goodput ({tb:.0} tok/s) fell far below bucket admission ({bucket:.0} tok/s)"
+    );
+
+    let path = std::path::Path::new("BENCH_serving.json");
+    match write_bench_json(path, "serving", "goodput tok/s", &rows) {
+        Ok(()) => println!("\nwrote {} ({} rows)", path.display(), rows.len()),
+        Err(e) => eprintln!("\nBENCH_serving.json not written: {e}"),
+    }
+}

@@ -180,6 +180,26 @@ pub trait Backend {
         }
         self.prefill_chunk(tokens, start_pos, &tables[0], &mut pools[0])
     }
+
+    /// **Batched** chunked prefill: one chunk from each of several
+    /// sequences, executed together — position `t` of every chunk packs
+    /// into one forward step, exactly like bucketed prefill rows (the
+    /// engine packs admitting sequences under its prefill-token budget).
+    /// Cross-sequence rows are independent, so each chunk's result is
+    /// bit-identical to running [`Backend::prefill_chunk_sharded`]
+    /// alone.  Returns each chunk's last-token `[vocab]` logits, aligned
+    /// with `chunks`.  The default runs the chunks sequentially, which
+    /// keeps non-batching backends (the artifact path) correct.
+    fn prefill_chunks_sharded(
+        &mut self,
+        chunks: &[ChunkRun<'_>],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<Vec<f32>>> {
+        chunks
+            .iter()
+            .map(|c| self.prefill_chunk_sharded(c.tokens, c.start_pos, c.tables, pools))
+            .collect()
+    }
 }
 
 /// Cumulative modeled timing/volume of the per-tile B-allreduce combine
@@ -216,6 +236,17 @@ pub struct ShardedRow<'a> {
     pub tables: &'a [BlockTable],
     pub token: i32,
     pub pos: usize,
+}
+
+/// One sequence's chunk inside a batched chunked-prefill step
+/// ([`Backend::prefill_chunks_sharded`]).
+pub struct ChunkRun<'a> {
+    /// The chunk's tokens, occupying absolute positions `start_pos ..`.
+    pub tokens: &'a [i32],
+    /// Absolute cache position of `tokens[0]`.
+    pub start_pos: usize,
+    /// Per-shard block tables: `tables[s]` pairs with `pools[s]`.
+    pub tables: &'a [BlockTable],
 }
 
 // ---------------------------------------------------------------------
@@ -898,6 +929,83 @@ impl Backend for HostModelBackend {
         let mut logits = vec![0.0f32; self.info.vocab];
         self.logits_row(&last, &mut logits);
         Ok(logits)
+    }
+
+    fn prefill_chunks_sharded(
+        &mut self,
+        chunks: &[ChunkRun<'_>],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<Vec<f32>>> {
+        if pools.len() != 1 {
+            bail!("backend cannot execute across {} KV shards", pools.len());
+        }
+        if chunks.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pool = &mut pools[0];
+        let mut max_len = 0usize;
+        for (i, c) in chunks.iter().enumerate() {
+            if c.tokens.is_empty() {
+                bail!("prefill_chunks row {i}: empty chunk");
+            }
+            if c.tables.len() != 1 {
+                bail!("prefill_chunks row {i}: {} tables for 1 shard", c.tables.len());
+            }
+            self.check_table(&c.tables[0], pool, "prefill_chunks")?;
+            let end = c.start_pos + c.tokens.len();
+            if end > self.cache.max_seq {
+                bail!(
+                    "prefill_chunks row {i}: positions ..{end} exceed max_seq {}",
+                    self.cache.max_seq
+                );
+            }
+            if c.tables[0].capacity_tokens() < end {
+                bail!(
+                    "prefill_chunks row {i}: table holds {} tokens, chunk ends at {end}",
+                    c.tables[0].capacity_tokens()
+                );
+            }
+            max_len = max_len.max(c.tokens.len());
+        }
+        // one forward step per chunk position, every still-unfinished
+        // chunk contributing one row — the same ragged-batch shape as
+        // bucketed prefill, so cross-sequence packing cannot change any
+        // chunk's own rows (they are independent per row).
+        let mut finals: Vec<Vec<f32>> = vec![Vec::new(); chunks.len()];
+        for t in 0..max_len {
+            let live: Vec<usize> =
+                (0..chunks.len()).filter(|&ci| t < chunks[ci].tokens.len()).collect();
+            let tables: Vec<&BlockTable> =
+                live.iter().map(|&ci| &chunks[ci].tables[0]).collect();
+            let rows: Vec<(usize, i32, usize)> = live
+                .iter()
+                .enumerate()
+                .map(|(ri, &ci)| {
+                    debug_assert_eq!(
+                        crate::attention::mask::chunk_row_visible(chunks[ci].start_pos, t),
+                        chunks[ci].start_pos + t + 1,
+                    );
+                    (ri, chunks[ci].tokens[t], chunks[ci].start_pos + t)
+                })
+                .collect();
+            let xs = self.forward_step(
+                &rows,
+                &mut StepKv::Paged { pools: &mut *pool, tables: &tables },
+            );
+            for (&ci, x) in live.iter().zip(xs) {
+                if t == chunks[ci].tokens.len() - 1 {
+                    finals[ci] = x;
+                }
+            }
+        }
+        let vocab = self.info.vocab;
+        let mut out = Vec::with_capacity(chunks.len());
+        for x in &finals {
+            let mut logits = vec![0.0f32; vocab];
+            self.logits_row(x, &mut logits);
+            out.push(logits);
+        }
+        Ok(out)
     }
 }
 

@@ -30,6 +30,12 @@ pub enum AdmitError {
     /// The prompt fits no prefill bucket and chunked prefill is off
     /// (the contiguous / artifact path).
     NoBucket { len: usize, max_bucket: usize },
+    /// The device page pool is smaller than one block group — nothing
+    /// can ever be placed on this engine.
+    PoolTooSmall { pages: usize, group: usize },
+    /// Worst-case page demand (prompt + full generation budget) exceeds
+    /// what both KV tiers together can ever hold.
+    ExceedsKvPages { need: usize, usable: usize, tokens: usize },
 }
 
 impl fmt::Display for AdmitError {
@@ -44,6 +50,15 @@ impl fmt::Display for AdmitError {
                 f,
                 "prompt of {len} tokens exceeds the largest prefill bucket \
                  {max_bucket} and chunked prefill is unavailable"
+            ),
+            Self::PoolTooSmall { pages, group } => write!(
+                f,
+                "device page pool holds {pages} pages but one block group needs {group}"
+            ),
+            Self::ExceedsKvPages { need, usable, tokens } => write!(
+                f,
+                "request needs {need} KV pages ({tokens} tokens), tiers hold only \
+                 {usable} usable"
             ),
         }
     }
@@ -84,6 +99,21 @@ pub struct BatcherConfig {
     /// Admit prompts longer than the largest prefill bucket (the engine
     /// runs them as chunked prefill over the paged cache).
     pub allow_chunked: bool,
+    /// Token budget for one chunked-prefill step: chunk rows of several
+    /// admitting sequences pack into one forward pass until their
+    /// summed token count reaches this (the head sequence always gets
+    /// its full chunk).  `0` resolves to one `max_chunk` worth — the
+    /// compute of a single full chunk, spent on one long prompt or
+    /// split across several short ones.
+    pub max_batch_prefill_tokens: usize,
+    /// Cap on committed tokens (prompt + full generation budget) summed
+    /// across every live sequence; admission defers past it.  `0` is
+    /// unbounded — the page-capacity gates then bound the batch.
+    pub max_batch_total_tokens: usize,
+    /// Anti-starvation ratio: once `waiting ≥ ratio × live`, the
+    /// waiting queue is considered starved and SLO-protective prefill
+    /// deferral is overridden.
+    pub waiting_served_ratio: f64,
 }
 
 /// The waiting queue + batch formation logic.
@@ -152,6 +182,31 @@ impl Batcher {
             return None;
         }
         self.waiting.pop_front()
+    }
+
+    /// The per-step prefill-token budget, with `0` resolved to
+    /// `max_chunk` (one full chunk of compute per step).
+    pub fn prefill_token_budget(&self, max_chunk: usize) -> usize {
+        if self.cfg.max_batch_prefill_tokens == 0 {
+            max_chunk.max(1)
+        } else {
+            self.cfg.max_batch_prefill_tokens
+        }
+    }
+
+    /// True when admitting `need` more committed tokens on top of
+    /// `committed` stays inside `max_batch_total_tokens` (`0` =
+    /// unbounded).
+    pub fn fits_total_budget(&self, committed: usize, need: usize) -> bool {
+        self.cfg.max_batch_total_tokens == 0
+            || committed + need <= self.cfg.max_batch_total_tokens
+    }
+
+    /// True when the waiting queue has outgrown the served set by
+    /// `waiting_served_ratio` — SLO-protective admission deferral must
+    /// yield to the backlog.
+    pub fn starved(&self, live: usize) -> bool {
+        self.waiting.len() as f64 >= self.cfg.waiting_served_ratio * live.max(1) as f64
     }
 
     /// Smallest bucket ≥ want, if any.
@@ -223,6 +278,9 @@ mod tests {
             max_active: 8,
             max_seq_tokens: 256,
             allow_chunked: false,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
         }
     }
 
@@ -419,5 +477,51 @@ mod tests {
         let b = Batcher::new(cfg());
         let d = b.next_decode(&[42]).unwrap();
         assert_eq!(d.batch_bucket, 1);
+    }
+
+    #[test]
+    fn prefill_budget_zero_resolves_to_one_chunk() {
+        let b = Batcher::new(cfg());
+        assert_eq!(b.prefill_token_budget(32), 32);
+        let c = Batcher::new(BatcherConfig { max_batch_prefill_tokens: 96, ..cfg() });
+        assert_eq!(c.prefill_token_budget(32), 96);
+        // degenerate max_chunk still yields a positive budget
+        assert_eq!(b.prefill_token_budget(0), 1);
+    }
+
+    #[test]
+    fn total_budget_zero_is_unbounded() {
+        let b = Batcher::new(cfg());
+        assert!(b.fits_total_budget(usize::MAX - 1, 1));
+        let c = Batcher::new(BatcherConfig { max_batch_total_tokens: 100, ..cfg() });
+        assert!(c.fits_total_budget(60, 40));
+        assert!(!c.fits_total_budget(60, 41));
+    }
+
+    #[test]
+    fn starvation_ratio_compares_waiting_to_live() {
+        let mut b = Batcher::new(BatcherConfig {
+            allow_chunked: true,
+            waiting_served_ratio: 1.5,
+            ..cfg()
+        });
+        for id in 0..3 {
+            b.push(req(id, 8)).unwrap();
+        }
+        // 3 waiting vs 2 live: 3 ≥ 1.5·2 → starved; vs 3 live: not
+        assert!(b.starved(2));
+        assert!(!b.starved(3));
+        // live = 0 clamps to 1 so an empty engine with a backlog counts
+        assert!(b.starved(0));
+    }
+
+    #[test]
+    fn page_gate_errors_display_pool_details() {
+        let e = AdmitError::PoolTooSmall { pages: 2, group: 4 };
+        let msg = e.to_string();
+        assert!(msg.contains('2') && msg.contains('4'), "{msg}");
+        let e = AdmitError::ExceedsKvPages { need: 12, usable: 8, tokens: 48 };
+        let msg = e.to_string();
+        assert!(msg.contains("12") && msg.contains('8') && msg.contains("48"), "{msg}");
     }
 }

@@ -62,7 +62,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::backend::{ArtifactBackend, Backend, ShardedRow};
-use super::batcher::{Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
+use super::batcher::{AdmitError, Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
     kv_page_bytes_codec, pack_batch, unpack_batch, BlockTable, CachePool, CacheShape,
     PageAllocError, PageCodec, PcieLink, PrefixIndex, SeqCache, ShardedTable, Tier, TieredPagePool,
@@ -179,6 +179,27 @@ pub struct EngineConfig {
     /// with a per-row scale — ~4× fewer bytes through both tiers, with
     /// dequantization fused into the attention gather.
     pub kv_codec: PageCodec,
+    /// Token budget for one batched prefill step (paged layout): chunk
+    /// rows of several admitting/chunking sequences pack into one
+    /// forward pass until their combined token count reaches this
+    /// budget.  `0` (the default) resolves to one `max_chunk` — the
+    /// largest prefill bucket — preserving the one-chunk-per-step
+    /// compute shape while still packing short admissions together.
+    pub max_batch_prefill_tokens: usize,
+    /// Cap on total *committed* tokens (prompt + full generation
+    /// budget) across live sequences: admission defers once the next
+    /// candidate would push the sum past it.  `0` = unbounded.
+    pub max_batch_total_tokens: usize,
+    /// Anti-starvation ratio for SLO-aware deferral: when `waiting ≥
+    /// ratio × live`, the backlog has outgrown the running batch and
+    /// prefill proceeds even with TPOT over its objective.
+    pub waiting_served_ratio: f64,
+    /// Optional TPOT service-level objective in seconds: when the mean
+    /// decode-step wall time over a sliding window exceeds it, new
+    /// prefill admissions defer to decode (counted in
+    /// `EngineMetrics::slo_deferrals`), unless the waiting queue is
+    /// starved per `waiting_served_ratio`.  `None` disables deferral.
+    pub tpot_slo_s: Option<f64>,
 }
 
 impl Default for EngineConfig {
@@ -197,8 +218,27 @@ impl Default for EngineConfig {
             preempt_mode: PreemptMode::Auto,
             promote: true,
             kv_codec: PageCodec::F32,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
+            tpot_slo_s: None,
         }
     }
+}
+
+/// A streamed token: request `id` produced `token` as its `index`-th
+/// generated token.  Drained via [`Engine::take_token_events`]; under
+/// recompute preemption a replayed sequence re-emits its tokens with
+/// the same indices (greedy decode is deterministic), so consumers
+/// deduplicate by `(id, index)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// The request that generated the token.
+    pub id: RequestId,
+    /// 0-based position in the request's generated-token sequence.
+    pub index: usize,
+    /// The generated token.
+    pub token: i32,
 }
 
 /// The engine's KV backing.
@@ -267,6 +307,14 @@ pub struct Engine {
     /// Monotonic clock stamped onto block tables at every attention
     /// pass — ranks host blocks by heat for promotion.
     gather_clock: u64,
+    /// TPOT objective driving SLO-aware prefill deferral (`None` off).
+    tpot_slo_s: Option<f64>,
+    /// Sliding window of recent decode-step wall times (the TPOT
+    /// proxy the SLO deferral gate consults).
+    decode_window: VecDeque<f64>,
+    /// Tokens generated since the last [`Engine::take_token_events`]
+    /// drain, in generation order — the streaming feed.
+    token_events: Vec<TokenEvent>,
     /// Live serving counters (steps, tokens, pages, migrations,
     /// prefix sharing) — see [`EngineMetrics`].
     pub metrics: EngineMetrics,
@@ -323,6 +371,9 @@ impl Engine {
             max_active: cfg.max_active,
             max_seq_tokens: shape.max_seq,
             allow_chunked: paged,
+            max_batch_prefill_tokens: cfg.max_batch_prefill_tokens,
+            max_batch_total_tokens: cfg.max_batch_total_tokens,
+            waiting_served_ratio: cfg.waiting_served_ratio,
         });
         // one pool per shard, each sized to its device's full budget
         // (per-device memory: adding shards adds capacity, it does not
@@ -383,6 +434,9 @@ impl Engine {
             promote: cfg.promote,
             kv_codec: cfg.kv_codec,
             gather_clock: 0,
+            tpot_slo_s: cfg.tpot_slo_s,
+            decode_window: VecDeque::new(),
+            token_events: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
@@ -403,37 +457,36 @@ impl Engine {
         (pool.device().num_pages() / group + pool.host().num_pages() / group) * group
     }
 
-    /// Submit a prompt; returns its request id.
-    pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams) -> Result<RequestId> {
+    /// Submit a prompt; returns its request id, or a typed
+    /// [`AdmitError`] naming exactly why the request can never (or
+    /// cannot currently) be served — the request-plane contract is
+    /// that rejection is always a value, never a hang or a panic.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Result<RequestId, AdmitError> {
         if let EngineKv::Paged(pools) = &self.kv {
             let group = self.shard_shape.layers * self.shard_shape.kv_heads;
             if pools[0].device().num_pages() < group {
-                bail!(
-                    "device page pool holds {} pages but one block group needs {group}",
-                    pools[0].device().num_pages()
-                );
+                return Err(AdmitError::PoolTooSmall {
+                    pages: pools[0].device().num_pages(),
+                    group,
+                });
             }
             // shards mirror occupancy, so shard 0's per-shard demand
             // and capacity gate admission for the whole group
-            let need = BlockTable::pages_needed(
-                self.shard_shape,
-                self.page_size,
-                prompt.len() + params.max_new_tokens,
-            );
+            let tokens = prompt.len() + params.max_new_tokens;
+            let need = BlockTable::pages_needed(self.shard_shape, self.page_size, tokens);
             let usable = self.usable_pages(&pools[0]);
             if need > usable {
-                bail!(
-                    "request needs {need} KV pages ({} tokens), tiers hold only {usable} usable",
-                    prompt.len() + params.max_new_tokens,
-                );
+                return Err(AdmitError::ExceedsKvPages { need, usable, tokens });
             }
         }
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, prompt, params);
-        self.batcher
-            .push(req)
-            .map_err(|e| anyhow::anyhow!("cannot admit request: {e}"))?;
+        self.batcher.push(req)?;
         Ok(id)
     }
 
@@ -465,13 +518,28 @@ impl Engine {
             }
             EngineKv::Contig(_) => false,
         };
-        let step = self.scheduler.next_step_pressured(
+        // SLO-aware admission: with TPOT over its objective, new
+        // prefill defers to decode — unless the waiting queue has
+        // outgrown the running batch (then admission must proceed or
+        // the backlog starves).
+        let live = self.active.len() + self.chunking.len() + self.suspended.len();
+        let slo_defer = self.tpot_slo_s.is_some_and(|slo| {
+            self.decode_window.len() >= 4
+                && self.decode_window.iter().sum::<f64>()
+                    / self.decode_window.len() as f64
+                    > slo
+        }) && !self.batcher.starved(live);
+        let (step, deferred) = self.scheduler.next_step_serving(
             &self.batcher,
             self.active.len(),
             self.chunking.len(),
             self.suspended.len(),
             pressure,
+            slo_defer,
         );
+        if deferred {
+            self.metrics.slo_deferrals += 1;
+        }
         match step {
             Step::Idle => return Ok(false),
             Step::Prefill => {
@@ -491,8 +559,8 @@ impl Engine {
                 }
             }
             Step::Chunked => {
-                if let Some(&id) = self.chunking.front() {
-                    self.run_chunk(id)?;
+                if !self.chunking.is_empty() {
+                    self.run_chunk_batch()?;
                 } else if let Some(batch) = self.batcher.next_decode(&self.active) {
                     self.run_decode(batch)?;
                 }
@@ -517,6 +585,14 @@ impl Engine {
     /// Drain any already-finished responses without stepping.
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Drain the tokens generated since the last drain, in generation
+    /// order — the per-request streaming feed.  Replayed tokens (after
+    /// recompute preemption) carry their original indices; consumers
+    /// deduplicate by `(id, index)`.
+    pub fn take_token_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.token_events)
     }
 
     // -----------------------------------------------------------------
@@ -545,6 +621,7 @@ impl Engine {
         for (i, req) in batch.requests.into_iter().enumerate() {
             let row = &logits[i * vocab..][..vocab];
             let first = argmax(row) as i32;
+            self.token_events.push(TokenEvent { id: req.id, index: 0, token: first });
             let (mut cache, tier) = match &mut self.kv {
                 EngineKv::Contig(pool) => pool.allocate(),
                 EngineKv::Paged(_) => bail!("bucketed prefill on a paged engine"),
@@ -619,6 +696,8 @@ impl Engine {
             unpack_batch(self.shape, b, vc, &mut [(slot, &mut cache.v)])?;
             let next = argmax(&logits[slot * vocab..][..vocab]) as i32;
             s.tokens.push(next);
+            let index = s.tokens.len() - 1;
+            self.token_events.push(TokenEvent { id: *id, index, token: next });
             self.metrics.decoded_tokens += 1;
             let finished = s.tokens.len() >= s.params.max_new_tokens
                 || s.params.eos_token == Some(next)
@@ -633,7 +712,7 @@ impl Engine {
             self.finish(state);
         }
         self.metrics.decode_steps += 1;
-        self.metrics.decode_s += t0.elapsed().as_secs_f64();
+        self.record_decode_step(t0.elapsed().as_secs_f64());
         Ok(())
     }
 
@@ -641,150 +720,261 @@ impl Engine {
     // Paged path
     // -----------------------------------------------------------------
 
-    /// Admit the head-of-line request onto the paged cache and run its
-    /// first prefill chunk.  Admission is gated on worst-case page
+    /// Admit waiting requests onto the paged cache — as many as the
+    /// prefill-token budget, the total-token budget, `max_active`, and
+    /// the page gate allow — then run one batched prefill step over
+    /// everything mid-chunk.  Admission is gated on worst-case page
     /// demand (prompt + full generation budget): an admitted sequence
     /// can always finish by preempting only younger sequences, so the
     /// oldest always completes and admission cannot livelock.  Pages
     /// pinned only by idle prefix-cache runs don't block admission —
     /// they are evicted until the gate passes or nothing idle remains.
+    /// Each admission additionally *reserves* its first chunk's pages
+    /// against the free-page gate for later candidates in the same
+    /// step, so packing admissions cannot over-commit pages the first
+    /// batched chunk is about to allocate.
     ///
     /// A `share_prefix` request additionally consults the
     /// [`PrefixIndex`]: on a hit it adopts the shared page run and its
-    /// chunked prefill resumes at the first unshared token.
+    /// chunked prefill resumes at the first unshared token.  Such a
+    /// request never packs *behind* another admission in the same step
+    /// — it waits until runs registered by the earlier admissions'
+    /// prefill are visible, so adoptable prefixes are never missed.
     fn admit_chunked(&mut self) -> Result<bool> {
-        let EngineKv::Paged(pools) = &mut self.kv else {
+        if !matches!(self.kv, EngineKv::Paged(_)) {
             bail!("chunked admission on a contiguous engine");
-        };
-        // pop under the max_active budget first: when no admission can
-        // happen anyway, the capacity gate below must not evict
-        // reusable prefix-cache runs for nothing.  Suspended sequences
-        // keep their slot — they hold KV and will resume.
-        let live = self.active.len() + self.chunking.len() + self.suspended.len();
-        let Some(req) = self.batcher.next_request(live) else {
-            return Ok(false);
-        };
-        let need = BlockTable::pages_needed(
-            self.shard_shape,
-            self.page_size,
-            req.prompt.len() + req.params.max_new_tokens,
-        );
+        }
         // same group rounding as the submit gate: a tier's partial
         // trailing group is dead capacity and must not admit anyone.
         // Shard 0 stands for all shards — occupancy mirrors.
         let group = self.shard_shape.layers * self.shard_shape.kv_heads;
-        loop {
-            let usable_free = (pools[0].device().free_pages() / group
-                + pools[0].host().free_pages() / group)
-                * group;
-            if usable_free >= need {
-                break;
+        let budget = self.batcher.prefill_token_budget(self.max_chunk);
+        // budget already spoken for by sequences mid-chunk (they pack
+        // ahead of new admissions in the batched step below)
+        let mut budget_left = budget;
+        for &cid in &self.chunking {
+            if let Some(s) = self.seqs.get(&cid) {
+                budget_left = budget_left
+                    .saturating_sub((s.prompt.len() - s.prefilled).min(self.max_chunk));
             }
-            let freed = match &mut self.prefix {
-                Some(ix) => ix.evict_idle(pools[0].device_mut()),
-                None => 0,
+        }
+        let mut reserved = 0usize;
+        let mut admitted_any = false;
+        'admit: loop {
+            // pop under the max_active budget first: when no admission
+            // can happen anyway, the capacity gate below must not evict
+            // reusable prefix-cache runs for nothing.  Suspended
+            // sequences keep their slot — they hold KV and will resume.
+            let live = self.active.len() + self.chunking.len() + self.suspended.len();
+            {
+                let Some(head) = self.batcher.peek() else { break 'admit };
+                if admitted_any {
+                    if head.params.share_prefix {
+                        break 'admit; // adopt next step, once new runs register
+                    }
+                    if head.prompt.len().min(self.max_chunk) > budget_left {
+                        break 'admit; // first chunk would bust the prefill budget
+                    }
+                }
+                let committed: usize = self
+                    .seqs
+                    .values()
+                    .map(|s| s.prompt.len() + s.params.max_new_tokens)
+                    .sum();
+                let need_tokens = head.prompt.len() + head.params.max_new_tokens;
+                if !self.batcher.fits_total_budget(committed, need_tokens) {
+                    break 'admit;
+                }
+            }
+            let Some(req) = self.batcher.next_request(live) else { break 'admit };
+            let need = BlockTable::pages_needed(
+                self.shard_shape,
+                self.page_size,
+                req.prompt.len() + req.params.max_new_tokens,
+            );
+            let EngineKv::Paged(pools) = &mut self.kv else { unreachable!() };
+            loop {
+                let usable_free = (pools[0].device().free_pages() / group
+                    + pools[0].host().free_pages() / group)
+                    * group;
+                if usable_free.saturating_sub(reserved) >= need {
+                    break;
+                }
+                let freed = match &mut self.prefix {
+                    Some(ix) => ix.evict_idle(pools[0].device_mut()),
+                    None => 0,
+                };
+                if freed == 0 {
+                    // wait for capacity; decode keeps draining.  The head
+                    // request goes back where it came from (FCFS preserved).
+                    self.batcher.requeue_front(req);
+                    break 'admit;
+                }
+            }
+            let id = req.id;
+            let mut table = ShardedTable::new(self.shard_shape, self.n_shards, self.page_size);
+            let mut shared_tokens = 0;
+            if req.params.share_prefix {
+                // the index exists only on single-device engines, where
+                // the primary table is the whole sequence
+                if let Some(ix) = &mut self.prefix {
+                    shared_tokens =
+                        ix.adopt(&req.prompt, table.primary_mut(), pools[0].device_mut());
+                }
+            }
+            if shared_tokens > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_tokens_saved += shared_tokens as u64;
+            }
+            // reserve the pages this admission's first chunk is about
+            // to allocate (beyond any adopted blocks), so the page gate
+            // for the *next* candidate sees them as spoken for
+            let first_end = (shared_tokens + self.max_chunk).min(req.prompt.len());
+            reserved += BlockTable::pages_needed(self.shard_shape, self.page_size, first_end)
+                .saturating_sub(BlockTable::pages_needed(
+                    self.shard_shape,
+                    self.page_size,
+                    shared_tokens,
+                ));
+            budget_left = budget_left.saturating_sub(first_end - shared_tokens);
+            let state = SeqState {
+                id,
+                prompt: req.prompt,
+                tokens: Vec::new(),
+                store: SeqStore::Paged { table },
+                params: req.params,
+                phase: Phase::Chunking,
+                prefilled: shared_tokens,
+                submitted_at: req.submitted_at,
+                first_token_at: None,
             };
-            if freed == 0 {
-                // wait for capacity; decode keeps draining.  The head
-                // request goes back where it came from (FCFS preserved).
-                self.batcher.requeue_front(req);
-                return Ok(false);
-            }
+            self.seqs.insert(id, state);
+            self.chunking.push_back(id);
+            admitted_any = true;
         }
-        let id = req.id;
-        let mut table = ShardedTable::new(self.shard_shape, self.n_shards, self.page_size);
-        let mut shared_tokens = 0;
-        if req.params.share_prefix {
-            // the index exists only on single-device engines, where
-            // the primary table is the whole sequence
-            if let Some(ix) = &mut self.prefix {
-                shared_tokens = ix.adopt(&req.prompt, table.primary_mut(), pools[0].device_mut());
-            }
+        if admitted_any {
+            self.run_chunk_batch()?;
         }
-        if shared_tokens > 0 {
-            self.metrics.prefix_hits += 1;
-            self.metrics.prefix_tokens_saved += shared_tokens as u64;
-        }
-        let state = SeqState {
-            id,
-            prompt: req.prompt,
-            tokens: Vec::new(),
-            store: SeqStore::Paged { table },
-            params: req.params,
-            phase: Phase::Chunking,
-            prefilled: shared_tokens,
-            submitted_at: req.submitted_at,
-            first_token_at: None,
-        };
-        self.seqs.insert(id, state);
-        self.chunking.push_back(id);
-        self.run_chunk(id)?;
-        Ok(true)
+        Ok(admitted_any)
     }
 
-    /// Run the next prefill chunk of `id` (≤ `max_chunk` tokens).  When
-    /// the chunk completes the prompt the sequence is promoted to
-    /// decoding with its first generated token.
-    fn run_chunk(&mut self, id: RequestId) -> Result<()> {
+    /// Run one batched prefill step: pack the next chunk rows of the
+    /// sequences mid chunked-prefill — oldest first, the front always
+    /// getting its full chunk, later ones (possibly truncated) while
+    /// the prefill-token budget lasts — into ONE backend forward pass.
+    /// Sequences whose chunk completes the prompt are promoted to
+    /// decoding with their first generated token.
+    fn run_chunk_batch(&mut self) -> Result<()> {
         let t0 = Instant::now();
-        let (start, end) = {
-            let s = self.seqs.get(&id).context("chunked seq missing")?;
+        let budget = self.batcher.prefill_token_budget(self.max_chunk);
+        let mut plan: Vec<(RequestId, usize, usize)> = Vec::new();
+        let mut used = 0usize;
+        for &id in &self.chunking {
+            let Some(s) = self.seqs.get(&id) else { continue };
+            if s.phase != Phase::Chunking {
+                continue;
+            }
             let start = s.prefilled;
-            (start, (start + self.max_chunk).min(s.prompt.len()))
-        };
-        debug_assert!(end > start, "chunk queue holds only partial sequences");
-        if !self.ensure_writable(id, end, start)? {
-            return Ok(()); // the sequence itself was preempted
+            let full = (start + self.max_chunk).min(s.prompt.len());
+            debug_assert!(full > start, "chunk queue holds only partial sequences");
+            // the front sequence always runs its full chunk — the
+            // budget shapes packing, it must not starve the oldest
+            let take =
+                if plan.is_empty() { full - start } else { (full - start).min(budget - used) };
+            if take == 0 {
+                break;
+            }
+            plan.push((id, start, start + take));
+            used += take;
+            if used >= budget {
+                break;
+            }
         }
-        let logits = {
-            let s = self.seqs.get(&id).expect("survived ensure_writable");
-            let SeqStore::Paged { table } = &s.store else {
-                bail!("chunked sequence without a block table");
-            };
+        if plan.is_empty() {
+            return Ok(());
+        }
+        // grow/CoW-split each table for its rows; the reclamation
+        // ladder may preempt *other* planned sequences, so survivors
+        // are re-checked afterwards
+        for &(id, start, end) in plan.clone().iter() {
+            if self.steppable(id) {
+                self.ensure_writable(id, end, start)?;
+            }
+        }
+        plan.retain(|&(id, start, _)| {
+            self.seqs
+                .get(&id)
+                .is_some_and(|s| s.phase == Phase::Chunking && s.prefilled == start)
+        });
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let results = {
             let EngineKv::Paged(pools) = &mut self.kv else {
                 bail!("chunked sequence without a page pool");
             };
+            let seqs = &self.seqs;
+            let chunks: Vec<super::backend::ChunkRun<'_>> = plan
+                .iter()
+                .map(|&(id, start, end)| {
+                    let s = &seqs[&id];
+                    let SeqStore::Paged { table } = &s.store else {
+                        unreachable!("paged engine tracks paged sequences");
+                    };
+                    super::backend::ChunkRun {
+                        tokens: &s.prompt[start..end],
+                        start_pos: start,
+                        tables: table.tables(),
+                    }
+                })
+                .collect();
             self.backend
-                .prefill_chunk_sharded(&s.prompt[start..end], start, table.tables(), pools)
-                .with_context(|| format!("prefill chunk {start}..{end} of seq {id}"))?
+                .prefill_chunks_sharded(&chunks, pools)
+                .with_context(|| format!("batched prefill of {} chunk rows", plan.len()))?
         };
         self.gather_clock += 1;
         let clock = self.gather_clock;
-        let s = self.seqs.get_mut(&id).expect("survived backend step");
-        if let SeqStore::Paged { table } = &mut s.store {
-            table.mark_gathered(clock);
-        }
-        s.prefilled = end;
-        self.metrics.prefilled_tokens += (end - start) as u64;
-        self.metrics.chunk_steps += 1;
-        if end == s.prompt.len() {
-            // prompt fully cached: publish its page run for future
-            // `share_prefix` requests before decoding mutates anything
-            if s.params.share_prefix {
-                if let (Some(ix), EngineKv::Paged(pools), SeqStore::Paged { table }) =
-                    (&mut self.prefix, &mut self.kv, &s.store)
-                {
-                    ix.register(&s.prompt, table.primary(), pools[0].device_mut());
+        let tri = |n: usize| n as u64 * (n as u64 + 1) / 2;
+        let mut gathered_positions: u64 = 0;
+        for (&(id, start, end), logits) in plan.iter().zip(&results) {
+            let s = self.seqs.get_mut(&id).expect("survived backend step");
+            if let SeqStore::Paged { table } = &mut s.store {
+                table.mark_gathered(clock);
+            }
+            s.prefilled = end;
+            self.metrics.prefilled_tokens += (end - start) as u64;
+            self.metrics.chunk_rows += 1;
+            if end == s.prompt.len() {
+                // prompt fully cached: publish its page run for future
+                // `share_prefix` requests before decoding mutates anything
+                if s.params.share_prefix {
+                    if let (Some(ix), EngineKv::Paged(pools), SeqStore::Paged { table }) =
+                        (&mut self.prefix, &mut self.kv, &s.store)
+                    {
+                        ix.register(&s.prompt, table.primary(), pools[0].device_mut());
+                    }
+                }
+                // first generated token from the last chunk's logits
+                let first = argmax(logits) as i32;
+                s.tokens.push(first);
+                self.token_events.push(TokenEvent { id, index: 0, token: first });
+                s.first_token_at = Some(Instant::now());
+                s.phase = Phase::Decoding;
+                let done = s.tokens.len() >= s.params.max_new_tokens
+                    || s.params.eos_token == Some(first);
+                self.chunking.retain(|&c| c != id);
+                if done {
+                    let state = self.seqs.remove(&id).unwrap();
+                    self.finish(state);
+                } else {
+                    self.active.push(id);
                 }
             }
-            // first generated token from the last chunk's logits
-            let first = argmax(&logits) as i32;
-            s.tokens.push(first);
-            s.first_token_at = Some(Instant::now());
-            s.phase = Phase::Decoding;
-            let done = s.tokens.len() >= s.params.max_new_tokens
-                || s.params.eos_token == Some(first);
-            self.chunking.retain(|&c| c != id);
-            if done {
-                let state = self.seqs.remove(&id).unwrap();
-                self.finish(state);
-            } else {
-                self.active.push(id);
-            }
+            // each chunk position p attends to its p+1-token causal prefix
+            gathered_positions += tri(end) - tri(start);
         }
-        // each chunk position p attends to its p+1-token causal prefix
-        let tri = |n: usize| n as u64 * (n as u64 + 1) / 2;
-        self.count_gather(tri(end) - tri(start));
+        self.metrics.chunk_steps += 1;
+        self.count_gather(gathered_positions);
         self.metrics.prefill_s += t0.elapsed().as_secs_f64();
         self.update_page_metrics();
         Ok(())
@@ -858,6 +1048,8 @@ impl Engine {
             gathered_positions += s.pos() as u64 + 1;
             let next = argmax(&logits[i * vocab..][..vocab]) as i32;
             s.tokens.push(next);
+            let index = s.tokens.len() - 1;
+            self.token_events.push(TokenEvent { id: *id, index, token: next });
             self.metrics.decoded_tokens += 1;
             let finished = s.tokens.len() >= s.params.max_new_tokens
                 || s.params.eos_token == Some(next)
@@ -873,9 +1065,19 @@ impl Engine {
         }
         self.count_gather(gathered_positions);
         self.metrics.decode_steps += 1;
-        self.metrics.decode_s += t0.elapsed().as_secs_f64();
+        self.record_decode_step(t0.elapsed().as_secs_f64());
         self.update_page_metrics();
         Ok(())
+    }
+
+    /// Record one decode step's wall time: total decode seconds plus
+    /// the sliding window the SLO deferral gate reads as a TPOT proxy.
+    fn record_decode_step(&mut self, secs: f64) {
+        self.metrics.decode_s += secs;
+        self.decode_window.push_back(secs);
+        if self.decode_window.len() > 32 {
+            self.decode_window.pop_front();
+        }
     }
 
     fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {

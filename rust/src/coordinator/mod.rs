@@ -29,8 +29,11 @@
 //!   (evict idle prefix runs → migrate cold blocks → swap out →
 //!   recompute) over a paged-capable backend, or ragged plane
 //!   prefill/decode over the PJRT runtime; greedy sampling either way;
-//! * [`server`]    — threaded front-end (PJRT handles stay on one
-//!   thread; clients use channels);
+//! * [`server`]    — the continuous-batching request plane: a threaded
+//!   front-end (PJRT handles stay on one thread) with token-budget
+//!   admission, per-request streaming channels, bounded command drain,
+//!   concurrency-limit backpressure, and typed end-to-end error paths
+//!   (no client ever hangs without a reason);
 //! * [`allreduce`] — the paper's tiling-AllReduce (§4.2) as a real
 //!   multi-worker ring with per-block overlap;
 //! * [`sharded`]   — the tensor-parallel serving backend: N per-device
@@ -54,16 +57,16 @@ pub mod server;
 pub mod sharded;
 
 pub use backend::{
-    AllReduceStats, ArtifactBackend, Backend, BucketGrid, HostModelBackend, HostModelConfig,
-    PagedRow, ShardedRow, StepOut,
+    AllReduceStats, ArtifactBackend, Backend, BucketGrid, ChunkRun, HostModelBackend,
+    HostModelConfig, PagedRow, ShardedRow, StepOut,
 };
 pub use sharded::{ShardedBackend, ShardedConfig};
 pub use batcher::AdmitError;
-pub use engine::{Engine, EngineConfig, KvLayout};
+pub use engine::{Engine, EngineConfig, KvLayout, TokenEvent};
 pub use kv_cache::{
     BlockTable, CacheShape, MigrationStats, PageAllocError, PageCodec, PagePool, PcieLink,
     PrefixIndex, QuantStore, ShardedTable, Tier, TieredPagePool,
 };
 pub use reclaim::{PreemptMode, ReclaimPolicy, RecomputeVsSwap, VictimPolicy};
 pub use request::{GenParams, Request, RequestId, Response};
-pub use server::Server;
+pub use server::{ResponseStream, ServeError, Server, ServerConfig, StreamEvent};

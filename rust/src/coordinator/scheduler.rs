@@ -89,6 +89,27 @@ impl Scheduler {
         suspended: usize,
         pressure: bool,
     ) -> Step {
+        self.next_step_serving(batcher, active, chunking, suspended, pressure, false).0
+    }
+
+    /// The serving request plane's entry point: like
+    /// [`Self::next_step_pressured`], plus an SLO-protective admission
+    /// deferral.  `slo_defer` signals that recent decode step time has
+    /// degraded past the TPOT target (and the waiting queue is not yet
+    /// starved): **new admissions** yield to decode while anything is
+    /// active, but chunk continuation and resume still run — they hold
+    /// pages and finishing them is what restores decode speed.  Returns
+    /// the step and whether an admission was actually deferred by the
+    /// SLO gate (for `EngineMetrics::slo_deferrals`).
+    pub fn next_step_serving(
+        &mut self,
+        batcher: &Batcher,
+        active: usize,
+        chunking: usize,
+        suspended: usize,
+        pressure: bool,
+        slo_defer: bool,
+    ) -> (Step, bool) {
         let has_prefill_work = batcher.waiting() > 0 || chunking > 0 || suspended > 0;
         let has_active = active > 0;
         // continuing a partial sequence beats resuming a suspended one
@@ -114,8 +135,13 @@ impl Scheduler {
                 }
             }
         };
+        let mut slo_deferred = false;
         let step = match step {
             Step::Prefill | Step::Resume if pressure && has_active => Step::Decode,
+            Step::Prefill if slo_defer && has_active => {
+                slo_deferred = true;
+                Step::Decode
+            }
             s => s,
         };
         match step {
@@ -123,7 +149,7 @@ impl Scheduler {
             Step::Prefill | Step::Chunked | Step::Resume => self.decodes_since_prefill = 0,
             Step::Idle => {}
         }
-        step
+        (step, slo_deferred)
     }
 }
 
@@ -141,6 +167,9 @@ mod tests {
             max_active: 8,
             max_seq_tokens: 64,
             allow_chunked: false,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
         });
         for id in 0..waiting as u64 {
             b.push(Request::new(id, vec![1; 4], GenParams::default())).unwrap();
@@ -355,5 +384,44 @@ mod tests {
             assert!(since_admit <= 4, "pressure flapping must not starve admission");
         }
         assert!(admitted >= 2, "unpressured quantum slots must admit, got {admitted}");
+    }
+
+    // --- SLO-protective admission deferral ----------------------------
+
+    #[test]
+    fn slo_defer_demotes_only_new_admissions() {
+        // with actives draining, a degraded TPOT defers Prefill…
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        let b = batcher(2);
+        assert_eq!(s.next_step_serving(&b, 2, 0, 0, false, true), (Step::Decode, true));
+        // …but chunk continuation and resume still run: they hold pages
+        // and finishing them is what restores decode speed
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_serving(&b, 2, 3, 0, false, true), (Step::Chunked, false));
+        let mut s = Scheduler::new(Policy::PrefillFirst);
+        assert_eq!(s.next_step_serving(&b, 2, 0, 1, false, true), (Step::Resume, false));
+    }
+
+    #[test]
+    fn slo_defer_yields_when_nothing_is_active() {
+        // no active work to protect: admission proceeds regardless
+        let mut s = Scheduler::new(Policy::Fair { quantum: 1 });
+        let b = batcher(1);
+        assert_eq!(s.next_step_serving(&b, 0, 0, 0, false, true), (Step::Prefill, false));
+    }
+
+    #[test]
+    fn slo_defer_counts_as_decode_for_the_fair_quantum() {
+        // an SLO-deferred admission slot must advance the quantum
+        // counter like the pressure path does, so the first slot after
+        // the SLO clears admits immediately.
+        let mut s = Scheduler::new(Policy::Fair { quantum: 2 });
+        let b = batcher(2);
+        assert_eq!(s.next_step_serving(&b, 2, 0, 0, false, false).0, Step::Decode);
+        assert_eq!(s.next_step_serving(&b, 2, 0, 0, false, false).0, Step::Decode);
+        // quantum expired, but SLO degraded → deferred
+        assert_eq!(s.next_step_serving(&b, 2, 0, 0, false, true), (Step::Decode, true));
+        // SLO recovered → the admission fires on the next slot
+        assert_eq!(s.next_step_serving(&b, 2, 0, 0, false, false), (Step::Prefill, false));
     }
 }

@@ -1,31 +1,195 @@
-//! Threaded serving front-end.
+//! Threaded serving front-end: the continuous-batching request plane.
 //!
 //! PJRT handles live on a single engine thread (they are not `Send`);
-//! clients talk to it over channels.  `Server::submit` is non-blocking
-//! and returns a receiver that yields the finished [`Response`].
+//! clients talk to it over channels.  [`Server::submit`] is
+//! non-blocking and returns a [`ResponseStream`] whose channel yields
+//! tokens *as each engine step lands* and terminates with either the
+//! finished [`Response`] or a typed [`ServeError`].
+//!
+//! ## The no-hang contract
+//!
+//! Every submitted request terminates with tokens or a typed error —
+//! never a bare hung channel:
+//!
+//! * **rejection** is a value ([`ServeError::Rejected`] /
+//!   [`ServeError::Overloaded`]) returned from `submit` itself;
+//! * **engine-step failure** broadcasts
+//!   [`ServeError::EngineFailed`] to every outstanding stream (and to
+//!   submissions still queued in the command channel) before the
+//!   thread exits;
+//! * **server drop / shutdown** delivers [`ServeError::Aborted`] to
+//!   every in-flight stream before the thread joins.
+//!
+//! The serve loop drains at most [`ServerConfig::max_cmds_per_step`]
+//! commands between engine steps, so a sustained submit flood cannot
+//! starve decode progress, and admits at most
+//! [`ServerConfig::max_pending`] concurrent requests — past that,
+//! submission fails fast with `Overloaded` backpressure instead of
+//! growing the queue without bound.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::{self, JoinHandle};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::backend::Backend;
+use super::batcher::AdmitError;
 use super::engine::{Engine, EngineConfig};
 use super::request::{GenParams, RequestId, Response};
 use crate::metrics::EngineMetrics;
 use crate::runtime::Runtime;
 
+/// Why a request could not be (or stopped being) served.  The request
+/// plane's error paths are typed end-to-end: every variant reaches the
+/// client as a value, never as a silently dropped channel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The engine can never serve this request (validation failed).
+    Rejected(AdmitError),
+    /// Backpressure: the server already tracks `limit` in-flight
+    /// requests; retry after some complete.
+    Overloaded {
+        /// The configured [`ServerConfig::max_pending`] ceiling.
+        limit: usize,
+    },
+    /// The engine thread died mid-serve; the message carries the
+    /// step error it died with.
+    EngineFailed(String),
+    /// The server shut down (or its thread disappeared) with this
+    /// request still in flight.
+    Aborted,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Rejected(e) => write!(f, "request rejected: {e}"),
+            Self::Overloaded { limit } => {
+                write!(f, "server at capacity ({limit} requests in flight)")
+            }
+            Self::EngineFailed(msg) => write!(f, "engine failed: {msg}"),
+            Self::Aborted => write!(f, "request aborted by server shutdown"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One event on a request's stream.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// The request's `index`-th generated token (0-based, gap-free:
+    /// index `n` is always preceded by `n-1`).
+    Token {
+        /// 0-based position in the generated sequence.
+        index: usize,
+        /// The generated token.
+        token: i32,
+    },
+    /// Generation finished; the response's `tokens` equal the streamed
+    /// tokens exactly.
+    Done(Response),
+    /// The request will produce nothing further — the typed reason.
+    Error(ServeError),
+}
+
+/// Client handle to one in-flight request: a stream of
+/// [`StreamEvent`]s ending in `Done` or `Error`.
+pub struct ResponseStream {
+    id: RequestId,
+    rx: Receiver<StreamEvent>,
+}
+
+impl ResponseStream {
+    /// The request id assigned at admission.
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block for the next event.  A receive error means the serving
+    /// thread vanished without its exit broadcast — surfaced as
+    /// [`ServeError::Aborted`] so the caller still gets a typed reason.
+    pub fn recv(&self) -> StreamEvent {
+        self.rx.recv().unwrap_or(StreamEvent::Error(ServeError::Aborted))
+    }
+
+    /// Like [`ResponseStream::recv`] with a timeout; `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => Some(ev),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(StreamEvent::Error(ServeError::Aborted))
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` when no event is ready.
+    pub fn try_recv(&self) -> Option<StreamEvent> {
+        match self.rx.try_recv() {
+            Ok(ev) => Some(ev),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(StreamEvent::Error(ServeError::Aborted))
+            }
+        }
+    }
+
+    /// Drain the stream to completion and return the final response —
+    /// the whole-completion convenience over the streaming API.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        loop {
+            match self.recv() {
+                StreamEvent::Token { .. } => continue,
+                StreamEvent::Done(resp) => return Ok(resp),
+                StreamEvent::Error(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Request-plane knobs (the engine's own scheduling/admission knobs
+/// live in [`EngineConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Concurrency limit: in-flight requests (queued + running) past
+    /// which submission fails fast with [`ServeError::Overloaded`].
+    pub max_pending: usize,
+    /// Commands drained from the channel per serve-loop iteration —
+    /// the bound that keeps a submit flood from starving decode steps.
+    pub max_cmds_per_step: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_pending: 256, max_cmds_per_step: 32 }
+    }
+}
+
 enum Cmd {
     Submit {
         prompt: Vec<i32>,
         params: GenParams,
-        reply: Sender<Result<RequestId, String>>,
-        done: Sender<Response>,
+        reply: Sender<Result<RequestId, ServeError>>,
+        events: Sender<StreamEvent>,
     },
     Metrics {
         reply: Sender<EngineMetrics>,
     },
     Shutdown,
+}
+
+/// Server-side record of one in-flight stream: its channel plus the
+/// next token index the client expects.  `next_index` is what makes
+/// streaming exactly-once under recompute preemption — a replayed
+/// sequence re-emits tokens it already streamed (bit-identical, greedy
+/// decode is deterministic), and those duplicates are dropped here.
+struct Waiter {
+    events: Sender<StreamEvent>,
+    next_index: usize,
 }
 
 /// Handle to the engine thread.
@@ -35,8 +199,18 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the engine thread over the artifact directory.
+    /// Start the engine thread over the artifact directory, with
+    /// default request-plane limits.
     pub fn start(artifact_dir: String, cfg: EngineConfig) -> Result<Self> {
+        Self::start_with(artifact_dir, cfg, ServerConfig::default())
+    }
+
+    /// Start the engine thread over the artifact directory.
+    pub fn start_with(
+        artifact_dir: String,
+        cfg: EngineConfig,
+        scfg: ServerConfig,
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let handle = thread::spawn(move || {
@@ -50,56 +224,7 @@ impl Server {
                     return;
                 }
             };
-            let mut engine = Engine::new(rt, cfg);
-            let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
-            loop {
-                // Drain commands; block only when fully idle.
-                let cmd = if engine.active_count() == 0 && waiters.is_empty() {
-                    match rx.recv() {
-                        Ok(c) => Some(c),
-                        Err(_) => break,
-                    }
-                } else {
-                    match rx.try_recv() {
-                        Ok(c) => Some(c),
-                        Err(TryRecvError::Empty) => None,
-                        Err(TryRecvError::Disconnected) => break,
-                    }
-                };
-                match cmd {
-                    Some(Cmd::Submit { prompt, params, reply, done }) => {
-                        match engine.submit(prompt, params) {
-                            Ok(id) => {
-                                waiters.insert(id, done);
-                                let _ = reply.send(Ok(id));
-                            }
-                            Err(e) => {
-                                let _ = reply.send(Err(format!("{e:#}")));
-                            }
-                        }
-                        continue; // keep draining submissions greedily
-                    }
-                    Some(Cmd::Metrics { reply }) => {
-                        let _ = reply.send(engine.metrics.clone());
-                        continue;
-                    }
-                    Some(Cmd::Shutdown) => break,
-                    None => {}
-                }
-                // One scheduling step, then deliver whatever finished.
-                match engine.step() {
-                    Ok(_) => {}
-                    Err(e) => {
-                        eprintln!("engine step failed: {e:#}");
-                        break;
-                    }
-                }
-                for resp in engine.take_finished() {
-                    if let Some(w) = waiters.remove(&resp.id) {
-                        let _ = w.send(resp);
-                    }
-                }
-            }
+            serve(Engine::new(rt, cfg), scfg, rx);
         });
         ready_rx
             .recv()
@@ -108,22 +233,39 @@ impl Server {
         Ok(Self { tx, handle: Some(handle) })
     }
 
-    /// Submit a prompt; returns (request id, completion receiver).
+    /// Start the engine thread over any `Send` execution backend —
+    /// what lets the full request plane run (and be tested) without an
+    /// artifact bundle, e.g. against
+    /// [`HostModelBackend`](super::backend::HostModelBackend).
+    pub fn with_backend(
+        backend: Box<dyn Backend + Send>,
+        cfg: EngineConfig,
+        scfg: ServerConfig,
+    ) -> Self {
+        let (tx, rx) = channel::<Cmd>();
+        let handle = thread::spawn(move || {
+            serve(Engine::with_backend(backend, cfg), scfg, rx);
+        });
+        Self { tx, handle: Some(handle) }
+    }
+
+    /// Submit a prompt.  Non-blocking with respect to generation: on
+    /// admission it returns a [`ResponseStream`] immediately; tokens
+    /// arrive on the stream as decode steps land.  On rejection or
+    /// backpressure the typed error comes back instead — this call
+    /// never silently drops a request.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         params: GenParams,
-    ) -> Result<(RequestId, Receiver<Response>)> {
+    ) -> Result<ResponseStream, ServeError> {
         let (reply_tx, reply_rx) = channel();
-        let (done_tx, done_rx) = channel();
+        let (ev_tx, ev_rx) = channel();
         self.tx
-            .send(Cmd::Submit { prompt, params, reply: reply_tx, done: done_tx })
-            .context("engine thread gone")?;
-        let id = reply_rx
-            .recv()
-            .context("engine thread gone")?
-            .map_err(|e| anyhow::anyhow!(e))?;
-        Ok((id, done_rx))
+            .send(Cmd::Submit { prompt, params, reply: reply_tx, events: ev_tx })
+            .map_err(|_| ServeError::Aborted)?;
+        let id = reply_rx.recv().map_err(|_| ServeError::Aborted)??;
+        Ok(ResponseStream { id, rx: ev_rx })
     }
 
     /// Snapshot engine metrics.
@@ -136,6 +278,9 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
+        // the serve loop's exit path delivers `Aborted` to every
+        // stream still in flight before the thread returns, so this
+        // join cannot leave a client hanging
         let _ = self.tx.send(Cmd::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -143,23 +288,222 @@ impl Drop for Server {
     }
 }
 
+/// Apply one command.  Returns `false` on `Shutdown`.
+fn handle_cmd(
+    engine: &mut Engine,
+    scfg: &ServerConfig,
+    waiters: &mut HashMap<RequestId, Waiter>,
+    cmd: Cmd,
+) -> bool {
+    match cmd {
+        Cmd::Submit { prompt, params, reply, events } => {
+            if waiters.len() >= scfg.max_pending {
+                let _ = reply.send(Err(ServeError::Overloaded { limit: scfg.max_pending }));
+                return true;
+            }
+            match engine.submit(prompt, params) {
+                Ok(id) => {
+                    waiters.insert(id, Waiter { events, next_index: 0 });
+                    let _ = reply.send(Ok(id));
+                }
+                Err(e) => {
+                    let _ = reply.send(Err(ServeError::Rejected(e)));
+                }
+            }
+            true
+        }
+        Cmd::Metrics { reply } => {
+            let _ = reply.send(engine.metrics.clone());
+            true
+        }
+        Cmd::Shutdown => false,
+    }
+}
+
+/// Forward this step's tokens and completions to their streams.
+/// Token events are deduplicated by index (see [`Waiter`]); at `Done`
+/// any trailing tokens the event feed missed are backfilled from the
+/// response itself, so the streamed sequence always equals
+/// `Response.tokens` exactly.
+fn deliver(engine: &mut Engine, waiters: &mut HashMap<RequestId, Waiter>) {
+    for ev in engine.take_token_events() {
+        if let Some(w) = waiters.get_mut(&ev.id) {
+            if ev.index == w.next_index {
+                let _ = w.events.send(StreamEvent::Token { index: ev.index, token: ev.token });
+                w.next_index += 1;
+            }
+        }
+    }
+    for resp in engine.take_finished() {
+        if let Some(mut w) = waiters.remove(&resp.id) {
+            for (i, &tok) in resp.tokens.iter().enumerate().skip(w.next_index) {
+                let _ = w.events.send(StreamEvent::Token { index: i, token: tok });
+            }
+            w.next_index = resp.tokens.len();
+            let _ = w.events.send(StreamEvent::Done(resp));
+        }
+    }
+}
+
+/// The background batching loop: drain a bounded number of commands,
+/// run one engine step, stream out what it produced — repeat.  On any
+/// exit (shutdown, client disconnect, engine failure) every
+/// outstanding stream and still-queued submission receives a typed
+/// error before the thread returns.
+fn serve(mut engine: Engine, scfg: ServerConfig, rx: Receiver<Cmd>) {
+    let mut waiters: HashMap<RequestId, Waiter> = HashMap::new();
+    let exit: ServeError = 'run: loop {
+        let mut budget = scfg.max_cmds_per_step.max(1);
+        // nothing in flight: block instead of spinning on try_recv
+        if waiters.is_empty() {
+            match rx.recv() {
+                Ok(cmd) => {
+                    if !handle_cmd(&mut engine, &scfg, &mut waiters, cmd) {
+                        break 'run ServeError::Aborted;
+                    }
+                    budget -= 1;
+                }
+                Err(_) => break 'run ServeError::Aborted,
+            }
+        }
+        // bounded drain: a submit flood fills at most `budget` slots
+        // before the engine steps again, so decode always progresses
+        while budget > 0 {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle_cmd(&mut engine, &scfg, &mut waiters, cmd) {
+                        break 'run ServeError::Aborted;
+                    }
+                    budget -= 1;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'run ServeError::Aborted,
+            }
+        }
+        if let Err(e) = engine.step() {
+            break 'run ServeError::EngineFailed(format!("{e:#}"));
+        }
+        deliver(&mut engine, &mut waiters);
+    };
+    // the no-hang contract: every outstanding stream learns why it
+    // ended, and submissions still queued in the channel get a typed
+    // reply instead of a dead reply channel
+    deliver(&mut engine, &mut waiters);
+    for (_, w) in waiters.drain() {
+        let _ = w.events.send(StreamEvent::Error(exit.clone()));
+    }
+    while let Ok(cmd) = rx.try_recv() {
+        match cmd {
+            Cmd::Submit { reply, .. } => {
+                let _ = reply.send(Err(exit.clone()));
+            }
+            Cmd::Metrics { reply } => {
+                let _ = reply.send(engine.metrics.clone());
+            }
+            Cmd::Shutdown => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::batch::ParallelConfig;
+    use crate::coordinator::backend::{
+        BucketGrid, HostModelBackend, HostModelConfig, ModelInfo, PagedRow, StepOut,
+    };
+    use crate::coordinator::kv_cache::{BlockTable, TieredPagePool};
+    use anyhow::bail;
+    use std::time::Duration;
 
-    fn artifact_dir() -> Option<String> {
-        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-        if std::path::Path::new(dir).join("manifest.json").exists() {
-            Some(dir.to_string())
-        } else {
-            None
+    const WAIT: Duration = Duration::from_secs(60);
+
+    fn host_server(scfg: ServerConfig) -> Server {
+        Server::with_backend(
+            Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+            EngineConfig::default(),
+            scfg,
+        )
+    }
+
+    /// Delegates to a host backend until `calls_left` paged steps have
+    /// run, then every step fails — the engine-death injection rig.
+    struct FailingBackend {
+        inner: HostModelBackend,
+        calls_left: usize,
+    }
+
+    impl FailingBackend {
+        fn new(calls_left: usize) -> Self {
+            Self { inner: HostModelBackend::new(HostModelConfig::tiny_gqa()), calls_left }
+        }
+
+        fn tick(&mut self) -> anyhow::Result<()> {
+            if self.calls_left == 0 {
+                bail!("injected backend failure");
+            }
+            self.calls_left -= 1;
+            Ok(())
+        }
+    }
+
+    impl Backend for FailingBackend {
+        fn model(&self) -> &ModelInfo {
+            self.inner.model()
+        }
+        fn buckets(&self) -> BucketGrid {
+            self.inner.buckets()
+        }
+        fn set_parallel(&mut self, cfg: ParallelConfig) {
+            self.inner.set_parallel(cfg)
+        }
+        fn prefill(
+            &mut self,
+            batch: usize,
+            seq: usize,
+            tokens: &[i32],
+            lengths: &[i32],
+        ) -> anyhow::Result<StepOut> {
+            self.tick()?;
+            self.inner.prefill(batch, seq, tokens, lengths)
+        }
+        fn decode(
+            &mut self,
+            batch: usize,
+            tokens: &[i32],
+            k_plane: Vec<f32>,
+            v_plane: Vec<f32>,
+            pos: &[i32],
+        ) -> anyhow::Result<StepOut> {
+            self.tick()?;
+            self.inner.decode(batch, tokens, k_plane, v_plane, pos)
+        }
+        fn supports_paged(&self) -> bool {
+            true
+        }
+        fn decode_paged(
+            &mut self,
+            rows: &[PagedRow<'_>],
+            pools: &mut TieredPagePool,
+        ) -> anyhow::Result<Vec<f32>> {
+            self.tick()?;
+            self.inner.decode_paged(rows, pools)
+        }
+        fn prefill_chunk(
+            &mut self,
+            tokens: &[i32],
+            start_pos: usize,
+            table: &BlockTable,
+            pools: &mut TieredPagePool,
+        ) -> anyhow::Result<Vec<f32>> {
+            self.tick()?;
+            self.inner.prefill_chunk(tokens, start_pos, table, pools)
         }
     }
 
     #[test]
-    fn serves_concurrent_clients() {
-        let Some(dir) = artifact_dir() else { return };
-        let server = Server::start(dir, EngineConfig::default()).unwrap();
+    fn serves_concurrent_clients_on_host_backend() {
+        let server = host_server(ServerConfig::default());
         let p = GenParams { max_new_tokens: 3, eos_token: None, share_prefix: false };
         let waits: Vec<_> = (0..6)
             .map(|i| {
@@ -167,8 +511,9 @@ mod tests {
                 server.submit(prompt, p).unwrap()
             })
             .collect();
-        for (id, rx) in waits {
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        for stream in waits {
+            let id = stream.id();
+            let resp = stream.wait().unwrap();
             assert_eq!(resp.id, id);
             assert_eq!(resp.tokens.len(), 3);
         }
@@ -177,16 +522,177 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_prompt_without_killing_engine() {
-        let Some(dir) = artifact_dir() else { return };
-        let server = Server::start(dir, EngineConfig::default()).unwrap();
+    fn streamed_tokens_match_final_response() {
+        let server = host_server(ServerConfig::default());
+        let stream = server
+            .submit(vec![1, 2, 3, 4, 5], GenParams { max_new_tokens: 8, ..GenParams::default() })
+            .unwrap();
+        let mut streamed = Vec::new();
+        loop {
+            match stream.recv() {
+                StreamEvent::Token { index, token } => {
+                    assert_eq!(index, streamed.len(), "token indices are gap-free");
+                    streamed.push(token);
+                }
+                StreamEvent::Done(resp) => {
+                    assert_eq!(streamed, resp.tokens, "stream equals final response");
+                    break;
+                }
+                StreamEvent::Error(e) => panic!("unexpected stream error: {e}"),
+            }
+        }
+        assert_eq!(streamed.len(), 8);
+    }
+
+    #[test]
+    fn rejects_bad_prompt_with_typed_error_without_killing_engine() {
+        let server = host_server(ServerConfig::default());
         let err = server.submit(vec![1; 1000], GenParams::default());
-        assert!(err.is_err());
-        // engine still alive
-        let (_, rx) = server
+        assert!(matches!(err, Err(ServeError::Rejected(_))), "got {err:?}");
+        // engine still alive and serving
+        let stream = server
             .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, ..GenParams::default() })
             .unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
-        assert_eq!(resp.tokens.len(), 2);
+        assert_eq!(stream.wait().unwrap().tokens.len(), 2);
+    }
+
+    #[test]
+    fn engine_failure_reaches_every_waiter() {
+        // enough successful steps to admit everyone, then the backend
+        // dies mid-decode
+        let server = Server::with_backend(
+            Box::new(FailingBackend::new(6)),
+            EngineConfig::default(),
+            ServerConfig::default(),
+        );
+        let p = GenParams { max_new_tokens: 12, ..GenParams::default() };
+        let streams: Vec<_> =
+            (0..3).map(|i| server.submit(vec![i + 1; 4], p).unwrap()).collect();
+        for stream in streams {
+            // every waiter must terminate — with the typed engine
+            // failure, never a hang or a bare disconnect
+            loop {
+                match stream.recv_timeout(WAIT).expect("no-hang contract") {
+                    StreamEvent::Token { .. } => continue,
+                    StreamEvent::Done(_) => panic!("backend dies before 12 tokens"),
+                    StreamEvent::Error(ServeError::EngineFailed(msg)) => {
+                        assert!(msg.contains("injected backend failure"), "got: {msg}");
+                        break;
+                    }
+                    StreamEvent::Error(e) => panic!("wrong error: {e}"),
+                }
+            }
+        }
+        // submissions after death get a typed error too
+        let late = server.submit(vec![1, 2], GenParams::default());
+        assert!(late.is_err());
+    }
+
+    #[test]
+    fn drop_while_busy_delivers_typed_abort() {
+        let server = host_server(ServerConfig::default());
+        let p = GenParams { max_new_tokens: 64, ..GenParams::default() };
+        let streams: Vec<_> =
+            (0..4).map(|i| server.submit(vec![i + 1; 6], p).unwrap()).collect();
+        drop(server); // shutdown with requests almost certainly mid-flight
+        for stream in streams {
+            // each stream must still terminate: Done if it won the
+            // race, else a typed Aborted — never a hang
+            loop {
+                match stream.recv_timeout(WAIT).expect("no-hang contract") {
+                    StreamEvent::Token { .. } => continue,
+                    StreamEvent::Done(_) | StreamEvent::Error(ServeError::Aborted) => break,
+                    StreamEvent::Error(e) => panic!("wrong error: {e}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overload_returns_typed_backpressure() {
+        let server = host_server(ServerConfig { max_pending: 1, max_cmds_per_step: 32 });
+        let p = GenParams { max_new_tokens: 48, ..GenParams::default() };
+        let first = server.submit(vec![1, 2, 3, 4], p).unwrap();
+        // the first request needs ~50 engine steps; this submit lands
+        // long before that, while the waiter table is full
+        let second = server.submit(vec![5, 6, 7], p);
+        assert!(
+            matches!(second, Err(ServeError::Overloaded { limit: 1 })),
+            "got {second:?}"
+        );
+        first.wait().unwrap();
+    }
+
+    #[test]
+    fn submit_flood_does_not_starve_decode() {
+        let server = std::sync::Arc::new(host_server(ServerConfig {
+            max_pending: 4,
+            max_cmds_per_step: 4,
+        }));
+        let probe = server
+            .submit(vec![7, 8, 9], GenParams { max_new_tokens: 16, ..GenParams::default() })
+            .unwrap();
+        // sustained flood from another thread: every submission past
+        // the pending cap bounces with Overloaded, but the bounded
+        // drain keeps decode stepping underneath
+        let flooder = {
+            let server = std::sync::Arc::clone(&server);
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let flag = std::sync::Arc::clone(&stop);
+            let h = thread::spawn(move || {
+                let mut extra = Vec::new();
+                while !flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    match server.submit(vec![1, 2], GenParams::default()) {
+                        Ok(s) => extra.push(s),
+                        Err(ServeError::Overloaded { .. }) => {}
+                        Err(e) => panic!("flood submit failed oddly: {e}"),
+                    }
+                }
+                extra
+            });
+            (stop, h)
+        };
+        let resp = probe.wait().expect("decode progresses under continuous submission");
+        assert_eq!(resp.tokens.len(), 16);
+        flooder.0.store(true, std::sync::atomic::Ordering::Relaxed);
+        // every admitted flood request still terminates cleanly
+        for s in flooder.1.join().unwrap() {
+            s.wait().expect("flood stream completes");
+        }
+    }
+
+    fn artifact_dir() -> String {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+    }
+
+    #[test]
+    #[ignore = "requires artifacts/ bundle (build with python/compile/aot.py)"]
+    fn serves_concurrent_clients_from_artifacts() {
+        let server = Server::start(artifact_dir(), EngineConfig::default()).unwrap();
+        let p = GenParams { max_new_tokens: 3, eos_token: None, share_prefix: false };
+        let waits: Vec<_> = (0..6)
+            .map(|i| {
+                let prompt = vec![(i % 50) as i32 + 1; (i % 9) + 1];
+                server.submit(prompt, p).unwrap()
+            })
+            .collect();
+        for stream in waits {
+            let resp = stream.wait().unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        let m = server.metrics().unwrap();
+        assert_eq!(m.completed, 6);
+    }
+
+    #[test]
+    #[ignore = "requires artifacts/ bundle (build with python/compile/aot.py)"]
+    fn rejects_bad_prompt_from_artifacts() {
+        let server = Server::start(artifact_dir(), EngineConfig::default()).unwrap();
+        let err = server.submit(vec![1; 1000], GenParams::default());
+        assert!(err.is_err());
+        let stream = server
+            .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, ..GenParams::default() })
+            .unwrap();
+        assert_eq!(stream.wait().unwrap().tokens.len(), 2);
     }
 }

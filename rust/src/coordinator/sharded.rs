@@ -36,8 +36,8 @@ use crate::attention::batch::{
 };
 use crate::coordinator::allreduce::{ranks_bit_identical, ring_all_reduce};
 use crate::coordinator::backend::{
-    matvec, rmsnorm, AllReduceStats, Backend, BucketGrid, HostModelBackend, HostModelConfig,
-    ModelInfo, PagedRow, ShardedRow, StepOut,
+    matvec, rmsnorm, AllReduceStats, Backend, BucketGrid, ChunkRun, HostModelBackend,
+    HostModelConfig, ModelInfo, PagedRow, ShardedRow, StepOut,
 };
 use crate::coordinator::kv_cache::{BlockTable, PageCodec, TieredPagePool};
 use crate::sim::collective::{
@@ -568,6 +568,88 @@ impl Backend for ShardedBackend {
         let mut logits = vec![0.0f32; self.shards[0].model().vocab];
         self.shards[0].logits_row(&last, &mut logits);
         Ok(logits)
+    }
+
+    fn prefill_chunks_sharded(
+        &mut self,
+        chunks: &[ChunkRun<'_>],
+        pools: &mut [TieredPagePool],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = self.shards.len();
+        if chunks.is_empty() {
+            return Ok(Vec::new());
+        }
+        let cache = self.shards[0].cache_shape();
+        let mut max_len = 0usize;
+        for (i, c) in chunks.iter().enumerate() {
+            if c.tokens.is_empty() {
+                bail!("prefill_chunks_sharded row {i}: empty chunk");
+            }
+            if c.tables.len() != n {
+                bail!("prefill_chunks_sharded row {i}: {} tables for {n} shards", c.tables.len());
+            }
+            let end = c.start_pos + c.tokens.len();
+            if end > cache.max_seq {
+                bail!(
+                    "prefill_chunks_sharded row {i}: positions ..{end} exceed max_seq {}",
+                    cache.max_seq
+                );
+            }
+            for (s, t) in c.tables.iter().enumerate() {
+                self.check_shard_table(t, &pools[s], "prefill_chunks_sharded")?;
+                if t.capacity_tokens() < end {
+                    bail!(
+                        "prefill_chunks_sharded row {i} shard {s}: table holds {} tokens, \
+                         chunk ends at {end}",
+                        t.capacity_tokens()
+                    );
+                }
+            }
+            max_len = max_len.max(c.tokens.len());
+        }
+        // Positions stay sequential within each chunk, so the combine
+        // stays serial (overlap = false), but every still-unfinished
+        // chunk contributes a row to the same step — one ring combine
+        // amortised over the packed rows.
+        let mut finals: Vec<Vec<f32>> = vec![Vec::new(); chunks.len()];
+        for t in 0..max_len {
+            let live: Vec<usize> =
+                (0..chunks.len()).filter(|&ci| t < chunks[ci].tokens.len()).collect();
+            let rows: Vec<(i32, usize)> = live
+                .iter()
+                .map(|&ci| {
+                    debug_assert_eq!(
+                        crate::attention::mask::chunk_row_visible(chunks[ci].start_pos, t),
+                        chunks[ci].start_pos + t + 1,
+                    );
+                    (chunks[ci].tokens[t], chunks[ci].start_pos + t)
+                })
+                .collect();
+            let row_tables: Vec<&[BlockTable]> =
+                live.iter().map(|&ci| chunks[ci].tables).collect();
+            let xs = forward_sharded(
+                &self.shards,
+                &self.scfg,
+                &mut self.comm,
+                &rows,
+                &row_tables,
+                pools,
+                false,
+            );
+            for (&ci, x) in live.iter().zip(xs) {
+                if t == chunks[ci].tokens.len() - 1 {
+                    finals[ci] = x;
+                }
+            }
+        }
+        let vocab = self.shards[0].model().vocab;
+        let mut out = Vec::with_capacity(chunks.len());
+        for x in &finals {
+            let mut logits = vec![0.0f32; vocab];
+            self.shards[0].logits_row(x, &mut logits);
+            out.push(logits);
+        }
+        Ok(out)
     }
 }
 

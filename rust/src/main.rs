@@ -88,8 +88,9 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
             server.submit(prompt, GenParams { max_new_tokens: gen, ..GenParams::default() })
         })
         .collect::<Result<_, _>>()?;
-    for (id, rx) in waits {
-        let resp = rx.recv()?;
+    for stream in waits {
+        let id = stream.id();
+        let resp = stream.wait()?;
         println!(
             "req {id}: prompt {} + {} tokens — ttft {} total {} ({:.1} tok/s decode)",
             resp.prompt_len,

@@ -7,8 +7,19 @@ use std::time::Instant;
 pub struct EngineMetrics {
     pub prefill_steps: u64,
     pub decode_steps: u64,
-    /// Chunked-prefill steps (paged engine; one chunk of one sequence).
+    /// Chunked-prefill steps (paged engine).  One step runs one batched
+    /// forward pass; several admitting sequences' chunk rows can pack
+    /// into it under the prefill-token budget (`chunk_rows` counts the
+    /// per-sequence chunks, so `chunk_rows / chunk_steps` is the mean
+    /// packed chunk batch).
     pub chunk_steps: u64,
+    /// Per-sequence chunks executed inside chunked-prefill steps.
+    pub chunk_rows: u64,
+    /// New-admission prefill slots the scheduler deferred to decode
+    /// because recent decode step time exceeded the TPOT SLO
+    /// (`EngineConfig::tpot_slo_s`) while the waiting queue was not yet
+    /// starved past `waiting_served_ratio`.
+    pub slo_deferrals: u64,
     pub prefilled_tokens: u64,
     pub decoded_tokens: u64,
     pub completed: u64,
@@ -163,6 +174,15 @@ impl EngineMetrics {
             return 0.0;
         }
         self.decoded_tokens as f64 / self.decode_steps as f64
+    }
+
+    /// Mean per-sequence chunks packed into one chunked-prefill step
+    /// (1.0 = no packing; 0.0 when no chunk step ran).
+    pub fn mean_chunk_batch(&self) -> f64 {
+        if self.chunk_steps == 0 {
+            return 0.0;
+        }
+        self.chunk_rows as f64 / self.chunk_steps as f64
     }
 
     /// Fraction of modeled AllReduce seconds hidden under compute,
