@@ -38,9 +38,10 @@ use fastattn::attention::flash::{
 use fastattn::benchkit::{bench, fmt_time, rate, write_bench_json, x, Table};
 use fastattn::coordinator::allreduce::ring_all_reduce;
 use fastattn::coordinator::kv_cache::{pack_batch, BlockTable, CacheShape, PageCodec, PagePool};
+use fastattn::coordinator::scheduler::Policy;
 use fastattn::coordinator::{
-    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PreemptMode,
-    VictimPolicy,
+    BucketGrid, Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+    PreemptMode, VictimPolicy,
 };
 use fastattn::models::{ModelShape, MISTRAL_7B, TINY_GQA};
 use fastattn::proptest::Rng;
@@ -597,6 +598,116 @@ fn main() {
         prefix_rows.push(("shared decode tok/s".into(), sm.decode_tps()));
         prefix_rows.push(("unshared peak pages".into(), bm.peak_pages_used as f64));
         prefix_rows.push(("shared peak pages".into(), sm.peak_pages_used as f64));
+    }
+
+    // --- cascade decode over shared-prefix pages: batch scaling -------
+    // The two-phase cascade at adopter counts 1 → 64: every request
+    // carries the same 32-token system prompt (two shared page-16
+    // blocks), served with `share_prefix` on in both arms and `cascade`
+    // off vs on.  Tokens must be bit-identical (parity asserted); the
+    // shared-KV bytes gathered per decode step stay **flat** in the
+    // adopter count under cascade — one multi-query pass per group —
+    // while growing linearly without, and every byte the cascade skips
+    // is accounted: gathered(cascade) + saved == gathered(baseline).
+    // Rows land in BENCH_prefix.json.
+    {
+        let system = vec![7i32; 32];
+        let page_size = 16usize;
+        // tiny_gqa head_dim; the engine subtracts saved rows at this rate
+        let row_bytes = PageCodec::F32.row_bytes(8) as u64;
+        let mut per_extra: Vec<f64> = Vec::new();
+        for adopters in [1usize, 4, 16, 64] {
+            let prompts: Vec<Vec<i32>> = (0..adopters)
+                .map(|i| {
+                    let mut p = system.clone();
+                    p.extend([(i % 24) as i32 + 40, (i / 24) as i32 + 8]);
+                    p
+                })
+                .collect();
+            let run = |cascade: bool| {
+                let cfg = EngineConfig {
+                    parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+                    kv_layout: KvLayout::Paged,
+                    page_size,
+                    // admit the whole cohort before any decode so every
+                    // step batches all adopters into one cascade group
+                    policy: Policy::PrefillFirst,
+                    max_active: adopters.max(16),
+                    cascade,
+                    ..EngineConfig::default()
+                };
+                // whole-batch decode buckets, and the kernel KV tile
+                // shrunk to the page size so the 32-token prefix is two
+                // cascade tiles
+                let host = HostModelConfig {
+                    buckets: BucketGrid {
+                        prefill_batches: vec![1, 4],
+                        prefill_seqs: vec![8, 16, 32, 64],
+                        decode_batches: vec![1, 4, 16, 64],
+                    },
+                    ..HostModelConfig::tiny_gqa().with_block_kv(page_size)
+                };
+                let mut e = Engine::with_backend(Box::new(HostModelBackend::new(host)), cfg);
+                let gp = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: true };
+                for pr in &prompts {
+                    e.submit(pr.clone(), gp).unwrap();
+                }
+                let mut out = e.run_until_idle().unwrap();
+                out.sort_by_key(|r| r.id);
+                let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+                (toks, e.metrics.clone())
+            };
+            let (base_toks, bm) = run(false);
+            let (casc_toks, cm) = run(true);
+            assert_eq!(base_toks, casc_toks, "cascade changed tokens at b={adopters}");
+            assert_eq!(bm.cascade_passes, 0, "cascade off must never take the cascade path");
+            let saved = cm.shared_rows_saved * row_bytes;
+            assert_eq!(
+                cm.kv_bytes_gathered + saved,
+                bm.kv_bytes_gathered,
+                "cascade gather accounting must explain every saved byte at b={adopters}"
+            );
+            let steps = cm.decode_steps.max(1) as f64;
+            if adopters == 1 {
+                assert_eq!(cm.cascade_passes, 0, "a lone request has nothing to cascade with");
+                assert_eq!(saved, 0, "no second adopter, no saved gather");
+            } else {
+                assert!(cm.cascade_passes > 0, "b={adopters} must take the cascade path");
+                assert!(saved > 0, "b={adopters} must skip repeat shared gathers");
+                per_extra.push(saved as f64 / steps / (adopters - 1) as f64);
+            }
+            prefix_rows.push((
+                format!("cascade off b={adopters} kv bytes gathered/step"),
+                bm.kv_bytes_gathered as f64 / bm.decode_steps.max(1) as f64,
+            ));
+            prefix_rows.push((
+                format!(
+                    "cascade on  b={adopters} kv bytes gathered/step ({} passes)",
+                    cm.cascade_passes
+                ),
+                cm.kv_bytes_gathered as f64 / steps,
+            ));
+            prefix_rows.push((
+                format!("cascade b={adopters} shared bytes saved/step"),
+                saved as f64 / steps,
+            ));
+            tp.row(&[
+                format!("cascade decode b={adopters} sys32 ps={page_size}"),
+                fmt_time(cm.decode_s / cm.decode_steps.max(1) as f64),
+                rate(cm.decoded_tokens as f64, cm.decode_s, "tok"),
+                x(bm.kv_bytes_gathered as f64 / cm.kv_bytes_gathered.max(1) as f64),
+            ]);
+        }
+        // the flatness claim: each extra adopter saves exactly one
+        // shared-prefix gather per step, so saved/(b−1) — the per-step
+        // shared cost — is the same at every batch size
+        let c0 = per_extra[0];
+        for &c in &per_extra {
+            assert!(
+                (c - c0).abs() <= 0.25 * c0,
+                "shared gather per extra adopter must stay flat: {per_extra:?}"
+            );
+        }
     }
 
     // --- KV pack (continuous-batching memcpy boundary) ----------------

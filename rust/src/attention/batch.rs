@@ -27,7 +27,10 @@
 
 use crate::coordinator::kv_cache::{QuantStore, Tier};
 
-use super::flash::{flash_attention_view, FlashParams, KvView};
+use super::flash::{
+    fill_score_tile, flash_attention_view, merge_softmax_states, row_tile_state, FlashParams,
+    KvView,
+};
 
 /// Parallelism knobs for the batched attention path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -384,10 +387,46 @@ pub fn batch_decode_attention(
     out: &mut [f32],
     pool: &WorkPool,
 ) {
+    let (h, d) = (shape.heads, shape.head_dim);
+    assert_eq!(out.len(), seqs.len() * h * d, "out shape");
+    validate_decode_batch(shape, seqs);
+    let group = shape.group_size();
+
+    // cost model: one item streams kv_len KV rows (+1 keeps zero-length
+    // sequences schedulable).
+    let costs: Vec<usize> = seqs
+        .iter()
+        .flat_map(|s| std::iter::repeat(s.kv_len + 1).take(h))
+        .collect();
+
+    pool.run_items(&costs, out, d, |item, item_out| {
+        let (si, head) = (item / h, item % h);
+        let s = &seqs[si];
+        let g = head / group;
+        let kv = s.kv_len;
+        let p = FlashParams {
+            heads: 1,
+            kv_heads: 1,
+            seq_q: 1,
+            seq_kv: kv,
+            head_dim: d,
+            causal: false,
+            block_q: 1,
+            block_kv: shape.block_kv,
+            scale: shape.scale,
+        };
+        let qh = &s.q[head * d..][..d];
+        let (kview, vview) = s.kv.head(g, d, shape.kv_stride);
+        flash_attention_view(qh, &kview, &vview, item_out, &p);
+    });
+}
+
+/// Shape/bounds validation shared by [`batch_decode_attention`] and
+/// [`cascade_batch_decode_attention`]: every page a sequence's valid
+/// prefix can touch must land inside its store.
+fn validate_decode_batch(shape: &BatchShape, seqs: &[SeqAttn<'_>]) {
     let (h, kvh, d) = (shape.heads, shape.kv_heads, shape.head_dim);
     assert!(kvh >= 1 && h % kvh == 0, "kv_heads {kvh} must divide heads {h}");
-    assert_eq!(out.len(), seqs.len() * h * d, "out shape");
-    let group = shape.group_size();
     let plane = shape.kv_stride * d;
     for (i, s) in seqs.iter().enumerate() {
         assert_eq!(s.q.len(), h * d, "seq {i} q shape");
@@ -497,41 +536,310 @@ pub fn batch_decode_attention(
             }
         }
     }
+}
 
-    // cost model: one item streams kv_len KV rows (+1 keeps zero-length
-    // sequences schedulable).
-    let costs: Vec<usize> = seqs
+/// One shared-prefix adopter group of a cascade decode call: `members`
+/// index into the `seqs` slice, and the first `shared_rows` KV rows of
+/// every member are physically the same pages (the COW prefix blocks
+/// `BlockTable::block_shared` tracks).  Groups are disjoint; sequences
+/// in no group run the plain per-item kernel.
+#[derive(Debug, Clone)]
+pub struct CascadeGroup {
+    pub members: Vec<usize>,
+    pub shared_rows: usize,
+}
+
+/// What one [`cascade_batch_decode_attention`] call actually shared.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CascadeStats {
+    /// Batched shared-prefix passes executed (one per group whose
+    /// prefix covered ≥ 1 KV tile with ≥ 2 physically-matching
+    /// members).
+    pub passes: u64,
+    /// K+V row reads avoided versus the per-sequence gather: tile-
+    /// aligned shared rows × KV heads × 2 (K and V), for every group
+    /// member beyond the first.
+    pub rows_saved: u64,
+}
+
+/// Physical identity of the first `rows` KV rows of each KV head:
+/// layout tag + page size + the (page id, tier) of every covering
+/// block.  Two sequences with equal signatures over one store gather
+/// identical bytes for those rows.  `None` for contiguous layouts,
+/// which have no page table to compare — they never cascade.
+fn shared_run_sig(kv: &SeqKv<'_>, kvh: usize, rows: usize) -> Option<(u8, usize, Vec<(u32, u8)>)> {
+    let (kind, pages, tiers, max_blocks, page_size): (u8, &[u32], Option<&[Tier]>, usize, usize) =
+        match *kv {
+            SeqKv::Contig { .. } => return None,
+            SeqKv::Paged { pages, max_blocks, page_size, .. } => {
+                (1, pages, None, max_blocks, page_size)
+            }
+            SeqKv::Tiered { pages, tiers, max_blocks, page_size, .. } => {
+                (2, pages, Some(tiers), max_blocks, page_size)
+            }
+            SeqKv::PagedI8 { pages, max_blocks, page_size, .. } => {
+                (3, pages, None, max_blocks, page_size)
+            }
+            SeqKv::TieredI8 { pages, tiers, max_blocks, page_size, .. } => {
+                (4, pages, Some(tiers), max_blocks, page_size)
+            }
+        };
+    let nb = rows.div_ceil(page_size);
+    if nb > max_blocks {
+        return None;
+    }
+    let mut ids = Vec::with_capacity(kvh * nb);
+    for g in 0..kvh {
+        for b in 0..nb {
+            let at = g * max_blocks + b;
+            let t = tiers.map_or(0u8, |ts| match ts[at] {
+                Tier::Device => 0,
+                Tier::Host => 1,
+            });
+            ids.push((pages[at], t));
+        }
+    }
+    Some((kind, page_size, ids))
+}
+
+/// Cascade decode attention: [`batch_decode_attention`] with shared
+/// prefixes read **once per batch** instead of once per sequence.
+///
+/// Phase 1 walks the KV tiles that lie entirely inside each group's
+/// shared prefix (`shared_rows / block_kv` tiles) one tile at a time
+/// for *all* member heads before moving on — the shared K/V rows
+/// stream from the page store once per (group, KV head) and stay hot
+/// across the member loop — accumulating a per-(member, head) partial
+/// softmax state.  Phase 2 resumes each item's tile walk at the split
+/// point over its own views and normalizes.  Because
+/// [`flash_attention_view`] folds every tile through the same
+/// [`merge_softmax_states`] / [`row_tile_state`] pair, the result is
+/// **bit-identical** to `batch_decode_attention` for every layout,
+/// codec and thread count — and like it, invariant to `ParallelConfig`.
+///
+/// Group members whose page-table prefix does not physically match the
+/// group's first member (or whose layout is contiguous) fall back to
+/// the plain per-item kernel; a group needs ≥ 2 matching members and a
+/// prefix covering ≥ 1 tile to run phase 1 at all.  All members must
+/// gather from the same store — the caller's contract (the engine
+/// builds groups from one pool's block tables).
+///
+/// Panics if a member index is out of range, a sequence appears in two
+/// groups, or `shared_rows` exceeds a member's `kv_len`.
+pub fn cascade_batch_decode_attention(
+    shape: &BatchShape,
+    seqs: &[SeqAttn<'_>],
+    groups: &[CascadeGroup],
+    out: &mut [f32],
+    pool: &WorkPool,
+) -> CascadeStats {
+    let (h, kvh, d) = (shape.heads, shape.kv_heads, shape.head_dim);
+    assert_eq!(out.len(), seqs.len() * h * d, "out shape");
+    validate_decode_batch(shape, seqs);
+    let group_sz = shape.group_size();
+    let bkv = shape.block_kv.max(1);
+
+    // --- plan: which members share which tile-aligned prefix --------
+    struct Plan {
+        members: Vec<usize>,
+        tiles: usize,
+        slot0: usize,
+    }
+    let mut stats = CascadeStats::default();
+    let mut in_group = vec![false; seqs.len()];
+    let mut plans: Vec<Plan> = Vec::new();
+    let mut nslots = 0usize;
+    for g in groups {
+        for &mi in &g.members {
+            assert!(mi < seqs.len(), "cascade member {mi} out of range");
+            assert!(!in_group[mi], "sequence {mi} appears in two cascade groups");
+            in_group[mi] = true;
+            assert!(
+                g.shared_rows <= seqs[mi].kv_len,
+                "group shared_rows {} exceeds member {mi} kv_len {}",
+                g.shared_rows,
+                seqs[mi].kv_len
+            );
+        }
+        // only tiles fully inside the shared prefix run batched; the
+        // ragged tail (< one tile) stays in each member's own pass
+        let tiles = g.shared_rows / bkv;
+        if tiles == 0 || g.members.len() < 2 {
+            continue;
+        }
+        let Some(sig0) = shared_run_sig(&seqs[g.members[0]].kv, kvh, tiles * bkv) else {
+            continue;
+        };
+        let members: Vec<usize> = g
+            .members
+            .iter()
+            .copied()
+            .filter(|&mi| shared_run_sig(&seqs[mi].kv, kvh, tiles * bkv).as_ref() == Some(&sig0))
+            .collect();
+        if members.len() < 2 {
+            continue;
+        }
+        stats.passes += 1;
+        stats.rows_saved += (tiles * bkv * kvh * 2 * (members.len() - 1)) as u64;
+        let slot0 = nslots;
+        nslots += members.len() * h;
+        plans.push(Plan { members, tiles, slot0 });
+    }
+
+    // --- per-(member, head) partial states + phase-2 resume points --
+    // slot chunk layout: [m, l, acc[0..d]]; slots of one (plan, kv
+    // head) unit are contiguous so phase 1 can split the buffer.
+    let mut slot_of = vec![usize::MAX; seqs.len() * h];
+    let mut resume_row = vec![0usize; seqs.len() * h];
+    for p in &plans {
+        for (mj, &mi) in p.members.iter().enumerate() {
+            for head in 0..h {
+                let kh = head / group_sz;
+                let hg = head % group_sz;
+                let slot = p.slot0 + (kh * p.members.len() + mj) * group_sz + hg;
+                slot_of[mi * h + head] = slot;
+                resume_row[mi * h + head] = p.tiles * bkv;
+            }
+        }
+    }
+    let mut state = vec![0.0f32; nslots * (d + 2)];
+    for chunk in state.chunks_mut(d + 2) {
+        chunk[0] = f32::NEG_INFINITY; // m = −∞ encodes the empty state
+    }
+
+    // --- phase 1: batched pass over each group's shared tiles -------
+    struct Unit {
+        plan: usize,
+        kh: usize,
+    }
+    let units: Vec<Unit> = plans
         .iter()
-        .flat_map(|s| std::iter::repeat(s.kv_len + 1).take(h))
+        .enumerate()
+        .flat_map(|(pi, _)| (0..kvh).map(move |kh| Unit { plan: pi, kh }))
         .collect();
+    let run_unit = |u: &Unit, chunk: &mut [f32]| {
+        let p = &plans[u.plan];
+        debug_assert_eq!(chunk.len(), p.members.len() * group_sz * (d + 2));
+        // every member's shared run is page-identical (checked above),
+        // so member 0's views stand in for the whole group
+        let (kview, vview) = seqs[p.members[0]].kv.head(u.kh, d, shape.kv_stride);
+        let mut scores = vec![0.0f32; bkv];
+        let mut tacc = vec![0.0f32; d];
+        for t in 0..p.tiles {
+            let k0 = t * bkv;
+            for (mj, &mi) in p.members.iter().enumerate() {
+                for hg in 0..group_sz {
+                    let head = u.kh * group_sz + hg;
+                    let qi = &seqs[mi].q[head * d..][..d];
+                    fill_score_tile(qi, &kview, k0, bkv, d, shape.scale, &mut scores[..bkv]);
+                    let (mt, lt) = row_tile_state(&scores[..bkv], &vview, k0, bkv, d, &mut tacc);
+                    let st = &mut chunk[(mj * group_sz + hg) * (d + 2)..][..d + 2];
+                    let (m, rest) = st.split_first_mut().unwrap();
+                    let (l, acc) = rest.split_first_mut().unwrap();
+                    merge_softmax_states(m, l, acc, mt, lt, &tacc[..d]);
+                }
+            }
+        }
+    };
+    if !units.is_empty() {
+        let unit_costs: Vec<usize> = units
+            .iter()
+            .map(|u| {
+                let p = &plans[u.plan];
+                p.tiles * bkv * p.members.len() * group_sz + 1
+            })
+            .collect();
+        let unit_elems: Vec<usize> = units
+            .iter()
+            .map(|u| plans[u.plan].members.len() * group_sz * (d + 2))
+            .collect();
+        let workers = pool.effective_workers(unit_costs.iter().sum(), units.len());
+        if workers <= 1 {
+            let mut off = 0usize;
+            for (ui, u) in units.iter().enumerate() {
+                run_unit(u, &mut state[off..off + unit_elems[ui]]);
+                off += unit_elems[ui];
+            }
+        } else {
+            let ranges = partition_by_cost(&unit_costs, workers);
+            let run_ref = &run_unit;
+            std::thread::scope(|scope| {
+                let mut rest = &mut state[..];
+                for &(lo, hi) in &ranges {
+                    let elems: usize = unit_elems[lo..hi].iter().sum();
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(elems);
+                    rest = tail;
+                    let (units, unit_elems) = (&units, &unit_elems);
+                    scope.spawn(move || {
+                        let mut off = 0usize;
+                        for ui in lo..hi {
+                            run_ref(&units[ui], &mut chunk[off..off + unit_elems[ui]]);
+                            off += unit_elems[ui];
+                        }
+                    });
+                }
+            });
+        }
+    }
 
+    // --- phase 2: per-item continuation / plain pass ----------------
+    let costs: Vec<usize> = (0..seqs.len() * h)
+        .map(|item| seqs[item / h].kv_len - resume_row[item] + 1)
+        .collect();
+    let (state, slot_of, resume_row) = (&state, &slot_of, &resume_row);
     pool.run_items(&costs, out, d, |item, item_out| {
         let (si, head) = (item / h, item % h);
         let s = &seqs[si];
-        let g = head / group;
-        let kv = s.kv_len;
-        let p = FlashParams {
-            heads: 1,
-            kv_heads: 1,
-            seq_q: 1,
-            seq_kv: kv,
-            head_dim: d,
-            causal: false,
-            block_q: 1,
-            block_kv: shape.block_kv,
-            scale: shape.scale,
-        };
+        let g = head / group_sz;
         let qh = &s.q[head * d..][..d];
         let (kview, vview) = s.kv.head(g, d, shape.kv_stride);
-        flash_attention_view(qh, &kview, &vview, item_out, &p);
+        let slot = slot_of[item];
+        if slot == usize::MAX {
+            // ungrouped: exactly batch_decode_attention's per-item call
+            let p = FlashParams {
+                heads: 1,
+                kv_heads: 1,
+                seq_q: 1,
+                seq_kv: s.kv_len,
+                head_dim: d,
+                causal: false,
+                block_q: 1,
+                block_kv: shape.block_kv,
+                scale: shape.scale,
+            };
+            flash_attention_view(qh, &kview, &vview, item_out, &p);
+            return;
+        }
+        // grouped: resume the tile walk at the split point.  kv_len ≥
+        // shared_rows ≥ block_kv here, so the plain kernel's effective
+        // tile size equals ours and the walk is the same one it takes.
+        let st = &state[slot * (d + 2)..][..d + 2];
+        let (mut m, mut l) = (st[0], st[1]);
+        let mut acc = st[2..].to_vec();
+        let mut scores = vec![0.0f32; bkv];
+        let mut tacc = vec![0.0f32; d];
+        let mut k0 = resume_row[item];
+        while k0 < s.kv_len {
+            let nk = bkv.min(s.kv_len - k0);
+            fill_score_tile(qh, &kview, k0, nk, d, shape.scale, &mut scores[..nk]);
+            let (mt, lt) = row_tile_state(&scores[..nk], &vview, k0, nk, d, &mut tacc);
+            merge_softmax_states(&mut m, &mut l, &mut acc, mt, lt, &tacc[..d]);
+            k0 += nk;
+        }
+        let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+        for (o, &a) in item_out.iter_mut().zip(&acc) {
+            *o = a * inv;
+        }
     });
+    stats
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::flash::flash_attention;
-    use crate::proptest::Rng;
+    use crate::prop_ensure;
+    use crate::proptest::{check, Rng};
 
     /// Reference: per-sequence GQA flash over the valid prefix.
     fn reference(shape: &BatchShape, seqs: &[SeqAttn<'_>]) -> Vec<f32> {
@@ -959,5 +1267,268 @@ mod tests {
             assert_eq!(out[i * 2], i as f32);
             assert_eq!(out[i * 2 + 1], 2.0 * i as f32);
         }
+    }
+
+    /// `nseq` sequences scattered into one paged pool where the first
+    /// `shared_blocks` blocks of every KV head are the SAME pages for
+    /// every sequence — the engine's COW shared-prefix shape.
+    struct SharedPagedBatch {
+        pool: crate::coordinator::kv_cache::PagePool,
+        tables: Vec<Vec<u32>>,
+        lens: Vec<usize>,
+        q: Vec<Vec<f32>>,
+        max_blocks: usize,
+        page_size: usize,
+        shared_rows: usize,
+    }
+
+    impl SharedPagedBatch {
+        #[allow(clippy::too_many_arguments)]
+        fn random(
+            rng: &mut Rng,
+            codec: crate::coordinator::kv_cache::PageCodec,
+            nseq: usize,
+            h: usize,
+            kvh: usize,
+            d: usize,
+            page_size: usize,
+            shared_blocks: usize,
+            extra_max: usize,
+        ) -> Self {
+            use crate::coordinator::kv_cache::PagePool;
+            let shared_rows = shared_blocks * page_size;
+            let max_blocks = (shared_rows + extra_max).div_ceil(page_size);
+            let npages = kvh * (shared_blocks + nseq * max_blocks);
+            let mut pool = PagePool::with_codec(page_size, d, npages, codec);
+            // prefix pages, allocated and written exactly once
+            let shared_pages: Vec<u32> =
+                (0..kvh * shared_blocks).map(|_| pool.alloc().unwrap()).collect();
+            for g in 0..kvh {
+                for r in 0..shared_rows {
+                    let page = shared_pages[g * shared_blocks + r / page_size];
+                    pool.write_row(page, r % page_size, &rng.f32_vec(d), &rng.f32_vec(d));
+                }
+            }
+            let (mut tables, mut lens, mut q) = (Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..nseq {
+                let len = shared_rows + rng.range(0, extra_max + 1);
+                let mut pages = vec![0u32; kvh * max_blocks];
+                for g in 0..kvh {
+                    for b in 0..shared_blocks {
+                        pages[g * max_blocks + b] = shared_pages[g * shared_blocks + b];
+                    }
+                    for b in shared_blocks..max_blocks {
+                        pages[g * max_blocks + b] = pool.alloc().unwrap();
+                    }
+                    for r in shared_rows..len {
+                        let page = pages[g * max_blocks + r / page_size];
+                        pool.write_row(page, r % page_size, &rng.f32_vec(d), &rng.f32_vec(d));
+                    }
+                }
+                tables.push(pages);
+                lens.push(len);
+                q.push(rng.f32_vec(h * d));
+            }
+            Self { pool, tables, lens, q, max_blocks, page_size, shared_rows }
+        }
+
+        fn seqs(&self) -> Vec<SeqAttn<'_>> {
+            self.seqs_with_tables(&self.tables)
+        }
+
+        fn seqs_with_tables<'a>(&'a self, tables: &'a [Vec<u32>]) -> Vec<SeqAttn<'a>> {
+            use crate::coordinator::kv_cache::PageCodec;
+            let int8 = self.pool.codec() == PageCodec::Int8;
+            (0..self.q.len())
+                .map(|i| SeqAttn {
+                    q: &self.q[i],
+                    kv: if int8 {
+                        SeqKv::PagedI8 {
+                            k: self.pool.k_quant_store(),
+                            v: self.pool.v_quant_store(),
+                            pages: &tables[i],
+                            max_blocks: self.max_blocks,
+                            page_size: self.page_size,
+                        }
+                    } else {
+                        SeqKv::Paged {
+                            k_store: self.pool.k_store(),
+                            v_store: self.pool.v_store(),
+                            pages: &tables[i],
+                            max_blocks: self.max_blocks,
+                            page_size: self.page_size,
+                        }
+                    },
+                    kv_len: self.lens[i],
+                })
+                .collect()
+        }
+    }
+
+    /// The headline cascade invariant at kernel level: cascade decode
+    /// is bit-identical to the per-sequence gather for random shapes,
+    /// codecs, prefix claims, tile sizes and thread counts, and the
+    /// stats count exactly the tile-aligned shared rows it skipped.
+    #[test]
+    fn prop_cascade_equals_per_sequence_gather() {
+        use crate::coordinator::kv_cache::PageCodec;
+        check(24, |rng| {
+            let (h, kvh) = *rng.pick(&[(1usize, 1usize), (2, 1), (4, 2), (6, 3)]);
+            let d = *rng.pick(&[4usize, 8]);
+            let page_size = rng.range(2, 6);
+            let shared_blocks = rng.range(1, 4);
+            let extra_max = rng.range(0, 10);
+            let nseq = rng.range(2, 7);
+            let codec = if rng.bool() { PageCodec::Int8 } else { PageCodec::F32 };
+            let b = SharedPagedBatch::random(
+                rng,
+                codec,
+                nseq,
+                h,
+                kvh,
+                d,
+                page_size,
+                shared_blocks,
+                extra_max,
+            );
+            let mut shape = BatchShape::new(h, kvh, d, b.shared_rows + extra_max);
+            shape.block_kv = rng.range(1, 10);
+            let seqs = b.seqs();
+            // any claim within the physically-shared extent is valid
+            let shared_rows = rng.range(0, b.shared_rows + 1);
+            let groups = [CascadeGroup { members: (0..nseq).collect(), shared_rows }];
+
+            let mut base = vec![0.0f32; nseq * h * d];
+            batch_decode_attention(
+                &shape,
+                &seqs,
+                &mut base,
+                &WorkPool::new(ParallelConfig::sequential()),
+            );
+            let tiles = shared_rows / shape.block_kv;
+            for threads in [1usize, 4] {
+                let pool = WorkPool::new(ParallelConfig { threads, min_work_per_thread: 0 });
+                let mut out = vec![0.0f32; nseq * h * d];
+                let stats = cascade_batch_decode_attention(&shape, &seqs, &groups, &mut out, &pool);
+                prop_ensure!(
+                    out == base,
+                    "threads={threads} codec={codec:?} bkv={} shared={shared_rows}: \
+                     cascade differs from per-sequence gather",
+                    shape.block_kv
+                );
+                prop_ensure!(
+                    (stats.passes > 0) == (tiles >= 1),
+                    "passes {} with {tiles} shared tiles",
+                    stats.passes
+                );
+                if tiles >= 1 {
+                    let want = (tiles * shape.block_kv * kvh * 2 * (nseq - 1)) as u64;
+                    prop_ensure!(
+                        stats.rows_saved == want,
+                        "rows_saved {} want {want}",
+                        stats.rows_saved
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A member whose page-table prefix diverges from the group's is
+    /// filtered out of phase 1 (it runs the plain per-item kernel) —
+    /// and the output is still bit-identical to the full gather.
+    #[test]
+    fn cascade_mismatched_member_runs_ungrouped() {
+        use crate::coordinator::kv_cache::PageCodec;
+        let mut rng = Rng::new(31);
+        let (h, kvh, d, page_size, shared_blocks) = (2usize, 1usize, 4usize, 4usize, 2usize);
+        let b = SharedPagedBatch::random(
+            &mut rng,
+            PageCodec::F32,
+            3,
+            h,
+            kvh,
+            d,
+            page_size,
+            shared_blocks,
+            5,
+        );
+        // divert member 2's first "shared" block to one of its own
+        // pages: its prefix is no longer page-identical
+        let mut tables = b.tables.clone();
+        tables[2][0] = tables[2][b.max_blocks - 1];
+        let seqs = b.seqs_with_tables(&tables);
+        let mut shape = BatchShape::new(h, kvh, d, b.shared_rows + 5);
+        shape.block_kv = page_size;
+        let groups =
+            [CascadeGroup { members: vec![0, 1, 2], shared_rows: b.shared_rows }];
+
+        let wp = WorkPool::new(ParallelConfig { threads: 2, min_work_per_thread: 0 });
+        let mut base = vec![0.0f32; 3 * h * d];
+        batch_decode_attention(&shape, &seqs, &mut base, &wp);
+        let mut out = vec![0.0f32; 3 * h * d];
+        let stats = cascade_batch_decode_attention(&shape, &seqs, &groups, &mut out, &wp);
+        assert_eq!(out, base, "fallback member changed bits");
+        assert_eq!(stats.passes, 1);
+        // only members 0 and 1 cascade → one non-first member saves rows
+        let tiles = b.shared_rows / shape.block_kv;
+        assert_eq!(stats.rows_saved, (tiles * shape.block_kv * kvh * 2) as u64);
+    }
+
+    /// Contiguous layouts have no page identity to verify, so a contig
+    /// group must fall back wholesale (zero stats, identical bits).
+    #[test]
+    fn cascade_contig_group_falls_back() {
+        let mut rng = Rng::new(32);
+        let b = Batch::random(&mut rng, 4, 4, 2, 8, 20);
+        let seqs = b.seqs();
+        let shared = *b.lens.iter().min().unwrap();
+        let groups = [CascadeGroup { members: vec![0, 1, 2, 3], shared_rows: shared }];
+        let wp = WorkPool::new(ParallelConfig { threads: 2, min_work_per_thread: 0 });
+        let n = 4 * 4 * 8;
+        let mut base = vec![0.0f32; n];
+        batch_decode_attention(&b.shape, &seqs, &mut base, &wp);
+        let mut out = vec![0.0f32; n];
+        let stats = cascade_batch_decode_attention(&b.shape, &seqs, &groups, &mut out, &wp);
+        assert_eq!(out, base);
+        assert_eq!(stats, CascadeStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds member")]
+    fn cascade_shared_rows_beyond_kv_len_panics() {
+        let mut rng = Rng::new(33);
+        let b = Batch::random(&mut rng, 2, 2, 1, 4, 8);
+        let seqs = b.seqs();
+        let bad = b.lens.iter().max().unwrap() + 1;
+        let groups = [CascadeGroup { members: vec![0, 1], shared_rows: bad }];
+        let mut out = vec![0.0f32; 2 * 2 * 4];
+        cascade_batch_decode_attention(
+            &b.shape,
+            &seqs,
+            &groups,
+            &mut out,
+            &WorkPool::new(ParallelConfig::sequential()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "two cascade groups")]
+    fn cascade_duplicate_member_panics() {
+        let mut rng = Rng::new(34);
+        let b = Batch::random(&mut rng, 2, 2, 1, 4, 8);
+        let seqs = b.seqs();
+        let groups = [
+            CascadeGroup { members: vec![0, 1], shared_rows: 0 },
+            CascadeGroup { members: vec![1], shared_rows: 0 },
+        ];
+        let mut out = vec![0.0f32; 2 * 2 * 4];
+        cascade_batch_decode_attention(
+            &b.shape,
+            &seqs,
+            &groups,
+            &mut out,
+            &WorkPool::new(ParallelConfig::sequential()),
+        );
     }
 }

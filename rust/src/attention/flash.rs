@@ -277,12 +277,13 @@ impl<'a> KvView<'a> {
 }
 
 /// Per-call scratch of the single-head kernel (one (bq × bkv) score
-/// tile + running online-softmax stats).
+/// tile + running online-softmax stats + one tile-local accumulator).
 struct FlashScratch {
     scores: Vec<f32>,
     m: Vec<f32>,
     l: Vec<f32>,
     acc: Vec<f32>,
+    tacc: Vec<f32>,
 }
 
 impl FlashScratch {
@@ -292,6 +293,7 @@ impl FlashScratch {
             m: vec![0.0; bq],
             l: vec![0.0; bq],
             acc: vec![0.0; bq * d],
+            tacc: vec![0.0; d],
         }
     }
 }
@@ -322,15 +324,150 @@ impl HeadGeom {
     }
 }
 
+/// Merge one partial online-softmax state into another.
+///
+/// `(m, l, acc)` is the running state — `m` the max score seen, `l` the
+/// sum of `exp(s − m)`, `acc` the un-normalized `Σ exp(s − m)·v` —
+/// and `(mb, lb, accb)` is a second partial state over a disjoint set
+/// of KV columns.  After the call, `(m, l, acc)` covers the union.
+/// `m == −∞` encodes the empty state (zero columns) on either side.
+///
+/// This is the LSE-merge at the heart of cascade attention: the shared
+/// prefix's state (computed once per batch) merges with each request's
+/// suffix state.  `flash_head` folds every KV tile through this exact
+/// function, so a cascade split at any tile boundary is **bit-identical**
+/// to the single pass — `merge(state_a, tile_b) == pass(a ∥ b)` exactly
+/// in f32, not merely within tolerance (pinned by
+/// `prop_merge_equals_single_pass`).  Note the merge is *not*
+/// associative in f32 across several tiles, which is why cascade phase 2
+/// continues from the phase-1 state rather than merging two
+/// independently-built multi-tile states.
+pub fn merge_softmax_states(
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+    mb: f32,
+    lb: f32,
+    accb: &[f32],
+) {
+    assert_eq!(acc.len(), accb.len(), "merge_softmax_states dim mismatch");
+    if mb == f32::NEG_INFINITY {
+        return; // b is the empty state
+    }
+    if *m == f32::NEG_INFINITY {
+        *m = mb;
+        *l = lb;
+        acc.copy_from_slice(accb);
+        return;
+    }
+    let m_new = m.max(mb);
+    let alpha = (*m - m_new).exp();
+    let beta = (mb - m_new).exp();
+    for (a, &b) in acc.iter_mut().zip(accb) {
+        *a = *a * alpha + b * beta;
+    }
+    *l = *l * alpha + lb * beta;
+    *m = m_new;
+}
+
+/// Fill `srow[..nk]` with scaled `q·k` scores for KV columns
+/// `[k0, k0 + nk)`, walking page-contiguous runs of `k`.  Shared by
+/// [`flash_head`] and the cascade kernel so their score arithmetic
+/// cannot drift.
+#[inline]
+pub(crate) fn fill_score_tile(
+    qi: &[f32],
+    k: &KvView<'_>,
+    k0: usize,
+    nk: usize,
+    d: usize,
+    scale: f32,
+    srow: &mut [f32],
+) {
+    let mut j = 0;
+    while j < nk {
+        let (run, n) = k.run_at(k0 + j, nk - j, d);
+        match run {
+            KvRun::F32(rows) => {
+                for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
+                    *sc = dot4(qi, &rows[jj * d..][..d]) * scale;
+                }
+            }
+            KvRun::I8 { q, scales } => {
+                for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
+                    *sc = dot4_i8(qi, &q[jj * d..][..d]) * (scales[jj] * scale);
+                }
+            }
+        }
+        j += n;
+    }
+}
+
+/// Local softmax state of one score tile: returns `(mt, lt)` with `mt`
+/// the tile max, `lt = Σ exp(s − mt)` and `tacc = Σ exp(s − mt)·v`
+/// over columns `[k0, k0 + vis)` of `v`.  The caller folds the result
+/// into its running state via [`merge_softmax_states`].  Shared by
+/// [`flash_head`] and the cascade kernel.
+#[inline]
+pub(crate) fn row_tile_state(
+    srow: &[f32],
+    v: &KvView<'_>,
+    k0: usize,
+    vis: usize,
+    d: usize,
+    tacc: &mut [f32],
+) -> (f32, f32) {
+    let mut mt = f32::NEG_INFINITY;
+    for &sc in &srow[..vis] {
+        if sc > mt {
+            mt = sc;
+        }
+    }
+    tacc[..d].fill(0.0);
+    let mut lt = 0.0f32;
+    let mut j = 0;
+    while j < vis {
+        let (run, n) = v.run_at(k0 + j, vis - j, d);
+        match run {
+            KvRun::F32(rows) => {
+                for jj in 0..n {
+                    let pij = (srow[j + jj] - mt).exp();
+                    lt += pij;
+                    let vj = &rows[jj * d..][..d];
+                    for t in 0..d {
+                        tacc[t] += pij * vj[t];
+                    }
+                }
+            }
+            KvRun::I8 { q, scales } => {
+                for jj in 0..n {
+                    let pij = (srow[j + jj] - mt).exp();
+                    lt += pij;
+                    let w = pij * scales[jj];
+                    let vj = &q[jj * d..][..d];
+                    for t in 0..d {
+                        tacc[t] += w * vj[t] as f32;
+                    }
+                }
+            }
+        }
+        j += n;
+    }
+    (mt, lt)
+}
+
 /// The single-head FlashAttention2 loop over one pair of K/V views.
 ///
 /// The inner loops walk page-contiguous runs ([`KvView::run_at`]):
 /// page-index division, tier dispatch and bounds checks are hoisted
 /// out of the per-row loop, and each run streams straight through the
-/// online-softmax accumulator.  The per-row arithmetic (op order
-/// included) is exactly the pre-blocked kernel's, so every f32 layout
-/// stays bit-identical to [`flash_head_rowwise`]; int8 runs dequantize
-/// in-loop with one fused scale multiply per row.
+/// online-softmax accumulator.  Each KV tile builds a *local*
+/// `(mt, lt, tacc)` state ([`row_tile_state`]) folded into the running
+/// `(m, l, acc)` through [`merge_softmax_states`] — so a cascade split
+/// at any tile boundary reproduces this kernel bit-for-bit.  The
+/// per-row arithmetic matches [`flash_head_rowwise`] exactly, so every
+/// f32 layout stays bit-identical to the rowwise baseline; int8 runs
+/// dequantize in-loop with one fused scale multiply per row.
 fn flash_head(
     qh: &[f32],
     k: &KvView<'_>,
@@ -340,7 +477,8 @@ fn flash_head(
     s: &mut FlashScratch,
 ) {
     let HeadGeom { sq, skv, d, causal, bq, bkv, scale } = g;
-    let (scores, m, l, acc) = (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc);
+    let (scores, m, l, acc, tacc) =
+        (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc, &mut s.tacc);
 
     let mut q0 = 0;
     while q0 < sq {
@@ -362,27 +500,10 @@ fn flash_head(
             // --- scores tile: q_blk @ k_blkᵀ -----------------------
             for i in 0..nq {
                 let qi = &qh[(q0 + i) * d..][..d];
-                let srow = &mut scores[i * bkv..][..nk];
-                let mut j = 0;
-                while j < nk {
-                    let (run, n) = k.run_at(k0 + j, nk - j, d);
-                    match run {
-                        KvRun::F32(rows) => {
-                            for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
-                                *sc = dot4(qi, &rows[jj * d..][..d]) * scale;
-                            }
-                        }
-                        KvRun::I8 { q, scales } => {
-                            for (jj, sc) in srow[j..j + n].iter_mut().enumerate() {
-                                *sc = dot4_i8(qi, &q[jj * d..][..d]) * (scales[jj] * scale);
-                            }
-                        }
-                    }
-                    j += n;
-                }
+                fill_score_tile(qi, k, k0, nk, d, scale, &mut scores[i * bkv..][..nk]);
             }
 
-            // --- online softmax update per row ---------------------
+            // --- online softmax: tile-local state, LSE-merged ------
             for i in 0..nq {
                 let limit = row_limit(i);
                 // columns of this tile visible to row i
@@ -390,52 +511,16 @@ fn flash_head(
                 if vis == 0 {
                     continue;
                 }
-                let srow = &mut scores[i * bkv..][..nk];
-                let mut blk_max = f32::NEG_INFINITY;
-                for &sc in &srow[..vis] {
-                    if sc > blk_max {
-                        blk_max = sc;
-                    }
-                }
-                let m_new = m[i].max(blk_max);
-                let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
-                let arow = &mut acc[i * d..][..d];
-                if alpha != 1.0 {
-                    for a in arow.iter_mut() {
-                        *a *= alpha;
-                    }
-                }
-                let mut psum = 0.0f32;
-                let mut j = 0;
-                while j < vis {
-                    let (run, n) = v.run_at(k0 + j, vis - j, d);
-                    match run {
-                        KvRun::F32(rows) => {
-                            for jj in 0..n {
-                                let pij = (srow[j + jj] - m_new).exp();
-                                psum += pij;
-                                let vj = &rows[jj * d..][..d];
-                                for t in 0..d {
-                                    arow[t] += pij * vj[t];
-                                }
-                            }
-                        }
-                        KvRun::I8 { q, scales } => {
-                            for jj in 0..n {
-                                let pij = (srow[j + jj] - m_new).exp();
-                                psum += pij;
-                                let w = pij * scales[jj];
-                                let vj = &q[jj * d..][..d];
-                                for t in 0..d {
-                                    arow[t] += w * vj[t] as f32;
-                                }
-                            }
-                        }
-                    }
-                    j += n;
-                }
-                l[i] = l[i] * alpha + psum;
-                m[i] = m_new;
+                let srow = &scores[i * bkv..][..nk];
+                let (mt, lt) = row_tile_state(srow, v, k0, vis, d, tacc);
+                merge_softmax_states(
+                    &mut m[i],
+                    &mut l[i],
+                    &mut acc[i * d..][..d],
+                    mt,
+                    lt,
+                    &tacc[..d],
+                );
             }
             k0 += nk;
         }
@@ -466,7 +551,8 @@ fn flash_head_rowwise(
     s: &mut FlashScratch,
 ) {
     let HeadGeom { sq, skv, d, causal, bq, bkv, scale } = g;
-    let (scores, m, l, acc) = (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc);
+    let (scores, m, l, acc, tacc) =
+        (&mut s.scores, &mut s.m, &mut s.l, &mut s.acc, &mut s.tacc);
 
     let mut q0 = 0;
     while q0 < sq {
@@ -496,32 +582,31 @@ fn flash_head_rowwise(
                 if vis == 0 {
                     continue;
                 }
-                let srow = &mut scores[i * bkv..][..nk];
-                let mut blk_max = f32::NEG_INFINITY;
+                let srow = &scores[i * bkv..][..nk];
+                let mut mt = f32::NEG_INFINITY;
                 for &sc in &srow[..vis] {
-                    if sc > blk_max {
-                        blk_max = sc;
+                    if sc > mt {
+                        mt = sc;
                     }
                 }
-                let m_new = m[i].max(blk_max);
-                let alpha = if m[i].is_finite() { (m[i] - m_new).exp() } else { 0.0 };
-                let arow = &mut acc[i * d..][..d];
-                if alpha != 1.0 {
-                    for a in arow.iter_mut() {
-                        *a *= alpha;
-                    }
-                }
-                let mut psum = 0.0f32;
+                tacc[..d].fill(0.0);
+                let mut lt = 0.0f32;
                 for j in 0..vis {
-                    let pij = (srow[j] - m_new).exp();
-                    psum += pij;
+                    let pij = (srow[j] - mt).exp();
+                    lt += pij;
                     let vj = v.row(k0 + j, d);
                     for t in 0..d {
-                        arow[t] += pij * vj[t];
+                        tacc[t] += pij * vj[t];
                     }
                 }
-                l[i] = l[i] * alpha + psum;
-                m[i] = m_new;
+                merge_softmax_states(
+                    &mut m[i],
+                    &mut l[i],
+                    &mut acc[i * d..][..d],
+                    mt,
+                    lt,
+                    &tacc[..d],
+                );
             }
             k0 += nk;
         }
@@ -1057,6 +1142,224 @@ mod tests {
                     "dim {t}: {} not in [{lo}, {hi}]",
                     f[t]
                 );
+            }
+            Ok(())
+        });
+    }
+
+    /// `merge_softmax_states(state_a, state_b)` must equal the single
+    /// flash pass over the concatenated columns **f32 bit-exact** when
+    /// each segment is one KV tile — the invariant that lets cascade
+    /// decode split at a tile boundary without changing any bit.
+    #[test]
+    fn prop_merge_equals_single_pass() {
+        check(64, |rng| {
+            let d = *rng.pick(&[2usize, 4, 8, 16]);
+            let len_a = rng.range(1, 24);
+            // |b| ≤ |a| so the concat pass tiles exactly as [a | b]
+            let len_b = rng.range(1, len_a + 1);
+            let scale = 1.0 / (d as f32).sqrt();
+            let q = rng.f32_vec(d);
+            let ka = rng.f32_vec(len_a * d);
+            let va = rng.f32_vec(len_a * d);
+            let kb = rng.f32_vec(len_b * d);
+            let vb = rng.f32_vec(len_b * d);
+
+            // single pass over [a | b] with block_kv = |a|
+            let kcat: Vec<f32> = ka.iter().chain(&kb).copied().collect();
+            let vcat: Vec<f32> = va.iter().chain(&vb).copied().collect();
+            let mut single = vec![0.0; d];
+            flash_attention_view(
+                &q,
+                &KvView::Contig(&kcat),
+                &KvView::Contig(&vcat),
+                &mut single,
+                &FlashParams {
+                    heads: 1,
+                    kv_heads: 1,
+                    seq_q: 1,
+                    seq_kv: len_a + len_b,
+                    head_dim: d,
+                    causal: false,
+                    block_q: 1,
+                    block_kv: len_a,
+                    scale,
+                },
+            );
+
+            // tile-local state of each segment, merged by hand
+            let mut scores = vec![0.0f32; len_a];
+            let mut tacc = vec![0.0f32; d];
+            let (mut m, mut l) = (f32::NEG_INFINITY, 0.0f32);
+            let mut acc = vec![0.0f32; d];
+            for (kseg, vseg, n) in [(&ka, &va, len_a), (&kb, &vb, len_b)] {
+                let kv = KvView::Contig(kseg);
+                let vv = KvView::Contig(vseg);
+                fill_score_tile(&q, &kv, 0, n, d, scale, &mut scores[..n]);
+                let (mt, lt) = row_tile_state(&scores[..n], &vv, 0, n, d, &mut tacc);
+                merge_softmax_states(&mut m, &mut l, &mut acc, mt, lt, &tacc[..d]);
+            }
+            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+            let merged: Vec<f32> = acc.iter().map(|a| a * inv).collect();
+            prop_ensure!(
+                merged == single,
+                "d={d} |a|={len_a} |b|={len_b}: merged state differs from single pass"
+            );
+            Ok(())
+        });
+    }
+
+    /// `m == −∞` encodes the empty state: merging it from either side
+    /// leaves the other state bit-untouched.
+    #[test]
+    fn merge_empty_state_is_identity() {
+        let (m0, l0, acc0) = (0.75f32, 2.5f32, [0.5f32, -1.25, 3.0]);
+
+        // empty ∪ b == b
+        let (mut m, mut l) = (f32::NEG_INFINITY, 0.0f32);
+        let mut acc = [0.0f32; 3];
+        merge_softmax_states(&mut m, &mut l, &mut acc, m0, l0, &acc0);
+        assert_eq!((m, l, acc), (m0, l0, acc0));
+
+        // a ∪ empty == a
+        merge_softmax_states(&mut m, &mut l, &mut acc, f32::NEG_INFINITY, 0.0, &[0.0; 3]);
+        assert_eq!((m, l, acc), (m0, l0, acc0));
+    }
+
+    /// One `run_at` walk: starting at row 0, request runs under the
+    /// given per-step caps and check every logical row appears exactly
+    /// once, in order, with its expected content.  Rows are
+    /// content-addressed (`f32` element = `row * d + t`; `i8` element =
+    /// `qval(row, t)`, scale = `row + 0.25`), so a skipped, duplicated
+    /// or reordered row cannot go unnoticed.
+    fn walk_runs(view: &KvView<'_>, rows: usize, d: usize, caps: &[usize]) -> Result<(), String> {
+        let qval = |r: usize, t: usize| (((r * d + t) % 250) as i32 - 125) as i8;
+        let mut r = 0usize;
+        let mut step = 0usize;
+        while r < rows {
+            let max_rows = caps[step % caps.len()].min(rows - r);
+            step += 1;
+            let (run, n) = view.run_at(r, max_rows, d);
+            prop_ensure!(n >= 1 && n <= max_rows, "run at {r}: {n} rows for cap {max_rows}");
+            match run {
+                KvRun::F32(s) => {
+                    prop_ensure!(s.len() == n * d, "run at {r}: {} elems for {n} rows", s.len());
+                    for jj in 0..n {
+                        for t in 0..d {
+                            prop_ensure!(
+                                s[jj * d + t] == ((r + jj) * d + t) as f32,
+                                "row {} content mismatch at dim {t}",
+                                r + jj
+                            );
+                        }
+                    }
+                }
+                KvRun::I8 { q, scales } => {
+                    prop_ensure!(q.len() == n * d, "run at {r}: {} elems for {n} rows", q.len());
+                    prop_ensure!(scales.len() == n, "run at {r}: {} scales", scales.len());
+                    for jj in 0..n {
+                        prop_ensure!(
+                            scales[jj] == (r + jj) as f32 + 0.25,
+                            "row {} scale mismatch",
+                            r + jj
+                        );
+                        for t in 0..d {
+                            prop_ensure!(
+                                q[jj * d + t] == qval(r + jj, t),
+                                "row {} quant content mismatch at dim {t}",
+                                r + jj
+                            );
+                        }
+                    }
+                }
+            }
+            r += n;
+        }
+        prop_ensure!(r == rows, "walk covered {r} of {rows} rows");
+        Ok(())
+    }
+
+    /// Property: `KvView::run_at` enumerates every logical row exactly
+    /// once, in order, under arbitrary run caps, for random block
+    /// tables across all view variants (Contig + Paged/Tiered ×
+    /// F32/Int8) — the enumeration contract the blocked gather and the
+    /// cascade shared/unique split both stand on.
+    #[test]
+    fn prop_run_at_enumerates_rows_in_order() {
+        check(48, |rng| {
+            let d = *rng.pick(&[1usize, 2, 4, 8]);
+            let page_size = rng.range(1, 8);
+            let rows = rng.range(1, 48);
+            let nblocks = rows.div_ceil(page_size);
+            let npages = nblocks + rng.range(0, 3);
+            // random page permutation + random tier per block
+            let mut ids: Vec<u32> = (0..npages as u32).collect();
+            for i in (1..ids.len()).rev() {
+                let j = rng.below(i + 1);
+                ids.swap(i, j);
+            }
+            let pages = &ids[..nblocks];
+            let tiers: Vec<Tier> = (0..nblocks)
+                .map(|_| if rng.bool() { Tier::Device } else { Tier::Host })
+                .collect();
+            let caps: Vec<usize> = (0..rows).map(|_| rng.range(1, rows + 1)).collect();
+            let qval = |r: usize, t: usize| (((r * d + t) % 250) as i32 - 125) as i8;
+
+            // content-addressed stores: full (single-store variants) and
+            // tier-split (tiered variants, same per-store page ids)
+            let elems = npages * page_size * d;
+            let contig: Vec<f32> = (0..rows * d).map(|e| e as f32).collect();
+            let mut full = vec![0.0f32; elems];
+            let mut dev = vec![0.0f32; elems];
+            let mut host = vec![0.0f32; elems];
+            let mut qfull = vec![0i8; elems];
+            let mut qdev = vec![0i8; elems];
+            let mut qhost = vec![0i8; elems];
+            let mut sfull = vec![0.0f32; npages * page_size];
+            let mut sdev = vec![0.0f32; npages * page_size];
+            let mut shost = vec![0.0f32; npages * page_size];
+            for r in 0..rows {
+                let b = r / page_size;
+                let slot = pages[b] as usize * page_size + r % page_size;
+                let (tf, tq, ts) = match tiers[b] {
+                    Tier::Device => (&mut dev, &mut qdev, &mut sdev),
+                    Tier::Host => (&mut host, &mut qhost, &mut shost),
+                };
+                for t in 0..d {
+                    full[slot * d + t] = (r * d + t) as f32;
+                    tf[slot * d + t] = (r * d + t) as f32;
+                    qfull[slot * d + t] = qval(r, t);
+                    tq[slot * d + t] = qval(r, t);
+                }
+                sfull[slot] = r as f32 + 0.25;
+                ts[slot] = r as f32 + 0.25;
+            }
+
+            let views = [
+                KvView::Contig(&contig),
+                KvView::Paged { store: &full, pages, page_size },
+                KvView::Tiered {
+                    device_store: &dev,
+                    host_store: &host,
+                    pages,
+                    tiers: &tiers,
+                    page_size,
+                },
+                KvView::PagedI8 {
+                    store: QuantStore { q: &qfull, scales: &sfull },
+                    pages,
+                    page_size,
+                },
+                KvView::TieredI8 {
+                    device_store: QuantStore { q: &qdev, scales: &sdev },
+                    host_store: QuantStore { q: &qhost, scales: &shost },
+                    pages,
+                    tiers: &tiers,
+                    page_size,
+                },
+            ];
+            for view in &views {
+                walk_runs(view, rows, d, &caps)?;
             }
             Ok(())
         });

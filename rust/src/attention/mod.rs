@@ -12,7 +12,10 @@
 //!   bit-identical to the per-sequence loop; K/V rows come from
 //!   contiguous planes or from the paged KV cache through a block table
 //!   (`SeqKv`), bit-identically; the engine selects parallelism via
-//!   `ParallelConfig` on its config (see `DESIGN.md`);
+//!   `ParallelConfig` on its config (see `DESIGN.md`); cascade decode
+//!   (`cascade_batch_decode_attention`) additionally reads each
+//!   shared-prefix page run once per batch and folds per-request
+//!   suffixes through the kernel's LSE merge, still bit-identically;
 //! * [`tiling`]   — the two-level tile-size planner under L0/L1 capacity
 //!   constraints (§4.1);
 //! * [`mask`]     — the tiling-mask generator: M-mask, B-mask extraction
@@ -32,5 +35,8 @@ pub mod standard;
 pub mod tiling;
 pub mod volta_layout;
 
-pub use batch::{batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool};
-pub use flash::KvView;
+pub use batch::{
+    batch_decode_attention, cascade_batch_decode_attention, BatchShape, CascadeGroup,
+    CascadeStats, ParallelConfig, SeqAttn, SeqKv, WorkPool,
+};
+pub use flash::{merge_softmax_states, KvView};

@@ -28,7 +28,8 @@
 use anyhow::{bail, Context, Result};
 
 use crate::attention::batch::{
-    batch_decode_attention, BatchShape, ParallelConfig, SeqAttn, SeqKv, WorkPool,
+    batch_decode_attention, cascade_batch_decode_attention, BatchShape, CascadeGroup,
+    CascadeStats, ParallelConfig, SeqAttn, SeqKv, WorkPool,
 };
 use crate::coordinator::kv_cache::{BlockTable, CacheShape, PageCodec, TieredPagePool};
 use crate::models::ModelShape;
@@ -110,6 +111,28 @@ pub trait Backend {
         _pools: &mut TieredPagePool,
     ) -> Result<Vec<f32>> {
         bail!("backend does not support paged KV")
+    }
+
+    /// [`Backend::decode_paged`] with cascade hints: each
+    /// [`CascadeGroup`] names rows that share a page-identical KV
+    /// prefix, which the backend may gather once per batch instead of
+    /// once per row (bit-identically — see
+    /// [`cascade_batch_decode_attention`]).  The default ignores the
+    /// hints and delegates, so non-cascade backends stay correct.
+    fn decode_paged_cascade(
+        &mut self,
+        rows: &[PagedRow<'_>],
+        _groups: &[CascadeGroup],
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        self.decode_paged(rows, pools)
+    }
+
+    /// Drain cascade accounting accumulated since the last call (pass
+    /// and saved-row counts across layers); zeros for backends that
+    /// never cascade.
+    fn take_cascade_stats(&mut self) -> CascadeStats {
+        CascadeStats::default()
     }
 
     /// One chunked-prefill step for a single sequence: run `tokens`
@@ -356,6 +379,11 @@ pub struct HostModelConfig {
     /// Weight seed: equal seeds ⇒ bit-identical models.
     pub seed: u64,
     pub buckets: BucketGrid,
+    /// KV tile rows of the decode-attention kernel (`BatchShape::
+    /// block_kv`).  Cascade groups round their shared prefix down to
+    /// this tile size, so tests with short prompts shrink it to the
+    /// page size; the default matches `BatchShape::new`.
+    pub block_kv: usize,
 }
 
 impl HostModelConfig {
@@ -380,7 +408,14 @@ impl HostModelConfig {
                 prefill_seqs: vec![8, 16, 32],
                 decode_batches: vec![1, 4, 8],
             },
+            block_kv: 128,
         }
+    }
+
+    /// Override the decode-attention KV tile size (see `block_kv`).
+    pub fn with_block_kv(mut self, block_kv: usize) -> Self {
+        self.block_kv = block_kv.max(1);
+        self
     }
 
     /// Wrap any zoo shape (e.g. [`crate::models::TINY_GQA`]): the
@@ -429,6 +464,8 @@ pub struct HostModelBackend {
     embed: Vec<f32>,
     layers: Vec<LayerWeights>,
     pool: WorkPool,
+    /// Cascade accounting since the last [`Backend::take_cascade_stats`].
+    cascade_stats: CascadeStats,
 }
 
 /// `out[j] = Σ_i x[i] · w[i * cols + j]` (row-major mat-vec).
@@ -509,7 +546,15 @@ impl HostModelBackend {
             max_seq: cfg.max_seq,
             head_dim: hd,
         };
-        Self { cfg, info, cache, embed, layers: layer_weights, pool: WorkPool::new(par) }
+        Self {
+            cfg,
+            info,
+            cache,
+            embed,
+            layers: layer_weights,
+            pool: WorkPool::new(par),
+            cascade_stats: CascadeStats::default(),
+        }
     }
 
     pub(crate) fn d_model(&self) -> usize {
@@ -560,11 +605,27 @@ impl HostModelBackend {
     /// identical either way — the backings stream the same rows through
     /// `KvView` — so plane and paged execution are bit-identical.
     fn forward_step(&self, rows: &[(usize, i32, usize)], kv: &mut StepKv<'_>) -> Vec<Vec<f32>> {
+        self.forward_step_cascade(rows, kv, &[]).0
+    }
+
+    /// [`Self::forward_step`] with cascade groups: when `groups` is
+    /// non-empty the per-layer attention runs through
+    /// [`cascade_batch_decode_attention`] (bit-identical, shared-prefix
+    /// tiles gathered once per group), and the per-layer stats are
+    /// summed into the returned [`CascadeStats`].
+    fn forward_step_cascade(
+        &self,
+        rows: &[(usize, i32, usize)],
+        kv: &mut StepKv<'_>,
+        groups: &[CascadeGroup],
+    ) -> (Vec<Vec<f32>>, CascadeStats) {
         let d = self.d_model();
         let (heads, kvh, hd) = (self.info.n_heads, self.info.n_kv_heads, self.info.head_dim);
         let (qdim, kvdim) = (heads * hd, kvh * hd);
         let le = self.cache.layer_elems();
-        let bshape = BatchShape::new(heads, kvh, hd, self.cache.max_seq);
+        let mut bshape = BatchShape::new(heads, kvh, hd, self.cache.max_seq);
+        bshape.block_kv = self.cfg.block_kv.max(1);
+        let mut stats = CascadeStats::default();
 
         let mut xs: Vec<Vec<f32>> =
             rows.iter().map(|&(_, tok, _)| self.embed_row(tok)).collect();
@@ -676,7 +737,14 @@ impl HostModelBackend {
                             .collect()
                     }
                 };
-                batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
+                if groups.is_empty() {
+                    batch_decode_attention(&bshape, &seqs, &mut attn, &self.pool);
+                } else {
+                    let pool = &self.pool;
+                    let s = cascade_batch_decode_attention(&bshape, &seqs, groups, &mut attn, pool);
+                    stats.passes += s.passes;
+                    stats.rows_saved += s.rows_saved;
+                }
             }
 
             // ---- output proj + MLP (per row, sequential) -------------
@@ -697,7 +765,56 @@ impl HostModelBackend {
                 }
             }
         }
-        xs
+        (xs, stats)
+    }
+
+    /// Shared body of [`Backend::decode_paged`] and
+    /// [`Backend::decode_paged_cascade`]: validates rows, runs the
+    /// forward step (with cascade hints when given) and folds the step's
+    /// cascade accounting into `self.cascade_stats`.
+    fn decode_paged_with_groups(
+        &mut self,
+        rows: &[PagedRow<'_>],
+        groups: &[CascadeGroup],
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        for (i, r) in rows.iter().enumerate() {
+            self.check_table(r.table, pools, "decode_paged")?;
+            if r.pos >= self.cache.max_seq {
+                bail!(
+                    "decode_paged row {i}: pos {} out of cache range {}",
+                    r.pos,
+                    self.cache.max_seq
+                );
+            }
+            if r.table.capacity_tokens() <= r.pos {
+                bail!(
+                    "decode_paged row {i}: table holds {} tokens, row {} needs capacity first",
+                    r.table.capacity_tokens(),
+                    r.pos
+                );
+            }
+        }
+        let tables: Vec<&BlockTable> = rows.iter().map(|r| r.table).collect();
+        let frows: Vec<(usize, i32, usize)> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.token, r.pos))
+            .collect();
+        let (xs, stats) = self.forward_step_cascade(
+            &frows,
+            &mut StepKv::Paged { pools, tables: &tables },
+            groups,
+        );
+        self.cascade_stats.passes += stats.passes;
+        self.cascade_stats.rows_saved += stats.rows_saved;
+
+        let vocab = self.info.vocab;
+        let mut logits = vec![0.0f32; rows.len() * vocab];
+        for (i, x) in xs.iter().enumerate() {
+            self.logits_row(x, &mut logits[i * vocab..][..vocab]);
+        }
+        Ok(logits)
     }
 
     fn plane_elems(&self, batch: usize) -> usize {
@@ -855,37 +972,20 @@ impl Backend for HostModelBackend {
         rows: &[PagedRow<'_>],
         pools: &mut TieredPagePool,
     ) -> Result<Vec<f32>> {
-        for (i, r) in rows.iter().enumerate() {
-            self.check_table(r.table, pools, "decode_paged")?;
-            if r.pos >= self.cache.max_seq {
-                bail!(
-                    "decode_paged row {i}: pos {} out of cache range {}",
-                    r.pos,
-                    self.cache.max_seq
-                );
-            }
-            if r.table.capacity_tokens() <= r.pos {
-                bail!(
-                    "decode_paged row {i}: table holds {} tokens, row {} needs capacity first",
-                    r.table.capacity_tokens(),
-                    r.pos
-                );
-            }
-        }
-        let tables: Vec<&BlockTable> = rows.iter().map(|r| r.table).collect();
-        let frows: Vec<(usize, i32, usize)> = rows
-            .iter()
-            .enumerate()
-            .map(|(i, r)| (i, r.token, r.pos))
-            .collect();
-        let xs = self.forward_step(&frows, &mut StepKv::Paged { pools, tables: &tables });
+        self.decode_paged_with_groups(rows, &[], pools)
+    }
 
-        let vocab = self.info.vocab;
-        let mut logits = vec![0.0f32; rows.len() * vocab];
-        for (i, x) in xs.iter().enumerate() {
-            self.logits_row(x, &mut logits[i * vocab..][..vocab]);
-        }
-        Ok(logits)
+    fn decode_paged_cascade(
+        &mut self,
+        rows: &[PagedRow<'_>],
+        groups: &[CascadeGroup],
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        self.decode_paged_with_groups(rows, groups, pools)
+    }
+
+    fn take_cascade_stats(&mut self) -> CascadeStats {
+        std::mem::take(&mut self.cascade_stats)
     }
 
     fn prefill_chunk(

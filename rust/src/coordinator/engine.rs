@@ -61,7 +61,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{ArtifactBackend, Backend, ShardedRow};
+use super::backend::{ArtifactBackend, Backend, PagedRow, ShardedRow};
 use super::batcher::{AdmitError, Batcher, BatcherConfig, DecodeBatch, PrefillBatch};
 use super::kv_cache::{
     kv_page_bytes_codec, pack_batch, unpack_batch, BlockTable, CachePool, CacheShape,
@@ -72,7 +72,7 @@ use super::reclaim::{
 };
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
-use crate::attention::batch::ParallelConfig;
+use crate::attention::batch::{CascadeGroup, ParallelConfig};
 use crate::metrics::EngineMetrics;
 use crate::runtime::Runtime;
 
@@ -200,6 +200,16 @@ pub struct EngineConfig {
     /// `EngineMetrics::slo_deferrals`), unless the waiting queue is
     /// starved per `waiting_served_ratio`.  `None` disables deferral.
     pub tpot_slo_s: Option<f64>,
+    /// Cascade decode over shared-prefix pages (paged layout): rows of
+    /// a decode batch whose block tables open with the same adopted
+    /// shared run are attended in two phases — one multi-query pass
+    /// over the shared tiles for the whole group, then per-row suffix
+    /// passes folded through the kernel's LSE merge — so the shared KV
+    /// is gathered once per batch instead of once per sequence.
+    /// Bit-identical to the per-sequence gather (see
+    /// `attention::batch::cascade_batch_decode_attention`); gated, like
+    /// prefix sharing, to single-shard engines.  Default off.
+    pub cascade: bool,
 }
 
 impl Default for EngineConfig {
@@ -222,6 +232,7 @@ impl Default for EngineConfig {
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
             tpot_slo_s: None,
+            cascade: false,
         }
     }
 }
@@ -307,6 +318,10 @@ pub struct Engine {
     /// Monotonic clock stamped onto block tables at every attention
     /// pass — ranks host blocks by heat for promotion.
     gather_clock: u64,
+    /// Cascade decode over shared-prefix pages — resolved at build to
+    /// `cfg.cascade && paged && n_shards == 1` (same gate as the
+    /// prefix index, which is what creates adoptable shared runs).
+    cascade: bool,
     /// TPOT objective driving SLO-aware prefill deferral (`None` off).
     tpot_slo_s: Option<f64>,
     /// Sliding window of recent decode-step wall times (the TPOT
@@ -434,6 +449,7 @@ impl Engine {
             promote: cfg.promote,
             kv_codec: cfg.kv_codec,
             gather_clock: 0,
+            cascade: cfg.cascade && paged && n_shards == 1,
             tpot_slo_s: cfg.tpot_slo_s,
             decode_window: VecDeque::new(),
             token_events: Vec::new(),
@@ -1013,7 +1029,27 @@ impl Engine {
         if ids.is_empty() {
             return Ok(());
         }
-        let logits = {
+        let logits = if self.cascade {
+            // cascade is resolved to single-shard engines at build, so
+            // each row's primary table is its full KV view
+            let rows: Vec<PagedRow<'_>> = ids
+                .iter()
+                .map(|id| {
+                    let s = &self.seqs[id];
+                    let SeqStore::Paged { table } = &s.store else {
+                        unreachable!("paged engine tracks paged sequences");
+                    };
+                    PagedRow { table: table.primary(), token: s.last_token(), pos: s.pos() }
+                })
+                .collect();
+            let groups = cascade_groups(&rows);
+            let EngineKv::Paged(pools) = &mut self.kv else {
+                bail!("paged decode on a contiguous engine");
+            };
+            self.backend
+                .decode_paged_cascade(&rows, &groups, &mut pools[0])
+                .with_context(|| format!("cascade decode step b{}", ids.len()))?
+        } else {
             let rows: Vec<ShardedRow<'_>> = ids
                 .iter()
                 .map(|id| {
@@ -1064,6 +1100,16 @@ impl Engine {
             self.finish(state);
         }
         self.count_gather(gathered_positions);
+        if self.cascade {
+            let cs = self.backend.take_cascade_stats();
+            self.metrics.cascade_passes += cs.passes;
+            self.metrics.shared_rows_saved += cs.rows_saved;
+            // the saved rows were counted by `count_gather` above but
+            // never actually streamed — settle the analytic accounting
+            let saved = cs.rows_saved * self.kv_codec.row_bytes(self.shape.head_dim) as u64;
+            self.metrics.kv_bytes_gathered =
+                self.metrics.kv_bytes_gathered.saturating_sub(saved);
+        }
         self.metrics.decode_steps += 1;
         self.record_decode_step(t0.elapsed().as_secs_f64());
         self.update_page_metrics();
@@ -1611,6 +1657,48 @@ impl Engine {
             total_s: total,
         });
     }
+}
+
+/// Group a decode batch's rows into cascade groups by their leading
+/// shared-block run: rows whose tables open with the same chain of
+/// adopted page groups (still marked `block_shared`, i.e. not yet
+/// split by copy-on-write) attend those pages together.  `shared_rows`
+/// is the chain's token span clamped to the shortest member's visible
+/// history; the kernel additionally rounds it down to whole KV tiles
+/// and re-verifies page identity, so a group is a *hint*, never a
+/// correctness obligation.  Groups are emitted in first-member order
+/// for deterministic accounting.
+fn cascade_groups(rows: &[PagedRow<'_>]) -> Vec<CascadeGroup> {
+    let mut by_key: HashMap<Vec<u32>, Vec<usize>> = HashMap::new();
+    for (i, r) in rows.iter().enumerate() {
+        let t = r.table;
+        let mut run = 0;
+        while run < t.blocks() && t.block_shared(run) {
+            run += 1;
+        }
+        if run == 0 {
+            continue;
+        }
+        let mut key = Vec::with_capacity(1 + run * t.layers() * t.kv_heads());
+        key.push(run as u32);
+        for b in 0..run {
+            key.extend(t.block_group(b));
+        }
+        by_key.entry(key).or_default().push(i);
+    }
+    let mut groups: Vec<CascadeGroup> = by_key
+        .into_iter()
+        .filter(|(_, members)| members.len() >= 2)
+        .map(|(key, members)| {
+            let run = key[0] as usize;
+            let min_len =
+                members.iter().map(|&i| rows[i].pos + 1).min().expect("non-empty group");
+            let shared_rows = (run * rows[members[0]].table.page_size()).min(min_len);
+            CascadeGroup { members, shared_rows }
+        })
+        .collect();
+    groups.sort_by_key(|g| g.members[0]);
+    groups
 }
 
 fn argmax(xs: &[f32]) -> usize {

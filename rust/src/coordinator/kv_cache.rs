@@ -2809,6 +2809,139 @@ mod tests {
     }
 
     #[test]
+    fn prefix_index_eviction_order_follows_adoption_recency() {
+        // `evict_idle` must pick the least-recently-*used* run, and a
+        // hit (adopt) counts as use — registration order alone is not
+        // the LRU order.
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        let a = [1i32, 2, 3, 4];
+        let b = [5i32, 6, 7, 8];
+        let c = [9i32, 10, 11, 12];
+        let mut tables = Vec::new();
+        for p in [&a[..], &b, &c] {
+            let mut t = BlockTable::new(sh, ps);
+            t.ensure_capacity(p.len(), &mut pool).unwrap();
+            ix.register(p, &t, &mut pool);
+            tables.push(t);
+        }
+        // touch a (oldest-registered) via adoption, then idle everything
+        let mut ta = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&a, &mut ta, &mut pool), 3);
+        ta.release_all(&mut pool);
+        for t in &mut tables {
+            t.release_all(&mut pool);
+        }
+
+        // eviction order is now b, c, a — not registration order a, b, c
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        let mut probe = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&b, &mut probe, &mut pool), 0, "b evicted first (LRU)");
+        assert_eq!(ix.adopt(&a, &mut probe, &mut pool), 3, "a survives: its stamp was bumped");
+        probe.release_all(&mut pool);
+
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        let mut probe2 = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&c, &mut probe2, &mut pool), 0, "c evicted second");
+        assert_eq!(ix.adopt(&a, &mut probe2, &mut pool), 3, "a evicted last");
+        probe2.release_all(&mut pool);
+
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_index_chain_and_tail_keys_stay_disjoint() {
+        // Chain keys are block-aligned prefixes (length ≡ 0 mod
+        // page_size); tail keys are whole prompts with a partial last
+        // block (length ≢ 0).  A 6-token prompt's tail entry must never
+        // satisfy another prompt's chain probe, and a longer prompt's
+        // chain entries must never masquerade as its tail.
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        // short: chain [1..4] + tail [1..6] (2 valid rows)
+        let short = [1i32, 2, 3, 4, 5, 6];
+        let mut ts = BlockTable::new(sh, ps);
+        ts.ensure_capacity(short.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&short, &ts, &mut pool), 2);
+        // long shares block 0: adds only the chain entry [1..8]
+        let long = [1i32, 2, 3, 4, 5, 6, 7, 8];
+        let mut tl = BlockTable::new(sh, ps);
+        tl.ensure_capacity(long.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&long, &tl, &mut pool), 1);
+        assert_eq!(ix.entries(), 3);
+
+        // the long prompt adopts its two chain blocks — the short
+        // prompt's 2-row tail at key [1..6] must not leak into the walk
+        let mut al = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&long, &mut al, &mut pool), 7, "2 chain blocks, capped at len-1");
+        assert_eq!(al.blocks(), 2);
+
+        // the short prompt adopts chain + its own tail (rows = 2, not a
+        // full block's 4): 4 + 2 = 6, capped at len - 1 = 5
+        let mut ash = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&short, &mut ash, &mut pool), 5);
+        assert_eq!(ash.blocks(), 2);
+        assert_eq!(ash.locate(0, 0, 4), ts.locate(0, 0, 4), "tail pages are short's");
+
+        // a 7-token prompt extending `short` matches no tail key
+        // (entries hold [1..6], not [1..7]) and only block 0's chain
+        let seven = [1i32, 2, 3, 4, 5, 6, 9];
+        let mut a7 = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&seven, &mut a7, &mut pool), 4, "chain only — tail key differs");
+        assert_eq!(a7.blocks(), 1);
+
+        for t in [&mut ts, &mut tl, &mut al, &mut ash, &mut a7] {
+            t.release_all(&mut pool);
+        }
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_index_reregisters_after_eviction() {
+        // Eviction must fully retire a run: the key misses, the pages
+        // return to the free list, and a fresh prefill of the same
+        // prompt registers (and adopts) again from scratch.
+        let sh = ix_shape();
+        let ps = 4;
+        let mut pool = PagePool::new(ps, sh.head_dim, 32);
+        let mut ix = PrefixIndex::new(sh, ps, 64);
+
+        let prompt = [1i32, 2, 3, 4, 5, 6];
+        let mut t1 = BlockTable::new(sh, ps);
+        t1.ensure_capacity(prompt.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&prompt, &t1, &mut pool), 2);
+        t1.release_all(&mut pool);
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        assert_eq!(ix.evict_idle(&mut pool), 1);
+        assert_eq!(ix.entries(), 0);
+        assert_eq!(pool.used_pages(), 0, "evicted runs release their pages");
+
+        let mut miss = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&prompt, &mut miss, &mut pool), 0, "evicted key misses");
+
+        // a new owner prefills the same prompt: registration works again
+        let mut t2 = BlockTable::new(sh, ps);
+        t2.ensure_capacity(prompt.len(), &mut pool).unwrap();
+        assert_eq!(ix.register(&prompt, &t2, &mut pool), 2);
+        let mut adopter = BlockTable::new(sh, ps);
+        assert_eq!(ix.adopt(&prompt, &mut adopter, &mut pool), 5);
+        assert_eq!(adopter.locate(0, 0, 2), t2.locate(0, 0, 2), "fresh pages, shared again");
+
+        adopter.release_all(&mut pool);
+        t2.release_all(&mut pool);
+        ix.clear(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
     fn pages_needed_math() {
         let sh = shape();
         assert_eq!(BlockTable::pages_needed(sh, 2, 0), 0);

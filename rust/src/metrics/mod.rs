@@ -84,6 +84,15 @@ pub struct EngineMetrics {
     pub kv_bytes_gathered: u64,
     /// KV rows dequantized inside the fused gather (zero on f32 pools).
     pub dequant_rows: u64,
+    /// Batched shared-prefix attention passes executed by cascade
+    /// decode (one per adopter group per layer per step; zero with
+    /// `EngineConfig::cascade` off).
+    pub cascade_passes: u64,
+    /// K+V row reads cascade decode skipped versus the per-sequence
+    /// gather: tile-aligned shared rows × KV heads × 2, counted for
+    /// every adopter beyond the first of each group.  Already
+    /// subtracted from [`Self::kv_bytes_gathered`].
+    pub shared_rows_saved: u64,
     /// Tensor-parallel combine (sharded backends only; zero on
     /// single-device engines): B-allreduce tiles issued and activation
     /// bytes combined across shards.

@@ -11,7 +11,7 @@
 
 use fastattn::attention::batch::ParallelConfig;
 use fastattn::coordinator::{
-    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout,
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PageCodec,
 };
 use fastattn::models::ModelShape;
 use fastattn::prop_ensure;
@@ -194,4 +194,168 @@ fn sharing_survives_offload_and_preemption_pressure() {
         "at idle only the prefix cache's retained runs stay resident"
     );
     assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+}
+
+/// Acceptance property of the cascade PR: with `EngineConfig::cascade`
+/// on, decode over shared-prefix pages — one multi-query pass over the
+/// shared tiles per adopter group, per-request suffix passes merged
+/// through the kernel's LSE state — produces **bit-identical tokens**
+/// to the per-sequence gather, across random prefix lengths × page
+/// sizes {4, 16} × codecs {F32, Int8} × adopter counts {1..16} ×
+/// threads {1, 4}; and the analytic gather accounting shrinks, never
+/// grows.
+#[test]
+fn prop_cascade_engine_parity() {
+    let mut total_passes = 0u64;
+    let mut total_saved = 0u64;
+    check(12, |rng| {
+        let (heads, kvh) = *rng.pick(&[(2u32, 1u32), (4, 2), (4, 4)]);
+        let model = ModelShape {
+            name: "cascade-prop",
+            params: 0,
+            layers: rng.range(1, 3) as u32,
+            heads,
+            kv_heads: kvh,
+            head_dim: *rng.pick(&[4u32, 8]),
+            ffn: 32,
+            vocab: 64,
+        };
+        let max_seq = 64;
+        let page_size = *rng.pick(&[4usize, 16]);
+        let threads = *rng.pick(&[1usize, 4]);
+        let codec = if rng.bool() { PageCodec::Int8 } else { PageCodec::F32 };
+        let adopters = rng.range(1, 17);
+        let max_new = rng.range(2, 6);
+        // a common "system" prefix spanning at least one whole page, so
+        // the adopted chain blocks carry cascade-eligible KV tiles
+        let common = rng.range(page_size, 33);
+        let system: Vec<i32> = (0..common).map(|_| rng.below(64) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..adopters)
+            .map(|i| {
+                let mut p = system.clone();
+                let extra = rng.range(0, 6);
+                p.extend((0..extra).map(|t| ((t * 5 + i * 11) % 64) as i32));
+                p
+            })
+            .collect();
+
+        let run = |cascade: bool| {
+            let cfg = EngineConfig {
+                parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+                kv_layout: KvLayout::Paged,
+                page_size,
+                kv_codec: codec,
+                cascade,
+                ..EngineConfig::default()
+            };
+            // KV tiles sized to the page so shared runs always hold
+            // whole tiles (the default 128-row tile exceeds max_seq)
+            let host = HostModelConfig::for_shape(model, max_seq).with_block_kv(page_size);
+            let mut e = Engine::with_backend(Box::new(HostModelBackend::new(host)), cfg);
+            for pr in &prompts {
+                let gp = GenParams {
+                    max_new_tokens: max_new,
+                    eos_token: None,
+                    share_prefix: true,
+                };
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base, bm) = run(false);
+        let (casc, cm) = run(true);
+        prop_ensure!(
+            base == casc,
+            "cascade changed tokens (heads={heads} kvh={kvh} layers={} page_size={page_size} \
+             codec={codec:?} adopters={adopters} threads={threads} common={common})",
+            model.layers
+        );
+        prop_ensure!(
+            bm.cascade_passes == 0 && bm.shared_rows_saved == 0,
+            "cascade metrics must stay zero with the flag off"
+        );
+        prop_ensure!(
+            cm.kv_bytes_gathered <= bm.kv_bytes_gathered,
+            "cascade must never gather more: {} vs {}",
+            cm.kv_bytes_gathered,
+            bm.kv_bytes_gathered
+        );
+        prop_ensure!(
+            (cm.shared_rows_saved > 0) == (cm.cascade_passes > 0),
+            "saved rows without passes (or vice versa): {} passes, {} rows",
+            cm.cascade_passes,
+            cm.shared_rows_saved
+        );
+        total_passes += cm.cascade_passes;
+        total_saved += cm.shared_rows_saved;
+        Ok(())
+    });
+    assert!(total_passes > 0, "no case ever ran a cascade pass");
+    assert!(total_saved > 0, "cascade never skipped any shared-row gather");
+}
+
+/// Cascade composes with the rest of the paged machinery: under device
+/// pressure (offload, preemption, COW splits) the cascade engine still
+/// generates exactly the tokens of an unconstrained non-cascade run,
+/// and the gather accounting stays consistent.
+#[test]
+fn cascade_survives_offload_and_preemption_pressure() {
+    let group_bytes = 4 * 1024usize;
+    let system = vec![13i32; 20];
+    let prompts: Vec<Vec<i32>> = (0..5)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend(vec![i as i32 + 30; 3]);
+            p
+        })
+        .collect();
+    let gp = GenParams { max_new_tokens: 12, eos_token: None, share_prefix: true };
+
+    // unconstrained reference, cascade off
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 2, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    let host = HostModelConfig::tiny_gqa().with_block_kv(16);
+    let mut big = Engine::with_backend(Box::new(HostModelBackend::new(host.clone())), cfg);
+    for pr in &prompts {
+        big.submit(pr.clone(), gp).unwrap();
+    }
+    let mut want = big.run_until_idle().unwrap();
+    want.sort_by_key(|r| r.id);
+
+    // constrained + cascade: 5 device groups, 8 host groups
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 2, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: 5 * group_bytes,
+        host_kv_budget: 8 * group_bytes,
+        page_size: 16,
+        cascade: true,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::with_backend(Box::new(HostModelBackend::new(host)), cfg);
+    for pr in &prompts {
+        e.submit(pr.clone(), gp).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), want.len());
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "cascade + offload + preemption changed request {} tokens",
+            a.id
+        );
+    }
+    let m = &e.metrics;
+    assert!(m.prefix_hits > 0, "the common prefix must have been shared");
+    assert!(m.cascade_passes > 0, "shared tiles must have cascaded");
+    assert!(m.shared_rows_saved > 0, "cascade saved no gather work");
 }

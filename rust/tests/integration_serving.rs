@@ -22,9 +22,11 @@
 use std::collections::HashMap;
 
 use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::kv_cache::kv_page_bytes_codec;
 use fastattn::coordinator::{
-    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PreemptMode,
-    RequestId, ServeError, Server, ServerConfig, ShardedBackend, ShardedConfig, StreamEvent,
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PageCodec,
+    PreemptMode, RequestId, ServeError, Server, ServerConfig, ShardedBackend, ShardedConfig,
+    StreamEvent,
 };
 use fastattn::runtime::Runtime;
 
@@ -45,21 +47,31 @@ enum Pool {
 }
 
 fn engine_for(pool: Pool, threads: usize, shards: usize) -> Engine {
+    engine_for_codec(pool, threads, shards, PageCodec::F32)
+}
+
+/// `engine_for` with an explicit on-page codec; budgets are sized in
+/// block groups *of that codec* so the squeeze dynamics match the f32
+/// cells (int8 groups are ~4× smaller in bytes).
+fn engine_for_codec(pool: Pool, threads: usize, shards: usize, codec: PageCodec) -> Engine {
+    let group_bytes = 4 * kv_page_bytes_codec(16, 8, codec);
+    debug_assert!(codec != PageCodec::F32 || group_bytes == GROUP_BYTES);
     let mut cfg = EngineConfig {
         parallel: ParallelConfig { threads, min_work_per_thread: 0 },
         kv_layout: KvLayout::Paged,
         page_size: 16,
         preempt_mode: PreemptMode::Auto,
+        kv_codec: codec,
         ..EngineConfig::default()
     };
     match pool {
         Pool::Unconstrained => {}
         Pool::Tiered { dev_groups, host_groups } => {
-            cfg.device_kv_budget = dev_groups * GROUP_BYTES;
-            cfg.host_kv_budget = host_groups * GROUP_BYTES;
+            cfg.device_kv_budget = dev_groups * group_bytes;
+            cfg.host_kv_budget = host_groups * group_bytes;
         }
         Pool::Recompute { dev_groups } => {
-            cfg.device_kv_budget = dev_groups * GROUP_BYTES;
+            cfg.device_kv_budget = dev_groups * group_bytes;
             cfg.host_kv_budget = 0;
         }
     }
@@ -153,6 +165,45 @@ fn streaming_parity_across_pools_threads_shards() {
                 }
             }
         }
+    }
+}
+
+/// The codec × request-plane cell: int8 KV pages under the
+/// recompute-squeeze.  Quantized serving is deterministic, so a
+/// preempted sequence's prompt replay regenerates (and re-streams)
+/// exactly the tokens it first produced, and the squeezed engine's
+/// tokens equal an unconstrained int8 engine's.
+#[test]
+fn streaming_parity_int8_under_recompute_squeeze() {
+    for &threads in &[1usize, 4] {
+        // unconstrained int8 reference tokens
+        let mut free = engine_for_codec(Pool::Unconstrained, threads, 1, PageCodec::Int8);
+        for (prompt, p) in workload() {
+            free.submit(prompt, p).unwrap();
+        }
+        let (_, want) = stream_to_idle(&mut free);
+
+        let squeeze = Pool::Recompute { dev_groups: 4 };
+        let mut e = engine_for_codec(squeeze, threads, 1, PageCodec::Int8);
+        for (prompt, p) in workload() {
+            e.submit(prompt, p).unwrap();
+        }
+        let (streamed, finals) = stream_to_idle(&mut e);
+        assert_eq!(finals.len(), 10, "t{threads}: all int8 requests finish");
+        for (id, toks) in &finals {
+            assert_eq!(
+                streamed.get(id),
+                Some(toks),
+                "t{threads}: int8 stream != final for request {id}"
+            );
+            assert_eq!(
+                want.get(id),
+                Some(toks),
+                "t{threads}: recompute squeeze changed int8 tokens of request {id}"
+            );
+        }
+        assert!(e.metrics.preemptions > 0, "t{threads}: squeeze must actually preempt");
+        assert!(e.metrics.dequant_rows > 0, "t{threads}: int8 gather must dequantize");
     }
 }
 

@@ -206,6 +206,52 @@ fn cross_shard_migration_matches_unconstrained() {
     }
 }
 
+/// Prefix sharing and cascade decode are single-shard features: on a
+/// sharded engine (n_shards > 1) `share_prefix: true` requests must
+/// degrade gracefully — tokens identical to the non-sharing run, every
+/// sharing/cascade metric pinned to zero, no panic — rather than
+/// silently corrupting the mirrored per-shard block tables.  Pins the
+/// `paged && n_shards == 1` gate explicitly.
+#[test]
+fn sharded_share_prefix_degrades_gracefully() {
+    let system: Vec<i32> = (0..20).map(|t| (t * 7 + 3) % 32).collect();
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend((0..(i % 4)).map(|t| (t * 5 + i + 1) % 32));
+            p
+        })
+        .collect();
+    let cfg = gqa_cfg(8, 8);
+    for shards in [2usize, 4] {
+        let scfg = ShardedConfig { tile_rows: 2, ..ShardedConfig::for_shards(shards) };
+        let run_sharded = |share: bool| {
+            // cascade: true in the config must stay inert too — the
+            // engine resolves the flag off when n_shards > 1
+            let ec = EngineConfig { cascade: true, ..ecfg(2, 16) };
+            let mut e = sharded_engine(&cfg, scfg, ec);
+            let p = GenParams { max_new_tokens: 8, eos_token: None, share_prefix: share };
+            let toks = run(&mut e, &prompts, p);
+            (toks, e.metrics.clone())
+        };
+        let (plain_toks, pm) = run_sharded(false);
+        let (shared_toks, sm) = run_sharded(true);
+        assert_eq!(
+            shared_toks, plain_toks,
+            "{shards}-shard share_prefix run diverged from non-sharing run"
+        );
+        for (label, m) in [("plain", &pm), ("share_prefix", &sm)] {
+            assert_eq!(m.prefix_hits, 0, "{shards} shards/{label}: sharing must stay off");
+            assert_eq!(m.prefix_tokens_saved, 0, "{shards} shards/{label}");
+            assert_eq!(m.shared_pages, 0, "{shards} shards/{label}");
+            assert_eq!(m.cascade_passes, 0, "{shards} shards/{label}: cascade gated off");
+            assert_eq!(m.shared_rows_saved, 0, "{shards} shards/{label}");
+            assert_eq!(m.pages_used, 0, "{shards} shards/{label}: pools drained at idle");
+        }
+        assert!(sm.allreduce_modeled_s > 0.0, "{shards} shards still ran the ring");
+    }
+}
+
 /// Swap-out preemption under sharding: the victim's block tables park
 /// on the host tier of **every** shard in lockstep and resume together
 /// with KV intact — no prompt token prefills twice on any shard — and
