@@ -236,7 +236,10 @@ fn main() {
     // BENCH_decode.json as gathered KV rows per second.
     {
         let (heads, d, page_size) = (8usize, 128usize, 16usize);
-        for kv in [512usize, 2048] {
+        // 8192 leaves the last-level cache behind on most hosts — the
+        // long-context regime where the blocked walk and the int8
+        // bytes-through-memory saving actually pay.
+        for kv in [512usize, 2048, 8192] {
             let cache = CacheShape { layers: 1, kv_heads: 1, max_seq: kv, head_dim: d };
             let mut rng = Rng::new(kv as u64);
             let rows_k: Vec<Vec<f32>> = (0..kv).map(|_| rng.f32_vec(d)).collect();

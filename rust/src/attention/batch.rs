@@ -24,6 +24,15 @@
 //! regardless of the thread count, so results are **bit-identical**
 //! between `threads = 1` (the sequential fallback, equivalent to the
 //! seed's per-sequence loop) and any `threads = N`.
+//!
+//! Nothing here requires the batch's rows to come from *different*
+//! sequences: a row is just `(q, kv view, kv_len)`.  Chunked prefill
+//! and speculative verification (`Backend::verify_step`) exploit this
+//! by packing k+1 consecutive positions of ONE sequence as k+1 rows of
+//! a single batched pass — row `t` carries `kv_len = pos + t + 1`
+//! (`mask::verify_row_visible`), so after all rows' K/V are appended,
+//! each row attends exactly its causal prefix and is bit-identical to
+//! the vanilla decode step at its position.
 
 use crate::coordinator::kv_cache::{QuantStore, Tier};
 

@@ -58,47 +58,56 @@ impl FlashParams {
     }
 }
 
-/// Four-accumulator dot product: breaks the serial FP dependency chain so
-/// the compiler can keep 4 FMA pipes busy (≈3× on the decode path — §Perf).
+/// Eight-accumulator dot product: breaks the serial FP dependency chain
+/// so the compiler can vectorize the body into full 256-bit FMA lanes
+/// (one 8-wide f32 fused multiply-add per iteration) instead of four
+/// scalar pipes — the SIMD-friendly shape LLVM auto-vectorizes without
+/// intrinsics.  Bounds checks are hoisted by the up-front slice
+/// reborrow, so the hot loop is branch-free.  Every attention path —
+/// blocked tiles ([`fill_score_tile`]) and the rowwise baseline alike —
+/// funnels through here, which is what keeps
+/// `prop_blocked_equals_rowwise` bit-exact across the unroll.
 #[inline]
 fn dot4(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let chunks = n / 8;
+    let (a8, b8) = (&a[..chunks * 8], &b[..chunks * 8]);
+    let mut s = [0.0f32; 8];
     for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+        let i = c * 8;
+        for lane in 0..8 {
+            s[lane] += a8[i + lane] * b8[i + lane];
+        }
     }
     let mut rest = 0.0f32;
-    for i in chunks * 4..n {
+    for i in chunks * 8..n {
         rest += a[i] * b[i];
     }
-    (s0 + s1) + (s2 + s3) + rest
+    (((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))) + rest
 }
 
-/// [`dot4`] against an int8 row: `Σ a[t] · b[t] as f32`.  The caller
-/// folds the row scale into the product afterwards, so dequantization
-/// costs one multiply per row instead of one per element.
+/// [`dot4`] against an int8 row: `Σ a[t] · b[t] as f32`, with the same
+/// 8-wide accumulator shape so the i8→f32 widening vectorizes
+/// (`vpmovsxbd` + `vcvtdq2ps` feeding the FMA lanes).  The caller folds
+/// the row scale into the product afterwards, so dequantization costs
+/// one multiply per row instead of one per element.
 #[inline]
 fn dot4_i8(a: &[f32], b: &[i8]) -> f32 {
     let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let chunks = n / 8;
+    let (a8, b8) = (&a[..chunks * 8], &b[..chunks * 8]);
+    let mut s = [0.0f32; 8];
     for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i] as f32;
-        s1 += a[i + 1] * b[i + 1] as f32;
-        s2 += a[i + 2] * b[i + 2] as f32;
-        s3 += a[i + 3] * b[i + 3] as f32;
+        let i = c * 8;
+        for lane in 0..8 {
+            s[lane] += a8[i + lane] * b8[i + lane] as f32;
+        }
     }
     let mut rest = 0.0f32;
-    for i in chunks * 4..n {
+    for i in chunks * 8..n {
         rest += a[i] * b[i] as f32;
     }
-    (s0 + s1) + (s2 + s3) + rest
+    (((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))) + rest
 }
 
 use crate::coordinator::kv_cache::{QuantStore, Tier};

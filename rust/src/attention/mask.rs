@@ -140,6 +140,22 @@ pub fn chunk_row_visible(chunk_start: usize, r: usize) -> usize {
     chunk_start + r + 1
 }
 
+/// Visible KV columns of verify row `t` of a speculative draft–verify
+/// pass starting at absolute position `start_pos` — row `t` scores
+/// draft token `t` written at position `start_pos + t`, and must see
+/// exactly the committed prefix plus the drafts *before* it, never a
+/// later draft (a later draft is downstream of this row's own output
+/// and would be circular).  That requirement is precisely the
+/// chunk-boundary causal mask with `chunk_start = start_pos`:
+/// speculative verification is a chunked prefill of not-yet-committed
+/// tokens, which is why `Backend::verify_step` reuses the
+/// `prefill_chunk` path (and this helper is [`chunk_row_visible`] by
+/// another name — the identity is pinned by
+/// `prop_verify_mask_is_chunk_mask`).
+pub fn verify_row_visible(start_pos: usize, t: usize) -> usize {
+    chunk_row_visible(start_pos, t)
+}
+
 /// Classify a b×b attention_score block of a chunked-prefill step:
 /// block rows start at chunk-relative `row0` in the chunk at
 /// `chunk_start`; columns are absolute KV positions from `col0`.
@@ -326,6 +342,40 @@ mod tests {
                     == b_mask_direct(chunk_start + row0, col0, b),
                 "b_mask ({chunk_start},{row0},{col0}) b={b} m={m}"
             );
+            Ok(())
+        });
+    }
+
+    /// The draft–verify visibility rule IS the chunk causal mask: row
+    /// `t` of a verify pass at `start_pos` sees the committed prefix
+    /// plus earlier drafts only — the same columns a chunked-prefill
+    /// row at the same absolute position sees — and stepping one
+    /// position grows visibility by exactly one column (each verify
+    /// row is bit-identical to the vanilla decode step at its
+    /// position).
+    #[test]
+    fn prop_verify_mask_is_chunk_mask() {
+        check(128, |rng| {
+            let start_pos = rng.below(1024) as usize;
+            let k = rng.range(0, 9);
+            for t in 0..=k {
+                let vis = verify_row_visible(start_pos, t);
+                prop_ensure!(
+                    vis == chunk_row_visible(start_pos, t),
+                    "start={start_pos} t={t}: verify {vis}"
+                );
+                // the row sees its own position but nothing after it
+                prop_ensure!(
+                    vis == start_pos + t + 1,
+                    "start={start_pos} t={t}: vis {vis}"
+                );
+                if t > 0 {
+                    prop_ensure!(
+                        vis == verify_row_visible(start_pos, t - 1) + 1,
+                        "start={start_pos} t={t}: rows must grow by one column"
+                    );
+                }
+            }
             Ok(())
         });
     }

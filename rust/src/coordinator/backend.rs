@@ -151,6 +151,37 @@ pub trait Backend {
         bail!("backend does not support chunked prefill")
     }
 
+    /// True when [`Backend::verify_step`] is implemented — the engine
+    /// only takes the speculative decode path over such backends and
+    /// falls back to vanilla decode otherwise (so `speculate > 0` can
+    /// never change tokens, only step shape).
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// Speculative **batched verify**: score `tokens` (the sequence's
+    /// last accepted token followed by its draft tokens) at the
+    /// consecutive cache positions `start_pos ..`, in ONE pass through
+    /// the paged attention — the multi-position machinery of
+    /// [`Backend::prefill_chunk`], with the same chunk-boundary causal
+    /// mask (`attention::mask::chunk_row_visible`): row `t` attends
+    /// exactly the KV rows `<= start_pos + t`.  KV for every position
+    /// is written through `table` — *speculatively* for the draft
+    /// positions; the engine rolls rejected rows back with
+    /// [`BlockTable::truncate`].  Unlike `prefill_chunk`, logits come
+    /// back for **every** position (`[tokens.len(), vocab]`, row `t` =
+    /// the next-token distribution after consuming `tokens[t]`), which
+    /// is what accept-longest-prefix needs.
+    fn verify_step(
+        &mut self,
+        _tokens: &[i32],
+        _start_pos: usize,
+        _table: &BlockTable,
+        _pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        bail!("backend does not support speculative verification")
+    }
+
     /// Simulated devices the backend shards KV heads across.  `1` for
     /// single-device backends; the engine builds one page pool and one
     /// block table per shard and drives every paged step through the
@@ -1028,6 +1059,60 @@ impl Backend for HostModelBackend {
         }
         let mut logits = vec![0.0f32; self.info.vocab];
         self.logits_row(&last, &mut logits);
+        Ok(logits)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify_step(
+        &mut self,
+        tokens: &[i32],
+        start_pos: usize,
+        table: &BlockTable,
+        pools: &mut TieredPagePool,
+    ) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("verify_step: empty token run");
+        }
+        self.check_table(table, pools, "verify_step")?;
+        let end = start_pos + tokens.len();
+        if end > self.cache.max_seq {
+            bail!("verify_step: positions ..{end} exceed max_seq {}", self.cache.max_seq);
+        }
+        if table.capacity_tokens() < end {
+            bail!(
+                "verify_step: table holds {} tokens, verify run ends at {end}",
+                table.capacity_tokens()
+            );
+        }
+        // All k+1 positions of one sequence as rows of ONE forward
+        // step: each layer writes every row's K/V before its batched
+        // attention runs, and the per-row `kv_len = pos + 1` caps row
+        // `t`'s reads at exactly the chunk-boundary causal visibility —
+        // later draft rows' freshly written KV stays invisible to
+        // earlier rows, so each row scores bit-identically to a vanilla
+        // decode step at its position.
+        let tables: Vec<&BlockTable> = vec![table; tokens.len()];
+        let rows: Vec<(usize, i32, usize)> = tokens
+            .iter()
+            .enumerate()
+            .map(|(t, &tok)| {
+                debug_assert_eq!(
+                    crate::attention::mask::chunk_row_visible(start_pos, t),
+                    start_pos + t + 1,
+                );
+                (t, tok, start_pos + t)
+            })
+            .collect();
+        let xs =
+            self.forward_step(&rows, &mut StepKv::Paged { pools: &mut *pools, tables: &tables });
+        let vocab = self.info.vocab;
+        let mut logits = vec![0.0f32; tokens.len() * vocab];
+        for (i, x) in xs.iter().enumerate() {
+            self.logits_row(x, &mut logits[i * vocab..][..vocab]);
+        }
         Ok(logits)
     }
 

@@ -166,6 +166,14 @@ impl Batcher {
         self.waiting.len()
     }
 
+    /// Drop a waiting request by id (client-initiated cancel before
+    /// admission).  True when it was queued and is now gone.
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        let before = self.waiting.len();
+        self.waiting.retain(|r| r.id != id);
+        self.waiting.len() != before
+    }
+
     /// The head-of-line request, if any.
     pub fn peek(&self) -> Option<&Request> {
         self.waiting.front()

@@ -72,6 +72,7 @@ use super::reclaim::{
 };
 use super::request::{GenParams, Phase, Request, RequestId, Response};
 use super::scheduler::{Policy, Scheduler, Step};
+use super::speculate;
 use crate::attention::batch::{CascadeGroup, ParallelConfig};
 use crate::metrics::EngineMetrics;
 use crate::runtime::Runtime;
@@ -210,6 +211,20 @@ pub struct EngineConfig {
     /// `attention::batch::cascade_batch_decode_attention`); gated, like
     /// prefix sharing, to single-shard engines.  Default off.
     pub cascade: bool,
+    /// Speculative decoding draft depth (paged layout): each decode
+    /// step for a sequence proposes up to this many draft tokens by
+    /// prompt lookup (`coordinator::speculate`), scores them together
+    /// with the committed last token in ONE batched verify pass
+    /// (`Backend::verify_step` — the chunked-prefill multi-position
+    /// path), keeps the longest prefix that matches greedy argmax, and
+    /// rolls rejected draft KV back with `BlockTable::truncate`.
+    /// Output is token-for-token identical to vanilla greedy decode at
+    /// any depth; a step emits 1..=depth+1 tokens.  `0` (the default)
+    /// disables speculation; gated, like prefix sharing, to
+    /// single-shard paged engines on verify-capable backends, and
+    /// mutually exclusive with `cascade` (composition is a ROADMAP
+    /// follow-up — cascade wins when both are set).
+    pub speculate: usize,
 }
 
 impl Default for EngineConfig {
@@ -233,6 +248,7 @@ impl Default for EngineConfig {
             waiting_served_ratio: 1.2,
             tpot_slo_s: None,
             cascade: false,
+            speculate: 0,
         }
     }
 }
@@ -322,6 +338,11 @@ pub struct Engine {
     /// `cfg.cascade && paged && n_shards == 1` (same gate as the
     /// prefix index, which is what creates adoptable shared runs).
     cascade: bool,
+    /// Speculative draft depth — resolved at build to `cfg.speculate`
+    /// on single-shard paged engines whose backend implements
+    /// `verify_step` (and with cascade off), else 0.  The vanilla
+    /// decode path is untouched when 0.
+    speculate: usize,
     /// TPOT objective driving SLO-aware prefill deferral (`None` off).
     tpot_slo_s: Option<f64>,
     /// Sliding window of recent decode-step wall times (the TPOT
@@ -428,6 +449,7 @@ impl Engine {
                 shard_shape.max_seq / 2,
             ),
         );
+        let verify_capable = backend.supports_verify();
         Self {
             backend,
             shape,
@@ -450,6 +472,11 @@ impl Engine {
             kv_codec: cfg.kv_codec,
             gather_clock: 0,
             cascade: cfg.cascade && paged && n_shards == 1,
+            speculate: if paged && n_shards == 1 && !cfg.cascade && verify_capable {
+                cfg.speculate
+            } else {
+                0
+            },
             tpot_slo_s: cfg.tpot_slo_s,
             decode_window: VecDeque::new(),
             token_events: Vec::new(),
@@ -609,6 +636,41 @@ impl Engine {
     /// deduplicate by `(id, index)`.
     pub fn take_token_events(&mut self) -> Vec<TokenEvent> {
         std::mem::take(&mut self.token_events)
+    }
+
+    /// Client-initiated abort: drop request `id` wherever it currently
+    /// lives — still waiting, chunk-prefilling, decoding, or swap-out
+    /// suspended — releasing every page it holds (both tiers; adopted
+    /// shared blocks just drop their reference) immediately rather
+    /// than running generation to completion.  No [`Response`] is
+    /// produced and no token events are emitted past the drain point;
+    /// the request plane terminates the client stream with
+    /// `StreamEvent::Error(Aborted)`.  Returns false when `id` is
+    /// unknown or already finished — cancelling twice is a no-op.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if self.batcher.remove(id) {
+            return true; // never admitted: no KV to release
+        }
+        let Some(mut state) = self.seqs.remove(&id) else {
+            return false;
+        };
+        self.active.retain(|&a| a != id);
+        self.chunking.retain(|&c| c != id);
+        self.suspended.retain(|&s| s != id);
+        match &mut state.store {
+            SeqStore::Contig { tier, .. } => {
+                if let EngineKv::Contig(pool) = &mut self.kv {
+                    pool.release(*tier);
+                }
+            }
+            SeqStore::Paged { table } => {
+                if let EngineKv::Paged(pools) = &mut self.kv {
+                    table.release_all_tiered(pools);
+                }
+            }
+        }
+        self.update_page_metrics();
+        true
     }
 
     // -----------------------------------------------------------------
@@ -1116,6 +1178,161 @@ impl Engine {
         Ok(())
     }
 
+    /// One speculative decode step over the batch: per sequence,
+    /// propose up to `speculate` draft tokens by prompt lookup, write
+    /// their KV speculatively, score the committed last token plus all
+    /// drafts in ONE `verify_step` pass (the chunked-prefill
+    /// multi-position path, whose chunk-boundary causal mask makes row
+    /// `t` attend exactly its `pos+t+1`-token prefix — bit-identical to
+    /// `t` successive vanilla decode steps), accept the longest prefix
+    /// where each draft matches the greedy argmax of the row before it,
+    /// and roll rejected draft KV back with `BlockTable::truncate`.
+    ///
+    /// Parity argument (the `prop_spec_decode_equals_vanilla_greedy`
+    /// contract): an accepted draft row's K/V equals what vanilla would
+    /// have written — same committed prefix, same hidden states, same
+    /// quantization under `Int8` — and a rejected row is truncated (or
+    /// overwritten by the next step's write at the same position)
+    /// before any later attention reads it, so no speculative state
+    /// ever leaks into committed output.  Drafting is model-free and
+    /// pure, so a bad proposal costs wasted verify rows, never wrong
+    /// tokens.
+    fn run_decode_spec(&mut self, batch: DecodeBatch) -> Result<()> {
+        let t0 = Instant::now();
+        let k = self.speculate;
+        let vocab = self.backend.model().vocab;
+        let group = self.shard_shape.layers * self.shard_shape.kv_heads;
+        self.gather_clock += 1;
+        let clock = self.gather_clock;
+        let mut done: Vec<RequestId> = Vec::new();
+        let mut gathered_positions: u64 = 0;
+        let tri = |n: usize| n as u64 * (n as u64 + 1) / 2;
+        for id in batch.seq_ids.iter().copied() {
+            if !self.steppable(id) {
+                continue; // preempted or swapped by an earlier row's allocation
+            }
+            // Draft: verify consumes the committed last token plus up
+            // to m-1 proposals, capped so every emitted token would
+            // also have been emitted by vanilla decode (generation
+            // budget) and every written row stays inside max_seq.
+            let (pos, toks) = {
+                let s = &self.seqs[&id];
+                let pos = s.pos();
+                let remaining = s.params.max_new_tokens - s.tokens.len();
+                let m = (k + 1).min(remaining).min(self.shape.max_seq - pos);
+                debug_assert!(m >= 1, "active sequences have budget and room");
+                let mut context = Vec::with_capacity(s.prompt.len() + s.tokens.len());
+                context.extend_from_slice(&s.prompt);
+                context.extend_from_slice(&s.tokens);
+                let spec = speculate::SpecConfig::with_depth(m - 1);
+                let drafts = speculate::propose(&context, spec.depth, spec.max_ngram);
+                let mut toks = Vec::with_capacity(1 + drafts.len());
+                toks.push(s.last_token());
+                toks.extend_from_slice(&drafts);
+                (pos, toks)
+            };
+            // Grow + CoW-unshare for every row the verify pass writes
+            // (pos..pos+toks.len()); rejected-row blocks are therefore
+            // never shared when truncate pops them.
+            if !self.ensure_writable(id, pos + toks.len(), pos)? {
+                continue; // the sequence itself was the reclamation victim
+            }
+            // pages allocated beyond what a vanilla single-token step
+            // would have needed — the speculative write footprint
+            let blocks_full = (pos + toks.len()).div_ceil(self.page_size);
+            let blocks_vanilla = (pos + 1).div_ceil(self.page_size);
+            let spec_written = (blocks_full - blocks_vanilla) * group;
+            // Verify: all rows in one pass.  Single-shard by the build
+            // gate, so the primary table is the whole KV view.
+            let logits = {
+                let EngineKv::Paged(pools) = &mut self.kv else {
+                    bail!("paged decode on a contiguous engine");
+                };
+                let s = &self.seqs[&id];
+                let SeqStore::Paged { table } = &s.store else {
+                    unreachable!("paged engine tracks paged sequences");
+                };
+                self.backend
+                    .verify_step(&toks, pos, table.primary(), &mut pools[0])
+                    .with_context(|| format!("verify step of {} rows", toks.len()))?
+            };
+            // row t streamed its pos+t+1-token causal prefix
+            gathered_positions += tri(pos + toks.len()) - tri(pos);
+            // Accept: row t's argmax is the true next token after
+            // toks[..=t]; it commits, and scoring continues into row
+            // t+1 only while it equals the draft toks[t+1] that row was
+            // computed from.  Finish conditions run per emitted token,
+            // in vanilla order, so budget/EOS/max_seq cut identically.
+            let s = self.seqs.get_mut(&id).unwrap();
+            let mut emitted = 0usize;
+            let mut finished = false;
+            for (t, row) in logits.chunks_exact(vocab).enumerate() {
+                let next = argmax(row) as i32;
+                s.tokens.push(next);
+                let index = s.tokens.len() - 1;
+                self.token_events.push(TokenEvent { id, index, token: next });
+                self.metrics.decoded_tokens += 1;
+                emitted += 1;
+                finished = s.tokens.len() >= s.params.max_new_tokens
+                    || s.params.eos_token == Some(next)
+                    || s.pos() + 1 >= self.shape.max_seq;
+                if finished || (t + 1 < toks.len() && next != toks[t + 1]) {
+                    break;
+                }
+            }
+            // Rollback: rows pos..pos+emitted-1 hold committed-token KV
+            // (row pos is the old last token; each kept draft row was
+            // confirmed equal to the token the model emitted at its
+            // position); everything past them pops back to the free
+            // list.  The stale partial tail row, if any, sits at the
+            // next write position and is overwritten before it is ever
+            // attended.
+            let popped = {
+                let EngineKv::Paged(pools) = &mut self.kv else {
+                    bail!("paged decode on a contiguous engine");
+                };
+                let s = self.seqs.get_mut(&id).unwrap();
+                let SeqStore::Paged { table } = &mut s.store else {
+                    unreachable!("paged engine tracks paged sequences");
+                };
+                table.mark_gathered(clock);
+                table
+                    .truncate(pos + emitted, pools.as_mut_slice())
+                    .with_context(|| format!("speculative rollback to {} rows", pos + emitted))?
+            };
+            // exact rollback accounting: pages popped == pages written
+            // speculatively minus pages the accepted rows kept
+            debug_assert_eq!(
+                popped,
+                spec_written
+                    - (pos + emitted).div_ceil(self.page_size).saturating_sub(blocks_vanilla)
+                        * group,
+                "rollback accounting identity"
+            );
+            self.metrics.draft_proposed += (toks.len() - 1) as u64;
+            self.metrics.draft_accepted += (emitted - 1) as u64;
+            if self.metrics.accept_len_hist.len() < emitted {
+                self.metrics.accept_len_hist.resize(emitted, 0);
+            }
+            self.metrics.accept_len_hist[emitted - 1] += 1;
+            self.metrics.spec_pages_written += spec_written as u64;
+            self.metrics.spec_rollback_pages += popped as u64;
+            if finished {
+                done.push(id);
+            }
+        }
+        for id in done {
+            let state = self.seqs.remove(&id).unwrap();
+            self.active.retain(|&a| a != id);
+            self.finish(state);
+        }
+        self.count_gather(gathered_positions);
+        self.metrics.decode_steps += 1;
+        self.record_decode_step(t0.elapsed().as_secs_f64());
+        self.update_page_metrics();
+        Ok(())
+    }
+
     /// Record one decode step's wall time: total decode seconds plus
     /// the sliding window the SLO deferral gate reads as a TPOT proxy.
     fn record_decode_step(&mut self, secs: f64) {
@@ -1128,6 +1345,7 @@ impl Engine {
 
     fn run_decode(&mut self, batch: DecodeBatch) -> Result<()> {
         match self.kv {
+            EngineKv::Paged(_) if self.speculate > 0 => self.run_decode_spec(batch),
             EngineKv::Paged(_) => self.run_decode_paged(batch),
             EngineKv::Contig(_) => self.run_decode_plane(batch),
         }

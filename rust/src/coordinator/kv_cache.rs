@@ -1565,6 +1565,58 @@ impl BlockTable {
         self.stamps.fill(0);
         self.blocks = 0;
     }
+
+    /// O(1)-per-page speculative rollback: shrink the table to exactly
+    /// the blocks `tokens` rows need, popping every whole trailing
+    /// block back to its own tier's free list.  The partial tail-row
+    /// rewind is purely logical — the paged-attention contract (rows
+    /// `>= kv_len` are never read) makes stale rows, and under the
+    /// `Int8` codec their stale per-row scale side-channel entries,
+    /// unreachable until the next append overwrites them — so rollback
+    /// costs page-id bookkeeping only, never store traffic.
+    ///
+    /// A still-shared (adopted) block in the pop range is refused with
+    /// [`PageAllocError::SharedPage`] *before any page moves*: popping
+    /// it in place would drop a reference the prefix index or a sibling
+    /// table still counts on; callers split such blocks first
+    /// ([`Self::cow_unshare`]) or keep them.  (The speculative decode
+    /// path never hits this: draft rows are only ever written past
+    /// `cow_unshare`d blocks.)  Truncation never grows: `tokens` beyond
+    /// [`Self::capacity_tokens`] panics.  Returns the pages released
+    /// (all planes).
+    pub fn truncate(
+        &mut self,
+        tokens: usize,
+        pools: &mut TieredPagePool,
+    ) -> std::result::Result<usize, PageAllocError> {
+        let keep = tokens.div_ceil(self.page_size.max(1));
+        assert!(
+            keep <= self.blocks,
+            "truncate to {tokens} rows ({keep} blocks) beyond allocated {}",
+            self.blocks
+        );
+        // all-or-nothing like the grow paths: refuse before mutating
+        for b in keep..self.blocks {
+            if self.shared[b] {
+                return Err(PageAllocError::SharedPage);
+            }
+        }
+        let mut pages = 0;
+        for b in keep..self.blocks {
+            for l in 0..self.layers {
+                for g in 0..self.kv_heads {
+                    let at = self.plane_at(l, g, b);
+                    pools.pool_mut(self.tiers[at]).release(self.table[at]);
+                    self.table[at] = NO_PAGE;
+                    self.tiers[at] = Tier::Device;
+                    pages += 1;
+                }
+            }
+            self.stamps[b] = 0;
+        }
+        self.blocks = keep;
+        Ok(pages)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -1794,6 +1846,24 @@ impl ShardedTable {
         for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()) {
             t.release_all_tiered(p);
         }
+    }
+
+    /// Truncate every shard's table to `tokens` rows — the speculative
+    /// rollback, mirrored in lockstep (same primary-decides contract as
+    /// migration: a mirrored shard failing after the primary succeeded
+    /// means the shards diverged, which panics).  Returns the primary's
+    /// pages released (per shard).
+    pub fn truncate(
+        &mut self,
+        tokens: usize,
+        pools: &mut [TieredPagePool],
+    ) -> std::result::Result<usize, PageAllocError> {
+        debug_assert_eq!(self.tables.len(), pools.len(), "one pool per shard");
+        let pages = self.tables[0].truncate(tokens, &mut pools[0])?;
+        for (t, p) in self.tables.iter_mut().zip(pools.iter_mut()).skip(1) {
+            t.truncate(tokens, p).expect("mirrored shard diverged on truncation");
+        }
+        Ok(pages)
     }
 }
 
@@ -3163,5 +3233,386 @@ mod tests {
             assert_eq!(&pools.device().k_row_f32(dp, s), k, "promoted K slot {s}");
             assert_eq!(&pools.device().v_row_f32(dp, s), v, "promoted V slot {s}");
         }
+    }
+
+    // --- speculative rollback: truncate -------------------------------
+
+    #[test]
+    fn truncate_pops_trailing_blocks_to_free_list() {
+        let sh = shape(); // layers 2, kv_heads 3, max_seq 4, head_dim 2
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        fill_rows(&t, &mut pools, sh, 4);
+
+        // rewinding within the last block is logical-only: no pages move
+        assert_eq!(t.truncate(3, &mut pools).unwrap(), 0);
+        assert_eq!(t.blocks(), 2);
+        assert_eq!(pools.device().used_pages(), 2 * group);
+
+        // dropping below the block boundary pops the whole trailing
+        // group back to the device free list; kept rows stay intact
+        assert_eq!(t.truncate(2, &mut pools).unwrap(), group);
+        assert_eq!(t.blocks(), 1);
+        assert_eq!(t.capacity_tokens(), 2);
+        assert_eq!(pools.device().used_pages(), group);
+        check_rows(&t, &pools, sh, 2);
+
+        // regrowing reuses the freed pages; truncate to empty drains all
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        assert_eq!(t.truncate(0, &mut pools).unwrap(), 2 * group);
+        assert_eq!(t.blocks(), 0);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn truncate_releases_host_blocks_to_the_host_pool() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 2 * group, 2 * group, PcieLink::default());
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        fill_rows(&t, &mut pools, sh, 4);
+        t.migrate_block_to_host(1, &mut pools).unwrap();
+        assert_eq!(t.block_tier(1), Tier::Host);
+
+        // the popped block was host-resident: its pages go back to the
+        // host pool, the device pool is untouched
+        let dev_used = pools.device().used_pages();
+        assert_eq!(t.truncate(2, &mut pools).unwrap(), group);
+        assert_eq!(pools.host().used_pages(), 0);
+        assert_eq!(pools.device().used_pages(), dev_used);
+        check_rows(&t, &pools, sh, 2);
+
+        // a fresh block after rollback starts device-resident again
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        assert_eq!(t.block_tier(1), Tier::Device);
+        t.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn truncate_refuses_shared_blocks_before_mutating() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools =
+            TieredPagePool::new(2, sh.head_dim, 4 * group, 4 * group, PcieLink::default());
+        let mut owner = BlockTable::new(sh, 2);
+        owner.ensure_capacity(4, pools.device_mut()).unwrap();
+        let mut adopter = BlockTable::new(sh, 2);
+        adopter.push_shared_block(&owner.block_group(0), pools.device_mut());
+        adopter.push_shared_block(&owner.block_group(1), pools.device_mut());
+
+        // popping an adopted block would drop a reference the owner
+        // still counts on: refused all-or-nothing, nothing moved
+        let used = pools.device().used_pages();
+        assert_eq!(adopter.truncate(0, &mut pools), Err(PageAllocError::SharedPage));
+        assert_eq!(adopter.blocks(), 2);
+        assert_eq!(pools.device().used_pages(), used);
+        for &p in &owner.block_group(1) {
+            assert_eq!(pools.device().ref_count(p), 2);
+        }
+
+        // after a COW split the tail block is private and pops cleanly;
+        // the still-shared block 0 keeps refusing
+        adopter.cow_unshare(2, 4, pools.device_mut()).unwrap();
+        assert_eq!(adopter.truncate(2, &mut pools).unwrap(), group);
+        for &p in &owner.block_group(1) {
+            assert_eq!(pools.device().ref_count(p), 1, "owner keeps its tail block");
+        }
+        assert_eq!(adopter.truncate(0, &mut pools), Err(PageAllocError::SharedPage));
+
+        adopter.release_all_tiered(&mut pools);
+        owner.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn truncate_int8_keeps_scales_coherent() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools = TieredPagePool::new_with_codec(
+            2,
+            sh.head_dim,
+            2 * group,
+            2 * group,
+            PcieLink::default(),
+            PageCodec::Int8,
+        );
+        let mut t = BlockTable::new(sh, 2);
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        let mut rng = crate::proptest::Rng::new(23);
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 0..4 {
+                    let (k, v) = (rng.f32_vec(sh.head_dim), rng.f32_vec(sh.head_dim));
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    pools.write_row(tier, page, slot, &k, &v);
+                }
+            }
+        }
+        let decoded = |t: &BlockTable, pools: &TieredPagePool, r: usize| -> Vec<Vec<f32>> {
+            let mut out = Vec::new();
+            for l in 0..sh.layers {
+                for g in 0..sh.kv_heads {
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    out.push(pools.pool(tier).k_row_f32(page, slot));
+                    out.push(pools.pool(tier).v_row_f32(page, slot));
+                }
+            }
+            out
+        };
+        let (r0, r1) = (decoded(&t, &pools, 0), decoded(&t, &pools, 1));
+
+        // rollback pops the quantized pages together with their scale
+        // side-channel; kept rows decode bit-identically
+        assert_eq!(t.truncate(2, &mut pools).unwrap(), group);
+        assert_eq!(decoded(&t, &pools, 0), r0);
+        assert_eq!(decoded(&t, &pools, 1), r1);
+
+        // a regrown tail re-quantizes into fresh pages without
+        // disturbing the survivors' scales
+        t.ensure_capacity(4, pools.device_mut()).unwrap();
+        for l in 0..sh.layers {
+            for g in 0..sh.kv_heads {
+                for r in 2..4 {
+                    let (k, v) = (rng.f32_vec(sh.head_dim), rng.f32_vec(sh.head_dim));
+                    let (tier, page, slot) = t.locate_tiered(l, g, r);
+                    pools.write_row(tier, page, slot, &k, &v);
+                }
+            }
+        }
+        assert_eq!(decoded(&t, &pools, 0), r0);
+        assert_eq!(decoded(&t, &pools, 1), r1);
+        t.release_all_tiered(&mut pools);
+        assert_eq!(pools.free_pages_total(), pools.total_pages());
+    }
+
+    #[test]
+    fn sharded_truncate_mirrors_across_shards() {
+        let sh = shape();
+        let group = sh.layers * sh.kv_heads;
+        let mut pools: Vec<TieredPagePool> = (0..2)
+            .map(|_| {
+                TieredPagePool::new(2, sh.head_dim, 4 * group, 4 * group, PcieLink::default())
+            })
+            .collect();
+        let mut st = ShardedTable::new(sh, 2, 2);
+        st.ensure_capacity(4, &mut pools).unwrap();
+        st.migrate_block_to_host(0, &mut pools).unwrap();
+
+        // the per-shard count is returned once; every shard's pools
+        // move in lockstep, tier by tier
+        assert_eq!(st.truncate(2, &mut pools).unwrap(), group);
+        assert_eq!(st.blocks(), 1);
+        for p in &pools {
+            assert_eq!(p.device().used_pages(), 0, "device tail popped on every shard");
+            assert_eq!(p.host().used_pages(), group, "host-resident block kept");
+        }
+        assert_eq!(st.truncate(0, &mut pools).unwrap(), group);
+        for p in &pools {
+            assert_eq!(p.free_pages_total(), p.total_pages());
+        }
+    }
+
+    /// Random append/share/COW/offload/truncate schedules: truncation
+    /// returns exactly `(blocks dropped) × group` pages, each popped
+    /// page lands on its own tier's free list, shared (refcount > 1)
+    /// blocks are refused without side effects, surviving rows keep
+    /// decoding bit-identically (host-tier and Int8-scale coherence),
+    /// and a full drain leaves zero leaked pages.
+    #[test]
+    fn prop_truncate_schedules_account_exactly() {
+        use crate::proptest::check;
+        check(40, |rng| {
+            let sh = CacheShape { layers: 2, kv_heads: 2, max_seq: 16, head_dim: 4 };
+            let group = sh.layers * sh.kv_heads;
+            let ps = 2usize;
+            let max_blocks = sh.max_seq / ps;
+            let codec = *rng.pick(&[PageCodec::F32, PageCodec::Int8]);
+            // device fits both tables fully unshared, host fits the
+            // whole owner: growth and COW never fail for capacity
+            let mut pools = TieredPagePool::new_with_codec(
+                ps,
+                sh.head_dim,
+                2 * max_blocks * group,
+                max_blocks * group,
+                PcieLink::default(),
+                codec,
+            );
+            let mut owner = BlockTable::new(sh, ps);
+            let mut adopter = BlockTable::new(sh, ps);
+            // decoded-row model of the owner: expected[r] holds one
+            // (k, v) pair per (layer, head) plane, as read back through
+            // the codec right after the write
+            let mut expected: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::new();
+            // highest owner block ever shared, plus one.  The engine
+            // never rolls back into the shared prefix (`cow_unshare`
+            // precedes every speculative write), so neither does the
+            // schedule: below the floor the owner-side `shared` flags
+            // cannot catch an adoption that happened via
+            // `push_shared_block`, and popping would silently keep the
+            // refcounted pages alive, breaking exact accounting.
+            let mut floor_blocks = 0usize;
+            for _ in 0..rng.range(20, 60) {
+                match rng.below(6) {
+                    // append: grow the owner and fill the new rows
+                    0 => {
+                        let cur = owner.capacity_tokens();
+                        if cur < sh.max_seq {
+                            let target = rng.range(cur + 1, sh.max_seq + 1);
+                            owner.ensure_capacity(target, pools.device_mut()).unwrap();
+                            for r in expected.len()..owner.capacity_tokens() {
+                                let mut planes = Vec::new();
+                                for l in 0..sh.layers {
+                                    for g in 0..sh.kv_heads {
+                                        let (k, v) =
+                                            (rng.f32_vec(sh.head_dim), rng.f32_vec(sh.head_dim));
+                                        let (tier, page, slot) = owner.locate_tiered(l, g, r);
+                                        pools.write_row(tier, page, slot, &k, &v);
+                                        planes.push((
+                                            pools.pool(tier).k_row_f32(page, slot),
+                                            pools.pool(tier).v_row_f32(page, slot),
+                                        ));
+                                    }
+                                }
+                                expected.push(planes);
+                            }
+                        }
+                    }
+                    // share: the adopter adopts the owner's next block
+                    1 => {
+                        let b = adopter.blocks();
+                        if b < owner.blocks() && owner.block_tier(b) == Tier::Device {
+                            adopter.push_shared_block(&owner.block_group(b), pools.device_mut());
+                            floor_blocks = floor_blocks.max(b + 1);
+                        }
+                    }
+                    // COW: split a random adopted row range
+                    2 => {
+                        if adopter.blocks() > 0 {
+                            let cap = adopter.capacity_tokens();
+                            let first = rng.range(0, cap);
+                            let last = rng.range(first + 1, cap + 1);
+                            adopter.cow_unshare(first, last, pools.device_mut()).unwrap();
+                        }
+                    }
+                    // offload / promote a random owner block (shared
+                    // blocks refuse via pinning — ignored here)
+                    3 => {
+                        if owner.blocks() > 0 {
+                            let b = rng.range(0, owner.blocks());
+                            match owner.block_tier(b) {
+                                Tier::Device => {
+                                    let _ = owner.migrate_block_to_host(b, &mut pools);
+                                }
+                                Tier::Host => {
+                                    let _ = owner.promote_block_to_device(b, &mut pools);
+                                }
+                            }
+                        }
+                    }
+                    // owner rollback: exact per-tier free-list accounting
+                    4 => {
+                        let floor = floor_blocks * ps;
+                        if owner.capacity_tokens() > floor {
+                            let tokens = rng.range(floor, owner.capacity_tokens() + 1);
+                            let keep = tokens.div_ceil(ps);
+                            let tiers: Vec<Tier> =
+                                (keep..owner.blocks()).map(|b| owner.block_tier(b)).collect();
+                            let (df, hf) =
+                                (pools.device().free_pages(), pools.host().free_pages());
+                            let before = owner.blocks();
+                            let pages = owner
+                                .truncate(tokens, &mut pools)
+                                .map_err(|e| format!("owner truncate failed: {e:?}"))?;
+                            crate::prop_ensure!(
+                                pages == (before - keep) * group,
+                                "owner popped {pages}, expected {} blocks × {group}",
+                                before - keep
+                            );
+                            let dev =
+                                tiers.iter().filter(|&&t| t == Tier::Device).count() * group;
+                            let host =
+                                tiers.iter().filter(|&&t| t == Tier::Host).count() * group;
+                            crate::prop_ensure!(
+                                pools.device().free_pages() == df + dev
+                                    && pools.host().free_pages() == hf + host,
+                                "popped pages must land on their own tier's free list"
+                            );
+                            crate::prop_ensure!(
+                                owner.blocks() == keep && owner.capacity_tokens() == keep * ps,
+                                "rollback geometry"
+                            );
+                            expected.truncate(owner.capacity_tokens());
+                        }
+                    }
+                    // adopter rollback: shared blocks refuse in place
+                    _ => {
+                        if adopter.blocks() > 0 {
+                            let tokens = rng.range(0, adopter.capacity_tokens() + 1);
+                            let keep = tokens.div_ceil(ps);
+                            let shared =
+                                (keep..adopter.blocks()).any(|b| adopter.block_shared(b));
+                            let before = adopter.blocks();
+                            let free = pools.free_pages_total();
+                            match adopter.truncate(tokens, &mut pools) {
+                                Err(PageAllocError::SharedPage) => {
+                                    crate::prop_ensure!(shared, "spurious SharedPage refusal");
+                                    crate::prop_ensure!(
+                                        adopter.blocks() == before
+                                            && pools.free_pages_total() == free,
+                                        "refusal must not mutate"
+                                    );
+                                }
+                                Err(e) => return Err(format!("adopter truncate: {e:?}")),
+                                Ok(pages) => {
+                                    crate::prop_ensure!(
+                                        !shared,
+                                        "popped {pages} pages through a shared block"
+                                    );
+                                    crate::prop_ensure!(
+                                        pages == (before - keep) * group
+                                            && pools.free_pages_total() == free + pages,
+                                        "adopter accounting: popped {pages} of {} blocks",
+                                        before - keep
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                // every surviving owner row still decodes to the value
+                // observed at write time — across migrations, COW splits
+                // elsewhere, and rollbacks (under Int8 the scale
+                // side-channel travels with its page)
+                for (r, planes) in expected.iter().enumerate() {
+                    for l in 0..sh.layers {
+                        for g in 0..sh.kv_heads {
+                            let (tier, page, slot) = owner.locate_tiered(l, g, r);
+                            let (ek, ev) = &planes[l * sh.kv_heads + g];
+                            let pool = pools.pool(tier);
+                            crate::prop_ensure!(
+                                pool.k_row_f32(page, slot) == *ek
+                                    && pool.v_row_f32(page, slot) == *ev,
+                                "row {r} plane ({l},{g}) diverged ({codec:?})"
+                            );
+                        }
+                    }
+                }
+            }
+            owner.release_all_tiered(&mut pools);
+            adopter.release_all_tiered(&mut pools);
+            crate::prop_ensure!(
+                pools.free_pages_total() == pools.total_pages(),
+                "leak at drain: {} free of {}",
+                pools.free_pages_total(),
+                pools.total_pages()
+            );
+            Ok(())
+        });
     }
 }

@@ -11,6 +11,9 @@
 //!   admission of prompts longer than any bucket;
 //! * [`scheduler`] — prefill/chunked/decode policy (decode-priority +
 //!   fairness quantum; chunk continuation beats new admission);
+//! * [`speculate`] — model-free prompt-lookup (n-gram) drafting for
+//!   the draft–verify speculative decode loop; rejected draft KV is
+//!   rolled back in O(1) by `BlockTable::truncate`;
 //! * [`kv_cache`]  — the two-tier paged KV cache (`TieredPagePool`:
 //!   device + host `PagePool`s behind per-sequence `BlockTable`s with
 //!   per-block tier tags, cold-block migration over a modeled
@@ -55,6 +58,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod sharded;
+pub mod speculate;
 
 pub use backend::{
     AllReduceStats, ArtifactBackend, Backend, BucketGrid, ChunkRun, HostModelBackend,
@@ -70,3 +74,4 @@ pub use kv_cache::{
 pub use reclaim::{PreemptMode, ReclaimPolicy, RecomputeVsSwap, VictimPolicy};
 pub use request::{GenParams, Request, RequestId, Response};
 pub use server::{ResponseStream, ServeError, Server, ServerConfig, StreamEvent};
+pub use speculate::SpecConfig;

@@ -18,7 +18,11 @@
 //!   submissions still queued in the command channel) before the
 //!   thread exits;
 //! * **server drop / shutdown** delivers [`ServeError::Aborted`] to
-//!   every in-flight stream before the thread joins.
+//!   every in-flight stream before the thread joins;
+//! * **client cancel** ([`Server::cancel`]) frees the request's KV
+//!   pages immediately — wherever the sequence lives — and terminates
+//!   its stream with [`ServeError::Aborted`]; dropping a
+//!   [`ResponseStream`] alone never cancels.
 //!
 //! The serve loop drains at most [`ServerConfig::max_cmds_per_step`]
 //! commands between engine steps, so a sustained submit flood cannot
@@ -179,6 +183,10 @@ enum Cmd {
     Metrics {
         reply: Sender<EngineMetrics>,
     },
+    Cancel {
+        id: RequestId,
+        reply: Sender<bool>,
+    },
     Shutdown,
 }
 
@@ -274,6 +282,22 @@ impl Server {
         self.tx.send(Cmd::Metrics { reply: tx }).context("engine thread gone")?;
         rx.recv().context("engine thread gone")
     }
+
+    /// Cancel an in-flight request: the engine frees its KV pages
+    /// immediately (waiting, prefilling, decoding, or swapped out —
+    /// wherever it lives) and its stream terminates with
+    /// [`StreamEvent::Error`]`(`[`ServeError::Aborted`]`)` instead of
+    /// `Done`.  Returns `Ok(true)` when the request was found live,
+    /// `Ok(false)` when it was unknown or had already finished (its
+    /// stream then carries the normal `Done`) — cancelling twice is a
+    /// harmless no-op.  Dropping a [`ResponseStream`] alone never
+    /// cancels: explicit abort is the only way to reclaim a running
+    /// request's pages early.
+    pub fn cancel(&self, id: RequestId) -> Result<bool> {
+        let (tx, rx) = channel();
+        self.tx.send(Cmd::Cancel { id, reply: tx }).context("engine thread gone")?;
+        rx.recv().context("engine thread gone")
+    }
 }
 
 impl Drop for Server {
@@ -314,6 +338,17 @@ fn handle_cmd(
         }
         Cmd::Metrics { reply } => {
             let _ = reply.send(engine.metrics.clone());
+            true
+        }
+        Cmd::Cancel { id, reply } => {
+            // deliver tokens already generated before the abort marker
+            // so the stream stays gap-free up to its termination
+            deliver(engine, waiters);
+            let live = engine.cancel(id);
+            if let Some(w) = waiters.remove(&id) {
+                let _ = w.events.send(StreamEvent::Error(ServeError::Aborted));
+            }
+            let _ = reply.send(live);
             true
         }
         Cmd::Shutdown => false,
@@ -399,6 +434,9 @@ fn serve(mut engine: Engine, scfg: ServerConfig, rx: Receiver<Cmd>) {
             }
             Cmd::Metrics { reply } => {
                 let _ = reply.send(engine.metrics.clone());
+            }
+            Cmd::Cancel { reply, .. } => {
+                let _ = reply.send(false);
             }
             Cmd::Shutdown => {}
         }
@@ -606,6 +644,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cancel_mid_generation_frees_pages_and_aborts_stream() {
+        let server = host_server(ServerConfig::default());
+        let p = GenParams { max_new_tokens: 64, ..GenParams::default() };
+        let victim = server.submit(vec![1, 2, 3, 4], p).unwrap();
+        assert!(server.cancel(victim.id()).unwrap(), "in-flight request is live");
+        // the stream terminates with the typed abort (possibly after
+        // tokens generated before the cancel landed), never Done
+        loop {
+            match victim.recv_timeout(WAIT).expect("no-hang contract") {
+                StreamEvent::Token { .. } => continue,
+                StreamEvent::Error(ServeError::Aborted) => break,
+                ev => panic!("cancelled stream ended with {ev:?}"),
+            }
+        }
+        // its pages are free again (no prefix sharing here) and the
+        // engine is still serving
+        let m = server.metrics().unwrap();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.pages_used, 0, "cancel released the victim's pages");
+        let after = server
+            .submit(vec![5, 6, 7], GenParams { max_new_tokens: 2, ..GenParams::default() })
+            .unwrap();
+        assert_eq!(after.wait().unwrap().tokens.len(), 2);
+    }
+
+    #[test]
+    fn cancel_unknown_or_finished_is_noop() {
+        let server = host_server(ServerConfig::default());
+        assert!(!server.cancel(999).unwrap(), "unknown id");
+        let stream = server
+            .submit(vec![1, 2, 3], GenParams { max_new_tokens: 2, ..GenParams::default() })
+            .unwrap();
+        let id = stream.id();
+        let resp = stream.wait().unwrap();
+        assert_eq!(resp.tokens.len(), 2);
+        assert!(!server.cancel(id).unwrap(), "finished request cancels as a no-op");
     }
 
     #[test]

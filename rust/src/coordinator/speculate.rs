@@ -1,0 +1,141 @@
+//! Model-free speculative drafting: prompt-lookup / n-gram proposal.
+//!
+//! The draft–verify loop needs a proposer that is much cheaper than a
+//! forward pass; the classic model-free choice (prompt-lookup decoding,
+//! as popularized by assisted generation) is to suffix-match the
+//! *generated context* against everything the sequence has already
+//! seen — prompt plus emitted tokens — and propose the continuation of
+//! the most recent prior occurrence.  Greedy decode on small models
+//! loves short cycles, and serving prompts repeat structure (code,
+//! templates, retrieved documents), so this trivial drafter gets real
+//! acceptance rates without a second model.
+//!
+//! The drafter is **pure**: proposals never influence the accepted
+//! output (the engine verifies every draft against the real model and
+//! rolls rejected KV back with `BlockTable::truncate`), so any
+//! proposal quality is *safe* — a bad drafter only costs wasted verify
+//! rows, never wrong tokens.  That contract is what the
+//! `prop_spec_decode_equals_vanilla_greedy` acceptance property pins.
+
+/// Drafting knobs: `depth` draft tokens proposed per decode step
+/// (`EngineConfig::speculate`), matched against suffixes of up to
+/// `max_ngram` tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Maximum draft tokens per proposal (`k`); 0 disables drafting.
+    pub depth: usize,
+    /// Longest context suffix tried for the n-gram match (longer
+    /// matches are tried first — they predict better continuations).
+    pub max_ngram: usize,
+}
+
+impl SpecConfig {
+    /// The engine's default shape for a given depth.
+    pub fn with_depth(depth: usize) -> Self {
+        Self { depth, max_ngram: 4 }
+    }
+}
+
+/// Propose up to `k` draft tokens by prompt lookup over `context`
+/// (prompt followed by all emitted tokens, oldest first).
+///
+/// The longest context suffix of `n <= max_ngram` tokens that re-occurs
+/// earlier in the context wins, most recent prior occurrence first; the
+/// proposal is the run of tokens that followed that occurrence.  Longer
+/// suffixes are preferred over more recent shorter ones (an exact
+/// longer match is stronger evidence of a repeated pattern).  Returns
+/// an empty proposal when nothing matches — the engine then runs a
+/// plain decode step, so drafting can never stall generation.
+pub fn propose(context: &[i32], k: usize, max_ngram: usize) -> Vec<i32> {
+    if k == 0 || context.len() < 2 {
+        return Vec::new();
+    }
+    let n_max = max_ngram.min(context.len() - 1).max(1);
+    for n in (1..=n_max).rev() {
+        let suffix = &context[context.len() - n..];
+        // candidate match starts, most recent first; `end` excludes the
+        // suffix matching itself (start == end), but overlapping
+        // matches are fine — a period-p cycle matches at end - p.
+        let end = context.len() - n;
+        for start in (0..end).rev() {
+            if &context[start..start + n] == suffix {
+                let cont = &context[start + n..];
+                let take = cont.len().min(k);
+                debug_assert!(take >= 1, "match before the suffix implies a continuation");
+                return cont[..take].to_vec();
+            }
+        }
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_disabled_propose_nothing() {
+        assert!(propose(&[], 4, 4).is_empty());
+        assert!(propose(&[7], 4, 4).is_empty());
+        assert!(propose(&[1, 2, 3], 0, 4).is_empty());
+    }
+
+    #[test]
+    fn no_repetition_proposes_nothing() {
+        assert!(propose(&[1, 2, 3, 4, 5, 6], 4, 4).is_empty());
+    }
+
+    #[test]
+    fn repeated_ngram_proposes_its_continuation() {
+        // ... 1 2 3 9 8 ... 1 2 3 |  → the last occurrence of suffix
+        // [1,2,3] earlier in the context was followed by 9 8
+        let ctx = [5, 1, 2, 3, 9, 8, 4, 1, 2, 3];
+        assert_eq!(propose(&ctx, 2, 4), vec![9, 8]);
+        // k caps the proposal length
+        assert_eq!(propose(&ctx, 1, 4), vec![9]);
+    }
+
+    #[test]
+    fn longest_suffix_wins_over_more_recent_short_match() {
+        // suffix [2,3] occurs at position 1 (→ 7) while the shorter
+        // suffix [3] also occurs at position 5 (→ 9); the 2-gram match
+        // must win even though the 1-gram match is more recent.
+        let ctx = [1, 2, 3, 7, 4, 3, 9, 2, 3];
+        assert_eq!(propose(&ctx, 1, 4), vec![7]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_within_a_length() {
+        // [9] occurs twice; the later one (followed by 5) wins
+        let ctx = [9, 4, 9, 5, 6, 9];
+        assert_eq!(propose(&ctx, 1, 1), vec![5]);
+    }
+
+    #[test]
+    fn cycle_is_predicted_through_overlap() {
+        // a period-2 tail: ... a b a b a b — the drafter must extend
+        // the cycle (overlapping matches allowed; the 4-gram suffix
+        // [1,2,1,2] re-occurs one period earlier, continuation [1,2])
+        let ctx = [7, 1, 2, 1, 2, 1, 2];
+        assert_eq!(propose(&ctx, 4, 4), vec![1, 2]);
+    }
+
+    #[test]
+    fn proposal_never_exceeds_available_continuation_or_k() {
+        let ctx = [1, 2, 3, 1, 2, 3];
+        // suffix [1,2,3] matched at start 0, continuation is [1,2,3]
+        let p = propose(&ctx, 8, 4);
+        assert!(!p.is_empty() && p.len() <= 8);
+        for w in [1usize, 2, 3] {
+            assert!(propose(&ctx, w, 4).len() <= w);
+        }
+    }
+
+    #[test]
+    fn determinism() {
+        let ctx = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 1, 4];
+        let a = propose(&ctx, 4, 4);
+        let b = propose(&ctx, 4, 4);
+        assert_eq!(a, b);
+    }
+}

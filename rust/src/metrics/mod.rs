@@ -93,6 +93,23 @@ pub struct EngineMetrics {
     /// every adopter beyond the first of each group.  Already
     /// subtracted from [`Self::kv_bytes_gathered`].
     pub shared_rows_saved: u64,
+    /// Speculative decoding (`EngineConfig::speculate > 0`): draft
+    /// tokens proposed by the prompt-lookup drafter and the subset the
+    /// verify pass accepted.  `draft_accepted / draft_proposed` is the
+    /// acceptance rate; a spec step always emits at least one real
+    /// token on top of the accepted drafts.
+    pub draft_proposed: u64,
+    pub draft_accepted: u64,
+    /// Histogram of tokens emitted per speculative step: bucket `i`
+    /// counts steps that emitted `i + 1` tokens (the bonus token plus
+    /// `i` accepted drafts).  Grows lazily to the deepest step seen.
+    pub accept_len_hist: Vec<u64>,
+    /// Pages speculatively allocated for draft KV rows and the subset
+    /// popped back to the free list by `BlockTable::truncate` after
+    /// the verify pass rejected their rows (exactly `written -
+    /// accepted` every step — the rollback accounting identity).
+    pub spec_pages_written: u64,
+    pub spec_rollback_pages: u64,
     /// Tensor-parallel combine (sharded backends only; zero on
     /// single-device engines): B-allreduce tiles issued and activation
     /// bytes combined across shards.
@@ -192,6 +209,32 @@ impl EngineMetrics {
             return 0.0;
         }
         self.chunk_rows as f64 / self.chunk_steps as f64
+    }
+
+    /// Fraction of proposed draft tokens the verify pass accepted,
+    /// 0.0 ..= 1.0 (0.0 with speculation off or nothing proposed).
+    pub fn draft_acceptance(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            return 0.0;
+        }
+        self.draft_accepted as f64 / self.draft_proposed as f64
+    }
+
+    /// Mean tokens emitted per speculative step from the accept-length
+    /// histogram (0.0 before any spec step; > 1.0 means speculation is
+    /// beating one-token-per-pass decode).
+    pub fn mean_accept_len(&self) -> f64 {
+        let steps: u64 = self.accept_len_hist.iter().sum();
+        if steps == 0 {
+            return 0.0;
+        }
+        let tokens: u64 = self
+            .accept_len_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        tokens as f64 / steps as f64
     }
 
     /// Fraction of modeled AllReduce seconds hidden under compute,
@@ -417,6 +460,26 @@ mod tests {
         assert!((m.prefix_savings() - 0.25).abs() < 1e-12);
         // engines without sharing report zero, not NaN
         assert_eq!(EngineMetrics::default().prefix_savings(), 0.0);
+    }
+
+    #[test]
+    fn speculation_ratios() {
+        let m = EngineMetrics {
+            draft_proposed: 40,
+            draft_accepted: 30,
+            // 2 steps emitted 1 token, 3 steps emitted 3 tokens
+            accept_len_hist: vec![2, 0, 3],
+            spec_pages_written: 12,
+            spec_rollback_pages: 5,
+            ..Default::default()
+        };
+        assert!((m.draft_acceptance() - 0.75).abs() < 1e-12);
+        assert!((m.mean_accept_len() - 11.0 / 5.0).abs() < 1e-12);
+        assert!(m.spec_rollback_pages <= m.spec_pages_written);
+        // speculation off reports zero, not NaN
+        let z = EngineMetrics::default();
+        assert_eq!(z.draft_acceptance(), 0.0);
+        assert_eq!(z.mean_accept_len(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Integration: speculative decoding through the paged KV stack —
+//! draft–verify with O(1) page rollback.
+//!
+//! Runs the full engine over [`HostModelBackend`] (no artifacts
+//! needed) and pins the acceptance property of the speculation PR:
+//! greedy decode with `speculate = k` is **token-for-token identical**
+//! to vanilla greedy decode (`speculate = 0`) across draft depths
+//! {1, 2, 4, 8} × codecs {F32, Int8} × shared-prefix on/off × threads
+//! {1, 4} × page sizes, and composes with the tiered cache's
+//! offload/preemption machinery without changing tokens.  Rollback
+//! accounting stays exact — pages popped never exceed pages
+//! speculatively written, the accept histogram accounts for every
+//! decoded token, and no page leaks at idle — and the streaming feed
+//! stays gap-free when one verify step emits several tokens at once.
+
+use fastattn::attention::batch::ParallelConfig;
+use fastattn::coordinator::{
+    Engine, EngineConfig, GenParams, HostModelBackend, HostModelConfig, KvLayout, PageCodec,
+};
+use fastattn::models::ModelShape;
+use fastattn::prop_ensure;
+use fastattn::proptest::check;
+
+/// Acceptance property: speculative decode is token-identical to
+/// vanilla greedy decode over random draft depths, page sizes, codecs,
+/// GQA configs, sharing modes and thread counts — and the cases
+/// collectively exercise both draft acceptance and rejection rollback.
+#[test]
+fn prop_spec_decode_equals_vanilla_greedy() {
+    let mut total_accepted = 0u64;
+    let mut total_rollback = 0u64;
+    check(14, |rng| {
+        let (heads, kvh) = *rng.pick(&[(2u32, 1u32), (4, 2), (4, 4)]);
+        let model = ModelShape {
+            name: "spec-prop",
+            params: 0,
+            layers: rng.range(1, 3) as u32,
+            heads,
+            kv_heads: kvh,
+            head_dim: *rng.pick(&[4u32, 8]),
+            ffn: 32,
+            vocab: 64,
+        };
+        let max_seq = 96;
+        let page_size = *rng.pick(&[1usize, 2, 4, 16]);
+        let threads = *rng.pick(&[1usize, 4]);
+        let codec = if rng.bool() { PageCodec::Int8 } else { PageCodec::F32 };
+        let depth = *rng.pick(&[1usize, 2, 4, 8]);
+        let share = rng.bool();
+        let max_new = rng.range(4, 17);
+        let eos = if rng.bool() { Some(rng.below(64) as i32) } else { None };
+
+        // a mix of repetitive prompts (prompt lookup proposes real
+        // continuations, and greedy decode tends to settle into cycles
+        // the drafter then rides) and fresh ones (the drafter mostly
+        // misses and every proposal rolls back)
+        let n = rng.range(2, 5);
+        let system: Vec<i32> = (0..rng.range(4, 13)).map(|_| rng.below(64) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                let mut p = if share { system.clone() } else { Vec::new() };
+                if rng.bool() {
+                    let period = rng.range(1, 4);
+                    let phrase: Vec<i32> = (0..period).map(|_| rng.below(64) as i32).collect();
+                    for t in 0..rng.range(6, 20) {
+                        p.push(phrase[t % period]);
+                    }
+                } else {
+                    for _ in 0..rng.range(1, 16) {
+                        p.push(rng.below(64) as i32);
+                    }
+                }
+                p
+            })
+            .collect();
+
+        let run = |speculate: usize| {
+            let cfg = EngineConfig {
+                parallel: ParallelConfig { threads, min_work_per_thread: 0 },
+                kv_layout: KvLayout::Paged,
+                page_size,
+                kv_codec: codec,
+                speculate,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::with_backend(
+                Box::new(HostModelBackend::new(HostModelConfig::for_shape(model, max_seq))),
+                cfg,
+            );
+            for pr in &prompts {
+                let gp = GenParams {
+                    max_new_tokens: max_new,
+                    eos_token: eos,
+                    share_prefix: share,
+                };
+                e.submit(pr.clone(), gp).unwrap();
+            }
+            let mut out = e.run_until_idle().unwrap();
+            out.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (toks, e.metrics.clone())
+        };
+        let (base, bm) = run(0);
+        let (spec, sm) = run(depth);
+        prop_ensure!(
+            base == spec,
+            "speculation changed tokens (depth={depth} page_size={page_size} codec={codec:?} \
+             share={share} threads={threads} heads={heads} kvh={kvh} layers={})",
+            model.layers
+        );
+        prop_ensure!(
+            bm.draft_proposed == 0 && bm.spec_pages_written == 0,
+            "vanilla engine must never draft"
+        );
+        prop_ensure!(
+            sm.draft_accepted <= sm.draft_proposed,
+            "accepted {} of {} proposed drafts",
+            sm.draft_accepted,
+            sm.draft_proposed
+        );
+        prop_ensure!(
+            sm.spec_rollback_pages <= sm.spec_pages_written,
+            "rolled back {} of {} speculatively written pages",
+            sm.spec_rollback_pages,
+            sm.spec_pages_written
+        );
+        // every decoded token was emitted by exactly one verify step
+        let hist_tokens: u64 = sm
+            .accept_len_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        prop_ensure!(
+            hist_tokens == sm.decoded_tokens,
+            "accept histogram counts {hist_tokens} tokens, engine decoded {}",
+            sm.decoded_tokens
+        );
+        // at idle only prefix-cache runs stay resident — every
+        // rejected-draft page went back to the free list
+        prop_ensure!(
+            sm.pages_used == sm.shared_pages,
+            "page leak at idle: {} used vs {} prefix-cache pages",
+            sm.pages_used,
+            sm.shared_pages
+        );
+        total_accepted += sm.draft_accepted;
+        total_rollback += sm.spec_rollback_pages;
+        Ok(())
+    });
+    assert!(total_accepted > 0, "no case ever accepted a draft token");
+    assert!(total_rollback > 0, "no case ever rolled back a rejected draft page");
+}
+
+/// Speculation composes with the rest of the paged machinery: under
+/// device pressure (offload, swap-out, recompute preemption) the
+/// speculative engine still generates exactly the tokens of an
+/// unconstrained vanilla run, and both tiers drain at idle.
+#[test]
+fn speculation_survives_offload_and_preemption_pressure() {
+    // tiny_gqa geometry: a block group is layers 2 × kv_heads 2 = 4
+    // pages of 1 KiB each → 4 KiB per group.
+    let group_bytes = 4 * 1024usize;
+    let system = vec![21i32; 24];
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend(vec![i as i32 + 40; 3]);
+            p
+        })
+        .collect();
+    let gp = GenParams { max_new_tokens: 16, eos_token: None, share_prefix: false };
+
+    // unconstrained vanilla reference
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 16,
+        ..EngineConfig::default()
+    };
+    let mut big = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    for pr in &prompts {
+        big.submit(pr.clone(), gp).unwrap();
+    }
+    let mut want = big.run_until_idle().unwrap();
+    want.sort_by_key(|r| r.id);
+
+    // constrained + speculative: 4 device groups, 8 host groups
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        device_kv_budget: 4 * group_bytes,
+        host_kv_budget: 8 * group_bytes,
+        page_size: 16,
+        speculate: 4,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    for pr in &prompts {
+        e.submit(pr.clone(), gp).unwrap();
+    }
+    let mut out = e.run_until_idle().unwrap();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), want.len());
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "speculation + offload + preemption changed request {} tokens",
+            a.id
+        );
+    }
+    let m = &e.metrics;
+    assert!(m.draft_proposed > 0, "repetitive prompts must draw proposals");
+    assert!(m.spec_rollback_pages <= m.spec_pages_written);
+    assert_eq!(m.pages_used, 0, "device pages released at idle");
+    assert_eq!(m.host_pages_used, 0, "host tier drained at idle");
+}
+
+/// The streaming feed stays gap-free under speculation: a verify step
+/// emits up to k+1 `TokenEvent`s at once, with contiguous indices that
+/// reassemble exactly into the final response.
+#[test]
+fn spec_token_events_stream_gap_free() {
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 4,
+        speculate: 4,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    // strongly periodic prompt so the drafter proposes every step
+    let prompt: Vec<i32> = (0..24).map(|t| (t % 3) as i32 + 7).collect();
+    let id = e
+        .submit(prompt, GenParams { max_new_tokens: 24, eos_token: None, share_prefix: false })
+        .unwrap();
+    let mut seen: Vec<(usize, i32)> = Vec::new();
+    loop {
+        let more = e.step().unwrap();
+        for ev in e.take_token_events() {
+            assert_eq!(ev.id, id);
+            // replayed tokens (recompute preemption) carry original
+            // indices; deduplicate like the serving plane does
+            if seen.iter().all(|&(i, _)| i != ev.index) {
+                seen.push((ev.index, ev.token));
+            }
+        }
+        if !more {
+            break;
+        }
+    }
+    let out = e.take_finished();
+    assert_eq!(out.len(), 1);
+    seen.sort_by_key(|&(i, _)| i);
+    for (want, &(got, _)) in seen.iter().enumerate() {
+        assert_eq!(got, want, "gap in streamed indices");
+    }
+    let streamed: Vec<i32> = seen.iter().map(|&(_, t)| t).collect();
+    assert_eq!(streamed, out[0].tokens, "streamed tokens must reassemble the response");
+    assert!(e.metrics.draft_proposed > 0, "periodic prompt must draw proposals");
+}
+
+/// Client cancel composes with speculation: a mid-generation abort
+/// releases every page (including any speculatively written this step)
+/// and the remaining request still completes normally.
+#[test]
+fn cancel_under_speculation_frees_pages() {
+    let cfg = EngineConfig {
+        parallel: ParallelConfig { threads: 1, min_work_per_thread: 0 },
+        kv_layout: KvLayout::Paged,
+        page_size: 4,
+        speculate: 4,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::with_backend(
+        Box::new(HostModelBackend::new(HostModelConfig::tiny_gqa())),
+        cfg,
+    );
+    let long: Vec<i32> = (0..12).map(|t| (t % 2) as i32 + 3).collect();
+    let a = e
+        .submit(long, GenParams { max_new_tokens: 64, eos_token: None, share_prefix: false })
+        .unwrap();
+    let b = e
+        .submit(vec![9; 8], GenParams { max_new_tokens: 4, eos_token: None, share_prefix: false })
+        .unwrap();
+    // run a few steps so both sequences are live and hold pages
+    for _ in 0..6 {
+        e.step().unwrap();
+    }
+    assert!(e.cancel(a), "live request must cancel");
+    assert!(!e.cancel(a), "double cancel is a no-op");
+    let out = e.run_until_idle().unwrap();
+    assert_eq!(out.len(), 1, "the cancelled request produces no response");
+    assert_eq!(out[0].id, b);
+    assert_eq!(e.metrics.pages_used, 0, "cancel released every page");
+}
